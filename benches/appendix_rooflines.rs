@@ -1,0 +1,12 @@
+//! Bench: regenerate every appendix roofline (layer norm, GELU with
+//! favourable dims, inner product and pooling at socket/two-socket
+//! scale) — EXP-A1..A4 in DESIGN.md §4.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    for id in ["a1", "a2", "a3", "a4"] {
+        common::figure_bench(id);
+    }
+}

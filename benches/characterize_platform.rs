@@ -1,0 +1,53 @@
+//! Bench: platform characterisation — the paper's §2.1 (peak compute,
+//! Fig 2 technique) and §2.2 (peak bandwidth) tables, plus the §2.3 FMA
+//! counting validation (EXP-P1, EXP-P2, EXP-V1).
+//!
+//! Two halves:
+//!   * the simulated Xeon 6248 tables (what every figure's roofline uses);
+//!   * the REAL host microbenchmarks (runtime-JIT FMA streams and
+//!     memset/memcpy/NT-store bandwidth) — the §2.1/§2.2 programs run on
+//!     the machine executing this bench.
+
+#[path = "common.rs"]
+mod common;
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::hostbench::{membw, peak_flops, CpuInfo, MemBwMethod, PeakIsa};
+
+fn main() {
+    common::figure_bench("p1");
+    common::figure_bench("p2");
+    common::figure_bench("v1");
+
+    // --- the real thing, on this host ---------------------------------
+    let info = CpuInfo::detect();
+    println!(
+        "host: {} ({} cpus, {} node(s))",
+        info.model_name, info.logical_cpus, info.numa_nodes
+    );
+    let mut b = Bencher::new("hostbench");
+    let secs = 0.3;
+
+    for isa in [PeakIsa::Scalar, PeakIsa::Avx2Fma, PeakIsa::Avx512Fma] {
+        if isa == PeakIsa::Avx512Fma && !info.has_avx512f {
+            continue;
+        }
+        let r = peak_flops::measure(isa, &[], 1, secs).expect("peak");
+        b.record(
+            &format!("peak/{}{}", isa.label(), if r.jitted { "+jit" } else { "" }),
+            Throughput::Flops(r.flops_per_sec * secs),
+            &[secs],
+        );
+    }
+
+    let buffer = 64 * 1024 * 1024;
+    for method in MemBwMethod::all() {
+        let r = membw::measure(method, &[], 1, buffer, secs).expect("membw");
+        b.record(
+            &format!("membw/{}", method.label()),
+            Throughput::Bytes(r.bytes_per_sec * secs),
+            &[secs],
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,42 @@
+//! Shared bench scaffolding: run a paper experiment, print the same rows
+//! the paper reports (per-kernel utilisation + paper-vs-measured), and
+//! time the full measurement pipeline with `benchkit`.
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::coordinator::runner::render_report;
+use dlroofline::harness::experiments::{run_experiment, ExperimentParams};
+
+/// Default params for benches: modest batch so a full `cargo bench`
+/// stays in minutes; honour DLROOFLINE_BENCH_FULL=1 for paper sizes.
+pub fn bench_params() -> ExperimentParams {
+    ExperimentParams {
+        full_size: std::env::var("DLROOFLINE_BENCH_FULL").as_deref() == Ok("1"),
+        ..Default::default()
+    }
+}
+
+/// Run one figure experiment: print its report (the paper's rows) and
+/// benchmark the simulation pipeline end-to-end.
+pub fn figure_bench(id: &str) {
+    let params = bench_params();
+
+    // The scientific output: the figure itself.
+    let result = run_experiment(id, &params).expect("experiment");
+    print!("{}", render_report(&result));
+
+    // The engineering output: how fast the pipeline regenerates it.
+    let mut b = Bencher::new(&format!("pipeline/{id}"));
+    let flops: f64 = result
+        .groups
+        .iter()
+        .flat_map(|g| g.measurements.iter())
+        .map(|m| m.measured.work_flops as f64)
+        .sum();
+    b.bench(&format!("regenerate_{id}"), Throughput::Flops(flops.max(1.0)), || {
+        run_experiment(id, &params).expect("experiment rerun")
+    });
+    b.finish();
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,48 @@
+//! Bench: the end-to-end three-layer pipeline (EXP-E2E).
+//!
+//! * simulated: full Fig-3 regeneration wallclock (characterise →
+//!   measure → roofline), the repo's own "serving" hot path;
+//! * real: the AOT-compiled Pallas CNN executed through PJRT from rust,
+//!   batched-inference latency/throughput (skipped with a notice when
+//!   `make artifacts` has not run).
+
+#[path = "common.rs"]
+mod common;
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::runtime::{Engine, HostTensor};
+
+fn main() {
+    common::figure_bench("f3");
+
+    match Engine::from_default_artifacts() {
+        Err(e) => println!("PJRT half skipped: {e}"),
+        Ok(mut engine) => {
+            let mut b = Bencher::new("e2e/pjrt");
+            for name in ["gelu_nchw", "inner_product", "conv_nchw16c", "cnn_forward"] {
+                let kernel = match engine.load(name) {
+                    Ok(k) => k,
+                    Err(e) => {
+                        println!("  {name}: {e}");
+                        continue;
+                    }
+                };
+                let inputs: Vec<HostTensor> = kernel
+                    .spec
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let mut t = HostTensor::random(&s.shape, i as u64);
+                        t.data.iter_mut().for_each(|v| *v *= 0.1);
+                        t
+                    })
+                    .collect();
+                let stats = kernel.benchmark(&inputs, 2, 15).expect("pjrt bench");
+                let flops = stats.flops;
+                b.record(name, Throughput::Flops(flops), &[stats.time.mean]);
+            }
+            b.finish();
+        }
+    }
+}

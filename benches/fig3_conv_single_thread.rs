@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig3 convolution single thread figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F3).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f3");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig4 convolution one socket figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F4).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f4");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig5 convolution two sockets figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F5).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f5");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig6 inner product figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F6).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f6");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig7 average pooling figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F7).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f7");
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate the paper's Fig8 GELU forced blocked figure.
+//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F8).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("f8");
+}

@@ -1,0 +1,83 @@
+//! Perf-pass bench: the simulator's hot loop in isolation — line probes
+//! per second through the full L1/L2/LLC/prefetch/IMC stack, for the
+//! access patterns that dominate the figures (streaming, strided,
+//! LLC-resident rescans, 20-thread interleaving).
+//!
+//! EXPERIMENTS.md §Perf tracks this number across optimisation steps.
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};
+use dlroofline::sim::numa::Placement;
+use dlroofline::sim::trace::{AccessKind, AccessRun, Trace};
+
+fn streaming_trace(mb: u64) -> Trace {
+    let mut t = Trace::new();
+    t.push(AccessRun::contiguous(0, mb << 20, AccessKind::Load));
+    t
+}
+
+fn strided_trace(lines: u64, stride: i64) -> Trace {
+    let mut t = Trace::new();
+    t.push(AccessRun { base: 0, stride, count: lines, size: 4, kind: AccessKind::Load });
+    t
+}
+
+fn main() {
+    let cfg = HierarchyConfig::xeon_6248();
+    let mut b = Bencher::new("sim_hotpath");
+
+    // 64 MiB cold stream = 1 Mi line probes.
+    {
+        let tr = streaming_trace(64);
+        let probes = tr.line_probes() as f64;
+        let mut ms = MemorySystem::new(cfg, 2, 1);
+        b.bench("stream_64MiB_cold", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+                .probes
+        });
+    }
+
+    // LLC-resident rescan (all hits below LLC): 16 MiB x2.
+    {
+        let tr = streaming_trace(16);
+        let probes = tr.line_probes() as f64;
+        let mut ms = MemorySystem::new(cfg, 2, 1);
+        ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0);
+        b.bench("rescan_16MiB_warm", Throughput::Elements(probes), || {
+            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+                .probes
+        });
+    }
+
+    // Pathological stride (every line new set, prefetcher useless).
+    {
+        let tr = strided_trace(1 << 20, 4096);
+        let probes = tr.line_probes() as f64;
+        let mut ms = MemorySystem::new(cfg, 2, 1);
+        b.bench("strided_4k_1Mi", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+                .probes
+        });
+    }
+
+    // 20-thread interleaved streams (the one-socket figures).
+    {
+        let traces: Vec<Trace> = (0..20)
+            .map(|i| {
+                let mut t = Trace::new();
+                t.push(AccessRun::contiguous((i as u64) << 26, 8 << 20, AccessKind::Load));
+                t
+            })
+            .collect();
+        let probes: f64 = traces.iter().map(|t| t.line_probes() as f64).sum();
+        let mut ms = MemorySystem::new(cfg, 2, 20);
+        b.bench("threads20_8MiB_each", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run(&traces, &Placement::bound(20, 0), &mut |_a, _t| 0).probes
+        });
+    }
+
+    b.finish();
+}

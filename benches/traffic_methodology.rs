@@ -1,0 +1,11 @@
+//! Bench: the §2.4 traffic-methodology ladder (EXP-V2) — LLC-miss
+//! counting vs IMC counting, with the hardware prefetcher on/off and the
+//! software-prefetching Winograd GEMM that defeats everything except the
+//! IMC counters.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::figure_bench("v2");
+}

@@ -1,0 +1,96 @@
+//! End-to-end driver (EXP-E2E): load the AOT-compiled blocked-layout CNN
+//! (conv → GELU → avgpool → layernorm → FC, every layer a Pallas kernel
+//! authored in `python/compile/`) through PJRT and serve batched
+//! inference requests from Rust, reporting latency and throughput.
+//!
+//! Python is *not* running here — the artifacts were lowered once by
+//! `make artifacts`; this binary is self-contained.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cnn_inference
+//! ```
+
+use dlroofline::runtime::{Engine, HostTensor};
+use dlroofline::util::human::{fmt_flops, fmt_seconds};
+use dlroofline::util::stats::Summary;
+
+const REQUESTS: usize = 50;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = match Engine::from_default_artifacts() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", engine.platform());
+
+    let kernel = engine.load("cnn_forward")?;
+    let spec = kernel.spec.clone();
+    println!(
+        "model: {} — {} inputs, {} per forward",
+        spec.name,
+        spec.inputs.len(),
+        dlroofline::util::human::fmt_si(spec.flops, "FLOP")
+    );
+    let batch = spec.inputs[0].shape[0];
+
+    // Fixed parameters (weights), fresh activations per request.
+    let params: Vec<HostTensor> = spec.inputs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut t = HostTensor::random(&s.shape, 1000 + i as u64);
+            // keep magnitudes sane for a random-weight forward pass
+            t.data.iter_mut().for_each(|v| *v *= 0.1);
+            t
+        })
+        .collect();
+
+    // Warm the executable.
+    {
+        let mut inputs = vec![HostTensor::random(&spec.inputs[0].shape, 0)];
+        inputs.extend(params.iter().cloned());
+        let out = kernel.run(&inputs)?;
+        anyhow::ensure!(out[0].shape == spec.outputs[0].shape, "bad output shape");
+        anyhow::ensure!(
+            out[0].data.iter().all(|x| x.is_finite()),
+            "non-finite logits"
+        );
+    }
+
+    // Serve a stream of batched requests.
+    let mut latencies = Vec::with_capacity(REQUESTS);
+    let t0 = std::time::Instant::now();
+    for req in 0..REQUESTS {
+        let mut inputs = vec![HostTensor::random(&spec.inputs[0].shape, req as u64)];
+        inputs.extend(params.iter().cloned());
+        let start = std::time::Instant::now();
+        let out = kernel.run(&inputs)?;
+        latencies.push(start.elapsed().as_secs_f64());
+        std::hint::black_box(&out[0].data);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+
+    println!("\nserved {REQUESTS} requests (batch {batch}):");
+    println!(
+        "  latency  mean {} | p50 {} | p95 {} | max {}",
+        fmt_seconds(s.mean),
+        fmt_seconds(s.median),
+        fmt_seconds(s.p95),
+        fmt_seconds(s.max)
+    );
+    println!(
+        "  throughput {:.1} samples/s | {}",
+        REQUESTS as f64 * batch as f64 / wall,
+        fmt_flops(spec.flops / s.mean)
+    );
+    println!(
+        "  (interpret-mode Pallas lowers to scalarised HLO; the number to \
+         watch is the three-layer composition, not absolute FLOP/s — see \
+         EXPERIMENTS.md §E2E)"
+    );
+    Ok(())
+}

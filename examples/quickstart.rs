@@ -1,0 +1,40 @@
+//! Quickstart: build a roofline model for the simulated Xeon 6248 and
+//! place one kernel on it — the 30-second tour of the public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::kernels::inner_product::InnerProduct;
+use dlroofline::roofline::model::RooflineModel;
+use dlroofline::roofline::plot::ascii_plot;
+use dlroofline::roofline::report::markdown_table;
+use dlroofline::sim::machine::{Machine, MachineConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A platform: the paper's 2-socket Xeon Gold 6248 (DESIGN.md §5).
+    let config = MachineConfig::xeon_6248();
+    let mut machine = Machine::new(config.clone());
+
+    // 2. A kernel: the paper's Fig 6 inner product (fits the LLC).
+    let kernel = InnerProduct::paper_shape();
+
+    // 3. Measure W (PMU model), Q (cache sim → IMC) and R (timing model)
+    //    under the single-thread scenario, cold and warm.
+    let cold = measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Cold)?;
+    let warm = measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Warm)?;
+
+    // 4. The roofline for that scenario, with both points.
+    let roofline = RooflineModel::for_machine(&config, 1, 1, "single-thread");
+    let points = vec![cold.point(), warm.point()];
+    print!("{}", markdown_table(&roofline, &points));
+    println!("{}", ascii_plot(&roofline, &points));
+
+    println!(
+        "warm-cache arithmetic intensity is {:.1}x the cold-cache one — \
+         same Work, far less Traffic (paper §3.2).",
+        points[1].ai() / points[0].ai()
+    );
+    Ok(())
+}

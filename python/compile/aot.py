@@ -1,0 +1,167 @@
+"""AOT export: lower every L2 computation to HLO **text** + manifest.
+
+Run once via `make artifacts` (python never runs on the measurement
+path). Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+behind the published `xla` crate rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import avgpool as k_avgpool
+from .kernels import conv_blocked as k_conv
+from .kernels import gelu as k_gelu
+from .kernels import layernorm as k_layernorm
+from .kernels import matmul as k_matmul
+from .kernels import winograd as k_winograd
+from .kernels.ref import CBLOCK
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_of(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": "float32"}
+
+
+def artifact_catalog():
+    """Every exported computation: (name, fn, input specs, flops, desc).
+
+    Shapes are kept modest: interpret-mode Pallas lowers to scalarised
+    HLO loops, so these artifacts are correctness/runtime-path vehicles;
+    the paper-scale measurements run on the simulator (see DESIGN.md).
+    """
+    entries = []
+
+    # GELU on plain vs blocked-padded tensors: the Fig 8 pair. Same
+    # kernel, 16/3x the elements when C=3 is forced into a 16-block.
+    gelu_plain = f32(8, 3, 32, 32)
+    gelu_blocked = f32(8, 1, 32, 32, CBLOCK)
+    entries.append((
+        "gelu_nchw", model.gelu, [gelu_plain],
+        k_gelu.gelu_flops(8 * 3 * 32 * 32),
+        "erf GELU, plain NCHW [8,3,32,32]",
+    ))
+    entries.append((
+        "gelu_nchw16c", model.gelu, [gelu_blocked],
+        k_gelu.gelu_flops(8 * 16 * 32 * 32),
+        "erf GELU forced blocked: C=3 padded to 16 (Fig 8 pathology)",
+    ))
+
+    # Inner product (Fig 6 primitive, runtime-scale shape).
+    m_, k_, n_ = 64, 512, 128
+    entries.append((
+        "inner_product", model.inner_product,
+        [f32(m_, k_), f32(k_, n_), f32(n_)],
+        k_matmul.matmul_flops(m_, k_, n_),
+        f"FC {m_}x{k_}x{n_} via Pallas tiled matmul",
+    ))
+
+    # Direct blocked convolution (Fig 3-5 primitive).
+    conv_x = f32(4, 1, 16, 16, CBLOCK)
+    conv_w = f32(1, 1, 3, 3, CBLOCK, CBLOCK)
+    entries.append((
+        "conv_nchw16c", model.conv_blocked, [conv_x, conv_w],
+        k_conv.conv_flops(4, 16, 16, 16, 16, 3, 3),
+        "direct conv 3x3/s1/p1 on NCHW16C [4,1,16,16,16]",
+    ))
+
+    # Winograd convolution (plain layout wrapper).
+    wino_x = f32(4, 16, 16, 16)
+    wino_w = f32(16, 16, 3, 3)
+    entries.append((
+        "conv_winograd", model.conv_winograd, [wino_x, wino_w],
+        k_winograd.winograd_flops(4, 16, 16, 16, 16),
+        "Winograd F(2,3) conv 3x3/s1/p1 [4,16,16,16]",
+    ))
+
+    # Average pooling (Fig 7 primitive).
+    pool_x = f32(4, 1, 17, 17, CBLOCK)
+    entries.append((
+        "avgpool_nchw16c", model.avgpool_blocked, [pool_x],
+        k_avgpool.avgpool_flops(4, 16, 8, 8, 3),
+        "avg pooling 3x3/s2 on NCHW16C [4,1,17,17,16]",
+    ))
+
+    # Layer normalisation (appendix primitive).
+    entries.append((
+        "layernorm", model.layernorm,
+        [f32(64, 256), f32(256), f32(256)],
+        k_layernorm.layernorm_flops(64, 256),
+        "row-wise layer norm [64,256]",
+    ))
+
+    # Sum reduction (footnote-3 methodology validation kernel).
+    entries.append((
+        "sum_reduction", model.sum_reduction, [f32(1 << 16)],
+        1 << 16,
+        "sum over 65536 f32 (traffic-methodology validation)",
+    ))
+
+    # The composed CNN — the end-to-end driver's model.
+    shapes = model.model_param_shapes()
+    entries.append((
+        "cnn_forward", model.cnn_forward,
+        [f32(*shapes[k]) for k in ("x", "conv_w", "ln_gamma", "ln_beta", "fc_w", "fc_b")],
+        model.cnn_forward_flops(),
+        "conv->GELU->avgpool->LN->FC blocked CNN forward (e2e driver)",
+    ))
+    return entries
+
+
+def export_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, inputs, flops, desc in artifact_catalog():
+        lowered = jax.jit(fn).lower(*inputs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": [int(d) for d in o.shape], "dtype": "float32"}
+            for o in jax.eval_shape(fn, *inputs)
+        ]
+        manifest.append({
+            "name": name,
+            "file": fname,
+            "inputs": [spec_of(s) for s in inputs],
+            "outputs": out_shapes,
+            "flops": int(flops),
+            "description": desc,
+        })
+        print(f"  exported {name}: {len(text)} chars, {flops:,} FLOPs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

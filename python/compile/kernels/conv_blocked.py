@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: direct convolution on the blocked NCHW16C layout.
+
+This is the TPU re-think of oneDNN's `jit:avx512` blocked convolution
+(paper §3.1): the 16-wide channel block that oneDNN chose so one AVX-512
+vector = one cache line becomes the TPU *lane* dimension, and the
+per-(image, oc-block) grid step keeps a full input-channel slab resident
+in VMEM while the einsum contraction over the 16 input lanes maps onto
+the MXU.
+
+Layouts:
+  x: [N, ICB, H, W, 16]      (pre-padded spatially by the wrapper)
+  w: [OCB, ICB, KH, KW, 16(ic), 16(oc)]
+  y: [N, OCB, OH, OW, 16]
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CBLOCK = 16
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, oh, ow, icb):
+    """One (image, oc-block) step: full spatial output, all ic blocks."""
+    x = x_ref[0]  # [ICB, H, W, 16]
+    w = w_ref[0]  # [ICB, KH, KW, 16, 16]
+    acc = jnp.zeros((oh, ow, CBLOCK), jnp.float32)
+    for ib in range(icb):
+        for r in range(kh):
+            for s in range(kw):
+                # Strided patch covering every output position at once.
+                patch = jax.lax.slice(
+                    x,
+                    (ib, r, s, 0),
+                    (ib + 1, r + (oh - 1) * stride + 1, s + (ow - 1) * stride + 1, CBLOCK),
+                    (1, stride, stride, 1),
+                )[0]
+                # Contract the 16 input lanes against the 16x16 weights:
+                # this inner product is the MXU-shaped hot spot.
+                acc += jnp.einsum(
+                    "hwi,io->hwo",
+                    patch,
+                    w[ib, r, s],
+                    preferred_element_type=jnp.float32,
+                )
+    o_ref[...] = acc[None, None]
+
+
+def conv2d_blocked(x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0) -> jax.Array:
+    """Direct conv on blocked tensors.
+
+    x: [N, ICB, H, W, 16]; w: [OCB, ICB, KH, KW, 16, 16].
+    """
+    n, icb, h, wdt, blk = x.shape
+    ocb, icb2, kh, kw, bi, bo = w.shape
+    assert blk == CBLOCK and bi == CBLOCK and bo == CBLOCK
+    assert icb == icb2, f"ic blocks mismatch {icb} vs {icb2}"
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad), (0, 0)))
+        h, wdt = h + 2 * pad, wdt + 2 * pad
+    oh = (h - kh) // stride + 1
+    ow = (wdt - kw) // stride + 1
+
+    import functools
+
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow, icb=icb
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n, ocb),
+        in_specs=[
+            # Whole padded image (all ic blocks) per step: VMEM slab.
+            pl.BlockSpec((1, icb, h, wdt, CBLOCK), lambda i, o: (i, 0, 0, 0, 0)),
+            # This oc block's weights.
+            pl.BlockSpec((1, icb, kh, kw, CBLOCK, CBLOCK), lambda i, o: (o, 0, 0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow, CBLOCK), lambda i, o: (i, o, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ocb, oh, ow, CBLOCK), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def weights_to_blocked(w: jax.Array) -> jax.Array:
+    """OIHW -> [OCB, ICB, KH, KW, 16(ic), 16(oc)], zero-padding both
+    channel axes to the block."""
+    oc, ic, kh, kw = w.shape
+    ocb = -(-oc // CBLOCK)
+    icb = -(-ic // CBLOCK)
+    w = jnp.pad(w, ((0, ocb * CBLOCK - oc), (0, icb * CBLOCK - ic), (0, 0), (0, 0)))
+    w = w.reshape(ocb, CBLOCK, icb, CBLOCK, kh, kw)
+    # -> [ocb, icb, kh, kw, ic_lane, oc_lane]
+    return jnp.transpose(w, (0, 2, 4, 5, 3, 1))
+
+
+def conv_flops(n: int, ic: int, oc: int, oh: int, ow: int, kh: int, kw: int) -> int:
+    """Direct-algorithm FLOPs on *padded* channels (what the padded
+    blocked kernel actually executes — the Fig 8 accounting)."""
+    icp = -(-ic // CBLOCK) * CBLOCK
+    ocp = -(-oc // CBLOCK) * CBLOCK
+    return 2 * n * ocp * oh * ow * icp * kh * kw

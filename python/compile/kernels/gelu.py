@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: erf-based GELU (the paper's §3.4 eltwise primitive).
+
+Element-wise, so the layout only changes how many elements exist — the
+Fig 8 pathology: a blocked tensor with padded channels runs the same
+kernel over 16/3 more elements. The kernel itself is layout-oblivious:
+it flattens and streams fixed-size blocks through VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _erf(x):
+    """Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+
+    Written with exp/mul/add only: the `erf` HLO opcode postdates the
+    xla_extension 0.5.1 the rust runtime links against, so lowering
+    `jax.lax.erf` would produce artifacts the PJRT loader rejects. This
+    is also closer to what oneDNN's eltwise jit actually emits (a
+    polynomial + exp decomposition, no libm call).
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = t * (
+        0.254829592
+        + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429)))
+    )
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = 0.5 * x * (1.0 + _erf(x * (2.0 ** -0.5)))
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """GELU over a tensor of any shape (flatten → blocks → reshape)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = BLOCK
+    while n % block:
+        block //= 2
+    out = pl.pallas_call(
+        _gelu_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)
+
+
+def gelu_flops(elements: int) -> int:
+    """Analytic FLOPs: ~25 per element for the erf polynomial path
+    (matches the instruction-mix constants in the rust kernel model:
+    (9 FMA x 2 + 7) per 16-lane vector)."""
+    return elements * 25

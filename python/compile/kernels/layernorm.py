@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: row-wise layer normalisation (appendix primitive).
+
+Two logical passes fused into one VMEM-resident block: statistics then
+normalise + affine. Rows are tiled along the grid; gamma/beta ride along
+as full-width blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 64
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * inv * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """x: [M, H]; gamma/beta: [H]."""
+    m, h = x.shape
+    bm = ROW_BLOCK
+    while m % bm:
+        bm //= 2
+    body = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def layernorm_flops(m: int, h: int) -> int:
+    """~8 FLOPs per element (two stats passes + normalise + affine),
+    matching the rust model's accounting."""
+    return 8 * m * h

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: tiled matmul (the inner-product / GEMM hot spot).
+
+TPU mapping of the paper's AVX-512 GEMM insight (DESIGN.md
+§Hardware-Adaptation): where oneDNN blocks for registers + cache lines,
+this kernel blocks for the MXU systolic array — (BM, BK) × (BK, BN) tiles
+held in VMEM with the grid marching over K as the innermost dimension and
+an accumulator kept in the output block.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that runs anywhere (and
+is what `aot.py` ships to the rust runtime).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile defaults; shrunk automatically for small problems.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BN) output tile; K-grid accumulates into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile ≤ block that divides dim (dims here are ≥1)."""
+    t = min(dim, block)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """`a[M,K] @ b[K,N]` via the Pallas tiled kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _tile(m, BM), _tile(n, BN), _tile(k, BK)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def inner_product(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fully connected layer: Pallas matmul + bias broadcast."""
+    return matmul(x, w) + bias[None, :]
+
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    """Analytic FLOPs (2 per MAC) for the manifest."""
+    return 2 * m * k * n

@@ -1,0 +1,100 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package is checked against these at build
+time (pytest, `make test`) before the AOT artifacts are produced. All
+references operate on the same blocked layouts the kernels use so the
+comparison is element-exact in layout as well as value.
+
+Layouts mirror the paper's oneDNN convention:
+  plain  : NCHW           [N, C, H, W]
+  blocked: NCHW16C        [N, ceil(C/16), H, W, 16]
+"""
+
+import jax
+import jax.numpy as jnp
+
+CBLOCK = 16
+
+
+def nchw_to_blocked(x: jax.Array) -> jax.Array:
+    """NCHW -> [N, CB, H, W, 16], zero-padding the channel remainder."""
+    n, c, h, w = x.shape
+    cb = -(-c // CBLOCK)
+    pad = cb * CBLOCK - c
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x = x.reshape(n, cb, CBLOCK, h, w)
+    return jnp.transpose(x, (0, 1, 3, 4, 2))
+
+
+def blocked_to_nchw(x: jax.Array, c: int) -> jax.Array:
+    """[N, CB, H, W, 16] -> NCHW, dropping channel padding."""
+    n, cb, h, w, blk = x.shape
+    assert blk == CBLOCK
+    x = jnp.transpose(x, (0, 1, 4, 2, 3)).reshape(n, cb * CBLOCK, h, w)
+    return x[:, :c]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32 matmul."""
+    return jnp.matmul(a, b)
+
+
+def inner_product_ref(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fully connected: x[M,K] @ w[K,N] + bias[N]."""
+    return jnp.matmul(x, w) + bias[None, :]
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """Exact (erf-based) GELU, the oneDNN `eltwise_gelu_erf` algorithm."""
+    return 0.5 * x * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def conv2d_ref_nchw(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    """Direct convolution on NCHW via lax (the numerics oracle).
+
+    x: [N, IC, H, W]; w: [OC, IC, KH, KW] -> [N, OC, OH, OW].
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_ref_blocked(
+    x_blocked: jax.Array, w: jax.Array, stride: int, pad: int, c_in: int
+) -> jax.Array:
+    """Blocked-layout conv reference: unblock, conv, reblock."""
+    x = blocked_to_nchw(x_blocked, c_in)
+    y = conv2d_ref_nchw(x, w, stride, pad)
+    return nchw_to_blocked(y)
+
+
+def avgpool_ref_blocked(x_blocked: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """Average pooling on the blocked layout (no padding).
+
+    x: [N, CB, H, W, 16] -> [N, CB, OH, OW, 16].
+    """
+    summed = jax.lax.reduce_window(
+        x_blocked,
+        jnp.float32(0.0),
+        jax.lax.add,
+        window_dimensions=(1, 1, kernel, kernel, 1),
+        window_strides=(1, 1, stride, stride, 1),
+        padding="VALID",
+    )
+    return summed / float(kernel * kernel)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Row-wise layer norm with affine parameters: x[M, H]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def sum_reduction_ref(x: jax.Array) -> jax.Array:
+    """The paper's footnote-3 validation kernel."""
+    return jnp.sum(x)[None]

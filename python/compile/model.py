@@ -1,0 +1,106 @@
+"""L2: the JAX compute graphs exported to the rust runtime.
+
+Each paper primitive gets a standalone jitted function (lowered per-shape
+by `aot.py`), plus `cnn_forward` — a small blocked-layout CNN composing
+every primitive, used by the end-to-end example (`examples/
+cnn_inference.rs`) to prove the three layers compose: Pallas kernels
+(L1) inside JAX functions (L2) executed by the rust coordinator (L3)
+through PJRT, with Python nowhere on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import avgpool as k_avgpool
+from .kernels import conv_blocked as k_conv
+from .kernels import gelu as k_gelu
+from .kernels import layernorm as k_layernorm
+from .kernels import matmul as k_matmul
+from .kernels import winograd as k_winograd
+from .kernels.ref import CBLOCK
+
+
+def gelu(x):
+    """Element-wise GELU over any shape (Pallas kernel)."""
+    return (k_gelu.gelu(x),)
+
+
+def inner_product(x, w, bias):
+    """Fully connected layer (Pallas matmul + bias)."""
+    return (k_matmul.inner_product(x, w, bias),)
+
+
+def conv_blocked(x, w):
+    """3x3/s1/p1 direct conv on blocked tensors (Pallas)."""
+    return (k_conv.conv2d_blocked(x, w, stride=1, pad=1),)
+
+
+def conv_winograd(x, w):
+    """3x3/s1/p1 conv via Winograd F(2,3) (transforms + Pallas GEMMs)."""
+    return (k_winograd.conv2d_winograd(x, w, pad=1),)
+
+
+def avgpool_blocked(x, kernel=3, stride=2):
+    """Average pooling on blocked tensors (Pallas)."""
+    return (k_avgpool.avgpool_blocked(x, kernel, stride),)
+
+
+def layernorm(x, gamma, beta):
+    """Row-wise layer norm (Pallas)."""
+    return (k_layernorm.layernorm(x, gamma, beta),)
+
+
+def sum_reduction(x):
+    """The footnote-3 methodology-validation kernel."""
+    return (jnp.sum(x)[None],)
+
+
+# ---------------------------------------------------------------------
+# The composed model: conv -> GELU -> avgpool -> layernorm -> FC.
+# ---------------------------------------------------------------------
+
+#: Model hyper-shape: CIFAR-sized input, one conv block, 10 classes.
+MODEL_N = 8
+MODEL_C_IN = 3
+MODEL_C_MID = 16
+MODEL_HW = 32
+MODEL_CLASSES = 10
+# after conv(3x3 p1 s1): 32x32; after pool(3, 2): 15x15
+_POOL_HW = (MODEL_HW - 3) // 2 + 1
+MODEL_FEATURES = MODEL_C_MID * _POOL_HW * _POOL_HW
+
+
+def model_param_shapes():
+    """Shapes of `cnn_forward`'s parameters, in argument order."""
+    return {
+        "x": (MODEL_N, 1, MODEL_HW, MODEL_HW, CBLOCK),  # blocked, C=3 padded to 16
+        "conv_w": (1, 1, 3, 3, CBLOCK, CBLOCK),  # blocked OIHW16i16o
+        "ln_gamma": (MODEL_FEATURES,),
+        "ln_beta": (MODEL_FEATURES,),
+        "fc_w": (MODEL_FEATURES, MODEL_CLASSES),
+        "fc_b": (MODEL_CLASSES,),
+    }
+
+
+def cnn_forward(x, conv_w, ln_gamma, ln_beta, fc_w, fc_b):
+    """Blocked-layout CNN forward pass composing every primitive."""
+    y = k_conv.conv2d_blocked(x, conv_w, stride=1, pad=1)  # [N,1,32,32,16]
+    y = k_gelu.gelu(y)
+    y = k_avgpool.avgpool_blocked(y, 3, 2)  # [N,1,15,15,16]
+    n = y.shape[0]
+    flat = y.reshape(n, -1)  # [N, 3600]
+    normed = k_layernorm.layernorm(flat, ln_gamma, ln_beta)
+    logits = k_matmul.inner_product(normed, fc_w, fc_b)
+    return (logits,)
+
+
+def cnn_forward_flops() -> int:
+    """Analytic FLOPs of one forward pass (for the manifest/roofline)."""
+    conv = k_conv.conv_flops(
+        MODEL_N, CBLOCK, CBLOCK, MODEL_HW, MODEL_HW, 3, 3
+    )
+    act = k_gelu.gelu_flops(MODEL_N * CBLOCK * MODEL_HW * MODEL_HW)
+    pool = k_avgpool.avgpool_flops(MODEL_N, CBLOCK, _POOL_HW, _POOL_HW, 3)
+    ln = k_layernorm.layernorm_flops(MODEL_N, MODEL_FEATURES)
+    fc = k_matmul.matmul_flops(MODEL_N, MODEL_FEATURES, MODEL_CLASSES)
+    return conv + act + pool + ln + fc

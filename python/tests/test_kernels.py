@@ -1,0 +1,262 @@
+"""Pallas kernels vs pure-jnp references (`ref.py`).
+
+Fixed-shape exactness tests plus hypothesis sweeps over shapes. All
+kernels run interpret=True, so these are genuine numerics checks of what
+the rust runtime will execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import avgpool as k_avgpool
+from compile.kernels import conv_blocked as k_conv
+from compile.kernels import gelu as k_gelu
+from compile.kernels import layernorm as k_layernorm
+from compile.kernels import matmul as k_matmul
+from compile.kernels import winograd as k_winograd
+from compile.kernels import ref
+
+HYPO = settings(max_examples=12, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+class TestMatmul:
+    def test_exact_small(self):
+        a, b = rand(0, 8, 16), rand(1, 16, 4)
+        np.testing.assert_allclose(
+            k_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_tiled_path(self):
+        # Dims beyond one tile exercise the K-accumulation grid.
+        a, b = rand(2, 256, 384), rand(3, 384, 192)
+        np.testing.assert_allclose(
+            k_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    @HYPO
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        a, b = rand(seed, m, k), rand(seed + 1, k, n)
+        np.testing.assert_allclose(
+            k_matmul.matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4
+        )
+
+    def test_inner_product_bias(self):
+        x, w, bias = rand(4, 8, 32), rand(5, 32, 8), rand(6, 8)
+        np.testing.assert_allclose(
+            k_matmul.inner_product(x, w, bias),
+            ref.inner_product_ref(x, w, bias),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+# ------------------------------------------------------------------- gelu
+
+
+class TestGelu:
+    def test_matches_erf_reference(self):
+        x = rand(7, 4, 3, 9, 9)
+        np.testing.assert_allclose(k_gelu.gelu(x), ref.gelu_ref(x), rtol=1e-5, atol=1e-6)
+
+    def test_matches_jax_nn(self):
+        x = rand(8, 1024)
+        np.testing.assert_allclose(
+            k_gelu.gelu(x), jax.nn.gelu(x, approximate=False), rtol=1e-5, atol=1e-6
+        )
+
+    def test_extremes(self):
+        x = jnp.array([-30.0, -1.0, 0.0, 1.0, 30.0] * 16, jnp.float32)
+        y = np.asarray(k_gelu.gelu(x))
+        assert y[0] == pytest.approx(0.0, abs=1e-5)  # deep negative -> 0
+        assert y[2] == 0.0
+        assert y[4] == pytest.approx(30.0, rel=1e-6)  # deep positive -> x
+
+    @HYPO
+    @given(n=st.integers(1, 4096), seed=st.integers(0, 2**16))
+    def test_hypothesis_sizes(self, n, seed):
+        x = rand(seed, n)
+        np.testing.assert_allclose(k_gelu.gelu(x), ref.gelu_ref(x), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- conv
+
+
+class TestConvBlocked:
+    def _run(self, n, c_in, c_out, hw, stride, pad, seed=0):
+        x = rand(seed, n, c_in, hw, hw)
+        w = rand(seed + 1, c_out, c_in, 3, 3)
+        xb = ref.nchw_to_blocked(x)
+        wb = k_conv.weights_to_blocked(w)
+        got = k_conv.conv2d_blocked(xb, wb, stride=stride, pad=pad)
+        want = ref.conv2d_ref_blocked(xb, w, stride, pad, c_in)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_same_conv(self):
+        self._run(2, 16, 16, 8, stride=1, pad=1)
+
+    def test_multi_block_channels(self):
+        self._run(1, 32, 48, 6, stride=1, pad=1, seed=3)
+
+    def test_strided(self):
+        self._run(2, 16, 16, 9, stride=2, pad=1, seed=5)
+
+    def test_padded_channels_c3(self):
+        # The Fig 8 situation: C=3 padded inside a 16-block; numerics
+        # must still match the unpadded reference.
+        self._run(2, 3, 16, 8, stride=1, pad=1, seed=7)
+
+    @HYPO
+    @given(
+        n=st.integers(1, 3),
+        cin_blocks=st.integers(1, 2),
+        cout_blocks=st.integers(1, 2),
+        hw=st.integers(4, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, n, cin_blocks, cout_blocks, hw, seed):
+        self._run(n, 16 * cin_blocks, 16 * cout_blocks, hw, stride=1, pad=1, seed=seed)
+
+
+# --------------------------------------------------------------- winograd
+
+
+class TestWinograd:
+    def test_matches_direct_conv(self):
+        x = rand(0, 2, 8, 8, 8)
+        w = rand(1, 8, 8, 3, 3)
+        got = k_winograd.conv2d_winograd(x, w, pad=1)
+        want = ref.conv2d_ref_nchw(x, w, stride=1, pad=1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_flop_reduction_vs_direct(self):
+        # F(2,3): 16 MACs per tile vs 36 direct -> 2.25x fewer.
+        direct = 2 * 1 * 8 * 8 * 8 * 8 * 9
+        wino = k_winograd.winograd_flops(1, 8, 8, 8, 8)
+        assert direct / wino == pytest.approx(2.25)
+
+    @HYPO
+    @given(
+        n=st.integers(1, 2),
+        c=st.integers(1, 8),
+        oc=st.integers(1, 8),
+        half_hw=st.integers(2, 6),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, n, c, oc, half_hw, seed):
+        hw = 2 * half_hw  # even outputs
+        x = rand(seed, n, c, hw, hw)
+        w = rand(seed + 1, oc, c, 3, 3)
+        got = k_winograd.conv2d_winograd(x, w, pad=1)
+        want = ref.conv2d_ref_nchw(x, w, stride=1, pad=1)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------- avgpool
+
+
+class TestAvgPool:
+    def _run(self, n, c, hw, kernel, stride, seed=0):
+        x = rand(seed, n, c, hw, hw)
+        xb = ref.nchw_to_blocked(x)
+        got = k_avgpool.avgpool_blocked(xb, kernel, stride)
+        want = ref.avgpool_ref_blocked(xb, kernel, stride)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_paper_window(self):
+        self._run(2, 16, 11, kernel=3, stride=2)
+
+    def test_2x2(self):
+        self._run(1, 32, 8, kernel=2, stride=2, seed=2)
+
+    def test_overlapping(self):
+        self._run(1, 16, 7, kernel=3, stride=1, seed=4)
+
+    @HYPO
+    @given(
+        n=st.integers(1, 3),
+        blocks=st.integers(1, 2),
+        hw=st.integers(5, 14),
+        kernel=st.integers(2, 3),
+        stride=st.integers(1, 2),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, n, blocks, hw, kernel, stride, seed):
+        if hw < kernel:
+            return
+        self._run(n, 16 * blocks, hw, kernel, stride, seed=seed)
+
+
+# -------------------------------------------------------------- layernorm
+
+
+class TestLayerNorm:
+    def test_matches_reference(self):
+        x, g, b = rand(0, 32, 128), rand(1, 128), rand(2, 128)
+        np.testing.assert_allclose(
+            k_layernorm.layernorm(x, g, b),
+            ref.layernorm_ref(x, g, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_normalises(self):
+        x = rand(3, 16, 64) * 10 + 5
+        ones, zeros = jnp.ones(64), jnp.zeros(64)
+        y = np.asarray(k_layernorm.layernorm(x, ones, zeros))
+        np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+    @HYPO
+    @given(
+        m=st.integers(1, 64),
+        h=st.integers(4, 512),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, h, seed):
+        x, g, b = rand(seed, m, h), rand(seed + 1, h), rand(seed + 2, h)
+        np.testing.assert_allclose(
+            k_layernorm.layernorm(x, g, b),
+            ref.layernorm_ref(x, g, b),
+            rtol=5e-4,
+            atol=5e-4,
+        )
+
+
+# ---------------------------------------------------------------- layouts
+
+
+class TestLayouts:
+    def test_blocked_roundtrip(self):
+        x = rand(0, 2, 7, 5, 5)
+        back = ref.blocked_to_nchw(ref.nchw_to_blocked(x), 7)
+        np.testing.assert_array_equal(back, x)
+
+    def test_padding_zeros(self):
+        x = jnp.ones((1, 3, 2, 2), jnp.float32)
+        b = np.asarray(ref.nchw_to_blocked(x))
+        assert b.shape == (1, 1, 2, 2, 16)
+        assert b[..., :3].sum() == 3 * 2 * 2
+        assert b[..., 3:].sum() == 0.0
+
+    @HYPO
+    @given(c=st.integers(1, 40), seed=st.integers(0, 2**16))
+    def test_hypothesis_channels(self, c, seed):
+        x = rand(seed, 1, c, 3, 3)
+        back = ref.blocked_to_nchw(ref.nchw_to_blocked(x), c)
+        np.testing.assert_array_equal(back, x)

@@ -1,0 +1,96 @@
+"""L2 model shape tests + AOT export pipeline tests.
+
+Verifies that the composed CNN produces correct shapes/numerics, that
+every catalog entry lowers to parseable HLO text, and that the manifest
+matches what the rust runtime expects.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestModel:
+    def _params(self):
+        shapes = model.model_param_shapes()
+        return [rand(i, shapes[k]) * 0.1 for i, k in enumerate(
+            ("x", "conv_w", "ln_gamma", "ln_beta", "fc_w", "fc_b"))]
+
+    def test_forward_shape(self):
+        (logits,) = model.cnn_forward(*self._params())
+        assert logits.shape == (model.MODEL_N, model.MODEL_CLASSES)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_forward_matches_reference_composition(self):
+        x, conv_w, g, b, fc_w, fc_b = self._params()
+        (got,) = model.cnn_forward(x, conv_w, g, b, fc_w, fc_b)
+
+        # Rebuild with pure-jnp references, unblocking the conv.
+        # conv_w blocked [1,1,3,3,16,16] -> OIHW.
+        w = jnp.transpose(conv_w[0, 0], (3, 2, 0, 1))  # [oc, ic, kh, kw]
+        y = ref.conv2d_ref_blocked(x, w, 1, 1, 16)
+        y = ref.gelu_ref(y)
+        y = ref.avgpool_ref_blocked(y, 3, 2)
+        flat = y.reshape(y.shape[0], -1)
+        normed = ref.layernorm_ref(flat, g, b)
+        want = ref.inner_product_ref(normed, fc_w, fc_b)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_flops_positive_and_conv_dominated(self):
+        total = model.cnn_forward_flops()
+        assert total > 0
+        conv_only = 2 * model.MODEL_N * 16 * 32 * 32 * 16 * 9
+        assert conv_only / total > 0.5, "conv should dominate this model"
+
+
+class TestAot:
+    def test_catalog_is_complete(self):
+        names = [e[0] for e in aot.artifact_catalog()]
+        for required in [
+            "gelu_nchw", "gelu_nchw16c", "inner_product", "conv_nchw16c",
+            "conv_winograd", "avgpool_nchw16c", "layernorm",
+            "sum_reduction", "cnn_forward",
+        ]:
+            assert required in names
+
+    def test_gelu_pair_encodes_fig8(self):
+        cat = {e[0]: e for e in aot.artifact_catalog()}
+        plain_flops = cat["gelu_nchw"][3]
+        blocked_flops = cat["gelu_nchw16c"][3]
+        assert blocked_flops / plain_flops == pytest.approx(16 / 3)
+
+    def test_every_entry_lowers_to_hlo_text(self):
+        for name, fn, inputs, _flops, _desc in aot.artifact_catalog():
+            lowered = jax.jit(fn).lower(*inputs)
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), f"{name}: bad HLO header"
+            assert "ENTRY" in text, f"{name}: no entry computation"
+
+    def test_export_writes_manifest(self, tmp_path):
+        # Export a single small entry end-to-end by monkeypatching the
+        # catalog (full export is exercised by `make artifacts`).
+        full = aot.artifact_catalog
+        small = [e for e in full() if e[0] == "sum_reduction"]
+        aot.artifact_catalog = lambda: small
+        try:
+            aot.export_all(str(tmp_path))
+        finally:
+            aot.artifact_catalog = full
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert len(manifest["artifacts"]) == 1
+        entry = manifest["artifacts"][0]
+        assert entry["name"] == "sum_reduction"
+        assert os.path.exists(tmp_path / entry["file"])
+        assert entry["inputs"][0]["shape"] == [65536]
+        assert entry["outputs"][0]["shape"] == [1]

@@ -1,0 +1,276 @@
+//! A small criterion-style benchmarking harness.
+//!
+//! `criterion` is unavailable offline, so benches under `benches/` use this
+//! instead (`harness = false` in `Cargo.toml`). Features: wallclock warmup,
+//! adaptive iteration-count selection targeting a measurement window,
+//! outlier rejection, throughput units, and aligned table / CSV output.
+//!
+//! The statistical protocol intentionally mirrors the paper's §2.5:
+//! repeated executions, averaged, with optional warm-up ("warm caches")
+//! pre-runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::human::{fmt_seconds, fmt_si, pad_left, pad_right};
+use crate::util::stats::{reject_outliers, Summary};
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Warmup wallclock budget before measuring.
+    pub warmup: Duration,
+    /// Target measurement wallclock budget.
+    pub measure: Duration,
+    /// Min/max sample count.
+    pub min_samples: usize,
+    pub max_samples: usize,
+    /// Std-dev multiple for outlier rejection (0 disables).
+    pub outlier_k: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 200,
+            outlier_k: 3.0,
+        }
+    }
+}
+
+impl Config {
+    /// A faster profile for CI / `cargo test`.
+    pub fn quick() -> Self {
+        Config {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            max_samples: 50,
+            outlier_k: 3.0,
+        }
+    }
+
+    /// Honour `DLROOFLINE_BENCH_QUICK=1` for fast smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("DLROOFLINE_BENCH_QUICK").as_deref() == Ok("1") {
+            Config::quick()
+        } else {
+            Config::default()
+        }
+    }
+}
+
+/// Units in which to express throughput for a benchmark.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Throughput {
+    /// No throughput — report time only.
+    None,
+    /// Bytes processed per iteration → B/s.
+    Bytes(f64),
+    /// FLOPs per iteration → FLOP/s.
+    Flops(f64),
+    /// Abstract elements per iteration → elem/s.
+    Elements(f64),
+}
+
+/// One finished measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration time statistics, seconds.
+    pub time: Summary,
+    pub throughput: Throughput,
+}
+
+impl Measurement {
+    /// Mean throughput in the unit implied by `throughput`, if any.
+    pub fn rate(&self) -> Option<f64> {
+        match self.throughput {
+            Throughput::None => None,
+            Throughput::Bytes(b) => Some(b / self.time.mean),
+            Throughput::Flops(f) => Some(f / self.time.mean),
+            Throughput::Elements(e) => Some(e / self.time.mean),
+        }
+    }
+
+    fn rate_str(&self) -> String {
+        match (self.rate(), self.throughput) {
+            (Some(r), Throughput::Bytes(_)) => fmt_si(r, "B/s"),
+            (Some(r), Throughput::Flops(_)) => fmt_si(r, "FLOP/s"),
+            (Some(r), Throughput::Elements(_)) => fmt_si(r, "elem/s"),
+            _ => "-".to_string(),
+        }
+    }
+}
+
+/// The bench runner: collects measurements and renders a report.
+pub struct Bencher {
+    config: Config,
+    results: Vec<Measurement>,
+    group: String,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        Bencher {
+            config: Config::from_env(),
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    pub fn with_config(group: &str, config: Config) -> Self {
+        Bencher { config, results: Vec::new(), group: group.to_string() }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration and returns a
+    /// value kept opaque to the optimizer via `std::hint::black_box`.
+    pub fn bench<T>(&mut self, name: &str, throughput: Throughput, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup + calibration: find how long one iteration takes.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.config.warmup || calib_iters == 0 {
+            std::hint::black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+
+        // Choose sample count to fit the measurement budget.
+        let budget = self.config.measure.as_secs_f64();
+        let samples = ((budget / per_iter.max(1e-9)) as usize)
+            .clamp(self.config.min_samples, self.config.max_samples);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let kept = if self.config.outlier_k > 0.0 {
+            reject_outliers(&times, self.config.outlier_k)
+        } else {
+            times
+        };
+        let m = Measurement {
+            name: name.to_string(),
+            time: Summary::of(&kept),
+            throughput,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record a pre-computed sample set (used when the "benchmark" is a
+    /// simulation that reports model time rather than wallclock).
+    pub fn record(&mut self, name: &str, throughput: Throughput, seconds: &[f64]) -> &Measurement {
+        let m = Measurement {
+            name: name.to_string(),
+            time: Summary::of(seconds),
+            throughput,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render an aligned text table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.group));
+        out.push_str(&format!(
+            "{} {} {} {} {}\n",
+            pad_right("benchmark", 44),
+            pad_left("mean", 12),
+            pad_left("p05", 12),
+            pad_left("p95", 12),
+            pad_left("throughput", 16),
+        ));
+        for m in &self.results {
+            out.push_str(&format!(
+                "{} {} {} {} {}\n",
+                pad_right(&m.name, 44),
+                pad_left(&fmt_seconds(m.time.mean), 12),
+                pad_left(&fmt_seconds(m.time.p05), 12),
+                pad_left(&fmt_seconds(m.time.p95), 12),
+                pad_left(&m.rate_str(), 16),
+            ));
+        }
+        out
+    }
+
+    /// Render CSV (for EXPERIMENTS.md tooling).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("group,benchmark,mean_s,stddev_s,p05_s,p95_s,samples,rate\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{:.9},{},{}\n",
+                self.group,
+                m.name,
+                m.time.mean,
+                m.time.stddev,
+                m.time.p05,
+                m.time.p95,
+                m.time.n,
+                m.rate().map(|r| format!("{r:.3}")).unwrap_or_default(),
+            ));
+        }
+        out
+    }
+
+    /// Print the table to stdout (benches call this at the end).
+    pub fn finish(&self) {
+        println!("{}", self.table());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_cheap_function() {
+        let mut b = Bencher::with_config("t", Config::quick());
+        let m = b.bench("noop-ish", Throughput::Elements(100.0), || {
+            (0..100u64).map(std::hint::black_box).sum::<u64>()
+        });
+        assert!(m.time.mean > 0.0);
+        assert!(m.rate().unwrap() > 0.0);
+        assert!(m.time.n >= 5);
+    }
+
+    #[test]
+    fn record_precomputed() {
+        let mut b = Bencher::new("t");
+        let m = b.record("sim", Throughput::Flops(1e9), &[0.5, 0.5, 0.5]);
+        assert_eq!(m.time.mean, 0.5);
+        assert_eq!(m.rate().unwrap(), 2e9);
+    }
+
+    #[test]
+    fn table_contains_rows() {
+        let mut b = Bencher::new("grp");
+        b.record("a", Throughput::None, &[1.0]);
+        b.record("b", Throughput::Bytes(1e6), &[0.001]);
+        let t = b.table();
+        assert!(t.contains("grp"));
+        assert!(t.contains("a"));
+        assert!(t.contains("B/s"));
+        let csv = b.csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let mut b = Bencher::new("u");
+        let m = b.record("f", Throughput::Flops(2e9), &[1.0]);
+        assert!(m.rate_str().contains("GFLOP/s"), "{}", m.rate_str());
+    }
+}

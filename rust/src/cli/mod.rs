@@ -1,0 +1,302 @@
+//! Declarative command-line parsing.
+//!
+//! `clap` is unavailable in the offline build environment, so this module
+//! provides a small substitute: subcommands, `--flag value` / `--flag=value`
+//! options, boolean switches, positional arguments and generated help text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean switch (no value) vs valued option.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a subcommand.
+#[derive(Clone, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Top-level application spec.
+#[derive(Clone, Debug)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub version: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub command: String,
+    pub opts: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Valued option (or its default).
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Valued option parsed as `T`.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow!("invalid value '{s}' for --{name}")),
+        }
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+impl AppSpec {
+    /// Parse argv (excluding the program name). Returns `Err` with the help
+    /// text embedded for `--help`/missing-command cases.
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        if argv.is_empty() {
+            bail!("{}", self.help_text(None));
+        }
+        if argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            bail!("{}", self.help_text(None));
+        }
+        if argv[0] == "--version" || argv[0] == "-V" {
+            bail!("{} {}", self.name, self.version);
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == argv[0])
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown command '{}'\n\n{}",
+                    argv[0],
+                    self.help_text(None)
+                )
+            })?;
+
+        let mut parsed = Parsed {
+            command: cmd.name.to_string(),
+            ..Default::default()
+        };
+        // Apply defaults first.
+        for opt in &cmd.opts {
+            if let (true, Some(d)) = (opt.takes_value, opt.default) {
+                parsed.opts.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.help_text(Some(cmd)));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow!("unknown option '--{name}' for '{}'", cmd.name))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("--{name} requires a value"))?
+                                .clone()
+                        }
+                    };
+                    parsed.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("switch --{name} does not take a value");
+                    }
+                    parsed.switches.push(name.to_string());
+                }
+            } else {
+                parsed.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+
+        if parsed.positional.len() > cmd.positional.len() {
+            bail!(
+                "too many positional arguments for '{}' (expected at most {})",
+                cmd.name,
+                cmd.positional.len()
+            );
+        }
+        Ok(parsed)
+    }
+
+    /// Render help: app-level or command-level.
+    pub fn help_text(&self, cmd: Option<&CmdSpec>) -> String {
+        let mut out = String::new();
+        match cmd {
+            None => {
+                out.push_str(&format!("{} {} — {}\n\n", self.name, self.version, self.about));
+                out.push_str(&format!("USAGE: {} <command> [options]\n\nCOMMANDS:\n", self.name));
+                for c in &self.commands {
+                    out.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+                }
+                out.push_str("\nRun '");
+                out.push_str(self.name);
+                out.push_str(" <command> --help' for command options.\n");
+            }
+            Some(c) => {
+                out.push_str(&format!("{} {} — {}\n\nUSAGE: {} {}", self.name, self.version, c.help, self.name, c.name));
+                for (p, _) in &c.positional {
+                    out.push_str(&format!(" <{p}>"));
+                }
+                out.push_str(" [options]\n");
+                if !c.positional.is_empty() {
+                    out.push_str("\nARGS:\n");
+                    for (p, h) in &c.positional {
+                        out.push_str(&format!("  {p:<14} {h}\n"));
+                    }
+                }
+                if !c.opts.is_empty() {
+                    out.push_str("\nOPTIONS:\n");
+                    for o in &c.opts {
+                        let mut left = format!("--{}", o.name);
+                        if o.takes_value {
+                            left.push_str(" <v>");
+                        }
+                        let default = o
+                            .default
+                            .map(|d| format!(" [default: {d}]"))
+                            .unwrap_or_default();
+                        out.push_str(&format!("  {left:<22} {}{default}\n", o.help));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Shorthand constructors.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec { name, help, takes_value: true, default }
+}
+
+pub fn switch(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, takes_value: false, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> AppSpec {
+        AppSpec {
+            name: "dlroofline",
+            about: "roofline repro",
+            version: "0.1.0",
+            commands: vec![
+                CmdSpec {
+                    name: "figure",
+                    help: "reproduce a paper figure",
+                    opts: vec![
+                        opt("out", "output dir", Some("reports")),
+                        opt("batch", "batch size", None),
+                        switch("full-size", "use the paper's full sizes"),
+                    ],
+                    positional: vec![("id", "figure id, e.g. f3")],
+                },
+                CmdSpec {
+                    name: "list",
+                    help: "list experiments",
+                    opts: vec![],
+                    positional: vec![],
+                },
+            ],
+        }
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_positional() {
+        let p = app()
+            .parse(&argv(&["figure", "f3", "--batch", "32", "--full-size"]))
+            .unwrap();
+        assert_eq!(p.command, "figure");
+        assert_eq!(p.positional, vec!["f3"]);
+        assert_eq!(p.opt("batch"), Some("32"));
+        assert!(p.has("full-size"));
+        // default applied
+        assert_eq!(p.opt("out"), Some("reports"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let p = app().parse(&argv(&["figure", "f6", "--batch=64"])).unwrap();
+        assert_eq!(p.opt_parse::<usize>("batch").unwrap(), Some(64));
+    }
+
+    #[test]
+    fn unknown_command_errors_with_help() {
+        let err = app().parse(&argv(&["bogus"])).unwrap_err().to_string();
+        assert!(err.contains("unknown command"), "{err}");
+        assert!(err.contains("COMMANDS"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let err = app().parse(&argv(&["figure", "--nope"])).unwrap_err().to_string();
+        assert!(err.contains("--nope"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = app().parse(&argv(&["figure", "--batch"])).unwrap_err().to_string();
+        assert!(err.contains("requires a value"), "{err}");
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        let err = app().parse(&argv(&["list", "x"])).unwrap_err().to_string();
+        assert!(err.contains("too many positional"), "{err}");
+    }
+
+    #[test]
+    fn help_flags_bail_with_usage() {
+        let err = app().parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("USAGE"), "{err}");
+        let err = app().parse(&argv(&["figure", "--help"])).unwrap_err().to_string();
+        assert!(err.contains("--full-size"), "{err}");
+    }
+
+    #[test]
+    fn bad_parse_type() {
+        let p = app().parse(&argv(&["figure", "--batch", "zz"])).unwrap();
+        assert!(p.opt_parse::<usize>("batch").is_err());
+    }
+}

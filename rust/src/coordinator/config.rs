@@ -1,0 +1,50 @@
+//! Platform selection: presets or TOML-lite config files.
+
+use anyhow::{Context, Result};
+
+use crate::sim::machine::MachineConfig;
+use crate::util::toml_lite::Doc;
+
+/// Resolve a `--machine` argument: a preset name (`xeon_6248`,
+/// `xeon_6248_1s`) or a path to a config file (see `configs/`).
+pub fn resolve_machine(arg: &str) -> Result<MachineConfig> {
+    match arg {
+        "xeon_6248" | "xeon6248" | "paper" => Ok(MachineConfig::xeon_6248()),
+        "xeon_6248_1s" => Ok(MachineConfig::xeon_6248_1s()),
+        path => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("'{path}' is neither a preset (xeon_6248, xeon_6248_1s) nor a readable config file"))?;
+            let doc = Doc::parse(&text).with_context(|| format!("parsing {path}"))?;
+            MachineConfig::from_toml(&doc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(resolve_machine("xeon_6248").unwrap().sockets, 2);
+        assert_eq!(resolve_machine("paper").unwrap().cores(), 40);
+        assert_eq!(resolve_machine("xeon_6248_1s").unwrap().sockets, 1);
+    }
+
+    #[test]
+    fn missing_file_errors_helpfully() {
+        let err = resolve_machine("/no/such/file.toml").unwrap_err().to_string();
+        assert!(err.contains("preset"), "{err}");
+    }
+
+    #[test]
+    fn config_file_resolves() {
+        let dir = std::env::temp_dir().join(format!("dlr-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.toml");
+        std::fs::write(&path, "name = \"small\"\nsockets = 1\ncores_per_socket = 2\n").unwrap();
+        let m = resolve_machine(path.to_str().unwrap()).unwrap();
+        assert_eq!(m.cores(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

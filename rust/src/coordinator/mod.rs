@@ -1,0 +1,9 @@
+//! The coordinator: kernel registry, experiment runner and report
+//! emission — everything behind the `dlroofline` CLI.
+
+pub mod config;
+pub mod registry;
+pub mod runner;
+
+pub use registry::KernelRegistry;
+pub use runner::{render_report, run_and_write, RunOutput};

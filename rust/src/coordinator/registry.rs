@@ -1,0 +1,129 @@
+//! Kernel registry: name → model factory, so the CLI (and downstream
+//! users embedding the library) can measure any primitive ad hoc and
+//! register their own.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernels::conv_direct::{ConvDirectBlocked, ConvDirectNchw};
+use crate::kernels::conv_winograd::ConvWinograd;
+use crate::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
+use crate::kernels::inner_product::InnerProduct;
+use crate::kernels::layernorm::LayerNorm;
+use crate::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, PoolShape};
+use crate::kernels::reduction::SumReduction;
+use crate::kernels::{ConvShape, KernelModel};
+
+type Factory = Box<dyn Fn(usize) -> Box<dyn KernelModel> + Send + Sync>;
+
+/// A registry of kernel factories keyed by name; the `usize` parameter is
+/// the batch/problem scale.
+pub struct KernelRegistry {
+    factories: BTreeMap<String, Factory>,
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl KernelRegistry {
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry { factories: BTreeMap::new() }
+    }
+
+    /// All paper kernels pre-registered.
+    pub fn with_builtins() -> KernelRegistry {
+        let mut r = KernelRegistry::empty();
+        r.register("conv_direct_nchw", |n| {
+            Box::new(ConvDirectNchw::new(ConvShape::paper_conv(n)))
+        });
+        r.register("conv_direct_nchw16c", |n| {
+            Box::new(ConvDirectBlocked::new(ConvShape::paper_conv(n)))
+        });
+        r.register("conv_winograd", |n| {
+            Box::new(ConvWinograd::new(ConvShape::paper_conv(n)))
+        });
+        r.register("inner_product", |_| Box::new(InnerProduct::paper_shape()));
+        r.register("avgpool_nchw", |n| Box::new(AvgPoolNchw::new(PoolShape::paper_pool(n))));
+        r.register("avgpool_nchw16c", |n| {
+            Box::new(AvgPoolBlocked::new(PoolShape::paper_pool(n)))
+        });
+        r.register("gelu_nchw", |n| Box::new(GeluNchw::new(EltwiseShape::paper_gelu(n))));
+        r.register("gelu_nchw16c", |n| {
+            Box::new(GeluBlocked::forced(EltwiseShape::paper_gelu(n)))
+        });
+        r.register("layernorm", |n| Box::new(LayerNorm::new(n.max(1) * 1024, 768)));
+        r.register("sum_reduction", |n| {
+            Box::new(SumReduction::new((n.max(1)) << 20))
+        });
+        r
+    }
+
+    /// Register (or replace) a factory.
+    pub fn register(
+        &mut self,
+        name: &str,
+        factory: impl Fn(usize) -> Box<dyn KernelModel> + Send + Sync + 'static,
+    ) {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    /// Instantiate a kernel at the given scale.
+    pub fn create(&self, name: &str, scale: usize) -> Result<Box<dyn KernelModel>> {
+        let f = self.factories.get(name).ok_or_else(|| {
+            anyhow!("unknown kernel '{name}' (have: {})", self.names().join(", "))
+        })?;
+        Ok(f(scale))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_paper_kernels() {
+        let r = KernelRegistry::with_builtins();
+        for name in [
+            "conv_direct_nchw",
+            "conv_direct_nchw16c",
+            "conv_winograd",
+            "inner_product",
+            "avgpool_nchw",
+            "avgpool_nchw16c",
+            "gelu_nchw",
+            "gelu_nchw16c",
+            "layernorm",
+            "sum_reduction",
+        ] {
+            let k = r.create(name, 1).unwrap();
+            assert_eq!(k.name(), name, "factory name mismatch");
+            assert!(k.flops() > 0.0, "{name} has zero flops");
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_lists_options() {
+        let r = KernelRegistry::with_builtins();
+        let err = match r.create("bogus", 1) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("bogus kernel should not resolve"),
+        };
+        assert!(err.contains("inner_product"), "{err}");
+    }
+
+    #[test]
+    fn user_registration_overrides() {
+        let mut r = KernelRegistry::with_builtins();
+        r.register("sum_reduction", |_| Box::new(SumReduction::new(1 << 10)));
+        let k = r.create("sum_reduction", 99).unwrap();
+        assert_eq!(k.flops(), 1024.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Experiment runner: execute an experiment, render the full report
+//! (markdown tables + ASCII roofline + paper comparison), and write
+//! markdown/SVG/CSV files under a reports directory.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::harness::experiments::{run_experiment, ExperimentParams, ExperimentResult};
+use crate::roofline::plot::ascii_plot;
+use crate::roofline::report::{comparison_table, csv, markdown_table};
+use crate::roofline::svg::svg_plot;
+use crate::util::fsutil::write_atomic;
+
+/// Paths written for one experiment.
+#[derive(Clone, Debug, Default)]
+pub struct RunOutput {
+    pub markdown: Option<PathBuf>,
+    pub svgs: Vec<PathBuf>,
+    pub csvs: Vec<PathBuf>,
+}
+
+/// Render the complete textual report for an experiment result.
+pub fn render_report(result: &ExperimentResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {} — {}\n\n", result.id.to_uppercase(), result.title));
+    for (title, table) in &result.tables {
+        out.push_str(&format!("### {title}\n\n{table}\n"));
+    }
+    for group in &result.groups {
+        let points = group.points();
+        out.push_str(&markdown_table(&group.roofline, &points));
+        if !group.expectations.is_empty() {
+            out.push_str("#### paper vs measured\n\n");
+            out.push_str(&comparison_table(&group.roofline, &points, &group.expectations));
+        }
+        out.push_str("```text\n");
+        out.push_str(&ascii_plot(&group.roofline, &points));
+        out.push_str("```\n\n");
+    }
+    for note in &result.notes {
+        out.push_str(&format!("> {note}\n\n"));
+    }
+    out
+}
+
+/// Run an experiment and write its report files under `out_dir`.
+pub fn run_and_write(
+    id: &str,
+    params: &ExperimentParams,
+    out_dir: &Path,
+    with_svg: bool,
+) -> Result<(ExperimentResult, RunOutput)> {
+    let result = run_experiment(id, params)?;
+    let mut output = RunOutput::default();
+
+    let md_path = out_dir.join(format!("{id}.md"));
+    write_atomic(&md_path, &render_report(&result))?;
+    output.markdown = Some(md_path);
+
+    for (i, group) in result.groups.iter().enumerate() {
+        let points = group.points();
+        let suffix = if result.groups.len() > 1 {
+            format!("_{i}")
+        } else {
+            String::new()
+        };
+        if with_svg {
+            let svg_path = out_dir.join(format!("{id}{suffix}.svg"));
+            write_atomic(&svg_path, &svg_plot(&group.roofline, &points))?;
+            output.svgs.push(svg_path);
+        }
+        let csv_path = out_dir.join(format!("{id}{suffix}.csv"));
+        write_atomic(&csv_path, &csv(&group.roofline, &points))?;
+        output.csvs.push(csv_path);
+    }
+    Ok((result, output))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    #[test]
+    fn render_f1() {
+        let result = run_experiment("f1", &quick_params()).unwrap();
+        let report = render_report(&result);
+        assert!(report.contains("F1"));
+        assert!(report.contains("roofline:"));
+        assert!(report.contains("```text"));
+    }
+
+    #[test]
+    fn run_and_write_produces_files() {
+        let dir = std::env::temp_dir().join(format!("dlr-run-{}", std::process::id()));
+        let (result, out) = run_and_write("f6", &quick_params(), &dir, true).unwrap();
+        assert_eq!(result.id, "f6");
+        assert!(out.markdown.as_ref().unwrap().exists());
+        assert_eq!(out.svgs.len(), 1);
+        assert!(out.svgs[0].exists());
+        let md = std::fs::read_to_string(out.markdown.unwrap()).unwrap();
+        assert!(md.contains("inner_product"));
+        assert!(md.contains("paper vs measured"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,50 @@
+//! Cold vs warm cache protocols (§2.5.1–§2.5.2).
+
+/// Cache state protocol for a measured run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheState {
+    /// §2.5.1: caches invalidated before the measured execution (the
+    /// paper overwrote them with junk; the simulator flushes).
+    Cold,
+    /// §2.5.2: the kernel is executed `warmup_runs` times first.
+    Warm,
+}
+
+impl CacheState {
+    pub fn label(self) -> &'static str {
+        match self {
+            CacheState::Cold => "cold",
+            CacheState::Warm => "warm",
+        }
+    }
+
+    /// Pre-runs before measurement.
+    pub fn warmup_runs(self) -> usize {
+        match self {
+            CacheState::Cold => 0,
+            CacheState::Warm => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CacheState> {
+        match s {
+            "cold" => Some(CacheState::Cold),
+            "warm" => Some(CacheState::Warm),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_warmups() {
+        assert_eq!(CacheState::Cold.label(), "cold");
+        assert_eq!(CacheState::Cold.warmup_runs(), 0);
+        assert!(CacheState::Warm.warmup_runs() >= 1);
+        assert_eq!(CacheState::parse("warm"), Some(CacheState::Warm));
+        assert_eq!(CacheState::parse("x"), None);
+    }
+}

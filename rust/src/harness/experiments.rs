@@ -1,0 +1,799 @@
+//! Per-figure experiment definitions — the executable index of DESIGN.md
+//! §4. Every figure/table in the paper's evaluation maps to one
+//! [`ExperimentResult`] producer here; benches and the CLI `figure`
+//! command are thin wrappers around [`run_experiment`].
+
+use anyhow::{bail, Result};
+
+use crate::kernels::conv_direct::{ConvDirectBlocked, ConvDirectNchw};
+use crate::kernels::conv_winograd::ConvWinograd;
+use crate::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
+use crate::kernels::inner_product::InnerProduct;
+use crate::kernels::layernorm::LayerNorm;
+use crate::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, MaxPoolNote, PoolShape};
+use crate::kernels::reduction::SumReduction;
+use crate::kernels::{ConvShape, KernelModel};
+use crate::roofline::model::RooflineModel;
+use crate::roofline::point::KernelPoint;
+use crate::roofline::report::PaperExpectation;
+use crate::sim::machine::{Machine, MachineConfig};
+use crate::sim::prefetch::PrefetchConfig;
+use crate::util::human::{fmt_bytes, fmt_flops, fmt_rate};
+
+use super::cache_state::CacheState;
+use super::measure::{measure_kernel, KernelMeasurement};
+use super::scenario::Scenario;
+
+/// Tunable workload parameters.
+#[derive(Clone, Debug)]
+pub struct ExperimentParams {
+    pub machine: MachineConfig,
+    /// Use the paper's full tensor sizes (slower simulation).
+    pub full_size: bool,
+    /// Override batch for conv/gelu/pool workloads.
+    pub batch: Option<usize>,
+}
+
+impl Default for ExperimentParams {
+    fn default() -> Self {
+        ExperimentParams {
+            machine: MachineConfig::xeon_6248(),
+            full_size: false,
+            batch: None,
+        }
+    }
+}
+
+impl ExperimentParams {
+    fn conv_batch(&self) -> usize {
+        self.batch.unwrap_or(if self.full_size { 32 } else { 4 })
+    }
+
+    fn gelu_batch(&self) -> usize {
+        self.batch.unwrap_or(if self.full_size { 256 } else { 16 })
+    }
+
+    fn pool_batch(&self) -> usize {
+        self.batch.unwrap_or(if self.full_size { 64 } else { 4 })
+    }
+
+    fn ln_rows(&self) -> usize {
+        if self.full_size { 64 * 512 } else { 8 * 1024 }
+    }
+}
+
+/// One roofline figure: a roofline + the kernels measured on it.
+#[derive(Clone, Debug)]
+pub struct FigureGroup {
+    pub roofline: RooflineModel,
+    pub measurements: Vec<KernelMeasurement>,
+    pub expectations: Vec<PaperExpectation>,
+}
+
+impl FigureGroup {
+    pub fn points(&self) -> Vec<KernelPoint> {
+        self.measurements.iter().map(|m| m.point()).collect()
+    }
+}
+
+/// The result of reproducing one paper artefact.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentResult {
+    pub id: String,
+    pub title: String,
+    pub groups: Vec<FigureGroup>,
+    /// Free-form markdown tables (characterisation / methodology
+    /// experiments that are not roofline plots).
+    pub tables: Vec<(String, String)>,
+    pub notes: Vec<String>,
+}
+
+/// All experiment ids with titles (CLI `list`).
+pub fn experiment_index() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("f1", "Fig 1: simplified roofline example"),
+        ("p1", "§2.1: peak computational performance (simulated π)"),
+        ("p2", "§2.2: peak memory throughput (simulated β, binding & migration)"),
+        ("v1", "§2.3: FMA PMU counting validation"),
+        ("v2", "§2.4: traffic methodology (LLC-miss vs IMC, prefetchers)"),
+        ("f3", "Fig 3: convolution rooflines, single thread"),
+        ("f4", "Fig 4: convolution rooflines, one socket"),
+        ("f5", "Fig 5: convolution rooflines, two sockets"),
+        ("f6", "Fig 6: inner product, single thread, cold vs warm"),
+        ("f7", "Fig 7: average pooling, single thread, NCHW vs NCHW16C"),
+        ("f8", "Fig 8: GELU forced-blocked pathology, single core"),
+        ("a1", "Appendix: layer normalisation rooflines (3 scenarios)"),
+        ("a2", "Appendix: GELU favourable dims (3 scenarios)"),
+        ("a3", "Appendix: inner product, socket & two-socket"),
+        ("a4", "Appendix: average pooling, socket & two-socket"),
+        ("m1", "§2.5: unbound threads exceed the single-socket roof (why numactl matters)"),
+    ]
+}
+
+/// Run an experiment by id.
+pub fn run_experiment(id: &str, params: &ExperimentParams) -> Result<ExperimentResult> {
+    match id {
+        "f1" => exp_f1(params),
+        "p1" => exp_p1(params),
+        "p2" => exp_p2(params),
+        "v1" => exp_v1(params),
+        "v2" => exp_v2(params),
+        "f3" => exp_conv(params, Scenario::SingleThread, "f3"),
+        "f4" => exp_conv(params, Scenario::SingleSocket, "f4"),
+        "f5" => exp_conv(params, Scenario::TwoSocket, "f5"),
+        "f6" => exp_inner_product(params, &[Scenario::SingleThread], "f6"),
+        "f7" => exp_pooling(params, &[Scenario::SingleThread], "f7"),
+        "f8" => exp_gelu_forced(params),
+        "a1" => exp_layernorm(params),
+        "a2" => exp_gelu_favourable(params),
+        "a3" => exp_inner_product(
+            params,
+            &[Scenario::SingleSocket, Scenario::TwoSocket],
+            "a3",
+        ),
+        "a4" => exp_pooling(params, &[Scenario::SingleSocket, Scenario::TwoSocket], "a4"),
+        "m1" => exp_binding_artifact(params),
+        other => bail!("unknown experiment '{other}' (see `dlroofline list`)"),
+    }
+}
+
+fn roofline_for(params: &ExperimentParams, scenario: Scenario) -> RooflineModel {
+    RooflineModel::for_machine(
+        &params.machine,
+        scenario.threads(&params.machine),
+        scenario.nodes_used(&params.machine),
+        scenario.label(),
+    )
+}
+
+fn measure_group(
+    params: &ExperimentParams,
+    scenario: Scenario,
+    kernels: &[&dyn KernelModel],
+    states: &[CacheState],
+    expectations: Vec<PaperExpectation>,
+) -> Result<FigureGroup> {
+    let mut machine = Machine::new(params.machine.clone());
+    let mut measurements = Vec::new();
+    for k in kernels {
+        for &cs in states {
+            measurements.push(measure_kernel(&mut machine, *k, scenario, cs)?);
+        }
+    }
+    Ok(FigureGroup {
+        roofline: roofline_for(params, scenario),
+        measurements,
+        expectations,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fig 1: the illustrative roofline
+// ---------------------------------------------------------------------
+
+fn exp_f1(params: &ExperimentParams) -> Result<ExperimentResult> {
+    let roofline = roofline_for(params, Scenario::SingleThread);
+    Ok(ExperimentResult {
+        id: "f1".into(),
+        title: "Simplified roofline example (Fig 1)".into(),
+        groups: vec![FigureGroup {
+            roofline,
+            measurements: vec![],
+            expectations: vec![],
+        }],
+        notes: vec![
+            "P = min(π, I·β) — kernels left of the ridge are memory-bound, \
+             right of it compute-bound."
+                .into(),
+        ],
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// §2.1 / §2.2: platform characterisation
+// ---------------------------------------------------------------------
+
+fn exp_p1(params: &ExperimentParams) -> Result<ExperimentResult> {
+    use crate::sim::core::VecWidth;
+    let m = &params.machine;
+    let mut table = String::from(
+        "| scenario | threads | scalar | AVX2 FMA | AVX-512 FMA |\n|---|---|---|---|---|\n",
+    );
+    for sc in Scenario::all() {
+        let t = sc.threads(m);
+        table.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            sc.label(),
+            t,
+            fmt_flops(m.peak_flops(t, VecWidth::Scalar)),
+            fmt_flops(m.peak_flops(t, VecWidth::V256)),
+            fmt_flops(m.peak_flops(t, VecWidth::V512)),
+        ));
+    }
+    Ok(ExperimentResult {
+        id: "p1".into(),
+        title: "Peak computational performance π (§2.1)".into(),
+        tables: vec![("peak FLOP/s by scenario and ISA".into(), table)],
+        notes: vec![
+            "Benchmark technique (Fig 2): runtime-generated chains of \
+             independent vfmadd132ps — see hostbench::jit for the real-host \
+             equivalent (`dlroofline host-bench`)."
+                .into(),
+        ],
+        ..Default::default()
+    })
+}
+
+fn exp_p2(params: &ExperimentParams) -> Result<ExperimentResult> {
+    let m = &params.machine;
+    let mut table = String::from(
+        "| scenario | threads | nodes | regular stores | NT stores |\n|---|---|---|---|---|\n",
+    );
+    for sc in Scenario::all() {
+        let t = sc.threads(m);
+        let nodes = sc.nodes_used(m);
+        let per_node = t.div_ceil(nodes);
+        let reg = m.dram.effective_bw(per_node, false, true) * nodes as f64;
+        let nt = m.dram.effective_bw(per_node, true, true) * nodes as f64;
+        table.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            sc.label(),
+            t,
+            nodes,
+            fmt_rate(reg),
+            fmt_rate(nt),
+        ));
+    }
+
+    // The §2.2 migration observation: unbound single-socket threads under
+    // bandwidth pressure drift to the other node.
+    let placement = crate::sim::numa::Placement::unbound(m.cores_per_socket, 0);
+    let demand = vec![m.dram.sustained_bw(false) * 1.8, 0.0];
+    let capacity = vec![m.dram.sustained_bw(false); 2];
+    let (after, migrated) = placement.after_pressure(&demand, &capacity);
+
+    Ok(ExperimentResult {
+        id: "p2".into(),
+        title: "Peak memory throughput β (§2.2)".into(),
+        tables: vec![("effective bandwidth by scenario".into(), table)],
+        notes: vec![
+            format!(
+                "NT stores beat regular stores at socket scale (no RFO); \
+                 single-thread bandwidth is concurrency-limited to {} either way \
+                 — the paper's observation that memset/memcpy (prefetch-assisted) \
+                 win single-threaded.",
+                fmt_rate(m.dram.effective_bw(1, false, true))
+            ),
+            format!(
+                "Unbound-thread migration check: under 1.8× node-0 bandwidth \
+                 pressure, threads migrated = {migrated}; node occupancy after: {:?} \
+                 (the paper bound threads+memory with numactl to prevent exactly this).",
+                after.per_node(2)
+            ),
+        ],
+        ..Default::default()
+    })
+}
+
+fn exp_v1(_params: &ExperimentParams) -> Result<ExperimentResult> {
+    use crate::pmu::events::FpEventSet;
+    use crate::sim::core::VecWidth;
+    // Reproduce §2.3's validation experiment programmatically.
+    let n = 1_000_000u64;
+    let mut fma = FpEventSet::default();
+    fma.retire_fma(VecWidth::V512, n);
+    let mut add = FpEventSet::default();
+    add.retire_fp(VecWidth::V512, n);
+    let table = format!(
+        "| stream | retirements | counter value | counter/retire | derived FLOPs |\n\
+         |---|---|---|---|---|\n\
+         | vfmadd132ps (512b) | {n} | {} | {} | {} |\n\
+         | vaddps (512b) | {n} | {} | {} | {} |\n",
+        fma.p512,
+        fma.p512 / n,
+        fma.flops(),
+        add.p512,
+        add.p512 / n,
+        add.flops(),
+    );
+    Ok(ExperimentResult {
+        id: "v1".into(),
+        title: "FMA counting validation (§2.3)".into(),
+        tables: vec![("counter semantics".into(), table)],
+        notes: vec![
+            "A retired FMA increments FP_ARITH_INST_RETIRED by 2, a plain \
+             vector add by 1 — FLOPs derived as counter × lane-width are \
+             therefore exact, matching the paper's hand-counted assembly \
+             cross-check."
+                .into(),
+        ],
+        ..Default::default()
+    })
+}
+
+fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
+    // The §2.4 methodology ladder on the footnote-3 sum-reduction kernel:
+    //  (a) LLC demand misses, HW prefetch ON  → large under-count
+    //  (b) LLC demand misses, HW prefetch OFF → accurate for simple kernels
+    //  (c) IMC counters                       → accurate always
+    // then the Winograd/GEMM case where SW prefetch defeats (b).
+    let k = SumReduction::new(4 << 20); // 16 MiB array
+    let expected = k.bytes() as f64;
+
+    let run = |prefetch: PrefetchConfig| -> Result<(f64, f64)> {
+        let mut cfg = params.machine.clone();
+        cfg.hierarchy.prefetch = prefetch;
+        let mut machine = Machine::new(cfg);
+        let m = measure_kernel(&mut machine, &k, Scenario::SingleThread, CacheState::Cold)?;
+        Ok((
+            m.traffic.llc_demand_miss_bytes() as f64,
+            m.traffic.imc_read_bytes() as f64,
+        ))
+    };
+    let (llc_on, imc_on) = run(PrefetchConfig::default())?;
+    let (llc_off, imc_off) = run(PrefetchConfig::disabled())?;
+
+    let table = format!(
+        "| methodology | HW prefetch | reported traffic | vs actual ({}) |\n\
+         |---|---|---|---|\n\
+         | LLC demand misses | on | {} | {:.0}% |\n\
+         | LLC demand misses | off (MSR 0x1A4) | {} | {:.0}% |\n\
+         | IMC uncore counters | on | {} | {:.0}% |\n\
+         | IMC uncore counters | off | {} | {:.0}% |\n",
+        fmt_bytes(expected),
+        fmt_bytes(llc_on),
+        llc_on / expected * 100.0,
+        fmt_bytes(llc_off),
+        llc_off / expected * 100.0,
+        fmt_bytes(imc_on),
+        imc_on / expected * 100.0,
+        fmt_bytes(imc_off),
+        imc_off / expected * 100.0,
+    );
+
+    // SW-prefetch case: Winograd's GEMM prefetches defeat LLC-miss
+    // counting even with HW prefetch disabled.
+    let wino = ConvWinograd::new(ConvShape::paper_conv(2));
+    let mut cfg = params.machine.clone();
+    cfg.hierarchy.prefetch = PrefetchConfig::disabled();
+    let mut machine = Machine::new(cfg);
+    let wm = measure_kernel(&mut machine, &wino, Scenario::SingleThread, CacheState::Cold)?;
+    let sw_note = format!(
+        "Winograd (software-prefetching GEMM), HW prefetch off: LLC-miss \
+         methodology sees {} while the IMC sees {} ({} via prefetcht0 that \
+         never misses demand) — reproducing why the paper had to read IMC \
+         uncore counters.",
+        fmt_bytes(wm.traffic.llc_demand_miss_bytes() as f64),
+        fmt_bytes(wm.traffic.imc_bytes() as f64),
+        fmt_bytes((wm.traffic.sw_prefetch_lines * 64) as f64),
+    );
+
+    Ok(ExperimentResult {
+        id: "v2".into(),
+        title: "Counting memory traffic (§2.4)".into(),
+        tables: vec![("sum-reduction traffic by methodology".into(), table)],
+        notes: vec![sw_note],
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// Figures 3–5: convolution
+// ---------------------------------------------------------------------
+
+fn exp_conv(params: &ExperimentParams, scenario: Scenario, id: &str) -> Result<ExperimentResult> {
+    let shape = ConvShape::paper_conv(params.conv_batch());
+    let wino = ConvWinograd::new(shape);
+    let nchw = ConvDirectNchw::new(shape);
+    let blocked = ConvDirectBlocked::new(shape);
+
+    let expectations = match scenario {
+        Scenario::SingleThread => vec![
+            exp("conv_winograd", Some(0.3154), "lowest utilisation, fastest ET"),
+            exp("conv_direct_nchw", Some(0.4873), "ET = 100% baseline"),
+            exp("conv_direct_nchw16c", Some(0.8672), "highest utilisation"),
+        ],
+        Scenario::SingleSocket => vec![
+            exp("conv_winograd", Some(0.2930), "slightly below single-thread"),
+            exp("conv_direct_nchw", Some(0.4568), "slightly below single-thread"),
+            exp("conv_direct_nchw16c", Some(0.7801), "slightly below single-thread"),
+        ],
+        Scenario::TwoSocket => vec![
+            exp("conv_winograd", None, "relatively lower than one socket"),
+            exp("conv_direct_nchw", None, "relatively lower than one socket"),
+            exp(
+                "conv_direct_nchw16c",
+                Some(0.48),
+                "48% vs 78% on one socket — NUMA harness difficulty",
+            ),
+        ],
+    };
+    let group = measure_group(
+        params,
+        scenario,
+        &[&wino, &nchw, &blocked],
+        &[CacheState::Cold],
+        expectations,
+    )?;
+    Ok(ExperimentResult {
+        id: id.into(),
+        title: format!("Convolution rooflines, {} (paper {})", scenario.label(), fig_of(id)),
+        groups: vec![group],
+        notes: vec![format!(
+            "shape: {:?}; batch reduced for simulation speed (use --full-size for more)",
+            shape
+        )],
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fig 6 / A3: inner product
+// ---------------------------------------------------------------------
+
+fn exp_inner_product(
+    params: &ExperimentParams,
+    scenarios: &[Scenario],
+    id: &str,
+) -> Result<ExperimentResult> {
+    let ip = InnerProduct::paper_shape();
+    let mut groups = Vec::new();
+    for &sc in scenarios {
+        let expectations = if sc == Scenario::SingleThread {
+            vec![exp(
+                "inner_product",
+                Some(0.71),
+                "≥71% of single-thread peak; warm AI ≫ cold AI",
+            )]
+        } else {
+            vec![exp("inner_product", None, "appendix scenario")]
+        };
+        groups.push(measure_group(
+            params,
+            sc,
+            &[&ip],
+            &[CacheState::Cold, CacheState::Warm],
+            expectations,
+        )?);
+    }
+    Ok(ExperimentResult {
+        id: id.into(),
+        title: format!("Inner product (paper {})", fig_of(id)),
+        groups,
+        notes: vec![
+            "shape M=256 K=2048 N=1000 (~11.4 MiB) fits the 27.5 MiB LLC — \
+             warm-cache traffic collapses and arithmetic intensity rises."
+                .into(),
+        ],
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fig 7 / A4: average pooling
+// ---------------------------------------------------------------------
+
+fn exp_pooling(
+    params: &ExperimentParams,
+    scenarios: &[Scenario],
+    id: &str,
+) -> Result<ExperimentResult> {
+    let shape = PoolShape::paper_pool(params.pool_batch());
+    let nchw = AvgPoolNchw::new(shape);
+    let blocked = AvgPoolBlocked::new(shape);
+    let mut groups = Vec::new();
+    for &sc in scenarios {
+        let expectations = if sc == Scenario::SingleThread {
+            vec![
+                exp("avgpool_nchw", Some(0.0035), "simple_nchw scalar loop"),
+                exp(
+                    "avgpool_nchw16c",
+                    Some(0.148),
+                    "jit:avx512_common — ~42× better at equal AI",
+                ),
+            ]
+        } else {
+            vec![
+                exp("avgpool_nchw", None, "appendix scenario"),
+                exp("avgpool_nchw16c", None, "appendix scenario"),
+            ]
+        };
+        groups.push(measure_group(
+            params,
+            sc,
+            &[&nchw, &blocked],
+            &[CacheState::Cold, CacheState::Warm],
+            expectations,
+        )?);
+    }
+    Ok(ExperimentResult {
+        id: id.into(),
+        title: format!("Average pooling (paper {})", fig_of(id)),
+        groups,
+        notes: vec![
+            format!("max pooling excluded by methodology: {}", MaxPoolNote::explanation()),
+        ],
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fig 8 / A2: GELU
+// ---------------------------------------------------------------------
+
+fn exp_gelu_forced(params: &ExperimentParams) -> Result<ExperimentResult> {
+    let shape = EltwiseShape::paper_gelu(params.gelu_batch());
+    let plain = GeluNchw::new(shape);
+    let blocked = GeluBlocked::forced(shape);
+    let group = measure_group(
+        params,
+        Scenario::SingleThread,
+        &[&plain, &blocked],
+        &[CacheState::Cold, CacheState::Warm],
+        vec![
+            exp("gelu_nchw", None, "baseline NCHW"),
+            exp(
+                "gelu_nchw16c",
+                None,
+                "forced blocked on C=3: more W, ~4× Q (paper, 8-block), lower AI",
+            ),
+        ],
+    )?;
+    // Quantify the W/Q ratios for the report.
+    let w_ratio = blocked.flops() / plain.flops();
+    let q = |name: &str, cs: CacheState| {
+        group
+            .measurements
+            .iter()
+            .find(|m| m.kernel == name && m.cache_state == cs)
+            .map(|m| m.measured.traffic_bytes as f64)
+            .unwrap_or(0.0)
+    };
+    let q_ratio = q("gelu_nchw16c", CacheState::Cold) / q("gelu_nchw", CacheState::Cold).max(1.0);
+    Ok(ExperimentResult {
+        id: "f8".into(),
+        title: "GELU forced onto blocked layout, single core (paper Fig 8)".into(),
+        groups: vec![group],
+        notes: vec![
+            format!(
+                "W(blocked)/W(nchw) = {:.2}× (paper ~2× at 8-blocking; this model \
+                 blocks 16-wide so C=3 pads to 16), Q ratio (cold) = {:.2}× \
+                 (paper ~4×). Direction reproduced: forced blocking is strictly \
+                 worse; oneDNN's dispatcher would choose NCHW here on its own.",
+                w_ratio, q_ratio
+            ),
+        ],
+        ..Default::default()
+    })
+}
+
+fn exp_gelu_favourable(params: &ExperimentParams) -> Result<ExperimentResult> {
+    let shape = EltwiseShape::favourable(params.gelu_batch());
+    let plain = GeluNchw::new(shape);
+    let blocked = GeluBlocked::new(shape);
+    let mut groups = Vec::new();
+    for sc in Scenario::all() {
+        groups.push(measure_group(
+            params,
+            sc,
+            &[&plain, &blocked],
+            &[CacheState::Cold, CacheState::Warm],
+            vec![
+                exp("gelu_nchw", None, "favourable dims"),
+                exp(
+                    "gelu_nchw16c",
+                    None,
+                    "AI and efficiency ≈ NCHW when C % 16 == 0 (appendix)",
+                ),
+            ],
+        )?);
+    }
+    Ok(ExperimentResult {
+        id: "a2".into(),
+        title: "GELU with favourable dimensionality (appendix)".into(),
+        groups,
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// A1: layer normalisation
+// ---------------------------------------------------------------------
+
+fn exp_layernorm(params: &ExperimentParams) -> Result<ExperimentResult> {
+    let ln = LayerNorm::new(params.ln_rows(), 768);
+    let mut groups = Vec::new();
+    for sc in Scenario::all() {
+        groups.push(measure_group(
+            params,
+            sc,
+            &[&ln],
+            &[CacheState::Cold, CacheState::Warm],
+            vec![exp("layernorm", None, "memory-bound two-pass kernel")],
+        )?);
+    }
+    Ok(ExperimentResult {
+        id: "a1".into(),
+        title: "Layer normalisation rooflines (appendix)".into(),
+        groups,
+        ..Default::default()
+    })
+}
+
+// ---------------------------------------------------------------------
+// M1: the §2.5 binding artifact
+// ---------------------------------------------------------------------
+
+/// The paper's §2.2/§2.5 warning, made executable: run a memory-bound
+/// kernel on "one socket" WITHOUT `numactl`-style binding. The OS
+/// migrates threads to the idle socket to borrow its memory channels,
+/// and the measured point lands ABOVE the single-socket roof — "a
+/// runtime performance that is higher than the actual roof for the
+/// analyzed kernel's arithmetic intensity".
+fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
+    use crate::sim::numa::Placement;
+    use crate::sim::timing::estimate_phased;
+
+    let m = &params.machine;
+    if m.sockets < 2 {
+        bail!("m1 needs a multi-socket machine");
+    }
+    let kernel = GeluNchw::new(EltwiseShape::favourable(params.gelu_batch().max(16)));
+
+    // Bound run: the correct methodology.
+    let mut machine = Machine::new(m.clone());
+    let bound = measure_kernel(&mut machine, &kernel, Scenario::SingleSocket, CacheState::Cold)?;
+
+    // Unbound run: same threads, but the OS may rebalance under memory
+    // pressure. Re-estimate the runtime with the post-migration
+    // placement and interleaved pages (what autonuma converges to).
+    let unbound_start = Placement::unbound(m.cores_per_socket, 0);
+    // Pressure = what the threads WOULD consume unthrottled (their
+    // combined memory-level parallelism), not the throttled rate the
+    // bound run achieved — that's what the OS balancer reacts to.
+    let demand_bw = m.cores_per_socket as f64
+        * m.dram.per_thread_bw(m.hierarchy.prefetch.enabled);
+    let demand = vec![demand_bw, 0.0];
+    let capacity = vec![m.dram.sustained_bw(false); 2];
+    let (migrated_placement, migrated) = unbound_start.after_pressure(&demand, &capacity);
+
+    // After migration, pages rebalance too (autonuma); traffic spreads.
+    let mut machine2 = Machine::new(m.clone());
+    machine2.config.numa.remote_stall_factor = 0.3; // post-balance locality
+    let tensors = kernel.alloc(
+        &mut machine2.space,
+        crate::sim::numa::MemPolicy::Interleave,
+        m.sockets,
+    );
+    machine2.memory.flush_all();
+    let traces = kernel.traces(&tensors, migrated_placement.threads());
+    let space = &mut machine2.space;
+    let traffic = machine2
+        .memory
+        .run(&traces, &migrated_placement, &mut |a, t| space.node_of(a, t));
+    let est = estimate_phased(&machine2.config, &kernel.phases(), &traffic, &migrated_placement);
+
+    let roofline = roofline_for(params, Scenario::SingleSocket);
+    let bound_point = bound.point().with_note("bound (numactl)");
+    let unbound_point = crate::roofline::point::KernelPoint::new(
+        &kernel.name(),
+        kernel.flops(),
+        traffic.imc_bytes() as f64,
+        est.seconds,
+    )
+    .with_note("UNBOUND — above the roof");
+
+    let over_roof = unbound_point.roof_fraction(&roofline);
+    Ok(ExperimentResult {
+        id: "m1".into(),
+        title: "Unbound execution exceeds the single-socket roof (§2.5)".into(),
+        groups: vec![FigureGroup {
+            roofline,
+            measurements: vec![bound],
+            expectations: vec![],
+        }],
+        tables: vec![(
+            "bound vs unbound".into(),
+            format!(
+                "| run | placement | Q | R | P | fraction of 1-socket roof |\n|---|---|---|---|---|---|\n\
+                 | bound | {} threads on node 0 (pinned) | {} | {} | {} | {:.2} |\n\
+                 | unbound | migrated to {:?} | {} | {} | {} | **{:.2}** |\n",
+                m.cores_per_socket,
+                crate::util::human::fmt_bytes(bound_point.traffic_bytes),
+                crate::util::human::fmt_seconds(bound_point.runtime),
+                fmt_flops(bound_point.perf()),
+                bound_point.roof_fraction(&roofline_for(params, Scenario::SingleSocket)),
+                migrated_placement.per_node(m.sockets),
+                crate::util::human::fmt_bytes(unbound_point.traffic_bytes),
+                crate::util::human::fmt_seconds(unbound_point.runtime),
+                fmt_flops(unbound_point.perf()),
+                over_roof,
+            ),
+        )],
+        notes: vec![format!(
+            "threads migrated: {migrated}; the unbound run reaches {:.0}% of the \
+             single-socket roof because it is silently borrowing the second \
+             socket's memory channels — the paper's reason for binding both \
+             threads and allocations with numactl in every measurement.",
+            over_roof * 100.0
+        )],
+    })
+}
+
+fn exp(kernel: &str, utilization: Option<f64>, claim: &str) -> PaperExpectation {
+    PaperExpectation {
+        kernel: kernel.into(),
+        utilization,
+        claim: claim.into(),
+    }
+}
+
+fn fig_of(id: &str) -> String {
+    match id {
+        "f3" => "Fig 3".into(),
+        "f4" => "Fig 4".into(),
+        "f5" => "Fig 5".into(),
+        "f6" => "Fig 6".into(),
+        "a3" => "appendix IP".into(),
+        "a4" => "appendix pooling".into(),
+        other => other.to_uppercase(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams {
+            batch: Some(1),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn index_covers_all_figures() {
+        let ids: Vec<&str> = experiment_index().iter().map(|(id, _)| *id).collect();
+        for required in ["f1", "f3", "f4", "f5", "f6", "f7", "f8", "a1", "a2", "a3", "a4", "p1", "p2", "v1", "v2"] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("zz", &quick()).is_err());
+    }
+
+    #[test]
+    fn f1_builds_roofline() {
+        let r = run_experiment("f1", &quick()).unwrap();
+        assert_eq!(r.groups.len(), 1);
+        assert!(r.groups[0].roofline.peak() > 0.0);
+    }
+
+    #[test]
+    fn p1_p2_v1_produce_tables() {
+        for id in ["p1", "p2", "v1"] {
+            let r = run_experiment(id, &quick()).unwrap();
+            assert!(!r.tables.is_empty(), "{id} table missing");
+        }
+    }
+
+    #[test]
+    fn f6_warm_ai_exceeds_cold() {
+        let r = run_experiment("f6", &quick()).unwrap();
+        let g = &r.groups[0];
+        let cold = g
+            .measurements
+            .iter()
+            .find(|m| m.cache_state == CacheState::Cold)
+            .unwrap();
+        let warm = g
+            .measurements
+            .iter()
+            .find(|m| m.cache_state == CacheState::Warm)
+            .unwrap();
+        assert!(warm.point().ai() > cold.point().ai());
+    }
+}

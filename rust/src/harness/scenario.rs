@@ -1,0 +1,110 @@
+//! Resource scenarios (§2.5): single-thread, single-socket, two-socket —
+//! with the NUMA binding the paper found "crucial".
+
+use crate::sim::machine::MachineConfig;
+use crate::sim::numa::{MemPolicy, Placement};
+
+/// The paper's three execution scenarios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    SingleThread,
+    SingleSocket,
+    TwoSocket,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 3] {
+        [Scenario::SingleThread, Scenario::SingleSocket, Scenario::TwoSocket]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Scenario::SingleThread => "single-thread",
+            Scenario::SingleSocket => "one-socket",
+            Scenario::TwoSocket => "two-socket",
+        }
+    }
+
+    /// Threads used on a machine.
+    pub fn threads(self, config: &MachineConfig) -> usize {
+        match self {
+            Scenario::SingleThread => 1,
+            Scenario::SingleSocket => config.cores_per_socket,
+            Scenario::TwoSocket => config.cores(),
+        }
+    }
+
+    /// NUMA nodes exercised.
+    pub fn nodes_used(self, config: &MachineConfig) -> usize {
+        match self {
+            Scenario::TwoSocket => config.sockets,
+            _ => 1,
+        }
+    }
+
+    /// Thread placement, `numactl`-style bound (the paper's §2.5 fix).
+    pub fn placement(self, config: &MachineConfig) -> Placement {
+        match self {
+            Scenario::SingleThread => Placement::bound(1, 0),
+            Scenario::SingleSocket => Placement::bound(config.cores_per_socket, 0),
+            Scenario::TwoSocket => Placement::spread(config.cores(), config.sockets),
+        }
+    }
+
+    /// Memory policy the paper's methodology uses for this scenario:
+    /// bound to node 0 for ≤1 socket (numactl --membind), first-touch
+    /// for two-socket (oneDNN allocates on the primary socket, which is
+    /// precisely why two-socket scaling disappoints — §3.1.3).
+    pub fn mem_policy(self) -> MemPolicy {
+        match self {
+            Scenario::TwoSocket => MemPolicy::FirstTouch,
+            _ => MemPolicy::BindNode(0),
+        }
+    }
+
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "single-thread" | "st" | "1t" => Some(Scenario::SingleThread),
+            "one-socket" | "single-socket" | "1s" => Some(Scenario::SingleSocket),
+            "two-socket" | "2s" => Some(Scenario::TwoSocket),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_counts() {
+        let m = MachineConfig::xeon_6248();
+        assert_eq!(Scenario::SingleThread.threads(&m), 1);
+        assert_eq!(Scenario::SingleSocket.threads(&m), 20);
+        assert_eq!(Scenario::TwoSocket.threads(&m), 40);
+    }
+
+    #[test]
+    fn placements_respect_binding() {
+        let m = MachineConfig::xeon_6248();
+        let p = Scenario::SingleSocket.placement(&m);
+        assert!(p.pinned);
+        assert_eq!(p.per_node(2), vec![20, 0]);
+        let p = Scenario::TwoSocket.placement(&m);
+        assert_eq!(p.per_node(2), vec![20, 20]);
+    }
+
+    #[test]
+    fn mem_policies() {
+        assert_eq!(Scenario::SingleThread.mem_policy(), MemPolicy::BindNode(0));
+        assert_eq!(Scenario::TwoSocket.mem_policy(), MemPolicy::FirstTouch);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Scenario::parse("1s"), Some(Scenario::SingleSocket));
+        assert_eq!(Scenario::parse("two-socket"), Some(Scenario::TwoSocket));
+        assert_eq!(Scenario::parse("bogus"), None);
+    }
+}

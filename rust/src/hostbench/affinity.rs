@@ -1,0 +1,110 @@
+//! Thread pinning — the `numactl`/taskset substitute the paper's §2.2/§2.5
+//! methodology depends on ("it proved to be a crucial element").
+
+use anyhow::{bail, Result};
+
+/// Pin the calling thread to one logical CPU.
+pub fn pin_to_cpu(cpu: usize) -> Result<()> {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(cpu, &mut set);
+        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if rc != 0 {
+            bail!(
+                "sched_setaffinity(cpu {cpu}) failed: {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        bail!("thread pinning only implemented for linux");
+    }
+}
+
+/// The CPUs currently allowed for this thread.
+pub fn allowed_cpus() -> Vec<usize> {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) != 0 {
+            return vec![0];
+        }
+        (0..libc::CPU_SETSIZE as usize)
+            .filter(|&c| libc::CPU_ISSET(c, &set))
+            .collect()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        vec![0]
+    }
+}
+
+/// CPUs belonging to a NUMA node, from sysfs (empty if unknown).
+pub fn node_cpus(node: usize) -> Vec<usize> {
+    let path = format!("/sys/devices/system/node/node{node}/cpulist");
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    parse_cpulist(text.trim())
+}
+
+/// Parse a kernel cpulist like `0-3,8,10-11`.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                cpus.extend(a..=b);
+            }
+        } else if let Ok(c) = part.trim().parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3,8,10-11"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("0"), vec![0]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("5-5"), vec![5]);
+    }
+
+    #[test]
+    fn pin_to_current_cpu_succeeds() {
+        let allowed = allowed_cpus();
+        assert!(!allowed.is_empty());
+        // Pin to the first allowed CPU and confirm the mask shrank.
+        pin_to_cpu(allowed[0]).unwrap();
+        let now = allowed_cpus();
+        assert_eq!(now, vec![allowed[0]]);
+        // Restore the original mask for other tests in this process.
+        #[cfg(target_os = "linux")]
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            libc::CPU_ZERO(&mut set);
+            for &c in &allowed {
+                libc::CPU_SET(c, &mut set);
+            }
+            libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        }
+    }
+
+    #[test]
+    fn node0_cpus_nonempty_on_linux() {
+        let cpus = node_cpus(0);
+        if std::path::Path::new("/sys/devices/system/node/node0").exists() {
+            assert!(!cpus.is_empty());
+        }
+    }
+}

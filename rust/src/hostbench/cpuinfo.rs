@@ -1,0 +1,97 @@
+//! Host CPU discovery: ISA features, logical CPUs, NUMA nodes.
+
+/// What the host offers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpuInfo {
+    pub model_name: String,
+    pub logical_cpus: usize,
+    pub numa_nodes: usize,
+    pub has_fma: bool,
+    pub has_avx2: bool,
+    pub has_avx512f: bool,
+}
+
+impl CpuInfo {
+    /// Detect the current host.
+    pub fn detect() -> CpuInfo {
+        let model_name = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|s| {
+                s.lines()
+                    .find(|l| l.starts_with("model name"))
+                    .and_then(|l| l.split(':').nth(1))
+                    .map(|v| v.trim().to_string())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        let logical_cpus = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let numa_nodes = count_numa_nodes();
+        #[cfg(target_arch = "x86_64")]
+        {
+            CpuInfo {
+                model_name,
+                logical_cpus,
+                numa_nodes,
+                has_fma: std::arch::is_x86_feature_detected!("fma"),
+                has_avx2: std::arch::is_x86_feature_detected!("avx2"),
+                has_avx512f: std::arch::is_x86_feature_detected!("avx512f"),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            CpuInfo {
+                model_name,
+                logical_cpus,
+                numa_nodes,
+                has_fma: false,
+                has_avx2: false,
+                has_avx512f: false,
+            }
+        }
+    }
+
+    /// Threads to use for a "socket" scenario on this host.
+    pub fn socket_threads(&self) -> usize {
+        (self.logical_cpus / self.numa_nodes.max(1)).max(1)
+    }
+}
+
+fn count_numa_nodes() -> usize {
+    let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") else {
+        return 1;
+    };
+    let n = entries
+        .flatten()
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            name.starts_with("node") && name[4..].chars().all(|c| c.is_ascii_digit())
+        })
+        .count();
+    n.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_sane() {
+        let info = CpuInfo::detect();
+        assert!(info.logical_cpus >= 1);
+        assert!(info.numa_nodes >= 1);
+        assert!(info.socket_threads() >= 1);
+        assert!(!info.model_name.is_empty());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_features_consistent() {
+        let info = CpuInfo::detect();
+        // AVX-512 implies AVX2 on every real part.
+        if info.has_avx512f {
+            assert!(info.has_avx2);
+        }
+    }
+}

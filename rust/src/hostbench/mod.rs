@@ -1,0 +1,29 @@
+//! Host microbenchmarks — the paper's §2.1/§2.2 measurement programs,
+//! reimplemented for the machine the repo actually runs on.
+//!
+//! * [`jit`] — a tiny runtime x86-64 code generator in the spirit of the
+//!   paper's Xbyak usage: emits chains of independent `vfmadd132ps`
+//!   instructions into an executable page so the peak-FLOPs benchmark is
+//!   compiler-agnostic (dead-code elimination cannot touch it).
+//! * [`peak_flops`] — peak computational performance π per §2.1: one FMA
+//!   stream per thread, scalar/AVX2/AVX-512 variants, no read-after-write
+//!   chains.
+//! * [`membw`] — peak memory throughput β per §2.2: `memset`, `memcpy`
+//!   and a hand-rolled non-temporal-store memset over 0.5 GiB buffers,
+//!   single- and multi-threaded.
+//! * [`affinity`] — `sched_setaffinity` pinning and sysfs topology
+//!   discovery (the `numactl` substitute).
+//! * [`cpuinfo`] — ISA feature detection.
+//!
+//! These characterise the **host** for "host mode" rooflines; the
+//! simulated Xeon 6248 ("paper mode") lives in [`crate::sim`].
+
+pub mod affinity;
+pub mod cpuinfo;
+pub mod jit;
+pub mod membw;
+pub mod peak_flops;
+
+pub use cpuinfo::CpuInfo;
+pub use membw::{MemBwMethod, MemBwResult};
+pub use peak_flops::{PeakFlopsResult, PeakIsa};

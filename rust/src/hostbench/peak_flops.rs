@@ -1,0 +1,234 @@
+//! Peak computational performance π, measured on the real host (§2.1).
+//!
+//! One independent FMA stream per thread, long enough accumulator rotation
+//! to defeat FMA latency, runtime-generated code where possible (see
+//! [`super::jit`]), `std::arch` intrinsics otherwise. Scenarios follow the
+//! paper: single thread, "socket" (all CPUs of node 0), all CPUs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::affinity;
+use super::jit;
+
+/// Which instruction stream was measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeakIsa {
+    /// Scalar FMA (vfmadd132ss-equivalent, via scalar intrinsics).
+    Scalar,
+    /// 256-bit FMA via runtime-generated assembly (preferred) or
+    /// intrinsics.
+    Avx2Fma,
+    /// 512-bit FMA via intrinsics (requires avx512f).
+    Avx512Fma,
+}
+
+impl PeakIsa {
+    pub fn lanes(self) -> usize {
+        match self {
+            PeakIsa::Scalar => 1,
+            PeakIsa::Avx2Fma => 8,
+            PeakIsa::Avx512Fma => 16,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PeakIsa::Scalar => "scalar-fma",
+            PeakIsa::Avx2Fma => "avx2-fma",
+            PeakIsa::Avx512Fma => "avx512-fma",
+        }
+    }
+}
+
+/// Result of one peak measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct PeakFlopsResult {
+    pub isa: PeakIsa,
+    pub threads: usize,
+    pub flops_per_sec: f64,
+    /// True if the runtime-JIT path was used (vs intrinsics).
+    pub jitted: bool,
+}
+
+/// Measure peak FLOP/s with `threads` threads pinned to `cpus`
+/// (round-robin) for roughly `seconds` of wallclock.
+pub fn measure(isa: PeakIsa, cpus: &[usize], threads: usize, seconds: f64) -> Result<PeakFlopsResult> {
+    assert!(threads >= 1);
+    let stop = Arc::new(AtomicBool::new(false));
+    let jit_buf = match isa {
+        PeakIsa::Avx2Fma => jit::emit_fma_loop().ok().map(Arc::new),
+        _ => None,
+    };
+    let jitted = jit_buf.is_some();
+
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let stop = Arc::clone(&stop);
+        let jit_buf = jit_buf.clone();
+        let cpu = if cpus.is_empty() { None } else { Some(cpus[t % cpus.len()]) };
+        handles.push(std::thread::spawn(move || -> f64 {
+            if let Some(cpu) = cpu {
+                let _ = affinity::pin_to_cpu(cpu);
+            }
+            let mut flops_done = 0.0f64;
+            let t0 = Instant::now();
+            match (&jit_buf, isa) {
+                (Some(buf), PeakIsa::Avx2Fma) => {
+                    let f = unsafe { buf.entry() };
+                    // Chunked so the stop flag is honoured promptly.
+                    const CHUNK: u64 = 2_000_000;
+                    while !stop.load(Ordering::Relaxed) {
+                        f(CHUNK);
+                        flops_done += buf.flops(CHUNK);
+                    }
+                }
+                _ => {
+                    while !stop.load(Ordering::Relaxed) {
+                        flops_done += run_intrinsics_chunk(isa);
+                    }
+                }
+            }
+            flops_done / t0.elapsed().as_secs_f64()
+        }));
+    }
+
+    std::thread::sleep(std::time::Duration::from_secs_f64(seconds));
+    stop.store(true, Ordering::Relaxed);
+    let total: f64 = handles.into_iter().map(|h| h.join().expect("bench thread")).sum();
+    Ok(PeakFlopsResult { isa, threads, flops_per_sec: total, jitted })
+}
+
+/// Run one fixed-size chunk of FMAs via intrinsics; returns FLOPs done.
+fn run_intrinsics_chunk(isa: PeakIsa) -> f64 {
+    const ITERS: u64 = 500_000;
+    match isa {
+        PeakIsa::Scalar => scalar_chunk(ITERS),
+        PeakIsa::Avx2Fma => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("fma") {
+                    return unsafe { avx2_chunk(ITERS) };
+                }
+            }
+            scalar_chunk(ITERS)
+        }
+        PeakIsa::Avx512Fma => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx512f") {
+                    return unsafe { avx512_chunk(ITERS) };
+                }
+            }
+            scalar_chunk(ITERS)
+        }
+    }
+}
+
+/// Scalar FMA chain set; f32 mul_add maps to vfmadd132ss with `-C
+/// target-feature=+fma` or stays fmaf — either way one FLOP pair per op.
+fn scalar_chunk(iters: u64) -> f64 {
+    const ACCS: usize = 8;
+    let mut acc = [0.0f32; ACCS];
+    let m = std::hint::black_box(0.999_999f32);
+    let b = std::hint::black_box(1e-30f32);
+    for _ in 0..iters {
+        for a in &mut acc {
+            *a = a.mul_add(m, b);
+        }
+    }
+    std::hint::black_box(acc);
+    (iters * ACCS as u64 * 2) as f64
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn avx2_chunk(iters: u64) -> f64 {
+    use std::arch::x86_64::*;
+    const ACCS: usize = 12;
+    let mut acc = [_mm256_setzero_ps(); ACCS];
+    let m = _mm256_set1_ps(0.999_999);
+    let b = _mm256_set1_ps(1e-30);
+    for _ in 0..iters {
+        // Independent chains: each accumulator only depends on itself.
+        for a in acc.iter_mut() {
+            *a = _mm256_fmadd_ps(*a, m, b);
+        }
+    }
+    std::hint::black_box(acc);
+    (iters * ACCS as u64 * 8 * 2) as f64
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn avx512_chunk(iters: u64) -> f64 {
+    use std::arch::x86_64::*;
+    const ACCS: usize = 12;
+    let mut acc = [_mm512_setzero_ps(); ACCS];
+    let m = _mm512_set1_ps(0.999_999);
+    let b = _mm512_set1_ps(1e-30);
+    for _ in 0..iters {
+        for a in acc.iter_mut() {
+            *a = _mm512_fmadd_ps(*a, m, b);
+        }
+    }
+    std::hint::black_box(acc);
+    (iters * ACCS as u64 * 16 * 2) as f64
+}
+
+/// The paper's three scenarios on this host: 1 thread, node-0 CPUs, all
+/// CPUs. Degrades gracefully on small hosts.
+pub fn scenarios() -> Vec<(String, Vec<usize>)> {
+    let all = affinity::allowed_cpus();
+    let node0 = {
+        let n = affinity::node_cpus(0);
+        if n.is_empty() { all.clone() } else { n.into_iter().filter(|c| all.contains(c)).collect() }
+    };
+    let mut v = vec![("single-thread".to_string(), vec![all[0]])];
+    if node0.len() > 1 {
+        v.push(("single-socket".to_string(), node0));
+    }
+    if all.len() > 1 {
+        v.push(("all-cpus".to_string(), all));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_peak_reasonable() {
+        let r = measure(PeakIsa::Scalar, &[], 1, 0.05).unwrap();
+        // ≥ 0.2 GFLOP/s on anything made this century.
+        assert!(r.flops_per_sec > 0.2e9, "{}", r.flops_per_sec);
+        assert_eq!(r.isa.lanes(), 1);
+    }
+
+    #[test]
+    fn avx2_beats_scalar() {
+        let scalar = measure(PeakIsa::Scalar, &[], 1, 0.05).unwrap();
+        let avx2 = measure(PeakIsa::Avx2Fma, &[], 1, 0.05).unwrap();
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("fma") {
+            assert!(
+                avx2.flops_per_sec > 2.0 * scalar.flops_per_sec,
+                "avx2 {} vs scalar {}",
+                avx2.flops_per_sec,
+                scalar.flops_per_sec
+            );
+        }
+        let _ = (scalar, avx2);
+    }
+
+    #[test]
+    fn scenarios_nonempty() {
+        let s = scenarios();
+        assert!(!s.is_empty());
+        assert_eq!(s[0].1.len(), 1);
+    }
+}

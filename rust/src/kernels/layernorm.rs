@@ -1,0 +1,182 @@
+//! Layer normalisation — the appendix primitive. A two-pass (mean /
+//! variance, then normalise + affine) memory-bound kernel over
+//! `[tokens, hidden]`, the shape class of transformer workloads the
+//! paper's §3.2 motivates.
+
+use crate::sim::core::{InstrMix, VecWidth};
+use crate::sim::machine::AddressSpace;
+use crate::sim::numa::MemPolicy;
+use crate::sim::trace::{AccessKind, AccessRun, Trace};
+
+use super::layouts::ELEM;
+use super::{split_indices, KernelModel, TensorMap};
+
+/// Vectorised LN cost structure per 16-element vector: pass 1 does a
+/// sum and sum-of-squares FMA; pass 2 an FMA with the normalisation
+/// scale plus the affine γ/β FMA. Reductions cost ILP.
+const LN_FMA_PER_VEC: f64 = 3.0;
+const LN_FP_PER_VEC: f64 = 2.0;
+const LN_LOADS_PER_VEC: f64 = 2.3; // two read passes + γ/β
+const LN_STORES_PER_VEC: f64 = 1.0;
+const LN_ILP: f64 = 0.6; // horizontal reductions serialise
+
+/// Rows per parallel work unit.
+const ROW_CHUNK: usize = 8;
+
+/// Layer normalisation over `[rows, hidden]` with affine parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerNorm {
+    pub rows: usize,
+    pub hidden: usize,
+}
+
+impl LayerNorm {
+    pub fn new(rows: usize, hidden: usize) -> Self {
+        assert!(rows > 0 && hidden > 0);
+        LayerNorm { rows, hidden }
+    }
+
+    /// BERT-base-ish appendix shape: 64 sequences × 512 tokens, 768
+    /// hidden.
+    pub fn paper_shape() -> Self {
+        LayerNorm::new(64 * 512, 768)
+    }
+
+    pub fn tensor_bytes(&self) -> u64 {
+        (self.rows * self.hidden) as u64 * ELEM
+    }
+
+    fn row_bytes(&self) -> u64 {
+        self.hidden as u64 * ELEM
+    }
+}
+
+impl KernelModel for LayerNorm {
+    fn name(&self) -> String {
+        "layernorm".into()
+    }
+
+    fn description(&self) -> String {
+        format!("layer norm [{} x {}] two-pass + affine", self.rows, self.hidden)
+    }
+
+    fn alloc(&self, space: &mut AddressSpace, policy: MemPolicy, nodes: usize) -> TensorMap {
+        let mut t = TensorMap::default();
+        let bytes = self.tensor_bytes();
+        let param = self.hidden as u64 * ELEM;
+        t.insert("src", space.alloc("src", bytes, policy, nodes), bytes);
+        t.insert("dst", space.alloc("dst", bytes, policy, nodes), bytes);
+        t.insert("gamma", space.alloc("gamma", param, policy, nodes), param);
+        t.insert("beta", space.alloc("beta", param, policy, nodes), param);
+        t
+    }
+
+    fn instr_mix(&self) -> InstrMix {
+        let vecs = (self.rows * self.hidden) as f64 / VecWidth::V512.lanes() as f64;
+        InstrMix {
+            fma: vecs * LN_FMA_PER_VEC,
+            fp: vecs * LN_FP_PER_VEC,
+            load: vecs * LN_LOADS_PER_VEC,
+            store: vecs * LN_STORES_PER_VEC,
+            shuffle: vecs * 0.2, // horizontal reduction shuffles
+            alu: vecs * 0.2,
+            width: VecWidth::V512,
+            ilp: LN_ILP,
+        }
+    }
+
+    fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace> {
+        let chunks = self.rows.div_ceil(ROW_CHUNK);
+        let parts = split_indices(chunks, threads);
+        let rb = self.row_bytes();
+        parts
+            .into_iter()
+            .map(|idxs| {
+                let mut tr = Trace::new();
+                for ch in idxs {
+                    let lo = ch * ROW_CHUNK;
+                    let hi = ((ch + 1) * ROW_CHUNK).min(self.rows);
+                    let off = lo as u64 * rb;
+                    let len = (hi - lo) as u64 * rb;
+                    // Pass 1: statistics (read).
+                    tr.push(AccessRun::contiguous(t.base("src") + off, len, AccessKind::Load));
+                    // Pass 2: re-read + params + write.
+                    tr.push(AccessRun::contiguous(t.base("src") + off, len, AccessKind::Load));
+                    tr.push(AccessRun::contiguous(t.base("gamma"), t.bytes("gamma"), AccessKind::Load));
+                    tr.push(AccessRun::contiguous(t.base("beta"), t.bytes("beta"), AccessKind::Load));
+                    tr.push(AccessRun::contiguous(t.base("dst") + off, len, AccessKind::Store));
+                }
+                tr
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::core::CoreConfig;
+
+    #[test]
+    fn flops_scale_with_elements() {
+        let ln = LayerNorm::new(100, 768);
+        let per_elem = ln.flops() / (100.0 * 768.0);
+        // 3 FMA + 2 fp vector μops per 16 elements ⇒ (3·2+2) = 8
+        // FLOPs/element (sum, sum-of-squares, normalise, affine).
+        assert!((per_elem - 8.0).abs() < 1e-9, "{per_elem}");
+    }
+
+    #[test]
+    fn low_arithmetic_intensity() {
+        let ln = LayerNorm::paper_shape();
+        let mut s = AddressSpace::new();
+        let t = ln.alloc(&mut s, MemPolicy::BindNode(0), 1);
+        let q: u64 = ln.traces(&t, 1).iter().map(|tr| tr.bytes()).sum();
+        let ai = ln.flops() / q as f64;
+        // Memory-bound: far below the single-thread machine balance of
+        // ~5 FLOP/byte (102.4 GFLOP/s ÷ ~20 GB/s).
+        assert!(ai < 1.5, "AI {ai}");
+    }
+
+    #[test]
+    fn reduction_limits_compute_efficiency() {
+        let core = CoreConfig::skylake_sp();
+        let ln = LayerNorm::paper_shape();
+        let util = core.achieved_flops(&ln.instr_mix()) / core.peak_flops(VecWidth::V512);
+        // Reductions + streaming: nowhere near the FMA roof even ignoring
+        // memory.
+        assert!(util < 0.6, "LN compute util {util}");
+        assert!(util > 0.05);
+    }
+
+    #[test]
+    fn two_read_passes_in_trace() {
+        let ln = LayerNorm::new(64, 256);
+        let mut s = AddressSpace::new();
+        let t = ln.alloc(&mut s, MemPolicy::BindNode(0), 1);
+        let tr = &ln.traces(&t, 1)[0];
+        let src_reads: u64 = tr
+            .runs
+            .iter()
+            .filter(|r| r.kind == AccessKind::Load && r.base >= t.base("src")
+                && r.base < t.base("src") + t.bytes("src"))
+            .map(|r| r.bytes())
+            .sum();
+        assert_eq!(src_reads, 2 * t.bytes("src"), "two-pass LN reads src twice");
+    }
+
+    #[test]
+    fn chunking_covers_all_rows() {
+        let ln = LayerNorm::new(100, 128);
+        let mut s = AddressSpace::new();
+        let t = ln.alloc(&mut s, MemPolicy::BindNode(0), 1);
+        let stores: u64 = ln
+            .traces(&t, 6)
+            .iter()
+            .flat_map(|tr| tr.runs.iter())
+            .filter(|r| r.kind == AccessKind::Store)
+            .map(|r| r.bytes())
+            .sum();
+        assert_eq!(stores, t.bytes("dst"));
+    }
+}

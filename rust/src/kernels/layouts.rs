@@ -1,0 +1,273 @@
+//! Tensor layouts: NCHW, blocked NCHW16C (the oneDNN layout-propagation
+//! layout, §3.1.1), and NHWC — with the channel-padding rule that drives
+//! the paper's Fig 8 GELU pathology (blocked layouts require C to be a
+//! multiple of the block, so C=3 pads to a full block).
+
+/// Channel block size of the blocked layout (AVX-512: 16 f32 lanes —
+/// exactly one cache line).
+pub const CBLOCK: usize = 16;
+
+/// Element size: the paper evaluates single-precision throughout.
+pub const ELEM: u64 = 4;
+
+/// Supported data arrangements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataLayout {
+    Nchw,
+    /// `[N, ⌈C/16⌉, H, W, 16]` — all 16 lanes of a vector come from one
+    /// cache line.
+    Nchw16c,
+    Nhwc,
+}
+
+impl DataLayout {
+    pub fn label(self) -> &'static str {
+        match self {
+            DataLayout::Nchw => "nchw",
+            DataLayout::Nchw16c => "nchw16c",
+            DataLayout::Nhwc => "nhwc",
+        }
+    }
+}
+
+/// A 4-D activation tensor descriptor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorDesc {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub layout: DataLayout,
+}
+
+impl TensorDesc {
+    pub fn new(n: usize, c: usize, h: usize, w: usize, layout: DataLayout) -> TensorDesc {
+        assert!(n > 0 && c > 0 && h > 0 && w > 0);
+        TensorDesc { n, c, h, w, layout }
+    }
+
+    /// Logical element count (unpadded).
+    pub fn elements(&self) -> u64 {
+        (self.n * self.c * self.h * self.w) as u64
+    }
+
+    /// Channels after layout padding (blocked layouts round up to the
+    /// block — the Fig 8 effect).
+    pub fn padded_c(&self) -> usize {
+        match self.layout {
+            DataLayout::Nchw16c => self.c.div_ceil(CBLOCK) * CBLOCK,
+            _ => self.c,
+        }
+    }
+
+    /// Stored element count including padding.
+    pub fn stored_elements(&self) -> u64 {
+        (self.n * self.padded_c() * self.h * self.w) as u64
+    }
+
+    /// Bytes of storage.
+    pub fn bytes(&self) -> u64 {
+        self.stored_elements() * ELEM
+    }
+
+    /// Channel blocks for the blocked layout.
+    pub fn c_blocks(&self) -> usize {
+        assert_eq!(self.layout, DataLayout::Nchw16c);
+        self.padded_c() / CBLOCK
+    }
+
+    /// Byte offset of element (n, c, h, w) from the tensor base.
+    pub fn offset(&self, n: usize, c: usize, h: usize, w: usize) -> u64 {
+        debug_assert!(n < self.n && c < self.c && h < self.h && w < self.w);
+        let idx = match self.layout {
+            DataLayout::Nchw => {
+                ((n * self.c + c) * self.h + h) * self.w + w
+            }
+            DataLayout::Nhwc => {
+                ((n * self.h + h) * self.w + w) * self.c + c
+            }
+            DataLayout::Nchw16c => {
+                let cb = c / CBLOCK;
+                let cr = c % CBLOCK;
+                ((((n * self.c_blocks() + cb) * self.h + h) * self.w) + w) * CBLOCK + cr
+            }
+        };
+        idx as u64 * ELEM
+    }
+
+    /// Byte offset of the start of a row: (n, c-or-cblock, h, w=0). For
+    /// blocked layout, `c` is interpreted as a channel-block index.
+    pub fn row_offset(&self, n: usize, c: usize, h: usize) -> u64 {
+        match self.layout {
+            DataLayout::Nchw => self.offset(n, c, h, 0),
+            DataLayout::Nhwc => self.offset(n, 0, h, 0) + c as u64 * ELEM,
+            DataLayout::Nchw16c => {
+                let idx = (((n * self.c_blocks() + c) * self.h + h) * self.w) * CBLOCK;
+                idx as u64 * ELEM
+            }
+        }
+    }
+
+    /// Bytes of one contiguous row in this layout: NCHW → `w` elements;
+    /// NCHW16C → `w × 16` elements.
+    pub fn row_bytes(&self) -> u64 {
+        match self.layout {
+            DataLayout::Nchw => self.w as u64 * ELEM,
+            DataLayout::Nhwc => (self.w * self.c) as u64 * ELEM,
+            DataLayout::Nchw16c => (self.w * CBLOCK) as u64 * ELEM,
+        }
+    }
+
+    pub fn with_layout(&self, layout: DataLayout) -> TensorDesc {
+        TensorDesc { layout, ..*self }
+    }
+}
+
+/// Convolution problem shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub n: usize,
+    pub ic: usize,
+    pub oc: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn oh(&self) -> usize {
+        (self.ih + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.iw + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Direct-algorithm FLOPs (2 per MAC).
+    pub fn direct_flops(&self) -> f64 {
+        2.0 * self.n as f64
+            * self.oc as f64
+            * self.oh() as f64
+            * self.ow() as f64
+            * self.ic as f64
+            * self.kh as f64
+            * self.kw as f64
+    }
+
+    pub fn src_desc(&self, layout: DataLayout) -> TensorDesc {
+        TensorDesc::new(self.n, self.ic, self.ih, self.iw, layout)
+    }
+
+    pub fn dst_desc(&self, layout: DataLayout) -> TensorDesc {
+        TensorDesc::new(self.n, self.oc, self.oh(), self.ow(), layout)
+    }
+
+    /// Weight bytes (padded for blocked layouts on both ic and oc).
+    pub fn weight_bytes(&self, layout: DataLayout) -> u64 {
+        let (ic, oc) = match layout {
+            DataLayout::Nchw16c => (
+                self.ic.div_ceil(CBLOCK) * CBLOCK,
+                self.oc.div_ceil(CBLOCK) * CBLOCK,
+            ),
+            _ => (self.ic, self.oc),
+        };
+        (oc * ic * self.kh * self.kw) as u64 * ELEM
+    }
+
+    /// The paper's Fig 3–5 workload class: 3×3/s1/p1 64→64 on 56×56
+    /// images (ResNet-ish body conv where all three algorithms apply).
+    pub fn paper_conv(n: usize) -> ConvShape {
+        ConvShape { n, ic: 64, oc: 64, ih: 56, iw: 56, kh: 3, kw: 3, stride: 1, pad: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nchw_offsets_row_major() {
+        let t = TensorDesc::new(2, 3, 4, 5, DataLayout::Nchw);
+        assert_eq!(t.offset(0, 0, 0, 0), 0);
+        assert_eq!(t.offset(0, 0, 0, 1), 4);
+        assert_eq!(t.offset(0, 0, 1, 0), 5 * 4);
+        assert_eq!(t.offset(0, 1, 0, 0), 4 * 5 * 4);
+        assert_eq!(t.offset(1, 0, 0, 0), 3 * 4 * 5 * 4);
+        assert_eq!(t.bytes(), 2 * 3 * 4 * 5 * 4);
+    }
+
+    #[test]
+    fn blocked_pads_channels() {
+        let t = TensorDesc::new(1, 3, 8, 8, DataLayout::Nchw16c);
+        assert_eq!(t.padded_c(), 16);
+        assert_eq!(t.c_blocks(), 1);
+        // Padded storage is 16/3 the logical size — Fig 8's extra work.
+        assert_eq!(t.bytes(), 16 * 8 * 8 * 4);
+        assert_eq!(t.elements(), 3 * 8 * 8);
+    }
+
+    #[test]
+    fn blocked_no_padding_on_multiple() {
+        let t = TensorDesc::new(1, 64, 8, 8, DataLayout::Nchw16c);
+        assert_eq!(t.padded_c(), 64);
+        assert_eq!(t.c_blocks(), 4);
+        assert_eq!(t.bytes(), t.with_layout(DataLayout::Nchw).bytes());
+    }
+
+    #[test]
+    fn blocked_offset_lane_contiguous() {
+        let t = TensorDesc::new(1, 32, 4, 4, DataLayout::Nchw16c);
+        // Lanes (c within block) are minor-most: offsets 0..16 contiguous.
+        assert_eq!(t.offset(0, 0, 0, 0), 0);
+        assert_eq!(t.offset(0, 1, 0, 0), 4);
+        assert_eq!(t.offset(0, 15, 0, 0), 60);
+        // Next w is 16 elements on.
+        assert_eq!(t.offset(0, 0, 0, 1), 64);
+        // Second channel block comes after the whole first block plane.
+        assert_eq!(t.offset(0, 16, 0, 0), 4 * 4 * 16 * 4);
+    }
+
+    #[test]
+    fn row_bytes_by_layout() {
+        let shape = (1, 32, 4, 7);
+        let nchw = TensorDesc::new(shape.0, shape.1, shape.2, shape.3, DataLayout::Nchw);
+        let blocked = nchw.with_layout(DataLayout::Nchw16c);
+        assert_eq!(nchw.row_bytes(), 7 * 4);
+        assert_eq!(blocked.row_bytes(), 7 * 16 * 4);
+    }
+
+    #[test]
+    fn conv_shape_arithmetic() {
+        let c = ConvShape::paper_conv(4);
+        assert_eq!(c.oh(), 56);
+        assert_eq!(c.ow(), 56);
+        // 2·4·64·56·56·64·9 = 924 MFLOP.
+        assert!((c.direct_flops() - 2.0 * 4.0 * 64.0 * 56.0 * 56.0 * 64.0 * 9.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn strided_conv_output() {
+        // AlexNet conv1: 227×227, 11×11, stride 4 → 55×55.
+        let c = ConvShape { n: 1, ic: 3, oc: 64, ih: 227, iw: 227, kh: 11, kw: 11, stride: 4, pad: 0 };
+        assert_eq!(c.oh(), 55);
+        assert_eq!(c.ow(), 55);
+    }
+
+    #[test]
+    fn weight_bytes_padding() {
+        let c = ConvShape { n: 1, ic: 3, oc: 64, ih: 8, iw: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert_eq!(c.weight_bytes(DataLayout::Nchw), (64 * 3 * 9) as u64 * 4);
+        assert_eq!(c.weight_bytes(DataLayout::Nchw16c), (64 * 16 * 9) as u64 * 4);
+    }
+
+    #[test]
+    fn nhwc_offsets() {
+        let t = TensorDesc::new(1, 8, 2, 2, DataLayout::Nhwc);
+        assert_eq!(t.offset(0, 0, 0, 0), 0);
+        assert_eq!(t.offset(0, 1, 0, 0), 4);
+        assert_eq!(t.offset(0, 0, 0, 1), 8 * 4);
+    }
+}

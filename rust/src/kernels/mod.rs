@@ -1,0 +1,161 @@
+//! Analytic models of the oneDNN deep-learning primitives the paper
+//! evaluates (§3): direct convolution (NCHW and blocked NCHW16C),
+//! Winograd convolution, inner product, average pooling, GELU and layer
+//! normalisation — plus the sum-reduction kernel the paper used to
+//! validate its traffic methodology (footnote 3).
+//!
+//! Each kernel implements [`KernelModel`]:
+//!
+//! * an **instruction mix** ([`crate::sim::core::InstrMix`]) mirroring the
+//!   structure of the oneDNN implementation (vector widths, FMA density,
+//!   the shuffle tax of strided layouts, scalar loops for `simple_nchw`)
+//!   — this feeds both the PMU Work counters and the compute-time model;
+//! * **memory traces** at cache-line granularity reflecting the
+//!   implementation's loop ordering and blocking — these drive the cache
+//!   simulator and hence the IMC Traffic counters;
+//! * an **init trace** that first-touches every tensor (NUMA page
+//!   placement), mirroring framework allocation before the measured run.
+//!
+//! The structural parameters (loads-per-FMA, shuffle counts, ILP factors)
+//! are documented constants per implementation; DESIGN.md §6 explains how
+//! the paper's utilisation numbers *emerge* from them rather than being
+//! hard-coded.
+
+pub mod conv_direct;
+pub mod conv_winograd;
+pub mod gelu;
+pub mod inner_product;
+pub mod layernorm;
+pub mod layouts;
+pub mod pooling;
+pub mod reduction;
+
+use std::collections::BTreeMap;
+
+use crate::sim::core::InstrMix;
+use crate::sim::machine::AddressSpace;
+use crate::sim::numa::MemPolicy;
+use crate::sim::trace::{AccessKind, AccessRun, Trace};
+
+pub use layouts::{ConvShape, DataLayout, TensorDesc};
+
+/// Named tensor allocations for one kernel instance.
+#[derive(Clone, Debug, Default)]
+pub struct TensorMap {
+    map: BTreeMap<String, (u64, u64)>,
+}
+
+impl TensorMap {
+    pub fn insert(&mut self, name: &str, base: u64, bytes: u64) {
+        self.map.insert(name.to_string(), (base, bytes));
+    }
+
+    /// Base address of a tensor; panics on unknown names (kernel bug).
+    pub fn base(&self, name: &str) -> u64 {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown tensor '{name}'"))
+            .0
+    }
+
+    pub fn bytes(&self, name: &str) -> u64 {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown tensor '{name}'"))
+            .1
+    }
+
+    /// Total bytes across tensors.
+    pub fn footprint(&self) -> u64 {
+        self.map.values().map(|&(_, b)| b).sum()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// A modelled kernel: the single source of truth for W (instruction mix →
+/// PMU), Q (traces → cache sim → IMC) and R (mix + traffic → timing).
+pub trait KernelModel: Send + Sync {
+    /// Unique report name, e.g. `conv_nchw16c`.
+    fn name(&self) -> String;
+
+    /// One-line description for reports.
+    fn description(&self) -> String;
+
+    /// Allocate this kernel's tensors.
+    fn alloc(&self, space: &mut AddressSpace, policy: MemPolicy, nodes: usize) -> TensorMap;
+
+    /// First-touch initialisation trace (framework writes every tensor
+    /// once — also the §2.3 "overhead run" body).
+    fn init_trace(&self, t: &TensorMap) -> Trace {
+        let mut tr = Trace::new();
+        for name in t.names() {
+            tr.push(AccessRun::contiguous(t.base(name), t.bytes(name), AccessKind::Store));
+        }
+        tr
+    }
+
+    /// Total retired instruction mix for one execution (all threads).
+    fn instr_mix(&self) -> InstrMix;
+
+    /// Sequential execution phases (default: one). Phases execute one
+    /// after another, so their port bottlenecks must NOT overlap in the
+    /// compute-time model — Winograd's transform phases are shuffle-bound
+    /// while its GEMM phase is FMA-bound, and modelling them merged would
+    /// overestimate utilisation badly.
+    fn phases(&self) -> Vec<InstrMix> {
+        vec![self.instr_mix()]
+    }
+
+    /// Per-thread memory traces for one execution.
+    fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace>;
+
+    /// Work in FLOPs, as the PMU would derive it.
+    fn flops(&self) -> f64 {
+        self.instr_mix().flops()
+    }
+}
+
+/// Round-robin split of `items` indices across `threads` partitions
+/// (partitions may be empty when `threads > items`).
+pub fn split_indices(items: usize, threads: usize) -> Vec<Vec<usize>> {
+    let mut parts = vec![Vec::new(); threads];
+    for i in 0..items {
+        parts[i % threads].push(i);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_map_roundtrip() {
+        let mut t = TensorMap::default();
+        t.insert("src", 4096, 1024);
+        t.insert("dst", 8192, 2048);
+        assert_eq!(t.base("src"), 4096);
+        assert_eq!(t.bytes("dst"), 2048);
+        assert_eq!(t.footprint(), 3072);
+        assert_eq!(t.names(), vec!["dst", "src"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown tensor")]
+    fn unknown_tensor_panics() {
+        TensorMap::default().base("missing");
+    }
+
+    #[test]
+    fn split_round_robin() {
+        let parts = split_indices(7, 3);
+        assert_eq!(parts[0], vec![0, 3, 6]);
+        assert_eq!(parts[1], vec![1, 4]);
+        assert_eq!(parts[2], vec![2, 5]);
+        let parts = split_indices(2, 4);
+        assert_eq!(parts.iter().filter(|p| p.is_empty()).count(), 2);
+    }
+}

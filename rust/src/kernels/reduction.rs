@@ -1,0 +1,111 @@
+//! Sum reduction — the paper's footnote-3 validation kernel: simple
+//! enough that W and Q are known in closed form, so it cross-checks the
+//! whole measurement pipeline (EXP-V2): W must equal N−1 adds (≈N), and
+//! cold Q must equal the array size.
+
+use crate::sim::core::{InstrMix, VecWidth};
+use crate::sim::machine::AddressSpace;
+use crate::sim::numa::MemPolicy;
+use crate::sim::trace::{AccessKind, AccessRun, Trace};
+
+use super::layouts::ELEM;
+use super::{KernelModel, TensorMap};
+
+/// `sum(x)` over `n` f32 elements, vectorised with 8 accumulators.
+#[derive(Clone, Copy, Debug)]
+pub struct SumReduction {
+    pub n: usize,
+}
+
+impl SumReduction {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 16);
+        SumReduction { n }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.n as u64 * ELEM
+    }
+
+    /// Exact expected Work: one add per element (the horizontal tail is
+    /// negligible and included).
+    pub fn exact_flops(&self) -> f64 {
+        self.n as f64
+    }
+}
+
+impl KernelModel for SumReduction {
+    fn name(&self) -> String {
+        "sum_reduction".into()
+    }
+
+    fn description(&self) -> String {
+        format!("sum reduction over {} f32 ({} bytes)", self.n, self.bytes())
+    }
+
+    fn alloc(&self, space: &mut AddressSpace, policy: MemPolicy, nodes: usize) -> TensorMap {
+        let mut t = TensorMap::default();
+        t.insert("src", space.alloc("src", self.bytes(), policy, nodes), self.bytes());
+        t
+    }
+
+    fn instr_mix(&self) -> InstrMix {
+        let vecs = self.n as f64 / VecWidth::V512.lanes() as f64;
+        InstrMix {
+            fma: 0.0,
+            fp: vecs, // one vaddps per vector
+            load: vecs,
+            store: 0.0,
+            shuffle: 4.0, // horizontal tail
+            alu: vecs * 0.1,
+            width: VecWidth::V512,
+            // 8 accumulators fully hide the 4-cycle add latency.
+            ilp: 1.0,
+        }
+    }
+
+    fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace> {
+        (0..threads)
+            .map(|i| {
+                let lo = self.bytes() * i as u64 / threads as u64;
+                let hi = self.bytes() * (i as u64 + 1) / threads as u64;
+                let mut tr = Trace::new();
+                if hi > lo {
+                    tr.push(AccessRun::contiguous(t.base("src") + lo, hi - lo, AccessKind::Load));
+                }
+                tr
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_matches_closed_form() {
+        let k = SumReduction::new(1 << 20);
+        let rel = (k.flops() - k.exact_flops()).abs() / k.exact_flops();
+        // Tail shuffles retire no FP events; only adds count.
+        assert!(rel < 0.01, "rel err {rel}");
+    }
+
+    #[test]
+    fn trace_is_exactly_the_array() {
+        let k = SumReduction::new(1 << 16);
+        let mut s = AddressSpace::new();
+        let t = k.alloc(&mut s, MemPolicy::BindNode(0), 1);
+        let tr = &k.traces(&t, 1)[0];
+        assert_eq!(tr.bytes(), k.bytes());
+        assert_eq!(tr.footprint_bytes(), k.bytes());
+    }
+
+    #[test]
+    fn ai_is_one_quarter() {
+        // 1 FLOP per 4-byte element ⇒ AI = 0.25 on cold caches.
+        let k = SumReduction::new(1 << 18);
+        let ai = k.exact_flops() / k.bytes() as f64;
+        assert!((ai - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,57 @@
+//! # dlroofline
+//!
+//! Reproduction of *"Applying the Roofline Model for Deep Learning
+//! performance optimizations"* (Czaja et al., CS.DC 2020) as a
+//! Rust + JAX + Pallas three-layer system.
+//!
+//! The crate provides:
+//!
+//! * a **NUMA platform simulator** ([`sim`]) — cores with a ported issue
+//!   model, a set-associative cache hierarchy with hardware/software
+//!   prefetchers, DDR channels behind per-socket integrated memory
+//!   controllers (IMC), and a two-node NUMA topology with first-touch
+//!   allocation and pressure-driven migration;
+//! * a **PMU subsystem** ([`pmu`]) modelling the
+//!   `FP_ARITH_INST_RETIRED.*` counter family (FMA retires count double)
+//!   and the IMC uncore counters, with the paper's two-run
+//!   overhead-subtraction measurement protocol;
+//! * **host microbenchmarks** ([`hostbench`]) — runtime-generated FMA
+//!   assembly (a tiny JIT, the paper used Xbyak) and
+//!   memset/memcpy/non-temporal-store bandwidth probes with thread
+//!   affinity control;
+//! * **analytic kernel models** ([`kernels`]) of the oneDNN primitives the
+//!   paper evaluates (direct & Winograd convolution, inner product,
+//!   average pooling, GELU, layer normalisation) in NCHW and blocked
+//!   NCHW16C layouts;
+//! * the **roofline model** itself ([`roofline`]) with ASCII/SVG plots and
+//!   paper-style reports;
+//! * a **measurement harness** ([`harness`]) — cold/warm cache protocols,
+//!   single-thread / single-socket / two-socket scenarios, per-figure
+//!   experiment definitions;
+//! * a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX /
+//!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust —
+//!   Python never runs on the measurement path;
+//! * a **coordinator** ([`coordinator`]) tying it all together behind the
+//!   `dlroofline` CLI.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod harness;
+pub mod hostbench;
+pub mod kernels;
+pub mod pmu;
+pub mod roofline;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

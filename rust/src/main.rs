@@ -1,0 +1,309 @@
+//! `dlroofline` — the L3 coordinator CLI.
+//!
+//! Reproduces "Applying the Roofline Model for Deep Learning performance
+//! optimizations" (CS.DC 2020). See `README.md` and `DESIGN.md`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use dlroofline::cli::{opt, switch, AppSpec, CmdSpec, Parsed};
+use dlroofline::coordinator::config::resolve_machine;
+use dlroofline::coordinator::runner::{render_report, run_and_write};
+use dlroofline::coordinator::KernelRegistry;
+use dlroofline::harness::experiments::{experiment_index, ExperimentParams};
+use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::hostbench::{membw, peak_flops, CpuInfo, PeakIsa};
+use dlroofline::roofline::model::RooflineModel;
+use dlroofline::roofline::report::markdown_table;
+use dlroofline::runtime::{Engine, HostTensor};
+use dlroofline::sim::machine::Machine;
+use dlroofline::util::human::{fmt_flops, fmt_rate, fmt_seconds};
+
+fn app() -> AppSpec {
+    AppSpec {
+        name: "dlroofline",
+        about: "automatic roofline models for deep-learning kernels (paper reproduction)",
+        version: dlroofline::VERSION,
+        commands: vec![
+            CmdSpec {
+                name: "list",
+                help: "list experiments, kernels and artifacts",
+                opts: vec![],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "figure",
+                help: "reproduce one paper figure/experiment (f1,f3..f8,a1..a4,p1,p2,v1,v2)",
+                opts: vec![
+                    opt("out", "report output directory", Some("reports")),
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt("batch", "override workload batch", None),
+                    switch("full-size", "use the paper's full tensor sizes (slow)"),
+                    switch("svg", "also emit SVG plots"),
+                    switch("quiet", "suppress the report on stdout"),
+                ],
+                positional: vec![("id", "experiment id, e.g. f3")],
+            },
+            CmdSpec {
+                name: "repro-all",
+                help: "reproduce every figure and write reports/",
+                opts: vec![
+                    opt("out", "report output directory", Some("reports")),
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    switch("full-size", "use the paper's full tensor sizes (slow)"),
+                    switch("svg", "also emit SVG plots"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "measure",
+                help: "measure one kernel on the simulated platform",
+                opts: vec![
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt("scenario", "single-thread | one-socket | two-socket", Some("single-thread")),
+                    opt("cache", "cold | warm", Some("cold")),
+                    opt("scale", "workload scale (batch)", Some("4")),
+                ],
+                positional: vec![("kernel", "kernel name (see `list`)")],
+            },
+            CmdSpec {
+                name: "characterize",
+                help: "platform characterisation tables (π and β, §2.1–2.2)",
+                opts: vec![opt("machine", "machine preset or config path", Some("xeon_6248"))],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "host-bench",
+                help: "run the real §2.1/§2.2 microbenchmarks on THIS host",
+                opts: vec![
+                    opt("seconds", "seconds per measurement", Some("0.5")),
+                    opt("buffer-mb", "bandwidth buffer size in MiB", Some("512")),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "run-artifact",
+                help: "load an AOT artifact via PJRT and execute it",
+                opts: vec![
+                    opt("iters", "timed iterations", Some("20")),
+                    opt("seed", "input RNG seed", Some("42")),
+                ],
+                positional: vec![("name", "artifact name from artifacts/manifest.json")],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = app();
+    let parsed = match spec.parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&parsed) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn params_from(parsed: &Parsed) -> Result<ExperimentParams> {
+    Ok(ExperimentParams {
+        machine: resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?,
+        full_size: parsed.has("full-size"),
+        batch: parsed.opt_parse::<usize>("batch").unwrap_or(None),
+    })
+}
+
+fn dispatch(parsed: &Parsed) -> Result<()> {
+    match parsed.command.as_str() {
+        "list" => cmd_list(),
+        "figure" => cmd_figure(parsed),
+        "repro-all" => cmd_repro_all(parsed),
+        "measure" => cmd_measure(parsed),
+        "characterize" => cmd_characterize(parsed),
+        "host-bench" => cmd_host_bench(parsed),
+        "run-artifact" => cmd_run_artifact(parsed),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("EXPERIMENTS (dlroofline figure <id>):");
+    for (id, title) in experiment_index() {
+        println!("  {id:<4} {title}");
+    }
+    println!("\nKERNELS (dlroofline measure <name>):");
+    for name in KernelRegistry::with_builtins().names() {
+        println!("  {name}");
+    }
+    match dlroofline::runtime::Manifest::load_default() {
+        Ok(m) => {
+            println!("\nARTIFACTS (dlroofline run-artifact <name>):");
+            for a in &m.artifacts {
+                println!("  {:<24} {}", a.name, a.description);
+            }
+        }
+        Err(_) => println!("\nARTIFACTS: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(parsed: &Parsed) -> Result<()> {
+    let id = parsed
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("missing experiment id (try `dlroofline list`)"))?;
+    let params = params_from(parsed)?;
+    let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
+    let (result, output) = run_and_write(id, &params, &out_dir, parsed.has("svg"))?;
+    if !parsed.has("quiet") {
+        print!("{}", render_report(&result));
+    }
+    if let Some(md) = output.markdown {
+        println!("wrote {}", md.display());
+    }
+    for p in output.svgs.iter().chain(output.csvs.iter()) {
+        println!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_repro_all(parsed: &Parsed) -> Result<()> {
+    let params = params_from(parsed)?;
+    let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
+    for (id, title) in experiment_index() {
+        eprintln!("== {id}: {title}");
+        let (_, output) = run_and_write(id, &params, &out_dir, parsed.has("svg"))?;
+        if let Some(md) = output.markdown {
+            println!("wrote {}", md.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_measure(parsed: &Parsed) -> Result<()> {
+    let name = parsed
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("missing kernel name (try `dlroofline list`)"))?;
+    let machine_cfg = resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?;
+    let scenario = Scenario::parse(parsed.opt("scenario").unwrap_or("single-thread"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scenario"))?;
+    let cache = CacheState::parse(parsed.opt("cache").unwrap_or("cold"))
+        .ok_or_else(|| anyhow::anyhow!("bad --cache"))?;
+    let scale = parsed.opt_parse::<usize>("scale")?.unwrap_or(4);
+
+    let registry = KernelRegistry::with_builtins();
+    let kernel = registry.create(name, scale)?;
+    let mut machine = Machine::new(machine_cfg.clone());
+    let meas = measure_kernel(&mut machine, kernel.as_ref(), scenario, cache)?;
+    let roofline = RooflineModel::for_machine(
+        &machine_cfg,
+        scenario.threads(&machine_cfg),
+        scenario.nodes_used(&machine_cfg),
+        scenario.label(),
+    );
+    print!("{}", markdown_table(&roofline, &[meas.point()]));
+    println!(
+        "runtime decomposition: compute {} | memory {} | bound: {:?} | remote {:.0}%",
+        fmt_seconds(meas.runtime.compute_seconds),
+        fmt_seconds(meas.runtime.memory_seconds),
+        meas.runtime.bound,
+        meas.runtime.remote_fraction * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_characterize(parsed: &Parsed) -> Result<()> {
+    let params = ExperimentParams {
+        machine: resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?,
+        ..Default::default()
+    };
+    for id in ["p1", "p2", "v1"] {
+        let result = dlroofline::harness::experiments::run_experiment(id, &params)?;
+        print!("{}", render_report(&result));
+    }
+    Ok(())
+}
+
+fn cmd_host_bench(parsed: &Parsed) -> Result<()> {
+    let seconds: f64 = parsed.opt_parse("seconds")?.unwrap_or(0.5);
+    let buffer_mb: usize = parsed.opt_parse("buffer-mb")?.unwrap_or(512);
+    let info = CpuInfo::detect();
+    println!(
+        "host: {} | {} cpus | {} numa node(s) | fma={} avx2={} avx512f={}",
+        info.model_name, info.logical_cpus, info.numa_nodes, info.has_fma, info.has_avx2,
+        info.has_avx512f
+    );
+
+    println!("\n== peak compute (§2.1: runtime-generated FMA streams) ==");
+    for (label, cpus) in peak_flops::scenarios() {
+        for isa in [PeakIsa::Scalar, PeakIsa::Avx2Fma, PeakIsa::Avx512Fma] {
+            if isa == PeakIsa::Avx512Fma && !info.has_avx512f {
+                continue;
+            }
+            let r = peak_flops::measure(isa, &cpus, cpus.len(), seconds)?;
+            println!(
+                "  {label:<14} {:<12} {:>18}{}",
+                isa.label(),
+                fmt_flops(r.flops_per_sec),
+                if r.jitted { "  [jit]" } else { "" }
+            );
+        }
+    }
+
+    println!("\n== peak memory bandwidth (§2.2: memset / memcpy / NT stores) ==");
+    let buffer = buffer_mb * 1024 * 1024;
+    for (label, cpus) in peak_flops::scenarios() {
+        let results = membw::measure_all(&cpus, cpus.len(), buffer, seconds)?;
+        let best = results
+            .iter()
+            .max_by(|a, b| a.bytes_per_sec.partial_cmp(&b.bytes_per_sec).unwrap())
+            .unwrap();
+        for r in &results {
+            println!(
+                "  {label:<14} {:<10} {:>16}{}",
+                r.method.label(),
+                fmt_rate(r.bytes_per_sec),
+                if r.method == best.method { "  <- β" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run_artifact(parsed: &Parsed) -> Result<()> {
+    let name = parsed
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("missing artifact name (try `dlroofline list`)"))?;
+    let iters: usize = parsed.opt_parse("iters")?.unwrap_or(20);
+    let seed: u64 = parsed.opt_parse("seed")?.unwrap_or(42);
+
+    let mut engine = Engine::from_default_artifacts()?;
+    println!("platform: {}", engine.platform());
+    let kernel = engine.load(name)?;
+    let inputs: Vec<HostTensor> = kernel
+        .spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| HostTensor::random(&s.shape, seed ^ ((i as u64) << 32)))
+        .collect();
+    let stats = kernel.benchmark(&inputs, 3, iters)?;
+    println!(
+        "{}: mean {} (p05 {} / p95 {}), {} per run → {}",
+        stats.name,
+        fmt_seconds(stats.time.mean),
+        fmt_seconds(stats.time.p05),
+        fmt_seconds(stats.time.p95),
+        dlroofline::util::human::fmt_si(stats.flops, "FLOP"),
+        fmt_flops(stats.flops_per_sec()),
+    );
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! A perf-like counter file: named counters that can be opened, enabled,
+//! read and disabled — the interface the paper reconstructed by reading
+//! the `perf` source to find the right `perf_event_open` parameters for
+//! the IMC uncore boxes (§2.4).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One logical counter (core or uncore).
+#[derive(Clone, Debug, Default)]
+struct Counter {
+    value: u64,
+    enabled: bool,
+}
+
+/// A set of named counters with perf-style enable/disable semantics:
+/// increments while disabled are dropped, reads are always allowed.
+#[derive(Clone, Debug, Default)]
+pub struct CounterFile {
+    counters: BTreeMap<String, Counter>,
+}
+
+impl CounterFile {
+    pub fn new() -> CounterFile {
+        CounterFile::default()
+    }
+
+    /// Register (open) a counter. Re-opening resets it — mirrors a fresh
+    /// `perf_event_open` fd.
+    pub fn open(&mut self, name: &str) {
+        self.counters.insert(name.to_string(), Counter::default());
+    }
+
+    pub fn is_open(&self, name: &str) -> bool {
+        self.counters.contains_key(name)
+    }
+
+    /// Enable counting.
+    pub fn enable(&mut self, name: &str) -> Result<()> {
+        match self.counters.get_mut(name) {
+            Some(c) => {
+                c.enabled = true;
+                Ok(())
+            }
+            None => bail!("counter '{name}' not open"),
+        }
+    }
+
+    /// Disable counting (value retained).
+    pub fn disable(&mut self, name: &str) -> Result<()> {
+        match self.counters.get_mut(name) {
+            Some(c) => {
+                c.enabled = false;
+                Ok(())
+            }
+            None => bail!("counter '{name}' not open"),
+        }
+    }
+
+    /// Add to a counter if enabled (the simulated hardware calls this).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        if let Some(c) = self.counters.get_mut(name) {
+            if c.enabled {
+                c.value += delta;
+            }
+        }
+    }
+
+    /// Read the current value.
+    pub fn read(&self, name: &str) -> Result<u64> {
+        match self.counters.get(name) {
+            Some(c) => Ok(c.value),
+            None => bail!("counter '{name}' not open"),
+        }
+    }
+
+    /// Read then zero (perf's `read + reset` usage).
+    pub fn read_reset(&mut self, name: &str) -> Result<u64> {
+        match self.counters.get_mut(name) {
+            Some(c) => {
+                let v = c.value;
+                c.value = 0;
+                Ok(v)
+            }
+            None => bail!("counter '{name}' not open"),
+        }
+    }
+
+    /// All names, for reports.
+    pub fn names(&self) -> Vec<&str> {
+        self.counters.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_enable_count_read() {
+        let mut f = CounterFile::new();
+        f.open("imc0.cas_count_read");
+        f.enable("imc0.cas_count_read").unwrap();
+        f.add("imc0.cas_count_read", 5);
+        f.add("imc0.cas_count_read", 7);
+        assert_eq!(f.read("imc0.cas_count_read").unwrap(), 12);
+    }
+
+    #[test]
+    fn disabled_counters_drop_increments() {
+        let mut f = CounterFile::new();
+        f.open("c");
+        f.add("c", 100); // not enabled yet
+        assert_eq!(f.read("c").unwrap(), 0);
+        f.enable("c").unwrap();
+        f.add("c", 1);
+        f.disable("c").unwrap();
+        f.add("c", 100);
+        assert_eq!(f.read("c").unwrap(), 1);
+    }
+
+    #[test]
+    fn read_reset_zeroes() {
+        let mut f = CounterFile::new();
+        f.open("c");
+        f.enable("c").unwrap();
+        f.add("c", 9);
+        assert_eq!(f.read_reset("c").unwrap(), 9);
+        assert_eq!(f.read("c").unwrap(), 0);
+    }
+
+    #[test]
+    fn unopened_counter_errors() {
+        let mut f = CounterFile::new();
+        assert!(f.read("nope").is_err());
+        assert!(f.enable("nope").is_err());
+        assert!(f.disable("nope").is_err());
+        // add() to unopened silently ignores — hardware can't write to a
+        // counter nobody programmed.
+        f.add("nope", 3);
+    }
+
+    #[test]
+    fn reopen_resets() {
+        let mut f = CounterFile::new();
+        f.open("c");
+        f.enable("c").unwrap();
+        f.add("c", 4);
+        f.open("c");
+        assert_eq!(f.read("c").unwrap(), 0);
+        assert!(!f.names().is_empty());
+    }
+}

@@ -1,0 +1,18 @@
+//! Performance-monitoring-unit model.
+//!
+//! The paper's Work measurement (§2.3) reads the
+//! `FP_ARITH_INST_RETIRED.{SCALAR,128B,256B,512B}_PACKED_SINGLE` core PMU
+//! events with `perf`, multiplies by the per-event lane count, and relies
+//! on the (experimentally validated) fact that one retired FMA increments
+//! its width's counter by **two**. Traffic (§2.4) reads the IMC uncore
+//! counters. Both are modelled here with the same semantics, plus the
+//! paper's two-run *framework-overhead subtraction* protocol
+//! ([`perf_iface::MeasureProtocol`]).
+
+pub mod counters;
+pub mod events;
+pub mod perf_iface;
+
+pub use counters::CounterFile;
+pub use events::{FpEvent, FpEventSet};
+pub use perf_iface::{MeasureProtocol, Measured};

@@ -1,0 +1,151 @@
+//! The paper's two-run measurement protocol (§2.3–2.4).
+//!
+//! `perf` counts whole-process (core events) or whole-platform (uncore
+//! events) activity, so the paper ran each benchmark twice:
+//!
+//! 1. an **overhead run** that initialises all data but skips the kernel;
+//! 2. a **full run** that also executes the kernel once;
+//!
+//! and subtracted the counter values to isolate the kernel. This module
+//! packages that protocol so harness code cannot get the subtraction
+//! wrong, and flags the cases where it breaks (counter underflow would
+//! mean the runs were not comparable).
+
+use anyhow::{bail, Result};
+
+use super::events::FpEventSet;
+
+/// Counter snapshot for one run: FP events + platform-wide IMC traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunCounters {
+    pub fp: FpEventSet,
+    pub imc_read_bytes: u64,
+    pub imc_write_bytes: u64,
+}
+
+/// The isolated kernel measurement the protocol produces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measured {
+    /// Work W: FLOPs derived from the FP counters (lane-multiplied).
+    pub work_flops: u64,
+    /// Traffic Q: bytes through the IMCs (reads + writes).
+    pub traffic_bytes: u64,
+    /// The raw subtracted FP events, for per-width reporting.
+    pub fp: FpEventSet,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+/// Two-run subtraction protocol.
+pub struct MeasureProtocol;
+
+impl MeasureProtocol {
+    /// Run the protocol: `overhead_run` initialises data only (run 2 in
+    /// the paper's numbering), `full_run` also executes the kernel.
+    ///
+    /// Each closure returns the platform counter snapshot observed for
+    /// its run.
+    pub fn measure(
+        mut overhead_run: impl FnMut() -> RunCounters,
+        mut full_run: impl FnMut() -> RunCounters,
+    ) -> Result<Measured> {
+        let overhead = overhead_run();
+        let full = full_run();
+        Self::subtract(&overhead, &full)
+    }
+
+    /// Subtract overhead counters from full counters.
+    pub fn subtract(overhead: &RunCounters, full: &RunCounters) -> Result<Measured> {
+        for (o, f, name) in [
+            (overhead.fp.scalar, full.fp.scalar, "scalar"),
+            (overhead.fp.p128, full.fp.p128, "128b"),
+            (overhead.fp.p256, full.fp.p256, "256b"),
+            (overhead.fp.p512, full.fp.p512, "512b"),
+        ] {
+            if o > f {
+                bail!(
+                    "overhead run retired more {name} FP events than the full \
+                     run ({o} > {f}); runs are not comparable"
+                );
+            }
+        }
+        if overhead.imc_read_bytes > full.imc_read_bytes
+            || overhead.imc_write_bytes > full.imc_write_bytes
+        {
+            bail!("overhead run moved more IMC traffic than the full run; runs are not comparable");
+        }
+        let fp = full.fp.minus(&overhead.fp);
+        let read_bytes = full.imc_read_bytes - overhead.imc_read_bytes;
+        let write_bytes = full.imc_write_bytes - overhead.imc_write_bytes;
+        Ok(Measured {
+            work_flops: fp.flops(),
+            traffic_bytes: read_bytes + write_bytes,
+            fp,
+            read_bytes,
+            write_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::core::VecWidth;
+
+    fn counters(fma512: u64, read: u64, write: u64) -> RunCounters {
+        let mut fp = FpEventSet::default();
+        fp.retire_fma(VecWidth::V512, fma512);
+        RunCounters { fp, imc_read_bytes: read, imc_write_bytes: write }
+    }
+
+    #[test]
+    fn subtraction_isolates_kernel() {
+        // Framework: 100 FMAs of setup, 1 MiB traffic.
+        let overhead = counters(100, 1 << 20, 1 << 19);
+        // Full: framework + kernel (10_000 FMAs, 64 MiB reads, 32 MiB writes).
+        let full = counters(10_100, (1 << 20) + (64 << 20), (1 << 19) + (32 << 20));
+        let m = MeasureProtocol::subtract(&overhead, &full).unwrap();
+        assert_eq!(m.work_flops, 10_000 * 2 * 16);
+        assert_eq!(m.read_bytes, 64 << 20);
+        assert_eq!(m.write_bytes, 32 << 20);
+        assert_eq!(m.traffic_bytes, 96 << 20);
+    }
+
+    #[test]
+    fn underflow_is_an_error() {
+        let overhead = counters(200, 0, 0);
+        let full = counters(100, 0, 0);
+        assert!(MeasureProtocol::subtract(&overhead, &full).is_err());
+    }
+
+    #[test]
+    fn traffic_underflow_is_an_error() {
+        let overhead = counters(0, 1000, 0);
+        let full = counters(10, 500, 0);
+        assert!(MeasureProtocol::subtract(&overhead, &full).is_err());
+    }
+
+    #[test]
+    fn measure_runs_both_closures() {
+        let mut calls = 0;
+        let m = MeasureProtocol::measure(
+            || {
+                calls += 1;
+                counters(1, 100, 0)
+            },
+            || counters(11, 300, 50),
+        )
+        .unwrap();
+        assert_eq!(calls, 1);
+        assert_eq!(m.work_flops, 10 * 32);
+        assert_eq!(m.traffic_bytes, 250);
+    }
+
+    #[test]
+    fn zero_overhead_passthrough() {
+        let m =
+            MeasureProtocol::subtract(&RunCounters::default(), &counters(5, 640, 0)).unwrap();
+        assert_eq!(m.work_flops, 5 * 32);
+        assert_eq!(m.read_bytes, 640);
+    }
+}

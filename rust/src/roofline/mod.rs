@@ -1,0 +1,13 @@
+//! The Roofline model itself: `P = min(π, I·β)` (the paper's §1 formula),
+//! with multiple compute ceilings (scalar / AVX2 / AVX-512-FMA — the
+//! "possible gains from vectorisation" rooflines), kernel points, plots
+//! (ASCII and SVG) and paper-style reports.
+
+pub mod model;
+pub mod plot;
+pub mod point;
+pub mod report;
+pub mod svg;
+
+pub use model::{Ceiling, RooflineModel};
+pub use point::KernelPoint;

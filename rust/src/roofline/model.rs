@@ -1,0 +1,174 @@
+//! Roofline model assembly: π ceilings and the β roof.
+
+use crate::sim::core::VecWidth;
+use crate::sim::machine::MachineConfig;
+
+/// One horizontal compute ceiling (e.g. "AVX-512 FMA", "AVX2", "scalar").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ceiling {
+    pub label: String,
+    pub flops_per_sec: f64,
+}
+
+/// A roofline for one platform × one resource scenario.
+#[derive(Clone, Debug)]
+pub struct RooflineModel {
+    /// e.g. `xeon_6248 / single-thread`.
+    pub name: String,
+    /// Compute ceilings, ascending; the last is the peak π.
+    pub ceilings: Vec<Ceiling>,
+    /// Peak memory bandwidth β (bytes/s).
+    pub bandwidth: f64,
+    pub bandwidth_label: String,
+}
+
+impl RooflineModel {
+    /// Build from measured/modelled peaks. Ceilings are sorted ascending.
+    pub fn new(name: &str, mut ceilings: Vec<Ceiling>, bandwidth: f64, bandwidth_label: &str) -> Self {
+        assert!(!ceilings.is_empty(), "need at least one ceiling");
+        assert!(bandwidth > 0.0);
+        ceilings.sort_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap());
+        RooflineModel {
+            name: name.to_string(),
+            ceilings,
+            bandwidth,
+            bandwidth_label: bandwidth_label.to_string(),
+        }
+    }
+
+    /// Build the paper-style roofline for a simulated machine scenario.
+    pub fn for_machine(config: &MachineConfig, threads: usize, nodes_used: usize, label: &str) -> Self {
+        let ceilings = vec![
+            Ceiling {
+                label: "scalar".into(),
+                flops_per_sec: config.peak_flops(threads, VecWidth::Scalar),
+            },
+            Ceiling {
+                label: "AVX2 FMA".into(),
+                flops_per_sec: config.peak_flops(threads, VecWidth::V256),
+            },
+            Ceiling {
+                label: "AVX-512 FMA".into(),
+                flops_per_sec: config.peak_flops(threads, VecWidth::V512),
+            },
+        ];
+        let bw = config.peak_bw(threads, nodes_used);
+        RooflineModel::new(
+            &format!("{} / {}", config.name, label),
+            ceilings,
+            bw,
+            "DRAM (NT-stream)",
+        )
+    }
+
+    /// Peak compute π (the top ceiling).
+    pub fn peak(&self) -> f64 {
+        self.ceilings.last().unwrap().flops_per_sec
+    }
+
+    /// The paper's equation: attainable P at arithmetic intensity `ai`.
+    pub fn attainable(&self, ai: f64) -> f64 {
+        assert!(ai >= 0.0);
+        self.peak().min(ai * self.bandwidth)
+    }
+
+    /// Attainable P under a specific ceiling (e.g. what a scalar kernel
+    /// could at best reach).
+    pub fn attainable_under(&self, ai: f64, ceiling_label: &str) -> Option<f64> {
+        self.ceilings
+            .iter()
+            .find(|c| c.label == ceiling_label)
+            .map(|c| c.flops_per_sec.min(ai * self.bandwidth))
+    }
+
+    /// The ridge point I* = π/β: the AI where the kernel stops being
+    /// memory-bound. The paper's §3.1.2 observation — moving from one
+    /// thread to a socket moves the ridge right — falls out of this.
+    pub fn ridge(&self) -> f64 {
+        self.peak() / self.bandwidth
+    }
+
+    /// Is a kernel at `ai` memory-bound on this platform?
+    pub fn memory_bound(&self, ai: f64) -> bool {
+        ai < self.ridge()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> RooflineModel {
+        RooflineModel::new(
+            "test",
+            vec![
+                Ceiling { label: "scalar".into(), flops_per_sec: 1e11 },
+                Ceiling { label: "AVX-512 FMA".into(), flops_per_sec: 1e12 },
+            ],
+            100e9,
+            "DRAM",
+        )
+    }
+
+    #[test]
+    fn attainable_is_min_of_roofs() {
+        let r = simple();
+        // Memory-bound region: P = I·β.
+        assert_eq!(r.attainable(1.0), 100e9);
+        assert_eq!(r.attainable(5.0), 500e9);
+        // Compute-bound region: P = π.
+        assert_eq!(r.attainable(100.0), 1e12);
+        // Exactly at the ridge.
+        assert_eq!(r.attainable(r.ridge()), 1e12);
+    }
+
+    #[test]
+    fn ridge_point() {
+        let r = simple();
+        assert_eq!(r.ridge(), 10.0);
+        assert!(r.memory_bound(9.9));
+        assert!(!r.memory_bound(10.1));
+    }
+
+    #[test]
+    fn ceilings_sorted() {
+        let r = RooflineModel::new(
+            "t",
+            vec![
+                Ceiling { label: "big".into(), flops_per_sec: 5e12 },
+                Ceiling { label: "small".into(), flops_per_sec: 1e11 },
+            ],
+            1e9,
+            "x",
+        );
+        assert_eq!(r.peak(), 5e12);
+        assert_eq!(r.ceilings[0].label, "small");
+    }
+
+    #[test]
+    fn under_ceiling_lookup() {
+        let r = simple();
+        assert_eq!(r.attainable_under(100.0, "scalar"), Some(1e11));
+        assert_eq!(r.attainable_under(0.5, "scalar"), Some(50e9));
+        assert_eq!(r.attainable_under(1.0, "nope"), None);
+    }
+
+    #[test]
+    fn machine_rooflines_scale_with_scenario() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        let one = RooflineModel::for_machine(&m, 1, 1, "single-thread");
+        let socket = RooflineModel::for_machine(&m, 20, 1, "one-socket");
+        let two = RooflineModel::for_machine(&m, 40, 2, "two-socket");
+        assert!(socket.peak() > 10.0 * one.peak());
+        assert!((two.peak() / socket.peak() - 2.0).abs() < 1e-9);
+        // Paper §3.1.2: the ridge moves right from 1 thread → socket
+        // (bandwidth per thread shrinks).
+        assert!(socket.ridge() > one.ridge());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_ceilings_panic() {
+        RooflineModel::new("x", vec![], 1.0, "b");
+    }
+}

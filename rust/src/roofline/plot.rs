@@ -1,0 +1,159 @@
+//! Log-log ASCII roofline plots for terminal reports — the repo's
+//! equivalent of the paper's Figures 1 and 3–8.
+
+use super::model::RooflineModel;
+use super::point::KernelPoint;
+use crate::util::human::fmt_flops;
+
+/// Plot geometry.
+const WIDTH: usize = 72;
+const HEIGHT: usize = 22;
+
+/// Render a roofline with kernel points as ASCII art.
+///
+/// X: log10(AI) over a range covering all points and the ridge;
+/// Y: log10(FLOP/s) from ~3.5 decades below peak to just above it.
+pub fn ascii_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
+    let ridge = roofline.ridge();
+    let finite_ais: Vec<f64> = points
+        .iter()
+        .map(|p| p.ai())
+        .filter(|ai| ai.is_finite() && *ai > 0.0)
+        .collect();
+    let ai_min = finite_ais
+        .iter()
+        .fold(ridge / 64.0, |a, &b| a.min(b / 2.0))
+        .max(1e-3);
+    let ai_max = finite_ais
+        .iter()
+        .fold(ridge * 8.0, |a, &b| a.max(b * 2.0));
+    let (lx0, lx1) = (ai_min.log10(), ai_max.log10());
+
+    let peak = roofline.peak();
+    let perf_min = points
+        .iter()
+        .map(|p| p.perf())
+        .fold(peak / 3000.0, f64::min)
+        .max(peak / 1e5);
+    let (ly0, ly1) = ((perf_min / 2.0).log10(), (peak * 2.0).log10());
+
+    let x_of = |ai: f64| -> usize {
+        let t = (ai.log10() - lx0) / (lx1 - lx0);
+        ((t * (WIDTH - 1) as f64).round() as isize).clamp(0, WIDTH as isize - 1) as usize
+    };
+    let y_of = |perf: f64| -> usize {
+        let t = (perf.max(1.0).log10() - ly0) / (ly1 - ly0);
+        let row = ((1.0 - t) * (HEIGHT - 1) as f64).round() as isize;
+        row.clamp(0, HEIGHT as isize - 1) as usize
+    };
+
+    let mut grid = vec![vec![' '; WIDTH]; HEIGHT];
+
+    // Draw the roof: for each column, attainable P at that AI.
+    for col in 0..WIDTH {
+        let ai = 10f64.powf(lx0 + (lx1 - lx0) * col as f64 / (WIDTH - 1) as f64);
+        let p = roofline.attainable(ai);
+        let row = y_of(p);
+        grid[row][col] = if roofline.memory_bound(ai) { '/' } else { '-' };
+    }
+    // Secondary ceilings as dotted lines in the compute-bound region.
+    for c in &roofline.ceilings[..roofline.ceilings.len() - 1] {
+        let row = y_of(c.flops_per_sec);
+        for col in 0..WIDTH {
+            let ai = 10f64.powf(lx0 + (lx1 - lx0) * col as f64 / (WIDTH - 1) as f64);
+            if ai * roofline.bandwidth >= c.flops_per_sec && grid[row][col] == ' ' {
+                grid[row][col] = '.';
+            }
+        }
+    }
+
+    // Points: label with letters.
+    let mut legend = String::new();
+    for (i, p) in points.iter().enumerate() {
+        let marker = (b'A' + (i % 26) as u8) as char;
+        let ai = if p.ai().is_finite() { p.ai() } else { ai_max };
+        let row = y_of(p.perf());
+        let col = x_of(ai);
+        grid[row][col] = marker;
+        legend.push_str(&format!(
+            "  {marker}: {:<28} AI={:<9.3} P={:<16} {}\n",
+            p.name,
+            p.ai(),
+            fmt_flops(p.perf()),
+            p.note
+        ));
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "roofline: {}   π={}  β={}  ridge AI={:.2}\n",
+        roofline.name,
+        fmt_flops(peak),
+        crate::util::human::fmt_rate(roofline.bandwidth),
+        ridge
+    ));
+    out.push_str(&format!("{:>14} ┐\n", fmt_flops(10f64.powf(ly1))));
+    for row in grid {
+        out.push_str("               │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>14} └{}\n",
+        fmt_flops(10f64.powf(ly0)),
+        "─".repeat(WIDTH)
+    ));
+    out.push_str(&format!(
+        "               AI {:.3} … {:.1} FLOP/byte (log)\n",
+        ai_min, ai_max
+    ));
+    out.push_str(&legend);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roofline::model::Ceiling;
+
+    fn roofline() -> RooflineModel {
+        RooflineModel::new(
+            "unit",
+            vec![
+                Ceiling { label: "scalar".into(), flops_per_sec: 10e9 },
+                Ceiling { label: "AVX-512 FMA".into(), flops_per_sec: 100e9 },
+            ],
+            20e9,
+            "DRAM",
+        )
+    }
+
+    #[test]
+    fn plot_contains_roof_and_points() {
+        let points = vec![
+            KernelPoint::new("compute-ish", 1e9, 1e8, 0.02).with_note("cold"),
+            KernelPoint::new("memory-ish", 1e8, 1e9, 0.1),
+        ];
+        let s = ascii_plot(&roofline(), &points);
+        assert!(s.contains('/'), "diagonal roof missing");
+        assert!(s.contains('-'), "flat roof missing");
+        assert!(s.contains('A') && s.contains('B'), "points missing");
+        assert!(s.contains("compute-ish"));
+        assert!(s.contains("ridge AI=5.00"));
+        assert!(s.contains("cold"));
+    }
+
+    #[test]
+    fn handles_infinite_ai() {
+        let points = vec![KernelPoint::new("warm", 1e9, 0.0, 0.05)];
+        let s = ascii_plot(&roofline(), &points);
+        assert!(s.contains("warm"));
+        assert!(s.contains("inf") || s.contains("AI=inf"));
+    }
+
+    #[test]
+    fn empty_points_ok() {
+        let s = ascii_plot(&roofline(), &[]);
+        assert!(s.contains("roofline: unit"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Paper-style tabular reports: per-kernel W/Q/R/AI/P/utilisation rows,
+//! paper-vs-measured comparison, markdown and CSV output.
+
+use super::model::RooflineModel;
+use super::point::KernelPoint;
+use crate::util::human::{fmt_bytes, fmt_flops, fmt_pct, fmt_seconds};
+
+/// Expected utilisation from the paper for comparison rows.
+#[derive(Clone, Debug)]
+pub struct PaperExpectation {
+    pub kernel: String,
+    /// The paper's reported utilisation of peak (0–1), if given.
+    pub utilization: Option<f64>,
+    /// Free-text of what the paper claims (orderings etc.).
+    pub claim: String,
+}
+
+/// Render a markdown table for points on a roofline.
+pub fn markdown_table(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### {} — π = {}, β = {}, ridge = {:.2} FLOP/byte\n\n",
+        roofline.name,
+        fmt_flops(roofline.peak()),
+        crate::util::human::fmt_rate(roofline.bandwidth),
+        roofline.ridge()
+    ));
+    out.push_str(
+        "| kernel | W | Q | R | AI (FLOP/B) | P | util π | roof frac | bound |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for p in points {
+        let ai = p.ai();
+        let bound = if ai.is_finite() && roofline.memory_bound(ai) { "memory" } else { "compute" };
+        out.push_str(&format!(
+            "| {}{} | {} | {} | {} | {} | {} | {} | {:.2} | {} |\n",
+            p.name,
+            if p.note.is_empty() { String::new() } else { format!(" ({})", p.note) },
+            fmt_flops_amount(p.work_flops),
+            fmt_bytes(p.traffic_bytes),
+            fmt_seconds(p.runtime),
+            if ai.is_finite() { format!("{ai:.3}") } else { "∞".into() },
+            fmt_flops(p.perf()),
+            fmt_pct(p.utilization(roofline)),
+            p.roof_fraction(roofline),
+            bound
+        ));
+    }
+    out.push('\n');
+    out
+}
+
+/// Paper-vs-measured comparison table.
+pub fn comparison_table(
+    roofline: &RooflineModel,
+    points: &[KernelPoint],
+    expectations: &[PaperExpectation],
+) -> String {
+    let mut out = String::from(
+        "| kernel | paper util | measured util | Δ (pp) | paper claim |\n|---|---|---|---|---|\n",
+    );
+    for e in expectations {
+        let measured = points.iter().find(|p| p.name == e.kernel);
+        let m_util = measured.map(|p| p.utilization(roofline));
+        let (paper_s, meas_s, delta_s) = match (e.utilization, m_util) {
+            (Some(pu), Some(mu)) => (
+                fmt_pct(pu),
+                fmt_pct(mu),
+                format!("{:+.1}", (mu - pu) * 100.0),
+            ),
+            (None, Some(mu)) => ("—".into(), fmt_pct(mu), "—".into()),
+            (Some(pu), None) => (fmt_pct(pu), "missing".into(), "—".into()),
+            (None, None) => ("—".into(), "missing".into(), "—".into()),
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            e.kernel, paper_s, meas_s, delta_s, e.claim
+        ));
+    }
+    out.push('\n');
+    out
+}
+
+/// CSV rows for machine consumption.
+pub fn csv(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
+    let mut out =
+        String::from("roofline,kernel,note,work_flops,traffic_bytes,runtime_s,ai,perf_flops,util\n");
+    for p in points {
+        out.push_str(&format!(
+            "{},{},{},{:.0},{:.0},{:.9},{},{:.0},{:.6}\n",
+            roofline.name,
+            p.name,
+            p.note,
+            p.work_flops,
+            p.traffic_bytes,
+            p.runtime,
+            if p.ai().is_finite() { format!("{:.6}", p.ai()) } else { "inf".into() },
+            p.perf(),
+            p.utilization(roofline),
+        ));
+    }
+    out
+}
+
+fn fmt_flops_amount(flops: f64) -> String {
+    crate::util::human::fmt_si(flops, "FLOP")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roofline::model::Ceiling;
+
+    fn setup() -> (RooflineModel, Vec<KernelPoint>) {
+        let r = RooflineModel::new(
+            "t",
+            vec![Ceiling { label: "peak".into(), flops_per_sec: 100e9 }],
+            10e9,
+            "DRAM",
+        );
+        let pts = vec![
+            KernelPoint::new("conv_nchw16c", 1e9, 5e7, 0.0115).with_note("cold"),
+            KernelPoint::new("gelu", 1e8, 1e9, 0.15),
+        ];
+        (r, pts)
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let (r, pts) = setup();
+        let md = markdown_table(&r, &pts);
+        assert!(md.contains("conv_nchw16c"));
+        assert!(md.contains("(cold)"));
+        assert!(md.contains("gelu"));
+        assert!(md.contains("| kernel |"));
+        // gelu at AI 0.1 is memory-bound; conv at 20 is compute-bound.
+        assert!(md.contains("memory"));
+        assert!(md.contains("compute"));
+    }
+
+    #[test]
+    fn comparison_marks_deltas() {
+        let (r, pts) = setup();
+        let exp = vec![
+            PaperExpectation {
+                kernel: "conv_nchw16c".into(),
+                utilization: Some(0.867),
+                claim: "highest of the three".into(),
+            },
+            PaperExpectation {
+                kernel: "missing_kernel".into(),
+                utilization: Some(0.1),
+                claim: "".into(),
+            },
+        ];
+        let md = comparison_table(&r, &pts, &exp);
+        assert!(md.contains("86.7%"));
+        assert!(md.contains("missing"));
+        assert!(md.contains("Δ"));
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let (r, pts) = setup();
+        let text = csv(&r, &pts);
+        assert_eq!(text.lines().count(), 3);
+        let row: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row[1], "conv_nchw16c");
+        assert!(row[3].parse::<f64>().is_ok());
+    }
+}

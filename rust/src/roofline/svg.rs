@@ -1,0 +1,193 @@
+//! SVG roofline figures — publication-style output for `reports/`.
+
+use super::model::RooflineModel;
+use super::point::KernelPoint;
+
+const W: f64 = 760.0;
+const H: f64 = 520.0;
+const ML: f64 = 70.0; // margins
+const MR: f64 = 30.0;
+const MT: f64 = 40.0;
+const MB: f64 = 60.0;
+
+const COLORS: &[&str] = &["#d62728", "#1f77b4", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b"];
+
+/// Render a complete SVG document for one roofline + points.
+pub fn svg_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
+    let ridge = roofline.ridge();
+    let finite: Vec<f64> = points
+        .iter()
+        .map(|p| p.ai())
+        .filter(|x| x.is_finite() && *x > 0.0)
+        .collect();
+    let ai_min = finite.iter().fold(ridge / 64.0, |a, &b| a.min(b / 2.0)).max(1e-3);
+    let ai_max = finite.iter().fold(ridge * 8.0, |a, &b| a.max(b * 2.0));
+    let peak = roofline.peak();
+    let p_min = points
+        .iter()
+        .map(|p| p.perf())
+        .fold(peak / 3000.0, f64::min)
+        .max(peak / 1e5)
+        / 2.0;
+    let p_max = peak * 2.0;
+
+    let (lx0, lx1) = (ai_min.log10(), ai_max.log10());
+    let (ly0, ly1) = (p_min.log10(), p_max.log10());
+    let x = |ai: f64| ML + (ai.log10() - lx0) / (lx1 - lx0) * (W - ML - MR);
+    let y = |p: f64| H - MB - (p.max(1.0).log10() - ly0) / (ly1 - ly0) * (H - MT - MB);
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}">"##
+    ));
+    s.push_str(&format!(
+        r##"<rect width="{W}" height="{H}" fill="white"/>
+<text x="{}" y="24" font-family="sans-serif" font-size="15" text-anchor="middle">{}</text>"##,
+        W / 2.0,
+        xml_escape(&roofline.name)
+    ));
+
+    // Axes.
+    s.push_str(&format!(
+        r##"<line x1="{ML}" y1="{}" x2="{}" y2="{}" stroke="black"/>
+<line x1="{ML}" y1="{MT}" x2="{ML}" y2="{}" stroke="black"/>"##,
+        H - MB,
+        W - MR,
+        H - MB,
+        H - MB
+    ));
+    // Log grid + labels.
+    let mut dec = lx0.ceil() as i32;
+    while (dec as f64) <= lx1 {
+        let ai = 10f64.powi(dec);
+        s.push_str(&format!(
+            r##"<line x1="{0}" y1="{MT}" x2="{0}" y2="{1}" stroke="#eee"/>
+<text x="{0}" y="{2}" font-family="sans-serif" font-size="11" text-anchor="middle">{3}</text>"##,
+            x(ai),
+            H - MB,
+            H - MB + 18.0,
+            format_pow(dec)
+        ));
+        dec += 1;
+    }
+    let mut dec = ly0.ceil() as i32;
+    while (dec as f64) <= ly1 {
+        let p = 10f64.powi(dec);
+        s.push_str(&format!(
+            r##"<line x1="{ML}" y1="{0}" x2="{1}" y2="{0}" stroke="#eee"/>
+<text x="{2}" y="{3}" font-family="sans-serif" font-size="11" text-anchor="end">{4}</text>"##,
+            y(p),
+            W - MR,
+            ML - 6.0,
+            y(p) + 4.0,
+            format_pow(dec)
+        ));
+        dec += 1;
+    }
+    s.push_str(&format!(
+        r##"<text x="{}" y="{}" font-family="sans-serif" font-size="13" text-anchor="middle">arithmetic intensity (FLOP/byte)</text>
+<text x="16" y="{}" font-family="sans-serif" font-size="13" text-anchor="middle" transform="rotate(-90 16 {})">performance (FLOP/s)</text>"##,
+        (ML + W - MR) / 2.0,
+        H - 14.0,
+        H / 2.0,
+        H / 2.0
+    ));
+
+    // Roof: diagonal to ridge, flat after.
+    s.push_str(&format!(
+        r##"<polyline fill="none" stroke="black" stroke-width="2" points="{:.1},{:.1} {:.1},{:.1} {:.1},{:.1}"/>"##,
+        x(ai_min),
+        y(roofline.attainable(ai_min)),
+        x(ridge),
+        y(peak),
+        x(ai_max),
+        y(peak)
+    ));
+    // Secondary ceilings, dashed.
+    for c in &roofline.ceilings[..roofline.ceilings.len().saturating_sub(1)] {
+        let ai_start = (c.flops_per_sec / roofline.bandwidth).max(ai_min);
+        s.push_str(&format!(
+            r##"<line x1="{:.1}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#777" stroke-dasharray="6 4"/>
+<text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="11" fill="#555">{}</text>"##,
+            x(ai_start),
+            y(c.flops_per_sec),
+            x(ai_max),
+            y(c.flops_per_sec),
+            x(ai_start) + 4.0,
+            y(c.flops_per_sec) - 5.0,
+            xml_escape(&c.label)
+        ));
+    }
+
+    // Points + vertical dashed AI lines (the paper's presentation).
+    for (i, p) in points.iter().enumerate() {
+        let color = COLORS[i % COLORS.len()];
+        let ai = if p.ai().is_finite() { p.ai() } else { ai_max };
+        s.push_str(&format!(
+            r##"<line x1="{0:.1}" y1="{MT}" x2="{0:.1}" y2="{1}" stroke="{color}" stroke-dasharray="3 5" opacity="0.6"/>
+<circle cx="{0:.1}" cy="{2:.1}" r="5" fill="{color}"/>
+<text x="{3:.1}" y="{4:.1}" font-family="sans-serif" font-size="12" fill="{color}">{5}</text>"##,
+            x(ai),
+            H - MB,
+            y(p.perf()),
+            x(ai) + 8.0,
+            y(p.perf()) - 6.0,
+            xml_escape(&format!("{} {}", p.name, p.note))
+        ));
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+fn format_pow(dec: i32) -> String {
+    format!("1e{dec}")
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roofline::model::Ceiling;
+
+    #[test]
+    fn svg_well_formed_ish() {
+        let r = RooflineModel::new(
+            "svg test <xeon>",
+            vec![
+                Ceiling { label: "scalar".into(), flops_per_sec: 10e9 },
+                Ceiling { label: "AVX-512 FMA".into(), flops_per_sec: 102.4e9 },
+            ],
+            20e9,
+            "DRAM",
+        );
+        let pts = vec![
+            KernelPoint::new("conv", 1e9, 2e8, 0.02).with_note("cold"),
+            KernelPoint::new("gelu", 1e8, 2e9, 0.3),
+        ];
+        let svg = svg_plot(&r, &pts);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert!(svg.contains("polyline"));
+        assert_eq!(svg.matches("<circle").count(), 2);
+        // Escaped title.
+        assert!(svg.contains("&lt;xeon&gt;"));
+        assert!(!svg.contains("<xeon>"));
+        // Balanced-ish tags: every <text has a </text>.
+        assert_eq!(svg.matches("<text").count(), svg.matches("</text>").count());
+    }
+
+    #[test]
+    fn empty_points_still_draws_roof() {
+        let r = RooflineModel::new(
+            "empty",
+            vec![Ceiling { label: "peak".into(), flops_per_sec: 1e12 }],
+            100e9,
+            "DRAM",
+        );
+        let svg = svg_plot(&r, &[]);
+        assert!(svg.contains("polyline"));
+    }
+}

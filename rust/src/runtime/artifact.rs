@@ -1,0 +1,203 @@
+//! The artifact manifest: what `python/compile/aot.py` exported.
+//!
+//! `artifacts/manifest.json` describes every lowered computation: its HLO
+//! file, input/output tensor specs, and the analytic FLOP count used to
+//! place real executions on a roofline.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Data type of a tensor (artifacts are f32 throughout, like the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .expect("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.expect("dtype")?.as_str()?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One exported computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Analytic FLOPs per execution (from the python side).
+    pub flops: f64,
+    pub description: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(&crate::util::fsutil::artifacts_dir())
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let list = root.expect("artifacts")?.as_arr()?;
+        let mut artifacts = Vec::with_capacity(list.len());
+        for a in list {
+            artifacts.push(ArtifactSpec {
+                name: a.expect("name")?.as_str()?.to_string(),
+                file: a.expect("file")?.as_str()?.to_string(),
+                inputs: a
+                    .expect("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .expect("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                flops: a.get("flops").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+                description: a
+                    .get("description")
+                    .map(|v| v.as_str().map(str::to_string))
+                    .transpose()?
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "gelu_nchw",
+          "file": "gelu_nchw.hlo.txt",
+          "inputs": [{"shape": [8, 3, 32, 32], "dtype": "float32"}],
+          "outputs": [{"shape": [8, 3, 32, 32], "dtype": "float32"}],
+          "flops": 442368,
+          "description": "erf GELU"
+        },
+        {
+          "name": "matmul",
+          "file": "matmul.hlo.txt",
+          "inputs": [
+            {"shape": [16, 32], "dtype": "float32"},
+            {"shape": [32, 8], "dtype": "float32"}
+          ],
+          "outputs": [{"shape": [16, 8], "dtype": "float32"}]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/artifacts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.find("gelu_nchw").unwrap();
+        assert_eq!(g.inputs[0].shape, vec![8, 3, 32, 32]);
+        assert_eq!(g.inputs[0].elements(), 8 * 3 * 32 * 32);
+        assert_eq!(g.flops, 442368.0);
+        let mm = m.find("matmul").unwrap();
+        assert_eq!(mm.inputs.len(), 2);
+        assert_eq!(mm.flops, 0.0); // default
+        assert!(m.hlo_path(mm).ends_with("matmul.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_lists_names() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let err = m.find("nope").unwrap_err().to_string();
+        assert!(err.contains("gelu_nchw"), "{err}");
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let bad = SAMPLE.replace("float32", "float16");
+        assert!(Manifest::parse(Path::new("/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse(Path::new("/x"), r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse(Path::new("/x"), "{}").is_err());
+    }
+}

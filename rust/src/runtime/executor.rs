@@ -1,0 +1,180 @@
+//! PJRT execution engine: compile HLO text once, execute many times with
+//! timing — the L3 hot path for "host mode" measurements and the
+//! end-to-end CNN example.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+use crate::util::stats::Summary;
+
+/// Wall-clock statistics for repeated executions.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub name: String,
+    /// Per-execution seconds.
+    pub time: Summary,
+    /// Analytic FLOPs per execution (manifest-provided).
+    pub flops: f64,
+}
+
+impl RunStats {
+    /// Achieved FLOP/s at the mean runtime.
+    pub fn flops_per_sec(&self) -> f64 {
+        if self.time.mean == 0.0 {
+            0.0
+        } else {
+            self.flops / self.time.mean
+        }
+    }
+}
+
+/// A compiled executable plus its spec.
+pub struct LoadedKernel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute once on host tensors; returns outputs (tuple flattened).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = self.to_literals(inputs)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>().context("reading output data")?;
+                HostTensor::from_vec(&spec.shape, data)
+            })
+            .collect()
+    }
+
+    /// Execute `iters` times, timing each run (first run excluded via
+    /// `warmup` extra runs).
+    pub fn benchmark(&self, inputs: &[HostTensor], warmup: usize, iters: usize) -> Result<RunStats> {
+        let literals = self.to_literals(inputs)?;
+        for _ in 0..warmup {
+            let _ = self.exe.execute::<xla::Literal>(&literals)?;
+        }
+        let mut times = Vec::with_capacity(iters.max(1));
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            // Force completion by materialising the output.
+            let _ = result[0][0].to_literal_sync()?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(RunStats {
+            name: self.spec.name.clone(),
+            time: Summary::of(&times),
+            flops: self.spec.flops,
+        })
+    }
+
+    fn to_literals(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "'{}' expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, spec)| {
+                if t.shape != spec.shape {
+                    bail!(
+                        "'{}' input shape mismatch: manifest {:?}, got {:?}",
+                        self.spec.name,
+                        spec.shape,
+                        t.shape
+                    );
+                }
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .context("building input literal")
+            })
+            .collect()
+    }
+}
+
+/// The engine: one PJRT CPU client + a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: BTreeMap<String, LoadedKernel>,
+}
+
+impl Engine {
+    /// Create a CPU engine over a manifest directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn from_default_artifacts() -> Result<Engine> {
+        Engine::new(&crate::util::fsutil::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile) an artifact by name, caching the executable.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedKernel> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.find(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedKernel { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load, build random inputs, run once.
+    pub fn smoke_run(&mut self, name: &str, seed: u64) -> Result<Vec<HostTensor>> {
+        let kernel = self.load(name)?;
+        let inputs: Vec<HostTensor> = kernel
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| HostTensor::random(&s.shape, seed ^ (i as u64) << 32))
+            .collect();
+        kernel.run(&inputs)
+    }
+}
+
+// Engine tests live in `tests/runtime_artifacts.rs`; they need the AOT
+// artifacts built (`make artifacts`) and are skipped with a notice when
+// absent.

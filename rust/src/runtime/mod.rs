@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from Rust. Python never runs on this path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+//! xla_extension 0.5.1 backing the `xla` crate rejects; the text parser
+//! reassigns ids and round-trips cleanly (see `/opt/xla-example/README.md`
+//! and `python/compile/aot.py`).
+
+pub mod artifact;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use executor::{Engine, LoadedKernel, RunStats};
+pub use tensor::HostTensor;

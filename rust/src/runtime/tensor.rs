@@ -1,0 +1,181 @@
+//! Host tensors: the data the L3 coordinator feeds to PJRT executables,
+//! with NCHW ↔ NCHW16C layout conversion (the oneDNN "reorder" this
+//! paper's Fig 8 is about) and numeric comparison helpers.
+
+use anyhow::{bail, Result};
+
+use crate::kernels::layouts::CBLOCK;
+use crate::util::prng::Prng;
+
+/// A dense f32 tensor with a logical shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    /// Pseudo-random normal payload, deterministic per seed.
+    pub fn random(shape: &[usize], seed: u64) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut rng = Prng::new(seed);
+        HostTensor { shape: shape.to_vec(), data: rng.normal_f32(n) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat index for a 4-D NCHW tensor.
+    fn idx4(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        let [sn, sc, sh, sw] = [self.shape[0], self.shape[1], self.shape[2], self.shape[3]];
+        debug_assert!(n < sn && c < sc && h < sh && w < sw);
+        ((n * sc + c) * sh + h) * sw + w
+    }
+
+    /// Reorder NCHW → blocked NCHW16C (padding channels with zeros).
+    /// Output shape: `[N, ⌈C/16⌉, H, W, 16]`.
+    pub fn nchw_to_blocked(&self) -> Result<HostTensor> {
+        if self.shape.len() != 4 {
+            bail!("nchw_to_blocked needs a 4-D tensor, got {:?}", self.shape);
+        }
+        let [n, c, h, w] = [self.shape[0], self.shape[1], self.shape[2], self.shape[3]];
+        let cb = c.div_ceil(CBLOCK);
+        let mut out = HostTensor::zeros(&[n, cb, h, w, CBLOCK]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let (blk, lane) = (ci / CBLOCK, ci % CBLOCK);
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let src = self.idx4(ni, ci, hi, wi);
+                        let dst = ((((ni * cb + blk) * h + hi) * w) + wi) * CBLOCK + lane;
+                        out.data[dst] = self.data[src];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reorder blocked NCHW16C → NCHW, dropping channel padding.
+    /// `c` is the logical channel count.
+    pub fn blocked_to_nchw(&self, c: usize) -> Result<HostTensor> {
+        if self.shape.len() != 5 || self.shape[4] != CBLOCK {
+            bail!("blocked_to_nchw needs [N,CB,H,W,16], got {:?}", self.shape);
+        }
+        let [n, cb, h, w] = [self.shape[0], self.shape[1], self.shape[2], self.shape[3]];
+        if c > cb * CBLOCK {
+            bail!("logical channels {c} exceed blocked capacity {}", cb * CBLOCK);
+        }
+        let mut out = HostTensor::zeros(&[n, c, h, w]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let (blk, lane) = (ci / CBLOCK, ci % CBLOCK);
+                for hi in 0..h {
+                    for wi in 0..w {
+                        let src = ((((ni * cb + blk) * h + hi) * w) + wi) * CBLOCK + lane;
+                        let dst = out.idx4(ni, ci, hi, wi);
+                        out.data[dst] = self.data[src];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Maximum absolute difference vs another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Assert-near with a combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &HostTensor, atol: f32, rtol: f32) -> Result<bool> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self.data.iter().zip(&other.data).all(|(a, b)| {
+            (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_blocked_layout() {
+        let t = HostTensor::random(&[2, 7, 3, 5], 42); // C=7: padded
+        let blocked = t.nchw_to_blocked().unwrap();
+        assert_eq!(blocked.shape, vec![2, 1, 3, 5, 16]);
+        let back = blocked.blocked_to_nchw(7).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn blocked_padding_is_zero() {
+        let t = HostTensor::from_vec(&[1, 3, 1, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = t.nchw_to_blocked().unwrap();
+        assert_eq!(&b.data[0..3], &[1.0, 2.0, 3.0]);
+        assert!(b.data[3..16].iter().all(|&x| x == 0.0));
+        // Storage grew 16/3× — exactly the Fig 8 memory blow-up.
+        assert_eq!(b.elements(), 16);
+    }
+
+    #[test]
+    fn multi_block_channels() {
+        let t = HostTensor::random(&[1, 35, 2, 2], 7); // 3 blocks
+        let b = t.nchw_to_blocked().unwrap();
+        assert_eq!(b.shape[1], 3);
+        assert_eq!(b.blocked_to_nchw(35).unwrap(), t);
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut b = a.clone();
+        b.data[2] += 1e-6;
+        assert!(a.allclose(&b, 1e-5, 1e-5).unwrap());
+        assert!(a.max_abs_diff(&b).unwrap() < 2e-6);
+        b.data[2] += 1.0;
+        assert!(!a.allclose(&b, 1e-5, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = HostTensor::zeros(&[2, 2]);
+        let b = HostTensor::zeros(&[4]);
+        assert!(a.allclose(&b, 0.0, 0.0).is_err());
+        assert!(HostTensor::from_vec(&[3], vec![0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn random_deterministic() {
+        let a = HostTensor::random(&[64], 5);
+        let b = HostTensor::random(&[64], 5);
+        assert_eq!(a, b);
+        let c = HostTensor::random(&[64], 6);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,431 @@
+//! A set-associative, write-back, write-allocate cache with true-LRU
+//! replacement — one level of the simulated hierarchy.
+//!
+//! The tag store is flat (`sets × ways`), LRU is kept as a per-way access
+//! timestamp (a 64-bit counter never wraps in practice), and lookups are a
+//! linear scan over ≤ 20 ways — this is the simulator's hottest loop and
+//! is deliberately allocation-free.
+
+/// Static description of one cache level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes.
+    pub size: u64,
+    /// Associativity.
+    pub ways: usize,
+    /// Line size in bytes (64 on every modelled platform).
+    pub line: u64,
+}
+
+impl CacheConfig {
+    pub fn new(size: u64, ways: usize) -> CacheConfig {
+        CacheConfig { size, ways, line: super::LINE }
+    }
+
+    /// Number of sets. Panics if the geometry is inconsistent.
+    pub fn sets(&self) -> usize {
+        let lines = self.size / self.line;
+        let sets = lines as usize / self.ways;
+        assert!(sets > 0, "cache too small for its associativity");
+        assert_eq!(
+            sets as u64 * self.ways as u64 * self.line,
+            self.size,
+            "cache size must be sets*ways*line"
+        );
+        sets
+    }
+}
+
+/// Hit/miss counters for one level.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+    /// Lines installed by prefetch (HW or SW) rather than demand.
+    pub prefetch_fills: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// The outcome of probing a cache with a line.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Probe {
+    Hit,
+    /// Miss; `victim` carries an evicted dirty line's address if the fill
+    /// displaced one (it must be written back to the next level / memory).
+    Miss { dirty_victim: Option<u64> },
+}
+
+/// Division-free modulo by a runtime constant (Lemire 2019 fastmod).
+/// The simulated address space stays far below 2^38 bytes, so line
+/// addresses fit u32 and the 32-bit variant suffices — `set_of` is on
+/// the simulator's hottest path and a hardware `div` per probe costs
+/// ~25 cycles.
+#[derive(Clone, Copy, Debug)]
+struct FastMod {
+    m: u64,
+    d: u32,
+}
+
+impl FastMod {
+    fn new(d: u32) -> FastMod {
+        assert!(d > 0);
+        FastMod { m: (u64::MAX / d as u64) + 1, d }
+    }
+
+    #[inline(always)]
+    fn rem(self, a: u32) -> u32 {
+        let low = self.m.wrapping_mul(a as u64);
+        ((low as u128 * self.d as u128) >> 64) as u32
+    }
+}
+
+/// One way's state, packed so a whole set shares as few host cache
+/// lines as possible (array-of-structures; §Perf step 4). `meta` packs
+/// the LRU stamp in the high bits and the dirty flag in bit 0 — the
+/// stamp dominates comparisons, so `meta` doubles as the LRU key.
+#[derive(Clone, Copy, Debug)]
+struct Way {
+    tag: u64,
+    meta: u64,
+}
+
+impl Way {
+    const EMPTY: Way = Way { tag: INVALID, meta: 0 };
+
+    #[inline(always)]
+    fn dirty(self) -> bool {
+        self.meta & 1 == 1
+    }
+}
+
+/// One cache level.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    config: CacheConfig,
+    /// Retained for diagnostics; `set_mod` carries the hot-path value.
+    #[allow(dead_code)]
+    sets: usize,
+    set_mod: FastMod,
+    /// `sets × ways` entries, set-major.
+    ways: Vec<Way>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+const INVALID: u64 = u64::MAX;
+
+impl Cache {
+    pub fn new(config: CacheConfig) -> Cache {
+        let sets = config.sets();
+        assert!(sets <= u32::MAX as usize);
+        Cache {
+            config,
+            sets,
+            set_mod: FastMod::new(sets as u32),
+            ways: vec![Way::EMPTY; sets * config.ways],
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> CacheConfig {
+        self.config
+    }
+
+    /// Invalidate all lines and clear dirty bits (a "cold caches" reset,
+    /// §2.5.1 — the paper overwrote caches with junk; invalidation is the
+    /// simulator's equivalent).
+    pub fn flush(&mut self) {
+        self.ways.fill(Way::EMPTY);
+    }
+
+    /// Reset statistics without touching contents (used between the
+    /// overhead run and the measured run, §2.3).
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    #[inline(always)]
+    fn set_of(&self, line_addr: u64) -> usize {
+        debug_assert!(
+            line_addr <= u32::MAX as u64,
+            "line address {line_addr:#x} exceeds the simulated 256 GiB space"
+        );
+        self.set_mod.rem(line_addr as u32) as usize
+    }
+
+    #[inline]
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        let start = set * self.config.ways;
+        start..start + self.config.ways
+    }
+
+    /// Probe for `line_addr`; on a hit refresh LRU (and set dirty for
+    /// writes). On a miss, install the line (demand fill), evicting the
+    /// LRU way. Returns what happened.
+    ///
+    /// Hit detection and victim selection share a single scan over the
+    /// ways — this is the simulator's hottest loop (§Perf step 2).
+    #[inline]
+    pub fn access(&mut self, line_addr: u64, write: bool) -> Probe {
+        self.clock += 1;
+        let set = self.set_of(line_addr);
+        let start = set * self.config.ways;
+        let set_ways = &mut self.ways[start..start + self.config.ways];
+
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (w, way) in set_ways.iter().enumerate() {
+            if way.tag == line_addr {
+                let dirty = way.dirty() | write;
+                set_ways[w].meta = (self.clock << 1) | dirty as u64;
+                self.stats.hits += 1;
+                return Probe::Hit;
+            }
+            // Invalid ways (meta 0) sort first naturally.
+            if way.meta < best {
+                best = way.meta;
+                victim = w;
+            }
+        }
+
+        self.stats.misses += 1;
+        let dirty_victim = self.install(start + victim, line_addr, write);
+        Probe::Miss { dirty_victim }
+    }
+
+    /// Install a line without counting a demand access — used for
+    /// prefetch fills. Returns an evicted dirty line if any. Installing an
+    /// already-present line refreshes it.
+    pub fn fill_prefetch(&mut self, line_addr: u64) -> Option<u64> {
+        self.fill_prefetch_probed(line_addr).1
+    }
+
+    /// As [`Self::fill_prefetch`], but also reports whether the line was
+    /// already resident — presence check and fill share one scan, which
+    /// the prefetch-issue path on `MemorySystem` depends on (§Perf).
+    pub fn fill_prefetch_probed(&mut self, line_addr: u64) -> (bool, Option<u64>) {
+        self.clock += 1;
+        let set = self.set_of(line_addr);
+        let start = set * self.config.ways;
+        let set_ways = &self.ways[start..start + self.config.ways];
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (w, way) in set_ways.iter().enumerate() {
+            if way.tag == line_addr {
+                // Already resident; prefetch is a no-op (do not refresh
+                // LRU: prefetchers don't update recency on Intel LLC).
+                return (true, None);
+            }
+            if way.meta < best {
+                best = way.meta;
+                victim = w;
+            }
+        }
+        self.stats.prefetch_fills += 1;
+        (false, self.install(start + victim, line_addr, false))
+    }
+
+    /// Sink a dirty line evicted from an upper level into this cache: if
+    /// present, mark it dirty; otherwise install it dirty (not counted as
+    /// a demand access). Returns a dirty victim displaced by the install,
+    /// which must continue down the hierarchy.
+    pub fn writeback(&mut self, line_addr: u64) -> Option<u64> {
+        self.clock += 1;
+        let set = self.set_of(line_addr);
+        let start = set * self.config.ways;
+        let set_ways = &mut self.ways[start..start + self.config.ways];
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (w, way) in set_ways.iter().enumerate() {
+            if way.tag == line_addr {
+                set_ways[w].meta = (self.clock << 1) | 1;
+                return None;
+            }
+            if way.meta < best {
+                best = way.meta;
+                victim = w;
+            }
+        }
+        self.install(start + victim, line_addr, true)
+    }
+
+    /// True if the line is resident (no state change).
+    pub fn contains(&self, line_addr: u64) -> bool {
+        let set = self.set_of(line_addr);
+        self.slot_range(set).any(|i| self.ways[i].tag == line_addr)
+    }
+
+    /// Drop a line if present (non-temporal stores invalidate stale
+    /// copies). Returns whether it was present and dirty.
+    pub fn invalidate(&mut self, line_addr: u64) -> bool {
+        let set = self.set_of(line_addr);
+        for i in self.slot_range(set) {
+            if self.ways[i].tag == line_addr {
+                let was_dirty = self.ways[i].dirty();
+                self.ways[i] = Way::EMPTY;
+                return was_dirty;
+            }
+        }
+        false
+    }
+
+    /// Number of resident lines (O(n); for tests/diagnostics).
+    pub fn resident_lines(&self) -> usize {
+        self.ways.iter().filter(|w| w.tag != INVALID).count()
+    }
+
+    fn install(&mut self, slot: usize, line_addr: u64, write: bool) -> Option<u64> {
+        let mut dirty_victim = None;
+        let old = self.ways[slot];
+        if old.tag != INVALID {
+            self.stats.evictions += 1;
+            if old.dirty() {
+                self.stats.writebacks += 1;
+                dirty_victim = Some(old.tag);
+            }
+        }
+        self.ways[slot] = Way { tag: line_addr, meta: (self.clock << 1) | write as u64 };
+        dirty_victim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets × 2 ways × 64 B = 512 B.
+        Cache::new(CacheConfig::new(512, 2))
+    }
+
+    #[test]
+    fn geometry() {
+        assert_eq!(CacheConfig::new(32 * 1024, 8).sets(), 64);
+        assert_eq!(CacheConfig::new(512, 2).sets(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_geometry_panics() {
+        CacheConfig { size: 100, ways: 3, line: 64 }.sets();
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = tiny();
+        assert!(matches!(c.access(10, false), Probe::Miss { .. }));
+        assert!(matches!(c.access(10, false), Probe::Hit));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // Lines 0, 4, 8 all map to set 0 (4 sets). Two ways.
+        c.access(0, false);
+        c.access(4, false);
+        c.access(0, false); // 0 is now MRU; 4 is LRU
+        c.access(8, false); // evicts 4
+        assert!(c.contains(0));
+        assert!(!c.contains(4));
+        assert!(c.contains(8));
+    }
+
+    #[test]
+    fn dirty_writeback_on_eviction() {
+        let mut c = tiny();
+        c.access(0, true); // dirty
+        c.access(4, false);
+        let p = c.access(8, false); // evicts 0 (LRU, dirty)
+        match p {
+            Probe::Miss { dirty_victim } => assert_eq!(dirty_victim, Some(0)),
+            _ => panic!("expected miss"),
+        }
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = tiny();
+        c.access(0, false);
+        c.access(4, false);
+        let p = c.access(8, false);
+        assert_eq!(p, Probe::Miss { dirty_victim: None });
+        assert_eq!(c.stats.writebacks, 0);
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn flush_clears_everything() {
+        let mut c = tiny();
+        c.access(0, true);
+        c.flush();
+        assert!(!c.contains(0));
+        assert_eq!(c.resident_lines(), 0);
+        // After a flush a dirty line must not generate a writeback.
+        c.access(4, false);
+        c.access(8, false);
+        c.access(12, false);
+        assert_eq!(c.stats.writebacks, 0);
+    }
+
+    #[test]
+    fn prefetch_fill_counts_separately() {
+        let mut c = tiny();
+        assert!(c.fill_prefetch(0).is_none());
+        assert_eq!(c.stats.prefetch_fills, 1);
+        assert_eq!(c.stats.misses, 0);
+        // Demand access to a prefetched line is a hit.
+        assert!(matches!(c.access(0, false), Probe::Hit));
+    }
+
+    #[test]
+    fn prefetch_existing_line_is_noop() {
+        let mut c = tiny();
+        c.access(0, false);
+        assert!(c.fill_prefetch(0).is_none());
+        assert_eq!(c.stats.prefetch_fills, 0);
+    }
+
+    #[test]
+    fn invalidate_reports_dirtiness() {
+        let mut c = tiny();
+        c.access(0, true);
+        assert!(c.invalidate(0));
+        assert!(!c.contains(0));
+        assert!(!c.invalidate(0));
+    }
+
+    #[test]
+    fn hit_rate_of_repeated_scan_fitting_in_cache() {
+        // 512 B cache; scan 256 B twice → second pass all hits.
+        let mut c = tiny();
+        for pass in 0..2 {
+            for line in 0..4u64 {
+                let p = c.access(line, false);
+                if pass == 1 {
+                    assert!(matches!(p, Probe::Hit), "line {line} should hit");
+                }
+            }
+        }
+        assert_eq!(c.stats.misses, 4);
+        assert_eq!(c.stats.hits, 4);
+    }
+}

@@ -1,0 +1,307 @@
+//! Core execution model: vector widths, port throughputs, frequency
+//! licenses, and the translation of a kernel's *instruction mix* into
+//! compute cycles.
+//!
+//! The paper measures Work with the `FP_ARITH_INST_RETIRED` counter
+//! family, whose semantics we reproduce exactly (packed-width lane
+//! multipliers; an FMA retirement bumps the counter by 2 — validated by
+//! the paper's §2.3 experiment and by `pmu::events` tests). The same
+//! instruction mix that feeds those counters feeds this issue model, so W
+//! and R are derived from a single source of truth per kernel.
+
+/// Vector width of an instruction stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum VecWidth {
+    #[default]
+    Scalar,
+    V128,
+    V256,
+    V512,
+}
+
+impl VecWidth {
+    /// f32 lanes per instruction.
+    pub fn lanes(self) -> u64 {
+        match self {
+            VecWidth::Scalar => 1,
+            VecWidth::V128 => 4,
+            VecWidth::V256 => 8,
+            VecWidth::V512 => 16,
+        }
+    }
+
+    pub fn all() -> [VecWidth; 4] {
+        [VecWidth::Scalar, VecWidth::V128, VecWidth::V256, VecWidth::V512]
+    }
+}
+
+/// Retired-μop totals for one kernel execution, by class. Counts are for
+/// the *whole* kernel (all iterations), in μops, not FLOPs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InstrMix {
+    /// FP fused multiply-add μops (each counts 2 FLOP × lanes).
+    pub fma: f64,
+    /// FP add/sub/mul/div μops (1 FLOP × lanes). Approximations for
+    /// exp/erf sequences should be expanded into these.
+    pub fp: f64,
+    /// Loads (address generation + data).
+    pub load: f64,
+    /// Regular stores.
+    pub store: f64,
+    /// Shuffles / permutes / broadcasts / inserts — the lane-rearrangement
+    /// tax of non-vector-friendly layouts (NCHW direct conv pays it).
+    pub shuffle: f64,
+    /// Scalar integer / control μops (loop counters, addressing, branches).
+    pub alu: f64,
+    /// Dominant vector width of the FP stream.
+    pub width: VecWidth,
+    /// ILP efficiency ∈ (0, 1]: 1.0 = enough independent chains to
+    /// saturate the FP ports (the paper's §2.1 benchmark is written to
+    /// reach this); lower = dependency-chain stalls (e.g. reductions).
+    pub ilp: f64,
+}
+
+impl InstrMix {
+    /// Merge two mixes (e.g. Winograd = transforms + GEMM). Widths must
+    /// match or the wider stream dominates; ILP is work-weighted.
+    pub fn merged(self, other: InstrMix) -> InstrMix {
+        let w_self = self.fma.mul_add(2.0, self.fp);
+        let w_other = other.fma.mul_add(2.0, other.fp);
+        let total = (w_self + w_other).max(1e-12);
+        InstrMix {
+            fma: self.fma + other.fma,
+            fp: self.fp + other.fp,
+            load: self.load + other.load,
+            store: self.store + other.store,
+            shuffle: self.shuffle + other.shuffle,
+            alu: self.alu + other.alu,
+            width: if self.width.lanes() >= other.width.lanes() { self.width } else { other.width },
+            ilp: (self.ilp * w_self + other.ilp * w_other) / total,
+        }
+    }
+
+    /// Total FLOPs this mix performs (matches what the PMU would derive).
+    pub fn flops(&self) -> f64 {
+        let lanes = self.width.lanes() as f64;
+        (self.fma * 2.0 + self.fp) * lanes
+    }
+
+    /// Scale all μop counts (e.g. divide per-thread).
+    pub fn scaled(&self, factor: f64) -> InstrMix {
+        InstrMix {
+            fma: self.fma * factor,
+            fp: self.fp * factor,
+            load: self.load * factor,
+            store: self.store * factor,
+            shuffle: self.shuffle * factor,
+            alu: self.alu * factor,
+            ..*self
+        }
+    }
+}
+
+/// Port/frequency description of one core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoreConfig {
+    /// Frequency (Hz) while running scalar / light code. Turbo disabled,
+    /// per the paper's methodology.
+    pub freq_scalar: f64,
+    /// AVX2-license frequency.
+    pub freq_avx2: f64,
+    /// AVX-512-heavy license frequency.
+    pub freq_avx512: f64,
+    /// FP FMA-capable ports (Skylake-SP Gold: 2 × 512-bit).
+    pub fma_ports: f64,
+    /// Load ports.
+    pub load_ports: f64,
+    /// Store ports.
+    pub store_ports: f64,
+    /// Shuffle ports (port 5 only on SKX).
+    pub shuffle_ports: f64,
+    /// Simple-ALU ports usable by loop overhead.
+    pub alu_ports: f64,
+    /// Front-end retire/issue width (μops per cycle).
+    pub issue_width: f64,
+    /// Widest vector ISA available.
+    pub max_width: VecWidth,
+}
+
+impl CoreConfig {
+    /// Skylake-SP (Xeon Gold 6248) core, turbo disabled.
+    pub fn skylake_sp() -> CoreConfig {
+        CoreConfig {
+            freq_scalar: 2.5e9,
+            freq_avx2: 1.9e9,
+            freq_avx512: 1.6e9,
+            fma_ports: 2.0,
+            load_ports: 2.0,
+            store_ports: 1.0,
+            shuffle_ports: 1.0,
+            alu_ports: 2.0,
+            issue_width: 4.0,
+            max_width: VecWidth::V512,
+        }
+    }
+
+    /// Frequency while executing a stream of the given width.
+    pub fn freq(&self, width: VecWidth) -> f64 {
+        match width {
+            VecWidth::Scalar => self.freq_scalar,
+            VecWidth::V128 | VecWidth::V256 => self.freq_avx2,
+            VecWidth::V512 => self.freq_avx512,
+        }
+    }
+
+    /// Peak FLOP/s of one core at `width` (FMA on all FMA ports).
+    pub fn peak_flops(&self, width: VecWidth) -> f64 {
+        self.fma_ports * width.lanes() as f64 * 2.0 * self.freq(width)
+    }
+
+    /// Cycles to execute an instruction mix on one core, assuming the mix
+    /// is spread perfectly over the kernel's runtime (steady-state loop).
+    ///
+    /// The bound is the busiest port class, corrected for ILP; the
+    /// front-end (issue width) provides a floor for μop-dense scalar code.
+    pub fn cycles(&self, mix: &InstrMix) -> f64 {
+        assert!(mix.ilp > 0.0 && mix.ilp <= 1.0, "ilp must be in (0,1]");
+        let fp_cycles = (mix.fma + mix.fp) / self.fma_ports;
+        let load_cycles = mix.load / self.load_ports;
+        let store_cycles = mix.store / self.store_ports;
+        let shuffle_cycles = mix.shuffle / self.shuffle_ports;
+        let alu_cycles = mix.alu / self.alu_ports;
+        let total_uops = mix.fma + mix.fp + mix.load + mix.store + mix.shuffle + mix.alu;
+        let frontend_cycles = total_uops / self.issue_width;
+        let port_bound = fp_cycles
+            .max(load_cycles)
+            .max(store_cycles)
+            .max(shuffle_cycles)
+            .max(alu_cycles)
+            .max(frontend_cycles);
+        port_bound / mix.ilp
+    }
+
+    /// Seconds for one core to execute the mix.
+    pub fn seconds(&self, mix: &InstrMix) -> f64 {
+        self.cycles(mix) / self.freq(mix.width)
+    }
+
+    /// Achieved FLOP/s for the mix on one core.
+    pub fn achieved_flops(&self, mix: &InstrMix) -> f64 {
+        let s = self.seconds(mix);
+        if s == 0.0 {
+            0.0
+        } else {
+            mix.flops() / s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_xeon_numbers() {
+        let c = CoreConfig::skylake_sp();
+        // 2 ports × 16 lanes × 2 FLOP × 1.6 GHz = 102.4 GFLOP/s.
+        assert!((c.peak_flops(VecWidth::V512) - 102.4e9).abs() < 1e6);
+        // AVX2: 2 × 8 × 2 × 1.9 GHz = 60.8 GFLOP/s.
+        assert!((c.peak_flops(VecWidth::V256) - 60.8e9).abs() < 1e6);
+        // Scalar: 2 × 1 × 2 × 2.5 GHz = 10 GFLOP/s.
+        assert!((c.peak_flops(VecWidth::Scalar) - 10e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn pure_fma_stream_hits_peak() {
+        let c = CoreConfig::skylake_sp();
+        let mix = InstrMix {
+            fma: 1e9,
+            width: VecWidth::V512,
+            ilp: 1.0,
+            ..Default::default()
+        };
+        let achieved = c.achieved_flops(&mix);
+        let peak = c.peak_flops(VecWidth::V512);
+        assert!((achieved - peak).abs() / peak < 1e-9, "{achieved} vs {peak}");
+    }
+
+    #[test]
+    fn load_bound_mix_cannot_hit_peak() {
+        let c = CoreConfig::skylake_sp();
+        // 2 loads per FMA → load ports (2/cycle) limit FMA to 1/cycle.
+        let mix = InstrMix {
+            fma: 1e9,
+            load: 2e9,
+            width: VecWidth::V512,
+            ilp: 1.0,
+            ..Default::default()
+        };
+        let util = c.achieved_flops(&mix) / c.peak_flops(VecWidth::V512);
+        assert!((util - 0.5).abs() < 1e-9, "util {util}");
+    }
+
+    #[test]
+    fn shuffle_port_is_a_bottleneck() {
+        let c = CoreConfig::skylake_sp();
+        let mix = InstrMix {
+            fma: 1e9,
+            shuffle: 1e9, // 1 shuffle per FMA on a single port
+            width: VecWidth::V512,
+            ilp: 1.0,
+            ..Default::default()
+        };
+        let util = c.achieved_flops(&mix) / c.peak_flops(VecWidth::V512);
+        assert!((util - 0.5).abs() < 1e-9, "util {util}");
+    }
+
+    #[test]
+    fn poor_ilp_slows_down() {
+        let c = CoreConfig::skylake_sp();
+        let good = InstrMix { fma: 1e6, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let bad = InstrMix { ilp: 0.25, ..good };
+        assert!((c.seconds(&bad) / c.seconds(&good) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frequency_license_applies() {
+        let c = CoreConfig::skylake_sp();
+        assert_eq!(c.freq(VecWidth::V512), 1.6e9);
+        assert_eq!(c.freq(VecWidth::Scalar), 2.5e9);
+    }
+
+    #[test]
+    fn frontend_bounds_uop_dense_code() {
+        let c = CoreConfig::skylake_sp();
+        // Scalar-heavy loop: equal alu+load+fp pressure, 12 μops total
+        // per "iteration" → frontend (4/cycle) gives 3 cycles ≥ any port.
+        let mix = InstrMix {
+            fp: 2e6,
+            load: 4e6,
+            alu: 6e6,
+            width: VecWidth::Scalar,
+            ilp: 1.0,
+            ..Default::default()
+        };
+        let cycles = c.cycles(&mix);
+        assert!((cycles - 3e6).abs() < 1.0, "cycles {cycles}");
+    }
+
+    #[test]
+    fn merged_mix_adds_and_weights() {
+        let a = InstrMix { fma: 100.0, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let b = InstrMix { fp: 200.0, shuffle: 50.0, width: VecWidth::V512, ilp: 0.5, ..Default::default() };
+        let m = a.merged(b);
+        assert_eq!(m.fma, 100.0);
+        assert_eq!(m.fp, 200.0);
+        assert_eq!(m.shuffle, 50.0);
+        // Work-weighted ILP: (1.0*200 + 0.5*200)/400 = 0.75.
+        assert!((m.ilp - 0.75).abs() < 1e-12, "ilp {}", m.ilp);
+    }
+
+    #[test]
+    fn flops_accounting_matches_pmu_rules() {
+        let mix = InstrMix { fma: 10.0, fp: 4.0, width: VecWidth::V256, ilp: 1.0, ..Default::default() };
+        // (10 FMA × 2 + 4) × 8 lanes = 192.
+        assert_eq!(mix.flops(), 192.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! DRAM channel model: peak and effective bandwidth per socket, and the
+//! per-thread concurrency limit that makes single-thread bandwidth so much
+//! lower than socket bandwidth (the paper's §2.2/§4 discussion).
+//!
+//! Effective bandwidth for a thread group is
+//! `min(channel_bw × efficiency, threads × per_thread_bw)` where the
+//! per-thread term is the classic latency–concurrency bound
+//! `LFBs × line / latency`, raised by the hardware prefetcher (which adds
+//! memory-level parallelism beyond the line-fill buffers).
+
+/// Per-socket memory subsystem parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramConfig {
+    /// DDR channels per socket.
+    pub channels: usize,
+    /// Per-channel peak (bytes/s), e.g. DDR4-2933 = 2.933 GT/s × 8 B.
+    pub channel_bw: f64,
+    /// Sustained fraction of peak for streaming reads/writes.
+    pub efficiency: f64,
+    /// Extra efficiency multiplier achievable only with non-temporal
+    /// stores (no RFO read-for-ownership traffic) — makes NT memset the
+    /// §2.2 winner for socket/two-socket scenarios.
+    pub nt_store_bonus: f64,
+    /// Idle DRAM latency, seconds (~80 ns local).
+    pub latency: f64,
+    /// Line-fill buffers per core (demand-miss concurrency).
+    pub lfbs: usize,
+    /// Multiplier on single-thread effective concurrency when the HW
+    /// prefetcher is on (prefetch streams add MLP) — this is why plain
+    /// `memset`/`memcpy` beat NT stores single-threaded in the paper.
+    pub prefetch_mlp_boost: f64,
+}
+
+impl DramConfig {
+    /// DDR4-2933, 6 channels (Xeon Gold 6248).
+    pub fn ddr4_2933_6ch() -> DramConfig {
+        DramConfig {
+            channels: 6,
+            channel_bw: 2.933e9 * 8.0,
+            efficiency: 0.82,
+            nt_store_bonus: 1.10,
+            latency: 80e-9,
+            lfbs: 10,
+            prefetch_mlp_boost: 1.55,
+        }
+    }
+
+    /// Socket peak bandwidth (theoretical, bytes/s).
+    pub fn peak_bw(&self) -> f64 {
+        self.channels as f64 * self.channel_bw
+    }
+
+    /// Sustained streaming bandwidth for the whole socket (bytes/s).
+    pub fn sustained_bw(&self, nt_stores: bool) -> f64 {
+        let base = self.peak_bw() * self.efficiency;
+        if nt_stores {
+            (base * self.nt_store_bonus).min(self.peak_bw())
+        } else {
+            base
+        }
+    }
+
+    /// Latency–concurrency bound for one thread (bytes/s).
+    pub fn per_thread_bw(&self, prefetch_on: bool) -> f64 {
+        let mlp = self.lfbs as f64 * if prefetch_on { self.prefetch_mlp_boost } else { 1.0 };
+        mlp * super::LINE as f64 / self.latency
+    }
+
+    /// Effective bandwidth available to `threads` threads on one socket.
+    pub fn effective_bw(&self, threads: usize, nt_stores: bool, prefetch_on: bool) -> f64 {
+        let socket = self.sustained_bw(nt_stores);
+        let concurrency = threads as f64 * self.per_thread_bw(prefetch_on);
+        socket.min(concurrency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xeon_socket_peak_matches_spec() {
+        let d = DramConfig::ddr4_2933_6ch();
+        // 6 × 23.464 GB/s ≈ 140.8 GB/s.
+        assert!((d.peak_bw() - 140.8e9).abs() < 1e9, "{}", d.peak_bw());
+    }
+
+    #[test]
+    fn single_thread_much_slower_than_socket() {
+        let d = DramConfig::ddr4_2933_6ch();
+        let one = d.effective_bw(1, false, true);
+        let socket = d.effective_bw(20, false, true);
+        assert!(one < socket / 5.0, "one={one} socket={socket}");
+        // ~12–20 GB/s ballpark for one thread with prefetch.
+        assert!(one > 8e9 && one < 25e9, "one={one}");
+    }
+
+    #[test]
+    fn prefetch_raises_single_thread_bw() {
+        let d = DramConfig::ddr4_2933_6ch();
+        assert!(d.per_thread_bw(true) > d.per_thread_bw(false));
+    }
+
+    #[test]
+    fn nt_stores_raise_socket_bw_only_when_bandwidth_bound() {
+        let d = DramConfig::ddr4_2933_6ch();
+        // Socket-level: NT > regular.
+        assert!(d.effective_bw(20, true, true) > d.effective_bw(20, false, true));
+        // Single-thread: concurrency-bound either way (paper: memset /
+        // memcpy with prefetch beat NT single-threaded).
+        assert_eq!(d.effective_bw(1, true, true), d.effective_bw(1, false, true));
+    }
+
+    #[test]
+    fn bandwidth_saturates_with_threads() {
+        let d = DramConfig::ddr4_2933_6ch();
+        let bw10 = d.effective_bw(10, false, true);
+        let bw20 = d.effective_bw(20, false, true);
+        let bw40 = d.effective_bw(40, false, true);
+        assert!(bw20 >= bw10);
+        assert_eq!(bw20, bw40, "socket bw must plateau");
+    }
+}

@@ -1,0 +1,323 @@
+//! Whole-machine assembly: configuration presets, the simulated address
+//! space with NUMA page maps, and the peak numbers (π, β) the roofline
+//! needs.
+
+use anyhow::{bail, Result};
+
+use super::core::{CoreConfig, VecWidth};
+use super::dram::DramConfig;
+use super::hierarchy::{HierarchyConfig, MemorySystem};
+use super::numa::{MemPolicy, NumaConfig, PageMap};
+use super::prefetch::PrefetchConfig;
+use super::cache::CacheConfig;
+use super::PAGE;
+use crate::util::toml_lite::Doc;
+
+/// Full static description of a simulated platform.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    pub name: String,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    pub core: CoreConfig,
+    pub hierarchy: HierarchyConfig,
+    pub dram: DramConfig,
+    pub numa: NumaConfig,
+    /// Thread-synchronisation overhead coefficient: runtime is multiplied
+    /// by `1 + sync_coeff · log2(threads)` for multi-threaded runs.
+    pub sync_coeff: f64,
+    /// Load-imbalance coefficient: per-thread work is `total/threads ×
+    /// (1 + imbalance_coeff · ln(threads))`.
+    pub imbalance_coeff: f64,
+}
+
+impl MachineConfig {
+    /// The paper's testbed: 2 × Intel Xeon Gold 6248, turbo disabled.
+    pub fn xeon_6248() -> MachineConfig {
+        MachineConfig {
+            name: "xeon_6248_2s".into(),
+            sockets: 2,
+            cores_per_socket: 20,
+            core: CoreConfig::skylake_sp(),
+            hierarchy: HierarchyConfig::xeon_6248(),
+            dram: DramConfig::ddr4_2933_6ch(),
+            numa: NumaConfig::two_socket(),
+            sync_coeff: 0.012,
+            imbalance_coeff: 0.015,
+        }
+    }
+
+    /// A one-socket variant (for `platform_compare` examples/tests).
+    pub fn xeon_6248_1s() -> MachineConfig {
+        let mut m = MachineConfig::xeon_6248();
+        m.name = "xeon_6248_1s".into();
+        m.sockets = 1;
+        m.numa = NumaConfig::single_node();
+        m
+    }
+
+    /// Total cores.
+    pub fn cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Peak computational performance π (FLOP/s) for `threads` threads at
+    /// `width` — what the §2.1 benchmark measures.
+    pub fn peak_flops(&self, threads: usize, width: VecWidth) -> f64 {
+        assert!(threads >= 1 && threads <= self.cores());
+        threads as f64 * self.core.peak_flops(width)
+    }
+
+    /// Peak memory throughput β (bytes/s) for a scenario — what the §2.2
+    /// benchmark measures. `nodes_used` ∈ {1, sockets}; the two-socket
+    /// figure follows the paper's protocol (two bound copies, summed).
+    pub fn peak_bw(&self, threads: usize, nodes_used: usize) -> f64 {
+        assert!(nodes_used >= 1 && nodes_used <= self.sockets);
+        let per_node_threads = threads.div_ceil(nodes_used);
+        let one = self
+            .dram
+            .effective_bw(per_node_threads, true, self.hierarchy.prefetch.enabled)
+            .max(self.dram.effective_bw(per_node_threads, false, self.hierarchy.prefetch.enabled));
+        one * nodes_used as f64
+    }
+
+    /// Parse from a TOML-lite document (see `configs/xeon_6248.toml`).
+    pub fn from_toml(doc: &Doc) -> Result<MachineConfig> {
+        let base = MachineConfig::xeon_6248();
+        let name = doc
+            .get("", "name")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "custom".to_string());
+        let sockets = doc.usize_or("", "sockets", base.sockets);
+        let cores_per_socket = doc.usize_or("", "cores_per_socket", base.cores_per_socket);
+        if sockets == 0 || cores_per_socket == 0 {
+            bail!("sockets and cores_per_socket must be positive");
+        }
+
+        let mut core = base.core;
+        core.freq_scalar = doc.f64_or("core", "freq_scalar_ghz", core.freq_scalar / 1e9) * 1e9;
+        core.freq_avx2 = doc.f64_or("core", "freq_avx2_ghz", core.freq_avx2 / 1e9) * 1e9;
+        core.freq_avx512 = doc.f64_or("core", "freq_avx512_ghz", core.freq_avx512 / 1e9) * 1e9;
+        core.fma_ports = doc.f64_or("core", "fma_ports", core.fma_ports);
+
+        let cache = |section: &str, default: CacheConfig| -> CacheConfig {
+            CacheConfig::new(
+                doc.usize_or(section, "size_kib", (default.size / 1024) as usize) as u64 * 1024,
+                doc.usize_or(section, "ways", default.ways),
+            )
+        };
+        let hierarchy = HierarchyConfig {
+            l1: cache("cache.l1d", base.hierarchy.l1),
+            l2: cache("cache.l2", base.hierarchy.l2),
+            llc: cache("cache.llc", base.hierarchy.llc),
+            prefetch: PrefetchConfig {
+                enabled: doc
+                    .get("prefetch", "enabled")
+                    .and_then(|v| v.as_bool().ok())
+                    .unwrap_or(true),
+                streams: doc.usize_or("prefetch", "streams", 16),
+                degree: doc.usize_or("prefetch", "degree", 2),
+                confirm: doc.usize_or("prefetch", "confirm", 2),
+            },
+        };
+
+        let mut dram = base.dram;
+        dram.channels = doc.usize_or("dram", "channels", dram.channels);
+        dram.channel_bw = doc.f64_or("dram", "channel_gbs", dram.channel_bw / 1e9) * 1e9;
+        dram.efficiency = doc.f64_or("dram", "efficiency", dram.efficiency);
+        dram.latency = doc.f64_or("dram", "latency_ns", dram.latency * 1e9) * 1e-9;
+
+        let numa = if sockets == 1 {
+            NumaConfig::single_node()
+        } else {
+            NumaConfig {
+                nodes: sockets,
+                remote_bw_factor: doc.f64_or("numa", "remote_bw_factor", 0.6),
+                remote_latency_factor: doc.f64_or("numa", "remote_latency_factor", 1.7),
+                remote_stall_factor: doc.f64_or("numa", "remote_stall_factor", 1.25),
+            }
+        };
+
+        Ok(MachineConfig {
+            name,
+            sockets,
+            cores_per_socket,
+            core,
+            hierarchy,
+            dram,
+            numa,
+            sync_coeff: doc.f64_or("timing", "sync_coeff", base.sync_coeff),
+            imbalance_coeff: doc.f64_or("timing", "imbalance_coeff", base.imbalance_coeff),
+        })
+    }
+}
+
+/// A simulated allocation: a page-aligned address range with a NUMA page
+/// map.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub name: String,
+    pub map: PageMap,
+}
+
+/// The machine's virtual address space: a bump allocator handing out
+/// page-aligned regions, each with its own placement policy.
+#[derive(Clone, Debug, Default)]
+pub struct AddressSpace {
+    regions: Vec<Region>,
+    next: u64,
+    /// Last region that resolved an address — accesses are bursty within
+    /// a tensor, so this skips the region scan on the hot path (§Perf).
+    last_region: usize,
+}
+
+impl AddressSpace {
+    pub fn new() -> AddressSpace {
+        // Start above the zero page to catch stray null-ish addresses.
+        AddressSpace { regions: Vec::new(), next: PAGE, last_region: 0 }
+    }
+
+    /// Allocate `bytes` with `policy`; returns the base address.
+    pub fn alloc(&mut self, name: &str, bytes: u64, policy: MemPolicy, nodes: usize) -> u64 {
+        let base = self.next;
+        let span = bytes.div_ceil(PAGE) * PAGE;
+        self.next += span + PAGE; // guard page between regions
+        self.regions.push(Region {
+            name: name.to_string(),
+            map: PageMap::new(base, span, policy, nodes),
+        });
+        base
+    }
+
+    /// Resolve owning node of `addr` (first-touch resolved by
+    /// `toucher_node`). Addresses outside any region land on node 0 —
+    /// kernels allocate everything through the machine, so in debug we
+    /// assert instead.
+    pub fn node_of(&mut self, addr: u64, toucher_node: usize) -> usize {
+        if let Some(r) = self.regions.get_mut(self.last_region) {
+            if r.map.contains(addr) {
+                return r.map.node_of(addr, toucher_node);
+            }
+        }
+        for (i, r) in self.regions.iter_mut().enumerate() {
+            if r.map.contains(addr) {
+                self.last_region = i;
+                return r.map.node_of(addr, toucher_node);
+            }
+        }
+        debug_assert!(false, "address {addr:#x} outside any region");
+        0
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// Drop all regions (fresh workload).
+    pub fn clear(&mut self) {
+        self.regions.clear();
+        self.next = PAGE;
+        self.last_region = 0;
+    }
+}
+
+/// A live machine: config + memory system + address space.
+pub struct Machine {
+    pub config: MachineConfig,
+    pub memory: MemorySystem,
+    pub space: AddressSpace,
+}
+
+impl Machine {
+    pub fn new(config: MachineConfig) -> Machine {
+        let memory = MemorySystem::new(config.hierarchy, config.sockets, config.cores());
+        Machine { config, memory, space: AddressSpace::new() }
+    }
+
+    /// Fresh machine with cleared caches and address space.
+    pub fn reset(&mut self) {
+        self.memory.flush_all();
+        self.space.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xeon_peaks() {
+        let m = MachineConfig::xeon_6248();
+        assert_eq!(m.cores(), 40);
+        // π: 1 thread = 102.4 GFLOP/s; socket = 2.048 T; 2 sockets = 4.096 T.
+        assert!((m.peak_flops(1, VecWidth::V512) - 102.4e9).abs() < 1e6);
+        assert!((m.peak_flops(20, VecWidth::V512) - 2.048e12).abs() < 1e7);
+        assert!((m.peak_flops(40, VecWidth::V512) - 4.096e12).abs() < 1e7);
+    }
+
+    #[test]
+    fn peak_bw_scales_with_nodes() {
+        let m = MachineConfig::xeon_6248();
+        let one = m.peak_bw(20, 1);
+        let two = m.peak_bw(40, 2);
+        assert!((two / one - 2.0).abs() < 1e-9, "two-socket = 2× one-socket");
+        // Single socket NT streaming ≈ 115–130 GB/s.
+        assert!(one > 100e9 && one < 141e9, "one={one}");
+    }
+
+    #[test]
+    fn single_thread_bw_much_lower() {
+        let m = MachineConfig::xeon_6248();
+        let bw1 = m.peak_bw(1, 1);
+        assert!(bw1 < 25e9, "bw1={bw1}");
+    }
+
+    #[test]
+    fn address_space_alloc_and_resolve() {
+        let mut s = AddressSpace::new();
+        let a = s.alloc("x", 10 * PAGE, MemPolicy::BindNode(1), 2);
+        let b = s.alloc("y", PAGE, MemPolicy::BindNode(0), 2);
+        assert!(b > a + 10 * PAGE, "regions must not overlap");
+        assert_eq!(s.node_of(a, 0), 1);
+        assert_eq!(s.node_of(b, 0), 0);
+        assert_eq!(s.regions().len(), 2);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let doc = Doc::parse(
+            r#"
+name = "mini"
+sockets = 1
+cores_per_socket = 4
+
+[core]
+freq_avx512_ghz = 2.0
+
+[cache.llc]
+size_kib = 4096
+ways = 16
+
+[dram]
+channels = 2
+"#,
+        )
+        .unwrap();
+        let m = MachineConfig::from_toml(&doc).unwrap();
+        assert_eq!(m.name, "mini");
+        assert_eq!(m.cores(), 4);
+        assert_eq!(m.core.freq_avx512, 2.0e9);
+        assert_eq!(m.hierarchy.llc.size, 4096 * 1024);
+        assert_eq!(m.dram.channels, 2);
+        assert_eq!(m.numa.nodes, 1);
+    }
+
+    #[test]
+    fn machine_reset_clears() {
+        let mut m = Machine::new(MachineConfig::xeon_6248_1s());
+        m.space.alloc("x", PAGE, MemPolicy::BindNode(0), 1);
+        m.reset();
+        assert!(m.space.regions().is_empty());
+    }
+}

@@ -1,0 +1,306 @@
+//! NUMA topology, memory placement policy, and the paper's §2.2
+//! thread/page-migration observation.
+//!
+//! The paper had to pin threads *and* memory with `numactl` because,
+//! when a single socket's threads saturate its memory channels, Linux
+//! migrates threads (and their pages, with autonuma) to the other socket
+//! to borrow its bandwidth — inflating "single socket" results above the
+//! single-socket roof. We model the same three placement policies
+//! (`BindNode`, `Interleave`, `Unbound`) and reproduce the migration
+//! artifact for unbound runs under bandwidth pressure.
+
+use super::PAGE;
+
+/// Memory-placement policy for a kernel's working set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemPolicy {
+    /// All pages on one node (`numactl --membind=N`).
+    BindNode(usize),
+    /// Round-robin pages across nodes (`numactl --interleave=all`).
+    Interleave,
+    /// First-touch: pages land on the node of the thread that first
+    /// touches them (Linux default).
+    FirstTouch,
+}
+
+/// NUMA-level machine parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumaConfig {
+    /// Number of NUMA nodes (sockets here).
+    pub nodes: usize,
+    /// Remote-access bandwidth multiplier (UPI-limited), e.g. 0.6.
+    pub remote_bw_factor: f64,
+    /// Remote-access latency multiplier, e.g. 1.7.
+    pub remote_latency_factor: f64,
+    /// Fraction of compute-cycle stall added per unit of remote traffic
+    /// fraction — models latency the prefetchers cannot hide across UPI.
+    pub remote_stall_factor: f64,
+}
+
+impl NumaConfig {
+    pub fn two_socket() -> NumaConfig {
+        NumaConfig {
+            nodes: 2,
+            remote_bw_factor: 0.6,
+            remote_latency_factor: 1.7,
+            remote_stall_factor: 1.25,
+        }
+    }
+
+    pub fn single_node() -> NumaConfig {
+        NumaConfig {
+            nodes: 1,
+            remote_bw_factor: 1.0,
+            remote_latency_factor: 1.0,
+            remote_stall_factor: 0.0,
+        }
+    }
+}
+
+/// Page → node mapping for a contiguous virtual region.
+///
+/// The simulator's kernels allocate regions through
+/// [`crate::sim::machine::Machine`]; this struct answers "which node owns
+/// this address" for traffic attribution.
+#[derive(Clone, Debug)]
+pub struct PageMap {
+    pub base: u64,
+    pub bytes: u64,
+    policy: MemPolicy,
+    nodes: usize,
+    /// For `FirstTouch`: node per page, filled lazily; `u8::MAX` = untouched.
+    first_touch: Vec<u8>,
+}
+
+impl PageMap {
+    pub fn new(base: u64, bytes: u64, policy: MemPolicy, nodes: usize) -> PageMap {
+        assert!(nodes > 0 && nodes <= u8::MAX as usize);
+        if let MemPolicy::BindNode(n) = policy {
+            assert!(n < nodes, "bind node {n} out of range ({nodes} nodes)");
+        }
+        let pages = bytes.div_ceil(PAGE) as usize;
+        PageMap {
+            base,
+            bytes,
+            policy,
+            nodes,
+            first_touch: match policy {
+                MemPolicy::FirstTouch => vec![u8::MAX; pages],
+                _ => Vec::new(),
+            },
+        }
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.bytes
+    }
+
+    /// Node owning `addr`; `toucher_node` resolves first-touch on first
+    /// access. `addr` must be inside the region.
+    pub fn node_of(&mut self, addr: u64, toucher_node: usize) -> usize {
+        debug_assert!(self.contains(addr), "addr {addr:#x} outside region");
+        let page = ((addr - self.base) / PAGE) as usize;
+        match self.policy {
+            MemPolicy::BindNode(n) => n,
+            MemPolicy::Interleave => page % self.nodes,
+            MemPolicy::FirstTouch => {
+                if self.first_touch[page] == u8::MAX {
+                    self.first_touch[page] = toucher_node as u8;
+                }
+                self.first_touch[page] as usize
+            }
+        }
+    }
+
+    /// Fraction of (touched) pages on each node.
+    pub fn node_shares(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.nodes];
+        match self.policy {
+            MemPolicy::BindNode(n) => counts[n] = 1,
+            MemPolicy::Interleave => counts.iter_mut().for_each(|c| *c = 1),
+            MemPolicy::FirstTouch => {
+                for &n in &self.first_touch {
+                    if n != u8::MAX {
+                        counts[n as usize] += 1;
+                    }
+                }
+            }
+        }
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.nodes];
+        }
+        counts.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+}
+
+/// Thread placement for a scenario: the node each simulated thread is
+/// pinned to, or `Unbound` behaviour where the OS may move them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// Node of each thread.
+    pub thread_nodes: Vec<usize>,
+    /// Whether threads are pinned (`numactl`/taskset). Unpinned threads
+    /// may migrate under bandwidth pressure (§2.2).
+    pub pinned: bool,
+}
+
+impl Placement {
+    /// `threads` threads all bound to `node`.
+    pub fn bound(threads: usize, node: usize) -> Placement {
+        Placement { thread_nodes: vec![node; threads], pinned: true }
+    }
+
+    /// Threads spread round-robin across `nodes` nodes, pinned.
+    pub fn spread(threads: usize, nodes: usize) -> Placement {
+        Placement {
+            thread_nodes: (0..threads).map(|t| t % nodes).collect(),
+            pinned: true,
+        }
+    }
+
+    /// Unpinned threads starting on `node`.
+    pub fn unbound(threads: usize, node: usize) -> Placement {
+        Placement { thread_nodes: vec![node; threads], pinned: false }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.thread_nodes.len()
+    }
+
+    /// Threads per node.
+    pub fn per_node(&self, nodes: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; nodes];
+        for &n in &self.thread_nodes {
+            counts[n] += 1;
+        }
+        counts
+    }
+
+    /// Model OS migration under bandwidth pressure: if unpinned and the
+    /// demanded bandwidth on some node exceeds its sustained capacity
+    /// while another node has headroom, migrate threads to balance.
+    /// Returns (new placement, migrated?).
+    ///
+    /// `demand_per_node` and `capacity_per_node` are bytes/s.
+    pub fn after_pressure(
+        &self,
+        demand_per_node: &[f64],
+        capacity_per_node: &[f64],
+    ) -> (Placement, bool) {
+        if self.pinned {
+            return (self.clone(), false);
+        }
+        let nodes = capacity_per_node.len();
+        let mut counts = self.per_node(nodes);
+        let mut migrated = false;
+        // Greedy: move threads from overloaded nodes to the least-loaded
+        // node with spare capacity, one at a time.
+        for _ in 0..self.threads() {
+            let over = (0..nodes)
+                .filter(|&n| counts[n] > 0 && demand_per_node[n] > capacity_per_node[n] * 1.05)
+                .max_by(|&a, &b| {
+                    (demand_per_node[a] / capacity_per_node[a])
+                        .partial_cmp(&(demand_per_node[b] / capacity_per_node[b]))
+                        .unwrap()
+                });
+            let Some(src) = over else { break };
+            let dst = (0..nodes)
+                .filter(|&n| n != src)
+                .min_by(|&a, &b| {
+                    (demand_per_node[a] / capacity_per_node[a])
+                        .partial_cmp(&(demand_per_node[b] / capacity_per_node[b]))
+                        .unwrap()
+                });
+            let Some(dst) = dst else { break };
+            if demand_per_node[dst] / capacity_per_node[dst]
+                >= demand_per_node[src] / capacity_per_node[src]
+            {
+                break;
+            }
+            counts[src] -= 1;
+            counts[dst] += 1;
+            migrated = true;
+            // One migration step per call keeps the model simple and is
+            // enough to demonstrate the artifact.
+            break;
+        }
+        if !migrated {
+            return (self.clone(), false);
+        }
+        let mut thread_nodes = Vec::with_capacity(self.threads());
+        for (n, &c) in counts.iter().enumerate() {
+            thread_nodes.extend(std::iter::repeat(n).take(c));
+        }
+        (Placement { thread_nodes, pinned: false }, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_policy_maps_everything_to_node() {
+        let mut m = PageMap::new(0, 1 << 20, MemPolicy::BindNode(1), 2);
+        assert_eq!(m.node_of(0, 0), 1);
+        assert_eq!(m.node_of(999_999, 0), 1);
+        assert_eq!(m.node_shares(), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn interleave_alternates_pages() {
+        let mut m = PageMap::new(0, 4 * PAGE, MemPolicy::Interleave, 2);
+        assert_eq!(m.node_of(0, 0), 0);
+        assert_eq!(m.node_of(PAGE, 0), 1);
+        assert_eq!(m.node_of(2 * PAGE, 0), 0);
+    }
+
+    #[test]
+    fn first_touch_sticks() {
+        let mut m = PageMap::new(0, 2 * PAGE, MemPolicy::FirstTouch, 2);
+        assert_eq!(m.node_of(100, 1), 1);
+        // Second toucher does not move the page.
+        assert_eq!(m.node_of(200, 0), 1);
+        assert_eq!(m.node_of(PAGE + 4, 0), 0);
+        let shares = m.node_shares();
+        assert_eq!(shares, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bind_out_of_range_panics() {
+        PageMap::new(0, PAGE, MemPolicy::BindNode(2), 2);
+    }
+
+    #[test]
+    fn placement_constructors() {
+        let p = Placement::bound(4, 1);
+        assert_eq!(p.per_node(2), vec![0, 4]);
+        let p = Placement::spread(5, 2);
+        assert_eq!(p.per_node(2), vec![3, 2]);
+    }
+
+    #[test]
+    fn pinned_threads_never_migrate() {
+        let p = Placement::bound(20, 0);
+        let (q, migrated) = p.after_pressure(&[200e9, 0.0], &[115e9, 115e9]);
+        assert!(!migrated);
+        assert_eq!(q, p);
+    }
+
+    #[test]
+    fn unbound_threads_migrate_under_pressure() {
+        let p = Placement::unbound(20, 0);
+        let (q, migrated) = p.after_pressure(&[200e9, 0.0], &[115e9, 115e9]);
+        assert!(migrated, "pressure should migrate a thread");
+        assert!(q.per_node(2)[1] > 0);
+    }
+
+    #[test]
+    fn unbound_without_pressure_stays() {
+        let p = Placement::unbound(4, 0);
+        let (_, migrated) = p.after_pressure(&[10e9, 0.0], &[115e9, 115e9]);
+        assert!(!migrated);
+    }
+}

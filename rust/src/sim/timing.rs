@@ -1,0 +1,269 @@
+//! Runtime estimation: combine the compute model (instruction mix on the
+//! core issue model) with the memory model (simulated DRAM traffic over
+//! scenario-dependent effective bandwidth) into the R the paper measures
+//! with wallclock.
+//!
+//! The model is roofline-consistent by construction: R ≥ W/π and
+//! R ≥ Q/β, with the kernel-specific inefficiencies (port pressure from
+//! layout-induced shuffles, ILP limits, NUMA stalls, sync overhead)
+//! emerging from documented physical parameters rather than per-kernel
+//! fudge factors. See DESIGN.md §6.
+
+use super::core::InstrMix;
+use super::hierarchy::TrafficStats;
+use super::machine::MachineConfig;
+use super::numa::Placement;
+
+/// What limited the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+/// A runtime estimate with its decomposition.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeEstimate {
+    /// Estimated execution time, seconds.
+    pub seconds: f64,
+    /// Pure-compute component (already including NUMA stalls and
+    /// imbalance), seconds.
+    pub compute_seconds: f64,
+    /// Pure-memory component, seconds.
+    pub memory_seconds: f64,
+    /// Fraction of DRAM lines served cross-node.
+    pub remote_fraction: f64,
+    /// Which side of the roofline bound the kernel.
+    pub bound: Bound,
+    /// Multiplicative synchronisation overhead applied.
+    pub sync_factor: f64,
+}
+
+/// Estimate the runtime of a kernel execution from a single merged mix.
+/// Prefer [`estimate_phased`] for kernels with sequential phases.
+pub fn estimate(
+    config: &MachineConfig,
+    mix: &InstrMix,
+    traffic: &TrafficStats,
+    placement: &Placement,
+) -> RuntimeEstimate {
+    estimate_phased(config, std::slice::from_ref(mix), traffic, placement)
+}
+
+/// Estimate the runtime of a kernel execution.
+///
+/// * `phases` — the kernel's sequential instruction-mix phases (all
+///   threads combined); phase compute times add, they do not overlap;
+/// * `traffic` — simulated DRAM traffic for this execution;
+/// * `placement` — where the threads ran.
+pub fn estimate_phased(
+    config: &MachineConfig,
+    phases: &[InstrMix],
+    traffic: &TrafficStats,
+    placement: &Placement,
+) -> RuntimeEstimate {
+    assert!(!phases.is_empty());
+    let threads = placement.threads().max(1);
+    let remote_fraction = traffic.remote_fraction();
+
+    // --- Compute side -----------------------------------------------
+    // Per-thread share with imbalance; NUMA remote stalls inflate it.
+    let imbalance = 1.0 + config.imbalance_coeff * (threads as f64).ln();
+    let numa_stall = 1.0 + config.numa.remote_stall_factor * remote_fraction;
+    let compute_seconds: f64 = phases
+        .iter()
+        .map(|mix| {
+            let per_thread = mix.scaled(imbalance / threads as f64);
+            config.core.seconds(&per_thread)
+        })
+        .sum::<f64>()
+        * numa_stall;
+
+    // --- Memory side -------------------------------------------------
+    let memory_seconds = memory_time(config, traffic, placement);
+
+    // --- Combine -----------------------------------------------------
+    let sync_factor = 1.0 + config.sync_coeff * (threads as f64).log2();
+    let base = compute_seconds.max(memory_seconds);
+    let seconds = base * sync_factor;
+    RuntimeEstimate {
+        seconds,
+        compute_seconds,
+        memory_seconds,
+        remote_fraction,
+        bound: if compute_seconds >= memory_seconds {
+            Bound::Compute
+        } else {
+            Bound::Memory
+        },
+        sync_factor,
+    }
+}
+
+/// Time to move the run's DRAM traffic, given placement.
+///
+/// Three simultaneous constraints, take the slowest:
+///  1. each node's IMC serves its own lines at sustained bandwidth;
+///  2. cross-node lines also traverse the UPI link (remote_bw_factor ×
+///     one socket's bandwidth);
+///  3. the requesting threads can only sustain `threads ×
+///     per_thread_bw` of memory-level parallelism.
+fn memory_time(config: &MachineConfig, traffic: &TrafficStats, placement: &Placement) -> f64 {
+    let total_bytes = traffic.imc_bytes() as f64;
+    if total_bytes == 0.0 {
+        return 0.0;
+    }
+    let nt = traffic.nt_write_fraction() > 0.5;
+    let prefetch_on = config.hierarchy.prefetch.enabled;
+
+    // (1) per-node service time.
+    let node_bw = config.dram.sustained_bw(nt);
+    let t_nodes = traffic
+        .imc
+        .iter()
+        .map(|c| c.total_bytes() as f64 / node_bw)
+        .fold(0.0f64, f64::max);
+
+    // (2) UPI crossing time for remote lines.
+    let remote_bytes = total_bytes * traffic.remote_fraction();
+    let upi_bw = config.numa.remote_bw_factor * node_bw;
+    let t_upi = if remote_bytes > 0.0 { remote_bytes / upi_bw } else { 0.0 };
+
+    // (3) requester concurrency.
+    let threads = placement.threads().max(1);
+    let t_conc = total_bytes / (threads as f64 * config.dram.per_thread_bw(prefetch_on));
+
+    t_nodes.max(t_upi).max(t_conc)
+}
+
+/// Achieved performance (FLOP/s) implied by an estimate.
+pub fn achieved_flops(mix: &InstrMix, est: &RuntimeEstimate) -> f64 {
+    if est.seconds == 0.0 {
+        0.0
+    } else {
+        mix.flops() / est.seconds
+    }
+}
+
+/// Total FLOPs over sequential phases.
+pub fn phases_flops(phases: &[InstrMix]) -> f64 {
+    phases.iter().map(InstrMix::flops).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::core::VecWidth;
+    use crate::sim::imc::ImcCounters;
+
+    fn xeon() -> MachineConfig {
+        MachineConfig::xeon_6248()
+    }
+
+    fn traffic_bytes(node0: u64, node1: u64, remote: u64) -> TrafficStats {
+        let mut t = TrafficStats {
+            imc: vec![
+                ImcCounters { read_lines: node0 / 64, write_lines: 0 },
+                ImcCounters { read_lines: node1 / 64, write_lines: 0 },
+            ],
+            ..Default::default()
+        };
+        let total_lines = (node0 + node1) / 64;
+        t.remote_lines = remote / 64;
+        t.local_lines = total_lines - t.remote_lines;
+        t
+    }
+
+    #[test]
+    fn pure_compute_kernel_is_compute_bound() {
+        let cfg = xeon();
+        let mix = InstrMix { fma: 1e9, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let traffic = traffic_bytes(64, 0, 0);
+        let est = estimate(&cfg, &mix, &traffic, &Placement::bound(1, 0));
+        assert_eq!(est.bound, Bound::Compute);
+        // Single thread ⇒ sync factor 1.
+        assert!((est.sync_factor - 1.0).abs() < 1e-12);
+        let util = achieved_flops(&mix, &est) / cfg.peak_flops(1, VecWidth::V512);
+        assert!(util > 0.99, "pure FMA stream should be ~peak, util={util}");
+    }
+
+    #[test]
+    fn streaming_kernel_is_memory_bound() {
+        let cfg = xeon();
+        // Tiny FLOPs, 1 GiB of traffic on node 0.
+        let mix = InstrMix { fma: 1e6, load: 2e6, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let traffic = traffic_bytes(1 << 30, 0, 0);
+        let est = estimate(&cfg, &mix, &traffic, &Placement::bound(20, 0));
+        assert_eq!(est.bound, Bound::Memory);
+        // 1 GiB at ~115 GB/s ⇒ ~9.3 ms.
+        assert!(est.memory_seconds > 5e-3 && est.memory_seconds < 20e-3,
+            "{}", est.memory_seconds);
+    }
+
+    #[test]
+    fn single_thread_memory_time_concurrency_limited() {
+        let cfg = xeon();
+        let mix = InstrMix { fma: 1.0, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let traffic = traffic_bytes(1 << 30, 0, 0);
+        let one = estimate(&cfg, &mix, &traffic, &Placement::bound(1, 0));
+        let twenty = estimate(&cfg, &mix, &traffic, &Placement::bound(20, 0));
+        assert!(
+            one.memory_seconds > 4.0 * twenty.memory_seconds,
+            "1-thread {} vs 20-thread {}",
+            one.memory_seconds,
+            twenty.memory_seconds
+        );
+    }
+
+    #[test]
+    fn remote_traffic_slows_compute_bound_kernels() {
+        let cfg = xeon();
+        let mix = InstrMix { fma: 1e10, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let local = traffic_bytes(1 << 20, 1 << 20, 0);
+        let remote = traffic_bytes(1 << 20, 1 << 20, 1 << 20); // 50% remote
+        let p = Placement::spread(40, 2);
+        let est_local = estimate(&cfg, &mix, &local, &p);
+        let est_remote = estimate(&cfg, &mix, &remote, &p);
+        let slowdown = est_remote.seconds / est_local.seconds;
+        // 50% remote × stall 1.25 ⇒ ~1.62×.
+        assert!(slowdown > 1.4 && slowdown < 1.9, "slowdown {slowdown}");
+    }
+
+    #[test]
+    fn more_threads_help_compute_until_sync_overhead() {
+        let cfg = xeon();
+        let mix = InstrMix { fma: 1e10, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let traffic = traffic_bytes(1 << 20, 0, 0);
+        let t1 = estimate(&cfg, &mix, &traffic, &Placement::bound(1, 0)).seconds;
+        let t20 = estimate(&cfg, &mix, &traffic, &Placement::bound(20, 0)).seconds;
+        let speedup = t1 / t20;
+        assert!(speedup > 15.0 && speedup < 20.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn roofline_consistency() {
+        // R·π ≥ W and R·β ≥ Q must hold for any estimate.
+        let cfg = xeon();
+        let mix = InstrMix { fma: 5e8, load: 5e8, width: VecWidth::V512, ilp: 0.9, ..Default::default() };
+        let traffic = traffic_bytes(256 << 20, 0, 0);
+        for threads in [1usize, 20] {
+            let est = estimate(&cfg, &mix, &traffic, &Placement::bound(threads, 0));
+            let w = mix.flops();
+            let q = traffic.imc_bytes() as f64;
+            let pi = cfg.peak_flops(threads, VecWidth::V512);
+            let beta = cfg.peak_bw(threads, 1);
+            assert!(est.seconds * pi >= w * 0.999, "t={threads}: W bound violated");
+            assert!(est.seconds * beta >= q * 0.999, "t={threads}: Q bound violated");
+        }
+    }
+
+    #[test]
+    fn zero_traffic_zero_memory_time() {
+        let cfg = xeon();
+        let mix = InstrMix { fma: 1e6, width: VecWidth::V512, ilp: 1.0, ..Default::default() };
+        let traffic = TrafficStats { imc: vec![ImcCounters::default(); 2], ..Default::default() };
+        let est = estimate(&cfg, &mix, &traffic, &Placement::bound(1, 0));
+        assert_eq!(est.memory_seconds, 0.0);
+        assert_eq!(est.bound, Bound::Compute);
+    }
+}

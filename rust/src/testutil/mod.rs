@@ -1,0 +1,51 @@
+//! Test utilities, including a small property-testing harness.
+//!
+//! `proptest` is unavailable in the offline build environment; `prop`
+//! provides the idiom we need — run a closure over many generated cases,
+//! report the failing seed + case, and let the failure be reproduced by
+//! fixing the seed.
+
+pub mod prop;
+
+pub use prop::{check, check_with, Config as PropConfig};
+
+/// Assert two f64 values are within `tol` relative error (absolute for
+/// near-zero expectations).
+pub fn assert_close(actual: f64, expected: f64, tol: f64, what: &str) {
+    let denom = expected.abs().max(1e-12);
+    let rel = (actual - expected).abs() / denom;
+    assert!(
+        rel <= tol || (actual - expected).abs() <= tol,
+        "{what}: actual {actual} vs expected {expected} (rel err {rel:.3e} > tol {tol:.1e})"
+    );
+}
+
+/// Assert `lo <= x <= hi` with a labelled message.
+pub fn assert_in_range(x: f64, lo: f64, hi: f64, what: &str) {
+    assert!(
+        (lo..=hi).contains(&x),
+        "{what}: {x} outside [{lo}, {hi}]"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_accepts_equal() {
+        assert_close(1.0, 1.0, 1e-9, "eq");
+        assert_close(100.0, 100.05, 1e-3, "rel");
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-3, "far");
+    }
+
+    #[test]
+    fn range_works() {
+        assert_in_range(0.5, 0.0, 1.0, "mid");
+    }
+}

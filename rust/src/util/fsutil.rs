@@ -1,0 +1,62 @@
+//! Filesystem helpers: report directories, atomic-ish writes, path
+//! discovery for `artifacts/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Write `content` to `path`, creating parent directories. Writes through
+/// a temp file + rename so concurrent readers never observe a torn file.
+pub fn write_atomic(path: &Path, content: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let tmp = path.with_extension("tmp~");
+    std::fs::write(&tmp, content).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Locate the repository's `artifacts/` directory: `$DLROOFLINE_ARTIFACTS`
+/// if set, else `artifacts/` relative to the current dir, else relative to
+/// the crate manifest (useful under `cargo test`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DLROOFLINE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Read a whole file to string with a path-bearing error.
+pub fn read_to_string(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dlroofline-test-{}", std::process::id()));
+        let path = dir.join("sub/report.txt");
+        write_atomic(&path, "hello").unwrap();
+        assert_eq!(read_to_string(&path).unwrap(), "hello");
+        write_atomic(&path, "world").unwrap();
+        assert_eq!(read_to_string(&path).unwrap(), "world");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // Can't mutate env safely in parallel tests; just check the
+        // default resolves to something ending in "artifacts".
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Human-readable formatting of bytes, rates, FLOP/s and durations —
+//! used by reports, plots and the CLI.
+
+/// Format a byte count: `1.50 MiB`, `32.0 KiB`, `17 B`.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: &[(&str, f64)] = &[
+        ("TiB", 1024f64 * 1024.0 * 1024.0 * 1024.0),
+        ("GiB", 1024f64 * 1024.0 * 1024.0),
+        ("MiB", 1024f64 * 1024.0),
+        ("KiB", 1024.0),
+    ];
+    for (unit, scale) in UNITS {
+        if bytes.abs() >= *scale {
+            return format!("{:.2} {unit}", bytes / scale);
+        }
+    }
+    format!("{bytes:.0} B")
+}
+
+/// Format a FLOP/s figure: `2.05 TFLOP/s`, `140.8 GFLOP/s`.
+pub fn fmt_flops(flops_per_sec: f64) -> String {
+    fmt_si(flops_per_sec, "FLOP/s")
+}
+
+/// Format a byte-rate: `115.2 GB/s` (decimal units, as bandwidth is
+/// conventionally reported).
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    fmt_si(bytes_per_sec, "B/s")
+}
+
+/// SI-prefixed formatting helper (decimal scale).
+pub fn fmt_si(value: f64, unit: &str) -> String {
+    const PREFIXES: &[(&str, f64)] = &[
+        ("P", 1e15),
+        ("T", 1e12),
+        ("G", 1e9),
+        ("M", 1e6),
+        ("k", 1e3),
+    ];
+    for (p, scale) in PREFIXES {
+        if value.abs() >= *scale {
+            return format!("{:.2} {p}{unit}", value / scale);
+        }
+    }
+    format!("{value:.2} {unit}")
+}
+
+/// Format a duration in seconds: `1.23 s`, `45.6 ms`, `789 µs`, `12 ns`.
+pub fn fmt_seconds(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a ratio as a percentage with one decimal: `86.7%`.
+pub fn fmt_pct(ratio: f64) -> String {
+    format!("{:.1}%", ratio * 100.0)
+}
+
+/// Left-pad / right-pad to build fixed-width table cells.
+pub fn pad_right(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(width - s.len()))
+    }
+}
+
+/// Right-align a string within `width` columns.
+pub fn pad_left(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{s}", " ".repeat(width - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(17.0), "17 B");
+        assert_eq!(fmt_bytes(1024.0), "1.00 KiB");
+        assert_eq!(fmt_bytes(1536.0 * 1024.0), "1.50 MiB");
+        assert_eq!(fmt_bytes(2.0 * 1024f64.powi(3)), "2.00 GiB");
+    }
+
+    #[test]
+    fn flops_units() {
+        assert_eq!(fmt_flops(140.8e9), "140.80 GFLOP/s");
+        assert_eq!(fmt_flops(4.096e12), "4.10 TFLOP/s");
+    }
+
+    #[test]
+    fn seconds_scales() {
+        assert_eq!(fmt_seconds(1.5), "1.500 s");
+        assert_eq!(fmt_seconds(0.0456), "45.600 ms");
+        assert_eq!(fmt_seconds(12e-9), "12.0 ns");
+    }
+
+    #[test]
+    fn pct() {
+        assert_eq!(fmt_pct(0.867), "86.7%");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_right("ab", 4), "ab  ");
+        assert_eq!(pad_left("ab", 4), "  ab");
+        assert_eq!(pad_right("abcde", 4), "abcde");
+    }
+}

@@ -1,0 +1,20 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The offline build environment provides no `serde`, `clap`, `criterion`
+//! or `proptest`, so this module (together with [`crate::cli`],
+//! [`crate::benchkit`] and [`crate::testutil`]) implements the minimal
+//! substrates we need: JSON emit/parse, a TOML-subset config reader,
+//! deterministic PRNGs, descriptive statistics and human-readable unit
+//! formatting.
+
+pub mod fsutil;
+pub mod human;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod toml_lite;
+
+pub use human::{fmt_bytes, fmt_flops, fmt_rate, fmt_seconds};
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::Summary;

@@ -1,0 +1,331 @@
+//! TOML-subset parser for platform and experiment configuration files.
+//!
+//! Supports the subset the project's configs need: `[section]` and
+//! `[section.sub]` headers, `key = value` pairs with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments, and blank
+//! lines. No multi-line strings, no inline tables, no dates — config files
+//! that need more should use JSON instead.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(x) => Ok(*x),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_i64()?;
+        usize::try_from(x).map_err(|_| anyhow!("expected non-negative integer, got {x}"))
+    }
+
+    /// Float accessor; integers coerce losslessly.
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(x) => Ok(*x),
+            Value::Int(x) => Ok(*x as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed config document: dotted section path → key → value.
+/// Keys written before any section header live under the empty path `""`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Parse a config document.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {}", lineno + 1, e))?;
+            doc.sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Lookup `section` then `key`; `section` may be `""` for top-level.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    /// Lookup that fails with a good message.
+    pub fn expect(&self, section: &str, key: &str) -> Result<&Value> {
+        self.get(section, key).ok_or_else(|| {
+            anyhow!(
+                "missing config key '{}{}{}'",
+                section,
+                if section.is_empty() { "" } else { "." },
+                key
+            )
+        })
+    }
+
+    /// Convenience: f64 with a default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(default)
+    }
+
+    /// Convenience: usize with a default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(default)
+    }
+
+    /// Section names matching a prefix like `"cache."`.
+    pub fn sections_with_prefix<'a>(&'a self, prefix: &'a str) -> Vec<&'a str> {
+        self.sections
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+/// Remove a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("unsupported embedded quote in string");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    // Numbers: underscores allowed as digit separators (TOML style).
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{text}'")
+}
+
+/// Split an array body on commas, respecting string quotes (arrays of
+/// arrays are not supported — documented subset).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# platform description
+name = "xeon_6248"   # inline comment
+sockets = 2
+
+[core]
+freq_ghz = 2.5
+avx512_freq_ghz = 1.6
+fma_ports = 2
+has_avx512 = true
+
+[cache.l1d]
+size_kib = 32
+ways = 8
+
+[cache.l2]
+size_kib = 1024
+ways = 16
+
+[dram]
+channels = 6
+efficiency = 0.82
+sizes = [1, 2, 3]
+names = ["a", "b"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "xeon_6248");
+        assert_eq!(doc.get("", "sockets").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(doc.get("core", "freq_ghz").unwrap().as_f64().unwrap(), 2.5);
+        assert!(doc.get("core", "has_avx512").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("cache.l1d", "size_kib").unwrap().as_usize().unwrap(), 32);
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        let sizes = doc.get("dram", "sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_i64().unwrap(), 3);
+        let names = doc.get("dram", "names").unwrap().as_arr().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = Doc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = Doc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get("", "n").unwrap().as_i64().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn section_prefix_listing() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        let caches = doc.sections_with_prefix("cache.");
+        assert_eq!(caches, vec!["cache.l1d", "cache.l2"]);
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Doc::parse("[unterminated").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let doc = Doc::parse("a = 2").unwrap();
+        assert_eq!(doc.f64_or("", "a", 9.0), 2.0);
+        assert_eq!(doc.f64_or("", "b", 9.0), 9.0);
+        assert_eq!(doc.usize_or("missing", "k", 7), 7);
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = Doc::parse("a = -4\nb = -2.5").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64().unwrap(), -4);
+        assert_eq!(doc.get("", "b").unwrap().as_f64().unwrap(), -2.5);
+        assert!(doc.get("", "a").unwrap().as_usize().is_err());
+    }
+}

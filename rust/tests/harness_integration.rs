@@ -1,0 +1,190 @@
+//! Integration tests across harness + coordinator: the measurement
+//! pipeline end-to-end, methodology failure modes, registry-driven
+//! measurement, and report generation.
+
+use dlroofline::coordinator::runner::{render_report, run_and_write};
+use dlroofline::coordinator::KernelRegistry;
+use dlroofline::harness::experiments::{experiment_index, run_experiment, ExperimentParams};
+use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::pmu::perf_iface::{MeasureProtocol, RunCounters};
+use dlroofline::pmu::FpEventSet;
+use dlroofline::sim::core::VecWidth;
+use dlroofline::sim::machine::{Machine, MachineConfig};
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+#[test]
+fn every_indexed_experiment_runs() {
+    for (id, _) in experiment_index() {
+        let result = run_experiment(id, &quick())
+            .unwrap_or_else(|e| panic!("experiment {id} failed: {e:#}"));
+        assert!(
+            !result.groups.is_empty() || !result.tables.is_empty(),
+            "{id} produced nothing"
+        );
+        let report = render_report(&result);
+        assert!(report.len() > 100, "{id} report suspiciously short");
+    }
+}
+
+#[test]
+fn reports_written_for_figure_with_groups() {
+    let dir = std::env::temp_dir().join(format!("dlr-it-{}", std::process::id()));
+    let (_, out) = run_and_write("f7", &quick(), &dir, true).unwrap();
+    let md = std::fs::read_to_string(out.markdown.unwrap()).unwrap();
+    assert!(md.contains("avgpool_nchw"));
+    assert!(md.contains("roofline:"));
+    assert!(md.contains("42"), "should mention the paper's 42x claim");
+    for svg in &out.svgs {
+        let body = std::fs::read_to_string(svg).unwrap();
+        assert!(body.starts_with("<svg"));
+    }
+    for csv in &out.csvs {
+        let body = std::fs::read_to_string(csv).unwrap();
+        assert!(body.lines().count() > 1);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn registry_to_measurement_pipeline() {
+    let registry = KernelRegistry::with_builtins();
+    let mut machine = Machine::new(MachineConfig::xeon_6248());
+    for name in registry.names() {
+        let kernel = registry.create(name, 1).unwrap();
+        let m = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleThread, CacheState::Cold)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert!(m.measured.work_flops > 0, "{name}: zero W");
+        assert!(m.measured.traffic_bytes > 0, "{name}: zero Q (cold run!)");
+        assert!(m.runtime.seconds > 0.0, "{name}: zero R");
+        let p = m.point();
+        assert!(p.ai() > 0.0 && p.ai().is_finite(), "{name}: bad AI {}", p.ai());
+    }
+}
+
+#[test]
+fn subtraction_protocol_rejects_incomparable_runs() {
+    let mut big = FpEventSet::default();
+    big.retire_fma(VecWidth::V512, 100);
+    let overhead = RunCounters { fp: big, imc_read_bytes: 0, imc_write_bytes: 0 };
+    let full = RunCounters::default();
+    assert!(MeasureProtocol::subtract(&overhead, &full).is_err());
+}
+
+#[test]
+fn scenario_threads_monotonic_speedup_compute_bound() {
+    // A compute-bound kernel must get faster with more threads (§3.1.2
+    // says utilisation drops a bit, but wallclock improves a lot).
+    let registry = KernelRegistry::with_builtins();
+    let kernel = registry.create("conv_direct_nchw16c", 2).unwrap();
+    let mut machine = Machine::new(MachineConfig::xeon_6248());
+    let t1 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleThread, CacheState::Cold)
+        .unwrap()
+        .runtime
+        .seconds;
+    let t20 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
+        .unwrap()
+        .runtime
+        .seconds;
+    let t40 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::TwoSocket, CacheState::Cold)
+        .unwrap()
+        .runtime
+        .seconds;
+    assert!(t20 < t1 / 8.0, "socket speedup too small: {t1} → {t20}");
+    assert!(t40 < t20, "two sockets must still beat one: {t20} → {t40}");
+    // …but NUMA prevents 2×.
+    assert!(t40 > t20 / 2.0, "two-socket scaling implausibly perfect");
+}
+
+#[test]
+fn custom_machine_config_flows_through() {
+    // A machine with half the channels should slow memory-bound kernels.
+    let registry = KernelRegistry::with_builtins();
+    let kernel = registry.create("gelu_nchw", 4).unwrap();
+    let base = MachineConfig::xeon_6248();
+    let mut skinny = base.clone();
+    skinny.dram.channels = 2;
+
+    let mut m1 = Machine::new(base);
+    let fast = measure_kernel(&mut m1, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
+        .unwrap()
+        .runtime
+        .seconds;
+    let mut m2 = Machine::new(skinny);
+    let slow = measure_kernel(&mut m2, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
+        .unwrap()
+        .runtime
+        .seconds;
+    assert!(slow > fast * 1.5, "2ch {slow} vs 6ch {fast}");
+}
+
+#[test]
+fn v2_reproduces_traffic_methodology_ladder() {
+    let result = run_experiment("v2", &quick()).unwrap();
+    let table = &result.tables[0].1;
+    // The LLC-on row must show severe under-reporting; IMC rows ~100%.
+    let rows: Vec<&str> = table.lines().filter(|l| l.starts_with("| LLC") || l.starts_with("| IMC")).collect();
+    assert_eq!(rows.len(), 4, "{table}");
+    let pct = |row: &str| -> f64 {
+        row.rsplit('|')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .trim_end_matches('%')
+            .parse()
+            .unwrap()
+    };
+    let llc_on = pct(rows[0]);
+    let llc_off = pct(rows[1]);
+    let imc_on = pct(rows[2]);
+    assert!(llc_on < 60.0, "LLC+prefetch should under-report: {llc_on}%");
+    assert!(llc_off > 90.0, "LLC w/o prefetch accurate for simple kernels: {llc_off}%");
+    assert!((95.0..=115.0).contains(&imc_on), "IMC accurate: {imc_on}%");
+    // The SW-prefetch note must be present (Winograd/GEMM case).
+    assert!(result.notes[0].contains("prefetcht0"));
+}
+
+#[test]
+fn m1_unbound_run_exceeds_single_socket_roof() {
+    // §2.5: without numactl binding, the measured point lands above the
+    // single-socket roof — the reproduction must show fraction > 1.
+    let result = run_experiment("m1", &ExperimentParams::default()).unwrap();
+    let table = &result.tables[0].1;
+    let unbound_row = table
+        .lines()
+        .find(|l| l.starts_with("| unbound"))
+        .expect("unbound row");
+    let frac: f64 = unbound_row
+        .rsplit('|')
+        .nth(1)
+        .unwrap()
+        .trim()
+        .trim_matches('*')
+        .parse()
+        .unwrap();
+    assert!(frac > 1.0, "unbound run should exceed the roof: {frac}");
+    // …while the bound run stays under it.
+    let bound_row = table.lines().find(|l| l.starts_with("| bound")).unwrap();
+    let bound_frac: f64 = bound_row
+        .rsplit('|')
+        .nth(1)
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(bound_frac <= 1.0, "bound run above the roof: {bound_frac}");
+    assert!(result.notes[0].contains("migrated: true"), "{}", result.notes[0]);
+}
+
+#[test]
+fn p2_shows_migration_artifact() {
+    let result = run_experiment("p2", &quick()).unwrap();
+    let migration_note = result
+        .notes
+        .iter()
+        .find(|n| n.contains("migrated"))
+        .expect("migration note");
+    assert!(migration_note.contains("true"), "{migration_note}");
+}

@@ -1,0 +1,227 @@
+//! The scientific acceptance tests: every qualitative claim in the
+//! paper's evaluation (§3, Figs 3–8 and the appendix) must hold in the
+//! reproduction — who wins, by roughly what factor, where the
+//! crossovers fall. Absolute numbers get wide tolerances (our substrate
+//! is a simulator, not the authors' testbed); *orderings* are strict.
+
+use dlroofline::harness::experiments::{run_experiment, ExperimentParams};
+use dlroofline::harness::CacheState;
+use dlroofline::roofline::point::KernelPoint;
+
+fn params() -> ExperimentParams {
+    ExperimentParams { batch: Some(2), ..Default::default() }
+}
+
+fn point<'a>(
+    points: &'a [(KernelPoint, CacheState)],
+    name: &str,
+    cs: CacheState,
+) -> &'a KernelPoint {
+    &points
+        .iter()
+        .find(|(p, c)| p.name == name && *c == cs)
+        .unwrap_or_else(|| panic!("missing point {name}/{cs:?}"))
+        .0
+}
+
+fn run(id: &str) -> Vec<(f64, Vec<(KernelPoint, CacheState)>)> {
+    run_experiment(id, &params())
+        .unwrap()
+        .groups
+        .iter()
+        .map(|g| {
+            (
+                g.roofline.peak(),
+                g.measurements
+                    .iter()
+                    .map(|m| (m.point(), m.cache_state))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------- Fig 3
+
+#[test]
+fn fig3_utilisation_ordering_and_magnitudes() {
+    let groups = run("f3");
+    let (peak, points) = &groups[0];
+    let util = |name: &str| point(points, name, CacheState::Cold).perf() / peak;
+
+    let wino = util("conv_winograd");
+    let nchw = util("conv_direct_nchw");
+    let blocked = util("conv_direct_nchw16c");
+
+    // Paper: 31.54% < 48.73% < 86.72%.
+    assert!(wino < nchw && nchw < blocked, "ordering: {wino} {nchw} {blocked}");
+    assert!((0.22..=0.45).contains(&wino), "winograd util {wino}");
+    assert!((0.38..=0.58).contains(&nchw), "nchw util {nchw}");
+    assert!((0.75..=0.95).contains(&blocked), "blocked util {blocked}");
+}
+
+#[test]
+fn fig3_winograd_fastest_nchw_slowest() {
+    let groups = run("f3");
+    let (_, points) = &groups[0];
+    let et = |name: &str| point(points, name, CacheState::Cold).runtime;
+    let wino = et("conv_winograd");
+    let nchw = et("conv_direct_nchw");
+    let blocked = et("conv_direct_nchw16c");
+    // Paper: NCHW is ET=100%, Winograd the fastest despite lowest util.
+    assert!(wino < blocked, "winograd {wino} must beat blocked {blocked}");
+    assert!(blocked < nchw, "blocked {blocked} must beat nchw {nchw}");
+    // "NCHW16C slightly more efficient" ⇒ substantially faster than NCHW.
+    assert!(nchw / blocked > 1.4, "blocked speedup {}", nchw / blocked);
+}
+
+// ----------------------------------------------------------- Fig 4 / 5
+
+#[test]
+fn fig4_socket_utilisation_slightly_below_single_thread() {
+    let f3 = run("f3");
+    let f4 = run("f4");
+    for kernel in ["conv_winograd", "conv_direct_nchw", "conv_direct_nchw16c"] {
+        let u3 = point(&f3[0].1, kernel, CacheState::Cold).perf() / f3[0].0;
+        let u4 = point(&f4[0].1, kernel, CacheState::Cold).perf() / f4[0].0;
+        assert!(u4 < u3, "{kernel}: socket util {u4} must be below 1-thread {u3}");
+        assert!(u4 > u3 * 0.75, "{kernel}: drop too large ({u3} → {u4})");
+    }
+}
+
+#[test]
+fn fig5_two_socket_utilisation_drops_hard() {
+    let f4 = run("f4");
+    let f5 = run("f5");
+    let u4 = point(&f4[0].1, "conv_direct_nchw16c", CacheState::Cold).perf() / f4[0].0;
+    let u5 = point(&f5[0].1, "conv_direct_nchw16c", CacheState::Cold).perf() / f5[0].0;
+    // Paper: 78% → 48% — NUMA harness difficulty.
+    assert!(u5 < u4 * 0.80, "two-socket {u5} vs one-socket {u4}");
+    assert!((0.35..=0.65).contains(&u5), "two-socket util {u5}");
+}
+
+#[test]
+fn figs_3_to_5_ridge_moves_right_with_more_threads() {
+    // §3.1.2: "the rigid point of the Roofline model was moved further
+    // right" as execution widens.
+    let p = params();
+    let r1 = run_experiment("f3", &p).unwrap().groups[0].roofline.ridge();
+    let r2 = run_experiment("f4", &p).unwrap().groups[0].roofline.ridge();
+    assert!(r2 > 1.5 * r1, "ridge {r1} → {r2}");
+}
+
+// ----------------------------------------------------------- Fig 6
+
+#[test]
+fn fig6_inner_product_over_71_pct_and_warm_ai_shift() {
+    let groups = run("f6");
+    let (peak, points) = &groups[0];
+    let cold = point(points, "inner_product", CacheState::Cold);
+    let warm = point(points, "inner_product", CacheState::Warm);
+    let util = cold.perf() / peak;
+    assert!((0.65..=0.88).contains(&util), "IP util {util} (paper ≥71%)");
+    // Same Work…
+    assert!((cold.work_flops - warm.work_flops).abs() < 1.0);
+    // …much less Traffic ⇒ higher AI warm.
+    assert!(
+        warm.ai() > 3.0 * cold.ai(),
+        "warm AI {} vs cold {}",
+        warm.ai(),
+        cold.ai()
+    );
+}
+
+// ----------------------------------------------------------- Fig 7
+
+#[test]
+fn fig7_pooling_42x_utilisation_gap_at_equal_ai() {
+    let groups = run("f7");
+    let (peak, points) = &groups[0];
+    let simple = point(points, "avgpool_nchw", CacheState::Cold);
+    let jit = point(points, "avgpool_nchw16c", CacheState::Cold);
+
+    let u_simple = simple.perf() / peak;
+    let u_jit = jit.perf() / peak;
+    // Paper: 0.35% vs 14.8%, "over 42× better". Our cold-cache jit
+    // point sits lower on the memory roof than the paper's (smaller
+    // batch, lower AI), so the end-to-end gap is smaller than the pure
+    // compute-capability gap — which the pooling unit test pins at
+    // 15–120×. Direction and order of magnitude must hold here.
+    assert!(u_simple < 0.008, "simple_nchw util {u_simple}");
+    assert!((0.03..=0.40).contains(&u_jit), "jit util {u_jit}");
+    let gap = u_jit / u_simple;
+    assert!((8.0..=120.0).contains(&gap), "gap {gap} (paper ~42×)");
+
+    // "arithmetic intensity … is almost the same".
+    let ai_ratio = simple.ai() / jit.ai();
+    assert!((0.6..=1.6).contains(&ai_ratio), "AI ratio {ai_ratio}");
+}
+
+// ----------------------------------------------------------- Fig 8
+
+#[test]
+fn fig8_forced_blocked_gelu_worse_in_every_way() {
+    let groups = run("f8");
+    let (_, points) = &groups[0];
+    let plain = point(points, "gelu_nchw", CacheState::Cold);
+    let blocked = point(points, "gelu_nchw16c", CacheState::Cold);
+
+    // More Work (paper ~2× at 8-blocking; ~5.3× at our 16-blocking)…
+    let w_ratio = blocked.work_flops / plain.work_flops;
+    assert!((4.0..=6.5).contains(&w_ratio), "W ratio {w_ratio}");
+    // …more Traffic (paper ~4×)…
+    let q_ratio = blocked.traffic_bytes / plain.traffic_bytes;
+    assert!((2.5..=14.0).contains(&q_ratio), "Q ratio {q_ratio}");
+    // …lower arithmetic intensity…
+    assert!(blocked.ai() < plain.ai(), "AI {} vs {}", blocked.ai(), plain.ai());
+    // …and slower wall-clock.
+    assert!(blocked.runtime > plain.runtime);
+}
+
+// ----------------------------------------------------------- appendix
+
+#[test]
+fn a2_favourable_gelu_equalises_layouts() {
+    let groups = run("a2");
+    let (_, points) = &groups[0]; // single-thread group
+    let plain = point(points, "gelu_nchw", CacheState::Cold);
+    let blocked = point(points, "gelu_nchw16c", CacheState::Cold);
+    let ai_ratio = blocked.ai() / plain.ai();
+    assert!((0.8..=1.25).contains(&ai_ratio), "AI ratio {ai_ratio}");
+    let w_ratio = blocked.work_flops / plain.work_flops;
+    assert!((0.95..=1.05).contains(&w_ratio), "W ratio {w_ratio}");
+}
+
+#[test]
+fn a1_layernorm_memory_bound_everywhere() {
+    let result = run_experiment("a1", &params()).unwrap();
+    for g in &result.groups {
+        for m in &g.measurements {
+            let p = m.point();
+            if p.ai().is_finite() {
+                assert!(
+                    g.roofline.memory_bound(p.ai()),
+                    "{} ({:?}) should be memory-bound at AI {}",
+                    m.kernel,
+                    m.scenario,
+                    p.ai()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn a3_inner_product_socket_scaling_reasonable() {
+    let result = run_experiment("a3", &params()).unwrap();
+    assert_eq!(result.groups.len(), 2); // socket + two-socket
+    for g in &result.groups {
+        let cold = g
+            .measurements
+            .iter()
+            .find(|m| m.cache_state == CacheState::Cold)
+            .unwrap();
+        let util = cold.utilization(g.roofline.peak());
+        assert!((0.10..=0.9).contains(&util), "IP util {util} in {:?}", cold.scenario);
+    }
+}

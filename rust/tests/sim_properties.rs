@@ -1,0 +1,265 @@
+//! Property-based tests on simulator and roofline invariants
+//! (`testutil::prop` — the in-tree proptest substitute; see DESIGN.md).
+
+use dlroofline::kernels::gelu::{EltwiseShape, GeluNchw};
+use dlroofline::kernels::inner_product::InnerProduct;
+use dlroofline::kernels::reduction::SumReduction;
+use dlroofline::kernels::KernelModel;
+use dlroofline::roofline::model::{Ceiling, RooflineModel};
+use dlroofline::sim::cache::{Cache, CacheConfig, Probe};
+use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};
+use dlroofline::sim::machine::{AddressSpace, Machine, MachineConfig};
+use dlroofline::sim::numa::{MemPolicy, PageMap, Placement};
+use dlroofline::sim::prefetch::PrefetchConfig;
+use dlroofline::sim::trace::{AccessKind, AccessRun, Trace};
+use dlroofline::testutil::prop::check;
+use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+
+// --------------------------------------------------------------- roofline
+
+#[test]
+fn prop_roofline_attainable_is_min_of_roofs() {
+    check(
+        "P = min(pi, I*beta)",
+        |rng, _| {
+            let peak = 1e9 + rng.f64() * 1e13;
+            let bw = 1e8 + rng.f64() * 1e12;
+            let ai = rng.f64() * 1000.0;
+            (peak, bw, ai)
+        },
+        |&(peak, bw, ai)| {
+            let r = RooflineModel::new(
+                "p",
+                vec![Ceiling { label: "peak".into(), flops_per_sec: peak }],
+                bw,
+                "dram",
+            );
+            let p = r.attainable(ai);
+            assert!(p <= peak * (1.0 + 1e-12));
+            assert!(p <= ai * bw + 1e-6);
+            assert!((p - peak.min(ai * bw)).abs() <= peak * 1e-12);
+            // Monotone in AI.
+            assert!(r.attainable(ai * 2.0) >= p);
+        },
+    );
+}
+
+// ----------------------------------------------------------------- cache
+
+#[test]
+fn prop_cache_rescan_of_fitting_set_always_hits() {
+    check(
+        "second scan hits when working set fits",
+        |rng, idx| {
+            let sets = 1usize << rng.range(2, 6);
+            let ways = rng.range(1, 8);
+            let lines = if idx == 0 { 1 } else { rng.range(1, sets * ways + 1) };
+            (sets, ways, lines)
+        },
+        |&(sets, ways, lines)| {
+            let mut c = Cache::new(CacheConfig::new((sets * ways * 64) as u64, ways));
+            // Addresses spread across sets to avoid conflict evictions:
+            // at most `ways` lines per set.
+            let addrs: Vec<u64> = (0..lines).map(|i| i as u64).collect();
+            for &a in &addrs {
+                c.access(a, false);
+            }
+            for &a in &addrs {
+                assert!(
+                    matches!(c.access(a, false), Probe::Hit),
+                    "line {a} evicted from {sets}x{ways} cache with {lines} lines"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_cache_traffic_bounds() {
+    // For any single-thread load-only trace: compulsory ≤ IMC reads ≤
+    // probes (without prefetch), and footprint ≤ traced bytes.
+    check(
+        "compulsory <= demand reads <= probes",
+        |rng, _| {
+            let runs = rng.range(1, 8);
+            let mut t = Trace::new();
+            for _ in 0..runs {
+                let base = rng.below(1 << 20) * 64;
+                let bytes = 64 * rng.below(256).max(1);
+                t.push(AccessRun::contiguous(base, bytes, AccessKind::Load));
+            }
+            t
+        },
+        |t| {
+            let cfg = HierarchyConfig {
+                l1: CacheConfig::new(512, 2),
+                l2: CacheConfig::new(2048, 4),
+                llc: CacheConfig::new(8192, 8),
+                prefetch: PrefetchConfig::disabled(),
+            };
+            let mut ms = MemorySystem::new(cfg, 1, 1);
+            let stats = ms.run(
+                std::slice::from_ref(t),
+                &Placement::bound(1, 0),
+                &mut |_a, _t| 0,
+            );
+            let compulsory = t.footprint_bytes();
+            let probes_bytes = stats.probes * 64;
+            assert!(stats.imc_read_bytes() >= compulsory,
+                "reads {} < compulsory {compulsory}", stats.imc_read_bytes());
+            assert!(stats.imc_read_bytes() <= probes_bytes);
+            assert_eq!(stats.imc_write_bytes(), 0, "load-only trace wrote");
+        },
+    );
+}
+
+#[test]
+fn prop_imc_sees_at_least_llc_demand_misses() {
+    // §2.4's direction: IMC ≥ LLC-demand-miss traffic, with any
+    // prefetch configuration and any access mix.
+    check(
+        "IMC >= LLC demand misses",
+        |rng, _| {
+            let mut t = Trace::new();
+            for _ in 0..rng.range(1, 6) {
+                let base = rng.below(1 << 18) * 64;
+                let bytes = 64 * rng.below(512).max(1);
+                let kind = *rng.pick(&[AccessKind::Load, AccessKind::Store, AccessKind::PrefetchSW]);
+                t.push(AccessRun::contiguous(base, bytes, kind));
+            }
+            let prefetch_on = rng.chance(0.5);
+            (t, prefetch_on)
+        },
+        |(t, prefetch_on)| {
+            let cfg = HierarchyConfig {
+                l1: CacheConfig::new(512, 2),
+                l2: CacheConfig::new(2048, 4),
+                llc: CacheConfig::new(8192, 8),
+                prefetch: if *prefetch_on {
+                    PrefetchConfig::default()
+                } else {
+                    PrefetchConfig::disabled()
+                },
+            };
+            let mut ms = MemorySystem::new(cfg, 1, 1);
+            let stats = ms.run(
+                std::slice::from_ref(t),
+                &Placement::bound(1, 0),
+                &mut |_a, _t| 0,
+            );
+            assert!(
+                stats.imc_read_bytes() >= stats.llc_demand_miss_bytes(),
+                "IMC {} < LLC demand {}",
+                stats.imc_read_bytes(),
+                stats.llc_demand_miss_bytes()
+            );
+        },
+    );
+}
+
+// ------------------------------------------------------------------ numa
+
+#[test]
+fn prop_page_maps_total_shares_to_one() {
+    check(
+        "node shares sum to 1 after touching",
+        |rng, _| {
+            let pages = rng.range(1, 64) as u64;
+            let policy = *rng.pick(&[
+                MemPolicy::BindNode(0),
+                MemPolicy::BindNode(1),
+                MemPolicy::Interleave,
+                MemPolicy::FirstTouch,
+            ]);
+            (pages, policy)
+        },
+        |&(pages, policy)| {
+            let mut m = PageMap::new(0, pages * 4096, policy, 2);
+            for p in 0..pages {
+                m.node_of(p * 4096, (p % 2) as usize);
+            }
+            let shares = m.node_shares();
+            let sum: f64 = shares.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "shares {shares:?}");
+        },
+    );
+}
+
+// --------------------------------------------------------------- kernels
+
+#[test]
+fn prop_kernel_flops_invariant_under_threads_and_policy() {
+    // W is a property of the kernel, not of how we run it.
+    check(
+        "traces cover same bytes for any thread count",
+        |rng, _| (rng.range(1, 33), rng.range(1, 5)),
+        |&(threads, scale)| {
+            let k = GeluNchw::new(EltwiseShape::favourable(scale));
+            let mut space = AddressSpace::new();
+            let t = k.alloc(&mut space, MemPolicy::BindNode(0), 1);
+            let total: u64 = k.traces(&t, threads).iter().map(|tr| tr.bytes()).sum();
+            let once: u64 = k.traces(&t, 1).iter().map(|tr| tr.bytes()).sum();
+            // Chunk boundaries may round up to a line per run (one load
+            // + one store run per thread).
+            assert!(total >= once && total <= once + 128 * threads as u64,
+                "threads={threads}: {total} vs {once}");
+        },
+    );
+}
+
+#[test]
+fn prop_measurement_roofline_consistent() {
+    // For any measured kernel: R·π ≥ W and R·β ≥ Q (the estimate never
+    // beats the machine).
+    let machine_cfg = MachineConfig::xeon_6248();
+    check(
+        "R*pi >= W and R*beta >= Q",
+        |rng, idx| {
+            let scenario = *rng.pick(&[Scenario::SingleThread, Scenario::SingleSocket]);
+            let kernel_id = idx % 3;
+            let cache = *rng.pick(&[CacheState::Cold, CacheState::Warm]);
+            (scenario, kernel_id, cache)
+        },
+        |&(scenario, kernel_id, cache)| {
+            let kernel: Box<dyn KernelModel> = match kernel_id {
+                0 => Box::new(SumReduction::new(1 << 18)),
+                1 => Box::new(InnerProduct::new(64, 256, 128)),
+                _ => Box::new(GeluNchw::new(EltwiseShape::favourable(2))),
+            };
+            let mut machine = Machine::new(machine_cfg.clone());
+            let m = measure_kernel(&mut machine, kernel.as_ref(), scenario, cache).unwrap();
+            let threads = scenario.threads(&machine_cfg);
+            let pi = machine_cfg.peak_flops(threads, dlroofline::sim::core::VecWidth::V512);
+            let beta = machine_cfg.peak_bw(threads, scenario.nodes_used(&machine_cfg));
+            let w = m.measured.work_flops as f64;
+            let q = m.measured.traffic_bytes as f64;
+            let r = m.runtime.seconds;
+            assert!(r * pi >= w * 0.999, "W bound: {} < {}", r * pi, w);
+            assert!(r * beta >= q * 0.99, "Q bound: {} < {}", r * beta, q);
+        },
+    );
+}
+
+#[test]
+fn prop_warm_traffic_never_exceeds_cold() {
+    check(
+        "warm Q <= cold Q",
+        |rng, _| (rng.range(32, 128), rng.range(32, 256)),
+        |&(m, k)| {
+            let kernel = InnerProduct::new(m, k, 64);
+            let mut machine = Machine::new(MachineConfig::xeon_6248());
+            let cold =
+                measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Cold)
+                    .unwrap();
+            let warm =
+                measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Warm)
+                    .unwrap();
+            assert!(
+                warm.measured.traffic_bytes <= cold.measured.traffic_bytes,
+                "warm {} > cold {}",
+                warm.measured.traffic_bytes,
+                cold.measured.traffic_bytes
+            );
+        },
+    );
+}
