@@ -1,6 +1,6 @@
 //! Bench: regenerate every appendix roofline (layer norm, GELU with
 //! favourable dims, inner product and pooling at socket/two-socket
-//! scale) — EXP-A1..A4 in DESIGN.md §4.
+//! scale) — EXP-A1..A4, resolved through the spec registry (DESIGN.md §4).
 
 #[path = "common.rs"]
 mod common;

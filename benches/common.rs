@@ -1,10 +1,16 @@
-//! Shared bench scaffolding: run a paper experiment, print the same rows
-//! the paper reports (per-kernel utilisation + paper-vs-measured), and
-//! time the full measurement pipeline with `benchkit`.
+//! Shared bench scaffolding: resolve a figure in the declarative spec
+//! registry, print the same rows the paper reports (per-kernel
+//! utilisation + paper-vs-measured), and time the full measurement
+//! pipeline with `benchkit`.
+//!
+//! Each `fig*.rs` bench is a one-line registry lookup — experiment ids,
+//! kernels, scenarios and params all come from
+//! `dlroofline::harness::spec::registry()`, never from the bench itself.
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::coordinator::runner::render_report;
-use dlroofline::harness::experiments::{run_experiment, ExperimentParams};
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::spec;
 
 /// Default params for benches: modest batch so a full `cargo bench`
 /// stays in minutes; honour DLROOFLINE_BENCH_FULL=1 for paper sizes.
@@ -15,26 +21,29 @@ pub fn bench_params() -> ExperimentParams {
     }
 }
 
-/// Run one figure experiment: print its report (the paper's rows) and
+/// Run one registry experiment: print its report (the paper's rows) and
 /// benchmark the simulation pipeline end-to-end.
 pub fn figure_bench(id: &str) {
+    let spec = spec::find(id).expect("experiment id in spec registry");
     let params = bench_params();
 
     // The scientific output: the figure itself.
-    let result = run_experiment(id, &params).expect("experiment");
+    let result = spec.run(&params).expect("experiment");
     print!("{}", render_report(&result));
 
     // The engineering output: how fast the pipeline regenerates it.
-    let mut b = Bencher::new(&format!("pipeline/{id}"));
+    let mut b = Bencher::new(&format!("pipeline/{}", spec.id));
     let flops: f64 = result
         .groups
         .iter()
         .flat_map(|g| g.measurements.iter())
         .map(|m| m.measured.work_flops as f64)
         .sum();
-    b.bench(&format!("regenerate_{id}"), Throughput::Flops(flops.max(1.0)), || {
-        run_experiment(id, &params).expect("experiment rerun")
-    });
+    b.bench(
+        &format!("regenerate_{}", spec.id),
+        Throughput::Flops(flops.max(1.0)),
+        || spec.run(&params).expect("experiment rerun"),
+    );
     b.finish();
 }
 

@@ -1,5 +1,7 @@
 //! Bench: regenerate the paper's Fig7 average pooling figure.
-//! Workload, kernels and expected numbers: DESIGN.md §4 (EXP-F7).
+//! Workload, kernels and expectations resolve through the spec registry
+//! (`harness::spec::registry()`, DESIGN.md §4, EXP-F7) — nothing is
+//! duplicated here.
 
 #[path = "common.rs"]
 mod common;

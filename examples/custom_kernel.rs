@@ -10,7 +10,7 @@
 //! ```
 
 use dlroofline::coordinator::KernelRegistry;
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
 use dlroofline::kernels::{KernelModel, TensorMap};
 use dlroofline::roofline::model::RooflineModel;
 use dlroofline::roofline::plot::ascii_plot;
@@ -83,9 +83,9 @@ fn main() -> anyhow::Result<()> {
     let kernel = registry.create("axpy", 16)?; // 16 Mi elements = 64 MiB/array
 
     let mut points = Vec::new();
-    for scenario in [Scenario::SingleThread, Scenario::SingleSocket] {
+    for scenario in [ScenarioSpec::single_thread(), ScenarioSpec::one_socket()] {
         let mut machine = Machine::new(config.clone());
-        let m = measure_kernel(&mut machine, kernel.as_ref(), scenario, CacheState::Cold)?;
+        let m = measure_kernel(&mut machine, kernel.as_ref(), &scenario, CacheState::Cold)?;
         points.push(m.point().with_note(scenario.label()));
     }
 

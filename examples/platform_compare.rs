@@ -5,7 +5,7 @@
 //! cargo run --release --example platform_compare
 //! ```
 
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
 use dlroofline::kernels::conv_direct::ConvDirectBlocked;
 use dlroofline::kernels::gelu::{EltwiseShape, GeluNchw};
 use dlroofline::kernels::ConvShape;
@@ -40,7 +40,12 @@ fn main() -> anyhow::Result<()> {
         );
         for kernel in [&conv as &dyn dlroofline::kernels::KernelModel, &gelu] {
             let mut machine = Machine::new(config.clone());
-            let m = measure_kernel(&mut machine, kernel, Scenario::SingleSocket, CacheState::Cold)?;
+            let m = measure_kernel(
+                &mut machine,
+                kernel,
+                &ScenarioSpec::one_socket(),
+                CacheState::Cold,
+            )?;
             let p = m.point();
             println!(
                 "{:<16} {:<22} {:>12} {:>10} {:>10} {:>8}",

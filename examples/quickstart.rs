@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
 use dlroofline::kernels::inner_product::InnerProduct;
 use dlroofline::roofline::model::RooflineModel;
 use dlroofline::roofline::plot::ascii_plot;
@@ -22,8 +22,9 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Measure W (PMU model), Q (cache sim → IMC) and R (timing model)
     //    under the single-thread scenario, cold and warm.
-    let cold = measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Cold)?;
-    let warm = measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Warm)?;
+    let st = ScenarioSpec::single_thread();
+    let cold = measure_kernel(&mut machine, &kernel, &st, CacheState::Cold)?;
+    let warm = measure_kernel(&mut machine, &kernel, &st, CacheState::Warm)?;
 
     // 4. The roofline for that scenario, with both points.
     let roofline = RooflineModel::for_machine(&config, 1, 1, "single-thread");

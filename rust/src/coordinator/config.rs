@@ -39,12 +39,10 @@ mod tests {
 
     #[test]
     fn config_file_resolves() {
-        let dir = std::env::temp_dir().join(format!("dlr-cfg-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = crate::testutil::TempDir::new("cfg");
         let path = dir.join("m.toml");
         std::fs::write(&path, "name = \"small\"\nsockets = 1\ncores_per_socket = 2\n").unwrap();
         let m = resolve_machine(path.to_str().unwrap()).unwrap();
         assert_eq!(m.cores(), 2);
-        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

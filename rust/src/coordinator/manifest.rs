@@ -1,0 +1,348 @@
+//! Versioned run manifests: every sweep/figure run emits a `run.json`
+//! describing exactly what was measured — schema version, machine
+//! fingerprint, workload params, per-cell W/Q/R results and checksums of
+//! every report file written — so a run is a reproducible, diffable
+//! artifact rather than a pile of markdown.
+//!
+//! The manifest is deliberately free of wall-clock time, hostnames and
+//! job counts: `--jobs 1` and `--jobs N` sweeps of the same plan must
+//! produce byte-identical manifests (asserted by the integration tests).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::harness::experiments::ExperimentParams;
+use crate::util::fsutil::write_atomic;
+use crate::util::hash::{fnv1a_64_hex, hex64};
+use crate::util::json::Json;
+
+use super::plan::{ExecutedCell, PlanStats};
+
+/// Current manifest schema version. Bump on breaking layout changes;
+/// [`RunManifest::from_json`] rejects documents from other versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One measured cell's identity and W/Q/R results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    pub experiment: String,
+    pub kernel: String,
+    pub scenario: String,
+    pub cache: String,
+    /// Content hash (hex) — the memoization key.
+    pub key: String,
+    /// Served from the memo table rather than re-simulated.
+    pub reused: bool,
+    pub threads: usize,
+    /// Work W (FLOPs, PMU-derived).
+    pub work_flops: u64,
+    /// Traffic Q (bytes through the IMCs).
+    pub traffic_bytes: u64,
+    /// Runtime R (modelled seconds).
+    pub runtime_seconds: f64,
+}
+
+impl CellRecord {
+    pub fn from_executed(cell: &ExecutedCell) -> CellRecord {
+        CellRecord {
+            experiment: cell.plan.experiment.clone(),
+            kernel: cell.plan.kernel.clone(),
+            scenario: cell.plan.scenario.clone(),
+            cache: cell.plan.cache.clone(),
+            key: hex64(cell.plan.key),
+            reused: cell.plan.reused,
+            threads: cell.measurement.threads,
+            work_flops: cell.measurement.measured.work_flops,
+            traffic_bytes: cell.measurement.measured.traffic_bytes,
+            runtime_seconds: cell.measurement.runtime.seconds,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str(self.experiment.as_str())),
+            ("kernel", Json::str(self.kernel.as_str())),
+            ("scenario", Json::str(self.scenario.as_str())),
+            ("cache", Json::str(self.cache.as_str())),
+            ("key", Json::str(self.key.as_str())),
+            ("reused", Json::Bool(self.reused)),
+            ("threads", Json::num(self.threads as f64)),
+            ("work_flops", Json::num(self.work_flops as f64)),
+            ("traffic_bytes", Json::num(self.traffic_bytes as f64)),
+            ("runtime_seconds", Json::num(self.runtime_seconds)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<CellRecord> {
+        Ok(CellRecord {
+            experiment: v.expect("experiment")?.as_str()?.to_string(),
+            kernel: v.expect("kernel")?.as_str()?.to_string(),
+            scenario: v.expect("scenario")?.as_str()?.to_string(),
+            cache: v.expect("cache")?.as_str()?.to_string(),
+            key: v.expect("key")?.as_str()?.to_string(),
+            reused: v.expect("reused")?.as_bool()?,
+            threads: v.expect("threads")?.as_usize()?,
+            work_flops: v.expect("work_flops")?.as_f64()? as u64,
+            traffic_bytes: v.expect("traffic_bytes")?.as_f64()? as u64,
+            runtime_seconds: v.expect("runtime_seconds")?.as_f64()?,
+        })
+    }
+}
+
+/// A report file the run wrote, with its content checksum.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileRecord {
+    /// Path relative to the run's output directory.
+    pub path: String,
+    pub bytes: u64,
+    /// `fnv1a64:<hex>` of the file contents.
+    pub checksum: String,
+}
+
+impl FileRecord {
+    /// Record a file from its (already written) contents.
+    pub fn from_content(path: &str, content: &str) -> FileRecord {
+        FileRecord {
+            path: path.to_string(),
+            bytes: content.len() as u64,
+            checksum: format!("fnv1a64:{}", fnv1a_64_hex(content.as_bytes())),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.path.as_str())),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("checksum", Json::str(self.checksum.as_str())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<FileRecord> {
+        Ok(FileRecord {
+            path: v.expect("path")?.as_str()?.to_string(),
+            bytes: v.expect("bytes")?.as_f64()? as u64,
+            checksum: v.expect("checksum")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The versioned description of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunManifest {
+    pub schema_version: u64,
+    pub generator: String,
+    /// Machine fingerprint document (see
+    /// [`crate::sim::machine::MachineConfig::fingerprint_json`]).
+    pub machine: Json,
+    /// Hex hash of the machine document.
+    pub machine_fingerprint: String,
+    pub full_size: bool,
+    pub batch: Option<usize>,
+    /// Experiment ids in run order.
+    pub experiments: Vec<String>,
+    /// How many of those were narrative (non-grid) experiments.
+    pub specials: usize,
+    /// Cells the machine could not express (not listed in `cells`).
+    pub cells_skipped: usize,
+    pub cells: Vec<CellRecord>,
+    pub files: Vec<FileRecord>,
+}
+
+impl RunManifest {
+    /// Build a manifest for an executed plan (files added separately as
+    /// they are written).
+    pub fn new(
+        params: &ExperimentParams,
+        experiments: &[&str],
+        cells: &[ExecutedCell],
+        stats: &PlanStats,
+    ) -> Self {
+        RunManifest {
+            schema_version: SCHEMA_VERSION,
+            generator: format!("dlroofline {}", crate::VERSION),
+            machine: params.machine.fingerprint_json(),
+            machine_fingerprint: params.machine.fingerprint(),
+            full_size: params.full_size,
+            batch: params.batch,
+            experiments: experiments.iter().map(|s| s.to_string()).collect(),
+            specials: stats.specials,
+            cells_skipped: stats.cells_skipped,
+            cells: cells.iter().map(CellRecord::from_executed).collect(),
+            files: Vec::new(),
+        }
+    }
+
+    /// Record a written report file.
+    pub fn add_file(&mut self, rel_path: &str, content: &str) {
+        self.files.push(FileRecord::from_content(rel_path, content));
+    }
+
+    /// Plan statistics recoverable from the manifest itself.
+    pub fn stats(&self) -> PlanStats {
+        let reused = self.cells.iter().filter(|c| c.reused).count();
+        PlanStats {
+            experiments: self.experiments.len(),
+            specials: self.specials,
+            cells_total: self.cells.len() + self.cells_skipped,
+            cells_simulated: self.cells.len() - reused,
+            cells_reused: reused,
+            cells_skipped: self.cells_skipped,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("generator", Json::str(self.generator.as_str())),
+            ("machine", self.machine.clone()),
+            ("machine_fingerprint", Json::str(self.machine_fingerprint.as_str())),
+            ("full_size", Json::Bool(self.full_size)),
+            (
+                "batch",
+                match self.batch {
+                    Some(b) => Json::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "experiments",
+                Json::arr(self.experiments.iter().map(|s| Json::str(s.as_str())).collect()),
+            ),
+            ("specials", Json::num(self.specials as f64)),
+            ("cells_skipped", Json::num(self.cells_skipped as f64)),
+            ("cells", Json::arr(self.cells.iter().map(|c| c.to_json()).collect())),
+            ("files", Json::arr(self.files.iter().map(|f| f.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunManifest> {
+        let version = v.expect("schema_version")?.as_f64()? as u64;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "run manifest schema version {version} unsupported (this build reads {SCHEMA_VERSION})"
+            );
+        }
+        let batch = match v.expect("batch")? {
+            Json::Null => None,
+            other => Some(other.as_usize()?),
+        };
+        Ok(RunManifest {
+            schema_version: version,
+            generator: v.expect("generator")?.as_str()?.to_string(),
+            machine: v.expect("machine")?.clone(),
+            machine_fingerprint: v.expect("machine_fingerprint")?.as_str()?.to_string(),
+            full_size: v.expect("full_size")?.as_bool()?,
+            batch,
+            experiments: v
+                .expect("experiments")?
+                .as_arr()?
+                .iter()
+                .map(|e| Ok(e.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            specials: v.expect("specials")?.as_usize()?,
+            cells_skipped: v.expect("cells_skipped")?.as_usize()?,
+            cells: v
+                .expect("cells")?
+                .as_arr()?
+                .iter()
+                .map(CellRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            files: v
+                .expect("files")?
+                .as_arr()?
+                .iter()
+                .map(FileRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Serialise (pretty, deterministic — object keys are sorted).
+    pub fn to_string_pretty(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Write to `path` atomically.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_string_pretty())
+    }
+
+    /// Load and validate from `path`.
+    pub fn load(path: &Path) -> Result<RunManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        RunManifest::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    fn small_manifest() -> RunManifest {
+        let params = quick();
+        let outcome = plan::execute(&["f6"], &params, 1, false).unwrap();
+        let mut m = RunManifest::new(&params, &["f6"], &outcome.cells, &outcome.stats);
+        m.add_file("f6.md", "# report body");
+        m
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let m = small_manifest();
+        let text = m.to_string_pretty();
+        let back = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_future_schema() {
+        let mut doc = small_manifest().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema_version".into(), Json::num(99.0));
+        }
+        let err = RunManifest::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("schema version 99"), "{err}");
+    }
+
+    #[test]
+    fn cells_carry_wqr() {
+        let m = small_manifest();
+        assert_eq!(m.cells.len(), 2); // f6: cold + warm
+        for c in &m.cells {
+            assert_eq!(c.experiment, "f6");
+            assert_eq!(c.kernel, "inner_product");
+            assert!(c.work_flops > 0);
+            assert!(c.traffic_bytes > 0);
+            assert!(c.runtime_seconds > 0.0);
+            assert_eq!(c.key.len(), 16);
+        }
+        assert_eq!(m.stats().cells_total, 2);
+    }
+
+    #[test]
+    fn file_checksums_are_content_hashes() {
+        let a = FileRecord::from_content("x.md", "same");
+        let b = FileRecord::from_content("y.md", "same");
+        let c = FileRecord::from_content("x.md", "different");
+        assert_eq!(a.checksum, b.checksum);
+        assert_ne!(a.checksum, c.checksum);
+        assert!(a.checksum.starts_with("fnv1a64:"));
+    }
+
+    #[test]
+    fn write_and_load() {
+        let dir = crate::testutil::TempDir::new("manifest");
+        let path = dir.path().join("run.json");
+        let m = small_manifest();
+        m.write(&path).unwrap();
+        let back = RunManifest::load(&path).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,9 +1,14 @@
-//! The coordinator: kernel registry, experiment runner and report
-//! emission — everything behind the `dlroofline` CLI.
+//! The coordinator: kernel registry, parallel plan executor, versioned
+//! run manifests, experiment runner and report emission — everything
+//! behind the `dlroofline` CLI.
 
 pub mod config;
+pub mod manifest;
+pub mod plan;
 pub mod registry;
 pub mod runner;
 
+pub use manifest::{RunManifest, SCHEMA_VERSION};
+pub use plan::{PlanOutcome, PlanStats};
 pub use registry::KernelRegistry;
-pub use runner::{render_report, run_and_write, RunOutput};
+pub use runner::{render_report, run_and_write, sweep_and_write, RunOutput, SweepOutput};

@@ -1,0 +1,370 @@
+//! The parallel plan executor: expand experiment specs into independent
+//! measurement cells, deduplicate them by content hash, simulate the
+//! unique cells on a scoped thread pool, and assemble every experiment's
+//! result from the memo table.
+//!
+//! Cells are pure simulations of a fresh [`crate::sim::machine::Machine`]
+//! — embarrassingly parallel and fully deterministic — so a `--jobs N`
+//! sweep produces bit-identical results (and manifests) to `--jobs 1`;
+//! only wall-clock changes. Memoization is by the cell content hash
+//! (machine fingerprint × kernel identity × scenario data × cache
+//! state), so multi-figure sweeps stop re-simulating shared cells: the
+//! `g1` scenario grid reuses all of f3/f4/f5's convolution cells, for
+//! example. Cells whose scenario the machine cannot express (e.g.
+//! `remote-only` on one socket) are skipped at expansion — counted, not
+//! fatal — mirroring the skip in
+//! [`crate::harness::spec::ExperimentSpec::run_with`].
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::harness::experiments::{ExperimentParams, ExperimentResult};
+use crate::harness::measure::KernelMeasurement;
+use crate::harness::spec::{self, ExperimentSpec, SpecKind};
+
+/// A sensible default for `--jobs 0` (auto).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Counters describing what a plan did (or would do).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Experiments in the plan.
+    pub experiments: usize,
+    /// Narrative (non-grid) experiments executed serially.
+    pub specials: usize,
+    /// Total grid cells across the plan (naive expansion, including
+    /// cells the machine cannot express).
+    pub cells_total: usize,
+    /// Cells actually simulated after content-hash memoization.
+    pub cells_simulated: usize,
+    /// Cells served from the memo table instead of re-simulating.
+    pub cells_reused: usize,
+    /// Cells skipped because the machine cannot express their scenario.
+    pub cells_skipped: usize,
+}
+
+/// Static description of one planned (expressible) cell.
+#[derive(Clone, Debug)]
+pub struct CellPlan {
+    pub experiment: String,
+    pub kernel: String,
+    pub scenario: String,
+    pub cache: String,
+    /// Content hash — render with [`crate::util::hash::hex64`] at
+    /// display/manifest boundaries.
+    pub key: u64,
+    /// Whether an earlier cell in the plan already covers this key.
+    pub reused: bool,
+}
+
+/// One planned cell with its (possibly memoized) measurement.
+#[derive(Clone, Debug)]
+pub struct ExecutedCell {
+    pub plan: CellPlan,
+    pub measurement: KernelMeasurement,
+}
+
+/// The expansion of a list of experiment ids against fixed params.
+pub struct Expansion {
+    pub specs: Vec<ExperimentSpec>,
+    /// Every expressible planned cell, in deterministic plan order.
+    pub cells: Vec<CellPlan>,
+    /// Unique cells to simulate: (content hash, representative cell).
+    unique: Vec<(u64, spec::Cell)>,
+    pub stats: PlanStats,
+}
+
+/// Expand `ids` into a deduplicated cell plan. Fails on unknown ids;
+/// cells the machine cannot express are counted as skipped, not fatal.
+pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {
+    let specs = spec::find_all(ids)?;
+    // The machine fingerprint document is identical for every cell of the
+    // plan; serialise it once.
+    let machine_fp = params.machine.fingerprint_json();
+
+    let mut cells = Vec::new();
+    let mut unique: Vec<(u64, spec::Cell)> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stats = PlanStats {
+        experiments: specs.len(),
+        ..Default::default()
+    };
+    for s in &specs {
+        if matches!(s.kind, SpecKind::Special(_)) {
+            stats.specials += 1;
+        }
+        for cell in s.cells() {
+            stats.cells_total += 1;
+            if cell.scenario.validate(&params.machine).is_err() {
+                stats.cells_skipped += 1;
+                continue;
+            }
+            let kernel = cell.kernel.build(params);
+            let key = cell.key_parts(&machine_fp, kernel.as_ref());
+            let reused = !seen.insert(key);
+            if !reused {
+                unique.push((key, cell.clone()));
+            }
+            cells.push(CellPlan {
+                experiment: cell.experiment.to_string(),
+                kernel: kernel.name(),
+                scenario: cell.scenario.name.clone(),
+                cache: cell.cache.label().to_string(),
+                key,
+                reused,
+            });
+        }
+    }
+    stats.cells_simulated = unique.len();
+    stats.cells_reused = stats.cells_total - stats.cells_skipped - unique.len();
+    Ok(Expansion { specs, cells, unique, stats })
+}
+
+/// Everything a plan execution produces.
+pub struct PlanOutcome {
+    /// One result per requested experiment, in request order.
+    pub results: Vec<ExperimentResult>,
+    /// Every planned cell with its measurement, in plan order.
+    pub cells: Vec<ExecutedCell>,
+    pub stats: PlanStats,
+}
+
+/// Execute a plan: simulate unique cells on `jobs` worker threads
+/// (`jobs == 0` picks [`default_jobs`]), then assemble every experiment
+/// from the memo table. Specials run serially on the calling thread.
+///
+/// With `tolerate_special_failures`, a narrative experiment that cannot
+/// run on this machine (e.g. `m1` on one socket) yields a placeholder
+/// result carrying the error as a note instead of aborting the plan —
+/// what a multi-experiment sweep wants; a single-figure run wants the
+/// error.
+pub fn execute(
+    ids: &[&str],
+    params: &ExperimentParams,
+    jobs: usize,
+    tolerate_special_failures: bool,
+) -> Result<PlanOutcome> {
+    let expansion = expand(ids, params)?;
+    let jobs = if jobs == 0 { default_jobs() } else { jobs };
+
+    let memo = simulate_unique(&expansion.unique, params, jobs)?;
+
+    // Assemble experiments in request order from the memo table. The
+    // grid walk in `run_with` visits cells in exactly the order `expand`
+    // planned them (same expansion, same skip filter), so a cursor over
+    // the plan's cell list replaces any key recomputation; the identity
+    // check turns a future divergence into an error instead of silently
+    // mixing up cells.
+    let mut results = Vec::new();
+    let mut cursor = 0usize;
+    for s in &expansion.specs {
+        let outcome = s.run_with(params, &mut |cell: &spec::Cell| {
+            let plan = expansion
+                .cells
+                .get(cursor)
+                .ok_or_else(|| anyhow!("plan exhausted at cell {cursor} (planner bug)"))?;
+            if plan.experiment != cell.experiment
+                || plan.scenario != cell.scenario.name
+                || plan.cache != cell.cache.label()
+            {
+                bail!(
+                    "plan/assembly order diverged at cell {cursor}: planned \
+                     {}/{}/{}, assembling {}/{}/{} (planner bug)",
+                    plan.experiment,
+                    plan.scenario,
+                    plan.cache,
+                    cell.experiment,
+                    cell.scenario.name,
+                    cell.cache.label()
+                );
+            }
+            cursor += 1;
+            memo.get(&plan.key)
+                .cloned()
+                .ok_or_else(|| anyhow!("cell {:#x} missing from memo table (planner bug)", plan.key))
+        });
+        match (outcome, &s.kind) {
+            (Ok(r), _) => results.push(r),
+            (Err(e), SpecKind::Special(_)) if tolerate_special_failures => {
+                results.push(ExperimentResult {
+                    id: s.id.into(),
+                    title: s.title.into(),
+                    notes: vec![format!("skipped on this machine: {e:#}")],
+                    ..Default::default()
+                });
+            }
+            (Err(e), _) => return Err(e),
+        }
+    }
+
+    // Attach measurements to the plan's cell list.
+    let cells = expansion
+        .cells
+        .iter()
+        .map(|plan| ExecutedCell {
+            plan: plan.clone(),
+            measurement: memo.get(&plan.key).expect("planned cell measured").clone(),
+        })
+        .collect();
+
+    Ok(PlanOutcome { results, cells, stats: expansion.stats })
+}
+
+/// Simulate each unique cell exactly once, in parallel.
+fn simulate_unique(
+    unique: &[(u64, spec::Cell)],
+    params: &ExperimentParams,
+    jobs: usize,
+) -> Result<HashMap<u64, KernelMeasurement>> {
+    let mut memo = HashMap::with_capacity(unique.len());
+    if unique.is_empty() {
+        return Ok(memo);
+    }
+    let workers = jobs.clamp(1, unique.len());
+    if workers == 1 {
+        for (key, cell) in unique {
+            memo.insert(*key, cell.simulate(params)?);
+        }
+        return Ok(memo);
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<KernelMeasurement>>>> =
+        (0..unique.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= unique.len() {
+                    break;
+                }
+                let outcome = unique[idx].1.simulate(params);
+                *slots[idx].lock().unwrap() = Some(outcome);
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        let outcome = slot
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| anyhow!("worker never reached cell {i} (planner bug)"))?;
+        memo.insert(unique[i].0, outcome?);
+    }
+    Ok(memo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    #[test]
+    fn expand_dedups_shared_cells() {
+        let params = quick();
+        let e = expand(&["f3", "f4", "f5", "g1"], &params).unwrap();
+        // f3/f4/f5 contribute 9 conv cells that reappear inside g1's
+        // 18-cell grid: naive 27, unique 18.
+        assert_eq!(e.stats.cells_total, 27);
+        assert_eq!(e.stats.cells_simulated, 18);
+        assert_eq!(e.stats.cells_reused, 9);
+        assert_eq!(e.stats.cells_skipped, 0);
+        assert_eq!(e.stats.experiments, 4);
+        assert_eq!(e.stats.specials, 0);
+        // The reused flags mark exactly the g1 duplicates.
+        assert_eq!(e.cells.iter().filter(|c| c.reused).count(), 9);
+    }
+
+    #[test]
+    fn expand_skips_inexpressible_cells() {
+        // g1's remote-only column (3 kernels) cannot run on one socket:
+        // skipped and counted, not fatal.
+        let mut params = quick();
+        params.machine = crate::sim::machine::MachineConfig::xeon_6248_1s();
+        let e = expand(&["g1"], &params).unwrap();
+        assert_eq!(e.stats.cells_total, 18);
+        assert_eq!(e.stats.cells_skipped, 3);
+        assert_eq!(e.stats.cells_simulated, 15);
+        assert!(e.cells.iter().all(|c| c.scenario != "remote-only"));
+    }
+
+    #[test]
+    fn expand_rejects_unknown_id() {
+        assert!(expand(&["f3", "zz"], &quick()).is_err());
+    }
+
+    #[test]
+    fn execute_serial_matches_direct_run() {
+        let params = quick();
+        let direct = crate::harness::experiments::run_experiment("f6", &params).unwrap();
+        let outcome = execute(&["f6"], &params, 1, false).unwrap();
+        assert_eq!(outcome.results.len(), 1);
+        let planned = &outcome.results[0];
+        assert_eq!(planned.id, direct.id);
+        assert_eq!(planned.groups.len(), direct.groups.len());
+        for (a, b) in planned.groups[0]
+            .measurements
+            .iter()
+            .zip(direct.groups[0].measurements.iter())
+        {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.measured.work_flops, b.measured.work_flops);
+            assert_eq!(a.measured.traffic_bytes, b.measured.traffic_bytes);
+            assert_eq!(a.runtime.seconds.to_bits(), b.runtime.seconds.to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_execution_is_deterministic() {
+        let params = quick();
+        let serial = execute(&["f3", "f6"], &params, 1, false).unwrap();
+        let parallel = execute(&["f3", "f6"], &params, 4, false).unwrap();
+        assert_eq!(serial.stats, parallel.stats);
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        for (a, b) in serial.cells.iter().zip(parallel.cells.iter()) {
+            assert_eq!(a.plan.key, b.plan.key);
+            assert_eq!(
+                a.measurement.runtime.seconds.to_bits(),
+                b.measurement.runtime.seconds.to_bits(),
+                "cell {} diverged between --jobs 1 and --jobs 4",
+                a.plan.key
+            );
+        }
+    }
+
+    #[test]
+    fn specials_flow_through_plan() {
+        let outcome = execute(&["p1", "v1"], &quick(), 2, false).unwrap();
+        assert_eq!(outcome.results.len(), 2);
+        assert_eq!(outcome.stats.specials, 2);
+        assert_eq!(outcome.stats.cells_total, 0);
+        assert!(!outcome.results[0].tables.is_empty());
+    }
+
+    #[test]
+    fn tolerant_execute_survives_impossible_special() {
+        // m1 needs two sockets; tolerant mode records the skip, strict
+        // mode propagates the error.
+        let mut params = quick();
+        params.machine = crate::sim::machine::MachineConfig::xeon_6248_1s();
+        assert!(execute(&["m1"], &params, 1, false).is_err());
+        let outcome = execute(&["f3", "m1"], &params, 1, true).unwrap();
+        assert_eq!(outcome.results.len(), 2);
+        assert!(outcome.results[1]
+            .notes
+            .iter()
+            .any(|n| n.contains("skipped on this machine")));
+        // The runnable experiment still produced real groups.
+        assert!(!outcome.results[0].groups.is_empty());
+    }
+}

@@ -1,16 +1,20 @@
-//! Experiment runner: execute an experiment, render the full report
-//! (markdown tables + ASCII roofline + paper comparison), and write
-//! markdown/SVG/CSV files under a reports directory.
+//! Experiment runner: execute experiments through the plan executor,
+//! render the full report (markdown tables + ASCII roofline + paper
+//! comparison), and write markdown/SVG/CSV files plus a versioned
+//! `run.json` manifest under a reports directory.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
-use crate::harness::experiments::{run_experiment, ExperimentParams, ExperimentResult};
+use crate::harness::experiments::{ExperimentParams, ExperimentResult};
 use crate::roofline::plot::ascii_plot;
 use crate::roofline::report::{comparison_table, csv, markdown_table};
 use crate::roofline::svg::svg_plot;
 use crate::util::fsutil::write_atomic;
+
+use super::manifest::RunManifest;
+use super::plan::{self, PlanStats};
 
 /// Paths written for one experiment.
 #[derive(Clone, Debug, Default)]
@@ -18,6 +22,17 @@ pub struct RunOutput {
     pub markdown: Option<PathBuf>,
     pub svgs: Vec<PathBuf>,
     pub csvs: Vec<PathBuf>,
+    /// The versioned `*.run.json` manifest for the run.
+    pub manifest: Option<PathBuf>,
+}
+
+/// Everything a multi-experiment sweep wrote.
+#[derive(Clone, Debug, Default)]
+pub struct SweepOutput {
+    pub outputs: Vec<RunOutput>,
+    /// The sweep-wide `run.json`.
+    pub manifest: Option<PathBuf>,
+    pub stats: PlanStats,
 }
 
 /// Render the complete textual report for an experiment result.
@@ -44,19 +59,22 @@ pub fn render_report(result: &ExperimentResult) -> String {
     out
 }
 
-/// Run an experiment and write its report files under `out_dir`.
-pub fn run_and_write(
-    id: &str,
-    params: &ExperimentParams,
+/// Write one experiment result's report files under `out_dir`, recording
+/// each file in `manifest`.
+fn write_result_files(
+    result: &ExperimentResult,
     out_dir: &Path,
     with_svg: bool,
-) -> Result<(ExperimentResult, RunOutput)> {
-    let result = run_experiment(id, params)?;
+    manifest: &mut RunManifest,
+) -> Result<RunOutput> {
     let mut output = RunOutput::default();
+    let id = &result.id;
 
-    let md_path = out_dir.join(format!("{id}.md"));
-    write_atomic(&md_path, &render_report(&result))?;
-    output.markdown = Some(md_path);
+    let md_name = format!("{id}.md");
+    let body = render_report(result);
+    write_atomic(&out_dir.join(&md_name), &body)?;
+    manifest.add_file(&md_name, &body);
+    output.markdown = Some(out_dir.join(&md_name));
 
     for (i, group) in result.groups.iter().enumerate() {
         let points = group.points();
@@ -66,20 +84,74 @@ pub fn run_and_write(
             String::new()
         };
         if with_svg {
-            let svg_path = out_dir.join(format!("{id}{suffix}.svg"));
-            write_atomic(&svg_path, &svg_plot(&group.roofline, &points))?;
-            output.svgs.push(svg_path);
+            let svg_name = format!("{id}{suffix}.svg");
+            let svg_body = svg_plot(&group.roofline, &points);
+            write_atomic(&out_dir.join(&svg_name), &svg_body)?;
+            manifest.add_file(&svg_name, &svg_body);
+            output.svgs.push(out_dir.join(svg_name));
         }
-        let csv_path = out_dir.join(format!("{id}{suffix}.csv"));
-        write_atomic(&csv_path, &csv(&group.roofline, &points))?;
-        output.csvs.push(csv_path);
+        let csv_name = format!("{id}{suffix}.csv");
+        let csv_body = csv(&group.roofline, &points);
+        write_atomic(&out_dir.join(&csv_name), &csv_body)?;
+        manifest.add_file(&csv_name, &csv_body);
+        output.csvs.push(out_dir.join(csv_name));
     }
+    Ok(output)
+}
+
+/// Run one experiment and write its report files + `<id>.run.json`
+/// manifest under `out_dir`.
+pub fn run_and_write(
+    id: &str,
+    params: &ExperimentParams,
+    out_dir: &Path,
+    with_svg: bool,
+) -> Result<(ExperimentResult, RunOutput)> {
+    let outcome = plan::execute(&[id], params, 1, false)?;
+    let result = outcome
+        .results
+        .into_iter()
+        .next()
+        .expect("one experiment requested, one result");
+    let mut manifest = RunManifest::new(params, &[id], &outcome.cells, &outcome.stats);
+    let mut output = write_result_files(&result, out_dir, with_svg, &mut manifest)?;
+    let manifest_path = out_dir.join(format!("{id}.run.json"));
+    manifest.write(&manifest_path)?;
+    output.manifest = Some(manifest_path);
     Ok((result, output))
+}
+
+/// Run many experiments as one memoized, parallel plan; write every
+/// report plus a sweep-wide `run.json` manifest.
+pub fn sweep_and_write(
+    ids: &[&str],
+    params: &ExperimentParams,
+    out_dir: &Path,
+    with_svg: bool,
+    jobs: usize,
+) -> Result<(Vec<ExperimentResult>, SweepOutput)> {
+    let outcome = plan::execute(ids, params, jobs, true)?;
+    let mut manifest = RunManifest::new(params, ids, &outcome.cells, &outcome.stats);
+    let mut sweep = SweepOutput {
+        stats: outcome.stats,
+        ..Default::default()
+    };
+    for result in &outcome.results {
+        sweep
+            .outputs
+            .push(write_result_files(result, out_dir, with_svg, &mut manifest)?);
+    }
+    let manifest_path = out_dir.join("run.json");
+    manifest.write(&manifest_path)?;
+    sweep.manifest = Some(manifest_path);
+    Ok((outcome.results, sweep))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::harness::experiments::run_experiment;
+    use crate::testutil::TempDir;
 
     fn quick_params() -> ExperimentParams {
         ExperimentParams { batch: Some(1), ..Default::default() }
@@ -96,8 +168,8 @@ mod tests {
 
     #[test]
     fn run_and_write_produces_files() {
-        let dir = std::env::temp_dir().join(format!("dlr-run-{}", std::process::id()));
-        let (result, out) = run_and_write("f6", &quick_params(), &dir, true).unwrap();
+        let dir = TempDir::new("runner");
+        let (result, out) = run_and_write("f6", &quick_params(), dir.path(), true).unwrap();
         assert_eq!(result.id, "f6");
         assert!(out.markdown.as_ref().unwrap().exists());
         assert_eq!(out.svgs.len(), 1);
@@ -105,6 +177,42 @@ mod tests {
         let md = std::fs::read_to_string(out.markdown.unwrap()).unwrap();
         assert!(md.contains("inner_product"));
         assert!(md.contains("paper vs measured"));
-        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn run_and_write_emits_validating_manifest() {
+        let dir = TempDir::new("runner-manifest");
+        let (_, out) = run_and_write("f6", &quick_params(), dir.path(), false).unwrap();
+        let path = out.manifest.expect("manifest written");
+        let manifest = RunManifest::load(&path).unwrap();
+        assert_eq!(manifest.experiments, vec!["f6".to_string()]);
+        assert_eq!(manifest.cells.len(), 2);
+        // Recorded checksums must match the bytes on disk.
+        for f in &manifest.files {
+            let body = std::fs::read_to_string(dir.join(&f.path)).unwrap();
+            assert_eq!(
+                f.checksum,
+                crate::coordinator::manifest::FileRecord::from_content(&f.path, &body).checksum,
+                "{} checksum drifted",
+                f.path
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_memoizes_across_experiments() {
+        let dir = TempDir::new("sweep");
+        let params = quick_params();
+        let (results, sweep) =
+            sweep_and_write(&["f3", "g1"], &params, dir.path(), false, 2).unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(sweep.stats.cells_reused >= 3, "stats: {:?}", sweep.stats);
+        assert!(
+            sweep.stats.cells_simulated < sweep.stats.cells_total,
+            "memoization must beat naive expansion: {:?}",
+            sweep.stats
+        );
+        let manifest = RunManifest::load(&sweep.manifest.unwrap()).unwrap();
+        assert_eq!(manifest.stats(), sweep.stats);
     }
 }

@@ -1,16 +1,21 @@
-//! Per-figure experiment definitions — the executable index of DESIGN.md
-//! §4. Every figure/table in the paper's evaluation maps to one
-//! [`ExperimentResult`] producer here; benches and the CLI `figure`
-//! command are thin wrappers around [`run_experiment`].
+//! Experiment execution types and the narrative (non-grid) experiments.
+//!
+//! The per-figure definitions themselves live in the declarative spec
+//! registry ([`super::spec`]) — [`run_experiment`] is a registry lookup,
+//! not a match monolith. What remains here:
+//!
+//! * [`ExperimentParams`] / [`ExperimentResult`] / [`FigureGroup`] — the
+//!   shared result model;
+//! * workload-scale helpers (batch resolution per kernel family) used by
+//!   [`super::spec::KernelSpec::build`];
+//! * the *special* experiments that are characterisation tables or
+//!   methodology demonstrations rather than measurement grids: `p1`,
+//!   `p2`, `v1`, `v2` and the §2.5 binding artifact `m1`.
 
 use anyhow::{bail, Result};
 
-use crate::kernels::conv_direct::{ConvDirectBlocked, ConvDirectNchw};
 use crate::kernels::conv_winograd::ConvWinograd;
-use crate::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
-use crate::kernels::inner_product::InnerProduct;
-use crate::kernels::layernorm::LayerNorm;
-use crate::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, MaxPoolNote, PoolShape};
+use crate::kernels::gelu::{EltwiseShape, GeluNchw};
 use crate::kernels::reduction::SumReduction;
 use crate::kernels::{ConvShape, KernelModel};
 use crate::roofline::model::RooflineModel;
@@ -22,7 +27,8 @@ use crate::util::human::{fmt_bytes, fmt_flops, fmt_rate};
 
 use super::cache_state::CacheState;
 use super::measure::{measure_kernel, KernelMeasurement};
-use super::scenario::Scenario;
+use super::scenario::ScenarioSpec;
+use super::spec;
 
 /// Tunable workload parameters.
 #[derive(Clone, Debug)]
@@ -45,19 +51,23 @@ impl Default for ExperimentParams {
 }
 
 impl ExperimentParams {
-    fn conv_batch(&self) -> usize {
+    /// Batch for convolution workloads.
+    pub fn conv_batch(&self) -> usize {
         self.batch.unwrap_or(if self.full_size { 32 } else { 4 })
     }
 
-    fn gelu_batch(&self) -> usize {
+    /// Batch for GELU workloads.
+    pub fn gelu_batch(&self) -> usize {
         self.batch.unwrap_or(if self.full_size { 256 } else { 16 })
     }
 
-    fn pool_batch(&self) -> usize {
+    /// Batch for pooling workloads.
+    pub fn pool_batch(&self) -> usize {
         self.batch.unwrap_or(if self.full_size { 64 } else { 4 })
     }
 
-    fn ln_rows(&self) -> usize {
+    /// Row count for layer normalisation.
+    pub fn ln_rows(&self) -> usize {
         if self.full_size { 64 * 512 } else { 8 * 1024 }
     }
 }
@@ -88,56 +98,19 @@ pub struct ExperimentResult {
     pub notes: Vec<String>,
 }
 
-/// All experiment ids with titles (CLI `list`).
+/// All experiment ids with titles (CLI `list`), straight from the spec
+/// registry.
 pub fn experiment_index() -> Vec<(&'static str, &'static str)> {
-    vec![
-        ("f1", "Fig 1: simplified roofline example"),
-        ("p1", "§2.1: peak computational performance (simulated π)"),
-        ("p2", "§2.2: peak memory throughput (simulated β, binding & migration)"),
-        ("v1", "§2.3: FMA PMU counting validation"),
-        ("v2", "§2.4: traffic methodology (LLC-miss vs IMC, prefetchers)"),
-        ("f3", "Fig 3: convolution rooflines, single thread"),
-        ("f4", "Fig 4: convolution rooflines, one socket"),
-        ("f5", "Fig 5: convolution rooflines, two sockets"),
-        ("f6", "Fig 6: inner product, single thread, cold vs warm"),
-        ("f7", "Fig 7: average pooling, single thread, NCHW vs NCHW16C"),
-        ("f8", "Fig 8: GELU forced-blocked pathology, single core"),
-        ("a1", "Appendix: layer normalisation rooflines (3 scenarios)"),
-        ("a2", "Appendix: GELU favourable dims (3 scenarios)"),
-        ("a3", "Appendix: inner product, socket & two-socket"),
-        ("a4", "Appendix: average pooling, socket & two-socket"),
-        ("m1", "§2.5: unbound threads exceed the single-socket roof (why numactl matters)"),
-    ]
+    spec::registry().iter().map(|s| (s.id, s.title)).collect()
 }
 
-/// Run an experiment by id.
+/// Run an experiment by id — a registry lookup.
 pub fn run_experiment(id: &str, params: &ExperimentParams) -> Result<ExperimentResult> {
-    match id {
-        "f1" => exp_f1(params),
-        "p1" => exp_p1(params),
-        "p2" => exp_p2(params),
-        "v1" => exp_v1(params),
-        "v2" => exp_v2(params),
-        "f3" => exp_conv(params, Scenario::SingleThread, "f3"),
-        "f4" => exp_conv(params, Scenario::SingleSocket, "f4"),
-        "f5" => exp_conv(params, Scenario::TwoSocket, "f5"),
-        "f6" => exp_inner_product(params, &[Scenario::SingleThread], "f6"),
-        "f7" => exp_pooling(params, &[Scenario::SingleThread], "f7"),
-        "f8" => exp_gelu_forced(params),
-        "a1" => exp_layernorm(params),
-        "a2" => exp_gelu_favourable(params),
-        "a3" => exp_inner_product(
-            params,
-            &[Scenario::SingleSocket, Scenario::TwoSocket],
-            "a3",
-        ),
-        "a4" => exp_pooling(params, &[Scenario::SingleSocket, Scenario::TwoSocket], "a4"),
-        "m1" => exp_binding_artifact(params),
-        other => bail!("unknown experiment '{other}' (see `dlroofline list`)"),
-    }
+    spec::find(id)?.run(params)
 }
 
-fn roofline_for(params: &ExperimentParams, scenario: Scenario) -> RooflineModel {
+/// The roofline for a scenario on the params' machine.
+pub fn roofline_for(params: &ExperimentParams, scenario: &ScenarioSpec) -> RooflineModel {
     RooflineModel::for_machine(
         &params.machine,
         scenario.threads(&params.machine),
@@ -146,61 +119,17 @@ fn roofline_for(params: &ExperimentParams, scenario: Scenario) -> RooflineModel 
     )
 }
 
-fn measure_group(
-    params: &ExperimentParams,
-    scenario: Scenario,
-    kernels: &[&dyn KernelModel],
-    states: &[CacheState],
-    expectations: Vec<PaperExpectation>,
-) -> Result<FigureGroup> {
-    let mut machine = Machine::new(params.machine.clone());
-    let mut measurements = Vec::new();
-    for k in kernels {
-        for &cs in states {
-            measurements.push(measure_kernel(&mut machine, *k, scenario, cs)?);
-        }
-    }
-    Ok(FigureGroup {
-        roofline: roofline_for(params, scenario),
-        measurements,
-        expectations,
-    })
-}
-
-// ---------------------------------------------------------------------
-// Fig 1: the illustrative roofline
-// ---------------------------------------------------------------------
-
-fn exp_f1(params: &ExperimentParams) -> Result<ExperimentResult> {
-    let roofline = roofline_for(params, Scenario::SingleThread);
-    Ok(ExperimentResult {
-        id: "f1".into(),
-        title: "Simplified roofline example (Fig 1)".into(),
-        groups: vec![FigureGroup {
-            roofline,
-            measurements: vec![],
-            expectations: vec![],
-        }],
-        notes: vec![
-            "P = min(π, I·β) — kernels left of the ridge are memory-bound, \
-             right of it compute-bound."
-                .into(),
-        ],
-        ..Default::default()
-    })
-}
-
 // ---------------------------------------------------------------------
 // §2.1 / §2.2: platform characterisation
 // ---------------------------------------------------------------------
 
-fn exp_p1(params: &ExperimentParams) -> Result<ExperimentResult> {
+pub(crate) fn exp_p1(params: &ExperimentParams) -> Result<ExperimentResult> {
     use crate::sim::core::VecWidth;
     let m = &params.machine;
     let mut table = String::from(
         "| scenario | threads | scalar | AVX2 FMA | AVX-512 FMA |\n|---|---|---|---|---|\n",
     );
-    for sc in Scenario::all() {
+    for sc in ScenarioSpec::paper() {
         let t = sc.threads(m);
         table.push_str(&format!(
             "| {} | {} | {} | {} | {} |\n",
@@ -225,12 +154,12 @@ fn exp_p1(params: &ExperimentParams) -> Result<ExperimentResult> {
     })
 }
 
-fn exp_p2(params: &ExperimentParams) -> Result<ExperimentResult> {
+pub(crate) fn exp_p2(params: &ExperimentParams) -> Result<ExperimentResult> {
     let m = &params.machine;
     let mut table = String::from(
         "| scenario | threads | nodes | regular stores | NT stores |\n|---|---|---|---|---|\n",
     );
-    for sc in Scenario::all() {
+    for sc in ScenarioSpec::paper() {
         let t = sc.threads(m);
         let nodes = sc.nodes_used(m);
         let per_node = t.div_ceil(nodes);
@@ -276,7 +205,7 @@ fn exp_p2(params: &ExperimentParams) -> Result<ExperimentResult> {
     })
 }
 
-fn exp_v1(_params: &ExperimentParams) -> Result<ExperimentResult> {
+pub(crate) fn exp_v1(_params: &ExperimentParams) -> Result<ExperimentResult> {
     use crate::pmu::events::FpEventSet;
     use crate::sim::core::VecWidth;
     // Reproduce §2.3's validation experiment programmatically.
@@ -312,7 +241,7 @@ fn exp_v1(_params: &ExperimentParams) -> Result<ExperimentResult> {
     })
 }
 
-fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
+pub(crate) fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
     // The §2.4 methodology ladder on the footnote-3 sum-reduction kernel:
     //  (a) LLC demand misses, HW prefetch ON  → large under-count
     //  (b) LLC demand misses, HW prefetch OFF → accurate for simple kernels
@@ -320,12 +249,13 @@ fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
     // then the Winograd/GEMM case where SW prefetch defeats (b).
     let k = SumReduction::new(4 << 20); // 16 MiB array
     let expected = k.bytes() as f64;
+    let single = ScenarioSpec::single_thread();
 
     let run = |prefetch: PrefetchConfig| -> Result<(f64, f64)> {
         let mut cfg = params.machine.clone();
         cfg.hierarchy.prefetch = prefetch;
         let mut machine = Machine::new(cfg);
-        let m = measure_kernel(&mut machine, &k, Scenario::SingleThread, CacheState::Cold)?;
+        let m = measure_kernel(&mut machine, &k, &single, CacheState::Cold)?;
         Ok((
             m.traffic.llc_demand_miss_bytes() as f64,
             m.traffic.imc_read_bytes() as f64,
@@ -358,7 +288,7 @@ fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
     let mut cfg = params.machine.clone();
     cfg.hierarchy.prefetch = PrefetchConfig::disabled();
     let mut machine = Machine::new(cfg);
-    let wm = measure_kernel(&mut machine, &wino, Scenario::SingleThread, CacheState::Cold)?;
+    let wm = measure_kernel(&mut machine, &wino, &single, CacheState::Cold)?;
     let sw_note = format!(
         "Winograd (software-prefetching GEMM), HW prefetch off: LLC-miss \
          methodology sees {} while the IMC sees {} ({} via prefetcht0 that \
@@ -379,246 +309,49 @@ fn exp_v2(params: &ExperimentParams) -> Result<ExperimentResult> {
 }
 
 // ---------------------------------------------------------------------
-// Figures 3–5: convolution
+// Conv post hook: record the resolved workload shape in the report
 // ---------------------------------------------------------------------
 
-fn exp_conv(params: &ExperimentParams, scenario: Scenario, id: &str) -> Result<ExperimentResult> {
+/// Append the resolved convolution shape (batch included) to a conv
+/// figure's notes — the report must state which workload produced its
+/// numbers.
+pub(crate) fn exp_conv_post(params: &ExperimentParams, result: &mut ExperimentResult) {
     let shape = ConvShape::paper_conv(params.conv_batch());
-    let wino = ConvWinograd::new(shape);
-    let nchw = ConvDirectNchw::new(shape);
-    let blocked = ConvDirectBlocked::new(shape);
-
-    let expectations = match scenario {
-        Scenario::SingleThread => vec![
-            exp("conv_winograd", Some(0.3154), "lowest utilisation, fastest ET"),
-            exp("conv_direct_nchw", Some(0.4873), "ET = 100% baseline"),
-            exp("conv_direct_nchw16c", Some(0.8672), "highest utilisation"),
-        ],
-        Scenario::SingleSocket => vec![
-            exp("conv_winograd", Some(0.2930), "slightly below single-thread"),
-            exp("conv_direct_nchw", Some(0.4568), "slightly below single-thread"),
-            exp("conv_direct_nchw16c", Some(0.7801), "slightly below single-thread"),
-        ],
-        Scenario::TwoSocket => vec![
-            exp("conv_winograd", None, "relatively lower than one socket"),
-            exp("conv_direct_nchw", None, "relatively lower than one socket"),
-            exp(
-                "conv_direct_nchw16c",
-                Some(0.48),
-                "48% vs 78% on one socket — NUMA harness difficulty",
-            ),
-        ],
-    };
-    let group = measure_group(
-        params,
-        scenario,
-        &[&wino, &nchw, &blocked],
-        &[CacheState::Cold],
-        expectations,
-    )?;
-    Ok(ExperimentResult {
-        id: id.into(),
-        title: format!("Convolution rooflines, {} (paper {})", scenario.label(), fig_of(id)),
-        groups: vec![group],
-        notes: vec![format!(
-            "shape: {:?}; batch reduced for simulation speed (use --full-size for more)",
-            shape
-        )],
-        ..Default::default()
-    })
+    result.notes.push(format!(
+        "shape: {shape:?}; batch reduced for simulation speed (use --full-size for more)"
+    ));
 }
 
 // ---------------------------------------------------------------------
-// Fig 6 / A3: inner product
+// F8 post hook: quantify the forced-blocking W/Q ratios
 // ---------------------------------------------------------------------
 
-fn exp_inner_product(
-    params: &ExperimentParams,
-    scenarios: &[Scenario],
-    id: &str,
-) -> Result<ExperimentResult> {
-    let ip = InnerProduct::paper_shape();
-    let mut groups = Vec::new();
-    for &sc in scenarios {
-        let expectations = if sc == Scenario::SingleThread {
-            vec![exp(
-                "inner_product",
-                Some(0.71),
-                "≥71% of single-thread peak; warm AI ≫ cold AI",
-            )]
-        } else {
-            vec![exp("inner_product", None, "appendix scenario")]
-        };
-        groups.push(measure_group(
-            params,
-            sc,
-            &[&ip],
-            &[CacheState::Cold, CacheState::Warm],
-            expectations,
-        )?);
-    }
-    Ok(ExperimentResult {
-        id: id.into(),
-        title: format!("Inner product (paper {})", fig_of(id)),
-        groups,
-        notes: vec![
-            "shape M=256 K=2048 N=1000 (~11.4 MiB) fits the 27.5 MiB LLC — \
-             warm-cache traffic collapses and arithmetic intensity rises."
-                .into(),
-        ],
-        ..Default::default()
-    })
-}
-
-// ---------------------------------------------------------------------
-// Fig 7 / A4: average pooling
-// ---------------------------------------------------------------------
-
-fn exp_pooling(
-    params: &ExperimentParams,
-    scenarios: &[Scenario],
-    id: &str,
-) -> Result<ExperimentResult> {
-    let shape = PoolShape::paper_pool(params.pool_batch());
-    let nchw = AvgPoolNchw::new(shape);
-    let blocked = AvgPoolBlocked::new(shape);
-    let mut groups = Vec::new();
-    for &sc in scenarios {
-        let expectations = if sc == Scenario::SingleThread {
-            vec![
-                exp("avgpool_nchw", Some(0.0035), "simple_nchw scalar loop"),
-                exp(
-                    "avgpool_nchw16c",
-                    Some(0.148),
-                    "jit:avx512_common — ~42× better at equal AI",
-                ),
-            ]
-        } else {
-            vec![
-                exp("avgpool_nchw", None, "appendix scenario"),
-                exp("avgpool_nchw16c", None, "appendix scenario"),
-            ]
-        };
-        groups.push(measure_group(
-            params,
-            sc,
-            &[&nchw, &blocked],
-            &[CacheState::Cold, CacheState::Warm],
-            expectations,
-        )?);
-    }
-    Ok(ExperimentResult {
-        id: id.into(),
-        title: format!("Average pooling (paper {})", fig_of(id)),
-        groups,
-        notes: vec![
-            format!("max pooling excluded by methodology: {}", MaxPoolNote::explanation()),
-        ],
-        ..Default::default()
-    })
-}
-
-// ---------------------------------------------------------------------
-// Fig 8 / A2: GELU
-// ---------------------------------------------------------------------
-
-fn exp_gelu_forced(params: &ExperimentParams) -> Result<ExperimentResult> {
+/// Derive Fig 8's W/Q ratio commentary from the measured grid cells.
+pub(crate) fn exp_f8_post(params: &ExperimentParams, result: &mut ExperimentResult) {
     let shape = EltwiseShape::paper_gelu(params.gelu_batch());
     let plain = GeluNchw::new(shape);
-    let blocked = GeluBlocked::forced(shape);
-    let group = measure_group(
-        params,
-        Scenario::SingleThread,
-        &[&plain, &blocked],
-        &[CacheState::Cold, CacheState::Warm],
-        vec![
-            exp("gelu_nchw", None, "baseline NCHW"),
-            exp(
-                "gelu_nchw16c",
-                None,
-                "forced blocked on C=3: more W, ~4× Q (paper, 8-block), lower AI",
-            ),
-        ],
-    )?;
-    // Quantify the W/Q ratios for the report.
+    let blocked = crate::kernels::gelu::GeluBlocked::forced(shape);
     let w_ratio = blocked.flops() / plain.flops();
     let q = |name: &str, cs: CacheState| {
-        group
-            .measurements
-            .iter()
-            .find(|m| m.kernel == name && m.cache_state == cs)
+        result
+            .groups
+            .first()
+            .and_then(|g| {
+                g.measurements
+                    .iter()
+                    .find(|m| m.kernel == name && m.cache_state == cs)
+            })
             .map(|m| m.measured.traffic_bytes as f64)
             .unwrap_or(0.0)
     };
     let q_ratio = q("gelu_nchw16c", CacheState::Cold) / q("gelu_nchw", CacheState::Cold).max(1.0);
-    Ok(ExperimentResult {
-        id: "f8".into(),
-        title: "GELU forced onto blocked layout, single core (paper Fig 8)".into(),
-        groups: vec![group],
-        notes: vec![
-            format!(
-                "W(blocked)/W(nchw) = {:.2}× (paper ~2× at 8-blocking; this model \
-                 blocks 16-wide so C=3 pads to 16), Q ratio (cold) = {:.2}× \
-                 (paper ~4×). Direction reproduced: forced blocking is strictly \
-                 worse; oneDNN's dispatcher would choose NCHW here on its own.",
-                w_ratio, q_ratio
-            ),
-        ],
-        ..Default::default()
-    })
-}
-
-fn exp_gelu_favourable(params: &ExperimentParams) -> Result<ExperimentResult> {
-    let shape = EltwiseShape::favourable(params.gelu_batch());
-    let plain = GeluNchw::new(shape);
-    let blocked = GeluBlocked::new(shape);
-    let mut groups = Vec::new();
-    for sc in Scenario::all() {
-        groups.push(measure_group(
-            params,
-            sc,
-            &[&plain, &blocked],
-            &[CacheState::Cold, CacheState::Warm],
-            vec![
-                exp("gelu_nchw", None, "favourable dims"),
-                exp(
-                    "gelu_nchw16c",
-                    None,
-                    "AI and efficiency ≈ NCHW when C % 16 == 0 (appendix)",
-                ),
-            ],
-        )?);
-    }
-    Ok(ExperimentResult {
-        id: "a2".into(),
-        title: "GELU with favourable dimensionality (appendix)".into(),
-        groups,
-        ..Default::default()
-    })
-}
-
-// ---------------------------------------------------------------------
-// A1: layer normalisation
-// ---------------------------------------------------------------------
-
-fn exp_layernorm(params: &ExperimentParams) -> Result<ExperimentResult> {
-    let ln = LayerNorm::new(params.ln_rows(), 768);
-    let mut groups = Vec::new();
-    for sc in Scenario::all() {
-        groups.push(measure_group(
-            params,
-            sc,
-            &[&ln],
-            &[CacheState::Cold, CacheState::Warm],
-            vec![exp("layernorm", None, "memory-bound two-pass kernel")],
-        )?);
-    }
-    Ok(ExperimentResult {
-        id: "a1".into(),
-        title: "Layer normalisation rooflines (appendix)".into(),
-        groups,
-        ..Default::default()
-    })
+    result.notes.push(format!(
+        "W(blocked)/W(nchw) = {:.2}× (paper ~2× at 8-blocking; this model \
+         blocks 16-wide so C=3 pads to 16), Q ratio (cold) = {:.2}× \
+         (paper ~4×). Direction reproduced: forced blocking is strictly \
+         worse; oneDNN's dispatcher would choose NCHW here on its own.",
+        w_ratio, q_ratio
+    ));
 }
 
 // ---------------------------------------------------------------------
@@ -631,7 +364,7 @@ fn exp_layernorm(params: &ExperimentParams) -> Result<ExperimentResult> {
 /// and the measured point lands ABOVE the single-socket roof — "a
 /// runtime performance that is higher than the actual roof for the
 /// analyzed kernel's arithmetic intensity".
-fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
+pub(crate) fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
     use crate::sim::numa::Placement;
     use crate::sim::timing::estimate_phased;
 
@@ -640,10 +373,11 @@ fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
         bail!("m1 needs a multi-socket machine");
     }
     let kernel = GeluNchw::new(EltwiseShape::favourable(params.gelu_batch().max(16)));
+    let one_socket = ScenarioSpec::one_socket();
 
     // Bound run: the correct methodology.
     let mut machine = Machine::new(m.clone());
-    let bound = measure_kernel(&mut machine, &kernel, Scenario::SingleSocket, CacheState::Cold)?;
+    let bound = measure_kernel(&mut machine, &kernel, &one_socket, CacheState::Cold)?;
 
     // Unbound run: same threads, but the OS may rebalance under memory
     // pressure. Re-estimate the runtime with the post-migration
@@ -674,9 +408,9 @@ fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
         .run(&traces, &migrated_placement, &mut |a, t| space.node_of(a, t));
     let est = estimate_phased(&machine2.config, &kernel.phases(), &traffic, &migrated_placement);
 
-    let roofline = roofline_for(params, Scenario::SingleSocket);
+    let roofline = roofline_for(params, &one_socket);
     let bound_point = bound.point().with_note("bound (numactl)");
-    let unbound_point = crate::roofline::point::KernelPoint::new(
+    let unbound_point = KernelPoint::new(
         &kernel.name(),
         kernel.flops(),
         traffic.imc_bytes() as f64,
@@ -689,7 +423,7 @@ fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
         id: "m1".into(),
         title: "Unbound execution exceeds the single-socket roof (§2.5)".into(),
         groups: vec![FigureGroup {
-            roofline,
+            roofline: roofline.clone(),
             measurements: vec![bound],
             expectations: vec![],
         }],
@@ -703,7 +437,7 @@ fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
                 crate::util::human::fmt_bytes(bound_point.traffic_bytes),
                 crate::util::human::fmt_seconds(bound_point.runtime),
                 fmt_flops(bound_point.perf()),
-                bound_point.roof_fraction(&roofline_for(params, Scenario::SingleSocket)),
+                bound_point.roof_fraction(&roofline),
                 migrated_placement.per_node(m.sockets),
                 crate::util::human::fmt_bytes(unbound_point.traffic_bytes),
                 crate::util::human::fmt_seconds(unbound_point.runtime),
@@ -721,26 +455,6 @@ fn exp_binding_artifact(params: &ExperimentParams) -> Result<ExperimentResult> {
     })
 }
 
-fn exp(kernel: &str, utilization: Option<f64>, claim: &str) -> PaperExpectation {
-    PaperExpectation {
-        kernel: kernel.into(),
-        utilization,
-        claim: claim.into(),
-    }
-}
-
-fn fig_of(id: &str) -> String {
-    match id {
-        "f3" => "Fig 3".into(),
-        "f4" => "Fig 4".into(),
-        "f5" => "Fig 5".into(),
-        "f6" => "Fig 6".into(),
-        "a3" => "appendix IP".into(),
-        "a4" => "appendix pooling".into(),
-        other => other.to_uppercase(),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -755,7 +469,10 @@ mod tests {
     #[test]
     fn index_covers_all_figures() {
         let ids: Vec<&str> = experiment_index().iter().map(|(id, _)| *id).collect();
-        for required in ["f1", "f3", "f4", "f5", "f6", "f7", "f8", "a1", "a2", "a3", "a4", "p1", "p2", "v1", "v2"] {
+        for required in [
+            "f1", "f3", "f4", "f5", "f6", "f7", "f8", "a1", "a2", "a3", "a4", "p1", "p2",
+            "v1", "v2", "g1", "m1",
+        ] {
             assert!(ids.contains(&required), "missing {required}");
         }
     }
@@ -795,5 +512,29 @@ mod tests {
             .find(|m| m.cache_state == CacheState::Warm)
             .unwrap();
         assert!(warm.point().ai() > cold.point().ai());
+    }
+
+    #[test]
+    fn f8_post_note_present() {
+        let r = run_experiment("f8", &quick()).unwrap();
+        assert!(
+            r.notes.iter().any(|n| n.contains("W(blocked)/W(nchw)")),
+            "f8 ratio note missing: {:?}",
+            r.notes
+        );
+    }
+
+    #[test]
+    fn g1_covers_new_presets_end_to_end() {
+        let r = run_experiment("g1", &quick()).unwrap();
+        assert_eq!(r.groups.len(), 6);
+        let labels: Vec<&str> = r
+            .groups
+            .iter()
+            .flat_map(|g| g.measurements.iter().map(|m| m.scenario.as_str()))
+            .collect();
+        for preset in ["interleaved", "remote-only", "half-socket"] {
+            assert!(labels.contains(&preset), "missing {preset} cells");
+        }
     }
 }

@@ -20,14 +20,15 @@ use crate::sim::numa::Placement;
 use crate::sim::timing::{estimate_phased, RuntimeEstimate};
 
 use super::cache_state::CacheState;
-use super::scenario::Scenario;
+use super::scenario::ScenarioSpec;
 
 /// Everything we know about one kernel execution.
 #[derive(Clone, Debug)]
 pub struct KernelMeasurement {
     pub kernel: String,
     pub description: String,
-    pub scenario: Scenario,
+    /// Scenario label the cell was measured under.
+    pub scenario: String,
     pub cache_state: CacheState,
     /// W and Q after overhead subtraction.
     pub measured: Measured,
@@ -64,11 +65,12 @@ impl KernelMeasurement {
 pub fn measure_kernel(
     machine: &mut Machine,
     kernel: &dyn KernelModel,
-    scenario: Scenario,
+    scenario: &ScenarioSpec,
     cache_state: CacheState,
 ) -> anyhow::Result<KernelMeasurement> {
     machine.reset();
     let config = machine.config.clone();
+    scenario.validate(&config)?;
     let placement = scenario.placement(&config);
     let policy = scenario.mem_policy();
     let nodes = config.sockets;
@@ -133,7 +135,7 @@ pub fn measure_kernel(
     Ok(KernelMeasurement {
         kernel: kernel.name(),
         description: kernel.description(),
-        scenario,
+        scenario: scenario.name.clone(),
         cache_state,
         measured,
         runtime,
@@ -159,7 +161,7 @@ mod tests {
         let mut m = machine();
         let k = SumReduction::new(1 << 20); // 4 MiB
         let meas =
-            measure_kernel(&mut m, &k, Scenario::SingleThread, CacheState::Cold).unwrap();
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
         // W: one add per element (vector adds, 16 lanes).
         let w = meas.measured.work_flops as f64;
         assert!((w - k.exact_flops()).abs() / k.exact_flops() < 0.01, "W={w}");
@@ -176,9 +178,9 @@ mod tests {
         let mut m = machine();
         let k = InnerProduct::new(64, 512, 256); // ~0.7 MiB, fits easily
         let cold =
-            measure_kernel(&mut m, &k, Scenario::SingleThread, CacheState::Cold).unwrap();
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
         let warm =
-            measure_kernel(&mut m, &k, Scenario::SingleThread, CacheState::Warm).unwrap();
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Warm).unwrap();
         assert_eq!(cold.measured.work_flops, warm.measured.work_flops, "same W");
         assert!(
             (warm.measured.traffic_bytes as f64) < 0.3 * cold.measured.traffic_bytes as f64,
@@ -196,7 +198,7 @@ mod tests {
         let mut m = machine();
         let k = GeluNchw::new(EltwiseShape::favourable(4));
         let meas =
-            measure_kernel(&mut m, &k, Scenario::SingleThread, CacheState::Cold).unwrap();
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
         assert_eq!(meas.runtime.bound, crate::sim::timing::Bound::Memory);
         // Utilisation capped by the memory roof (AI ≈ 1.9 × ~20 GB/s ⇒
         // ~38 GFLOP/s ≈ 37% of the 102.4 GFLOP/s peak), far below the
@@ -209,7 +211,8 @@ mod tests {
     fn two_socket_sees_remote_traffic() {
         let mut m = machine();
         let k = GeluNchw::new(EltwiseShape::favourable(8));
-        let meas = measure_kernel(&mut m, &k, Scenario::TwoSocket, CacheState::Cold).unwrap();
+        let meas =
+            measure_kernel(&mut m, &k, &ScenarioSpec::two_socket(), CacheState::Cold).unwrap();
         // First-touch on node 0 + threads on both sockets ⇒ remote
         // accesses from socket 1 (§3.1.3).
         assert!(
@@ -220,11 +223,59 @@ mod tests {
     }
 
     #[test]
+    fn remote_only_slower_than_local_socket() {
+        // Every access crossing UPI must cost bandwidth and latency
+        // relative to the locally-bound socket run.
+        let mut m = machine();
+        let k = GeluNchw::new(EltwiseShape::favourable(8));
+        let local =
+            measure_kernel(&mut m, &k, &ScenarioSpec::one_socket(), CacheState::Cold).unwrap();
+        let remote =
+            measure_kernel(&mut m, &k, &ScenarioSpec::remote_only(), CacheState::Cold).unwrap();
+        assert!(
+            remote.runtime.seconds > local.runtime.seconds,
+            "remote {} should be slower than local {}",
+            remote.runtime.seconds,
+            local.runtime.seconds
+        );
+        assert!(
+            remote.runtime.remote_fraction > 0.8,
+            "remote-only run should be ~all-remote, got {}",
+            remote.runtime.remote_fraction
+        );
+    }
+
+    #[test]
+    fn interleaved_spreads_traffic_across_nodes() {
+        let mut m = machine();
+        let k = GeluNchw::new(EltwiseShape::favourable(8));
+        let meas =
+            measure_kernel(&mut m, &k, &ScenarioSpec::interleaved(), CacheState::Cold).unwrap();
+        let reads: Vec<u64> = meas.traffic.imc.iter().map(|c| c.read_bytes()).collect();
+        assert_eq!(reads.len(), 2);
+        let total: u64 = reads.iter().sum();
+        assert!(total > 0);
+        let share0 = reads[0] as f64 / total as f64;
+        assert!(
+            (0.3..=0.7).contains(&share0),
+            "interleave should balance IMC reads, node0 share {share0}"
+        );
+    }
+
+    #[test]
+    fn invalid_scenario_for_machine_errors() {
+        let mut m = Machine::new(MachineConfig::xeon_6248_1s());
+        let k = SumReduction::new(1 << 16);
+        let err = measure_kernel(&mut m, &k, &ScenarioSpec::remote_only(), CacheState::Cold);
+        assert!(err.is_err(), "remote-only must be rejected on a 1-node machine");
+    }
+
+    #[test]
     fn measurement_point_roundtrip() {
         let mut m = machine();
         let k = SumReduction::new(1 << 18);
         let meas =
-            measure_kernel(&mut m, &k, Scenario::SingleThread, CacheState::Cold).unwrap();
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
         let p = meas.point();
         assert_eq!(p.note, "cold");
         assert!(p.ai() > 0.0);

@@ -1,13 +1,15 @@
-//! The measurement harness: scenarios (§2.5), cold/warm cache protocols
-//! (§2.5.1–2.5.2), the full kernel-measurement pipeline (PMU Work + IMC
-//! Traffic + modelled Runtime), and the per-figure experiment definitions
-//! of DESIGN.md §4.
+//! The measurement harness: data-driven scenarios (§2.5), cold/warm cache
+//! protocols (§2.5.1–2.5.2), the full kernel-measurement pipeline (PMU
+//! Work + IMC Traffic + modelled Runtime), and the declarative experiment
+//! spec registry of DESIGN.md §4.
 
 pub mod cache_state;
 pub mod experiments;
 pub mod measure;
 pub mod scenario;
+pub mod spec;
 
 pub use cache_state::CacheState;
 pub use measure::{measure_kernel, KernelMeasurement};
-pub use scenario::Scenario;
+pub use scenario::{PlacementSpec, ScenarioSpec, ThreadSpec};
+pub use spec::{Cell, ExperimentSpec, GridSpec, KernelSpec, SpecKind};

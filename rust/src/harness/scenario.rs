@@ -1,75 +1,256 @@
-//! Resource scenarios (§2.5): single-thread, single-socket, two-socket —
-//! with the NUMA binding the paper found "crucial".
+//! Resource scenarios (§2.5) as *data*, not a closed enum.
+//!
+//! The paper evaluates three scenarios — single-thread, one-socket,
+//! two-socket — with the NUMA binding it found "crucial". The original
+//! harness hard-coded exactly those three as enum variants; this module
+//! generalises a scenario to a [`ScenarioSpec`]: a thread-count rule, a
+//! placement rule and a memory policy. The paper's three scenarios are
+//! presets, and the simulator's existing placement/policy machinery lets
+//! us express grids the enum structurally could not:
+//!
+//! * `interleaved` — all cores, pages round-robin across nodes
+//!   (`numactl --interleave=all`);
+//! * `remote-only` — compute bound to node 0, memory bound to node 1
+//!   (`numactl --cpunodebind=0 --membind=1`), the classic UPI-limit probe;
+//! * `half-socket` — half of one socket's cores, locally bound.
+
+use anyhow::{bail, Result};
 
 use crate::sim::machine::MachineConfig;
 use crate::sim::numa::{MemPolicy, Placement};
+use crate::util::json::Json;
 
-/// The paper's three execution scenarios.
+/// How many threads a scenario uses, resolved against a machine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Scenario {
-    SingleThread,
-    SingleSocket,
-    TwoSocket,
+pub enum ThreadSpec {
+    /// Exactly `n` threads (clamped to the machine's core count).
+    Fixed(usize),
+    /// Half the cores of one socket (at least one).
+    HalfSocket,
+    /// Every core of one socket.
+    OneSocket,
+    /// Every core of every socket.
+    AllCores,
 }
 
-impl Scenario {
-    pub fn all() -> [Scenario; 3] {
-        [Scenario::SingleThread, Scenario::SingleSocket, Scenario::TwoSocket]
+/// Where a scenario's threads are pinned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementSpec {
+    /// All threads bound to one node (`numactl --cpunodebind=N`).
+    Bind(usize),
+    /// Threads spread round-robin across every node, pinned.
+    SpreadAll,
+    /// Unpinned threads starting on a node (the §2.2 migration hazard).
+    Unbound(usize),
+}
+
+/// A data-driven execution scenario: threads × placement × memory policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Report label, e.g. `one-socket`.
+    pub name: String,
+    pub threads: ThreadSpec,
+    pub placement: PlacementSpec,
+    pub mem: MemPolicy,
+}
+
+impl ScenarioSpec {
+    /// Build a custom scenario.
+    pub fn custom(
+        name: &str,
+        threads: ThreadSpec,
+        placement: PlacementSpec,
+        mem: MemPolicy,
+    ) -> ScenarioSpec {
+        ScenarioSpec { name: name.to_string(), threads, placement, mem }
     }
 
-    pub fn label(self) -> &'static str {
-        match self {
-            Scenario::SingleThread => "single-thread",
-            Scenario::SingleSocket => "one-socket",
-            Scenario::TwoSocket => "two-socket",
-        }
+    /// The paper's single-thread scenario (`numactl --membind=0`).
+    pub fn single_thread() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "single-thread",
+            ThreadSpec::Fixed(1),
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(0),
+        )
+    }
+
+    /// The paper's one-socket scenario (threads + memory on node 0).
+    pub fn one_socket() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "one-socket",
+            ThreadSpec::OneSocket,
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(0),
+        )
+    }
+
+    /// The paper's two-socket scenario: threads spread, first-touch pages
+    /// (oneDNN allocates on the primary socket — exactly why two-socket
+    /// scaling disappoints, §3.1.3).
+    pub fn two_socket() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "two-socket",
+            ThreadSpec::AllCores,
+            PlacementSpec::SpreadAll,
+            MemPolicy::FirstTouch,
+        )
+    }
+
+    /// All cores with pages interleaved (`numactl --interleave=all`).
+    pub fn interleaved() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "interleaved",
+            ThreadSpec::AllCores,
+            PlacementSpec::SpreadAll,
+            MemPolicy::Interleave,
+        )
+    }
+
+    /// Compute on node 0, memory bound to node 1 — every access crosses
+    /// the UPI link (`numactl --cpunodebind=0 --membind=1`).
+    pub fn remote_only() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "remote-only",
+            ThreadSpec::OneSocket,
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(1),
+        )
+    }
+
+    /// Half of one socket's cores, locally bound.
+    pub fn half_socket() -> ScenarioSpec {
+        ScenarioSpec::custom(
+            "half-socket",
+            ThreadSpec::HalfSocket,
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(0),
+        )
+    }
+
+    /// The paper's three scenarios, in figure order.
+    pub fn paper() -> [ScenarioSpec; 3] {
+        [
+            ScenarioSpec::single_thread(),
+            ScenarioSpec::one_socket(),
+            ScenarioSpec::two_socket(),
+        ]
+    }
+
+    /// Every named preset.
+    pub fn presets() -> Vec<ScenarioSpec> {
+        vec![
+            ScenarioSpec::single_thread(),
+            ScenarioSpec::one_socket(),
+            ScenarioSpec::two_socket(),
+            ScenarioSpec::interleaved(),
+            ScenarioSpec::remote_only(),
+            ScenarioSpec::half_socket(),
+        ]
+    }
+
+    pub fn label(&self) -> &str {
+        &self.name
     }
 
     /// Threads used on a machine.
-    pub fn threads(self, config: &MachineConfig) -> usize {
-        match self {
-            Scenario::SingleThread => 1,
-            Scenario::SingleSocket => config.cores_per_socket,
-            Scenario::TwoSocket => config.cores(),
+    pub fn threads(&self, config: &MachineConfig) -> usize {
+        match self.threads {
+            ThreadSpec::Fixed(n) => n.clamp(1, config.cores()),
+            ThreadSpec::HalfSocket => (config.cores_per_socket / 2).max(1),
+            ThreadSpec::OneSocket => config.cores_per_socket,
+            ThreadSpec::AllCores => config.cores(),
         }
     }
 
-    /// NUMA nodes exercised.
-    pub fn nodes_used(self, config: &MachineConfig) -> usize {
-        match self {
-            Scenario::TwoSocket => config.sockets,
-            _ => 1,
+    /// Thread placement, resolved against the machine.
+    pub fn placement(&self, config: &MachineConfig) -> Placement {
+        let t = self.threads(config);
+        match self.placement {
+            PlacementSpec::Bind(node) => Placement::bound(t, node),
+            PlacementSpec::SpreadAll => Placement::spread(t, config.sockets),
+            PlacementSpec::Unbound(node) => Placement::unbound(t, node),
         }
     }
 
-    /// Thread placement, `numactl`-style bound (the paper's §2.5 fix).
-    pub fn placement(self, config: &MachineConfig) -> Placement {
-        match self {
-            Scenario::SingleThread => Placement::bound(1, 0),
-            Scenario::SingleSocket => Placement::bound(config.cores_per_socket, 0),
-            Scenario::TwoSocket => Placement::spread(config.cores(), config.sockets),
+    /// Memory policy for the kernel's working set.
+    pub fn mem_policy(&self) -> MemPolicy {
+        self.mem
+    }
+
+    /// NUMA nodes whose memory channels serve this scenario — what the
+    /// roofline's β roof must count. Derived from the data: bound memory
+    /// uses one node, interleave uses all, first-touch uses the nodes the
+    /// threads run on.
+    pub fn nodes_used(&self, config: &MachineConfig) -> usize {
+        match self.mem {
+            MemPolicy::BindNode(_) => 1,
+            MemPolicy::Interleave => config.sockets,
+            MemPolicy::FirstTouch => {
+                let per_node = self.placement(config).per_node(config.sockets);
+                per_node.iter().filter(|&&c| c > 0).count().max(1)
+            }
         }
     }
 
-    /// Memory policy the paper's methodology uses for this scenario:
-    /// bound to node 0 for ≤1 socket (numactl --membind), first-touch
-    /// for two-socket (oneDNN allocates on the primary socket, which is
-    /// precisely why two-socket scaling disappoints — §3.1.3).
-    pub fn mem_policy(self) -> MemPolicy {
-        match self {
-            Scenario::TwoSocket => MemPolicy::FirstTouch,
-            _ => MemPolicy::BindNode(0),
+    /// Check the scenario is expressible on this machine (e.g.
+    /// `remote-only` needs a second node to bind memory to).
+    pub fn validate(&self, config: &MachineConfig) -> Result<()> {
+        if let MemPolicy::BindNode(n) = self.mem {
+            if n >= config.sockets {
+                bail!(
+                    "scenario '{}' binds memory to node {n}, but '{}' has only {} node(s)",
+                    self.name,
+                    config.name,
+                    config.sockets
+                );
+            }
         }
+        if let PlacementSpec::Bind(node) | PlacementSpec::Unbound(node) = self.placement {
+            if node >= config.sockets {
+                bail!(
+                    "scenario '{}' places threads on node {node}, but '{}' has only {} node(s)",
+                    self.name,
+                    config.name,
+                    config.sockets
+                );
+            }
+            let t = self.threads(config);
+            if t > config.cores_per_socket {
+                bail!(
+                    "scenario '{}' pins {t} threads to node {node}, but each node of '{}' \
+                     has only {} cores",
+                    self.name,
+                    config.name,
+                    config.cores_per_socket
+                );
+            }
+        }
+        Ok(())
     }
 
-    /// Parse from CLI text.
-    pub fn parse(s: &str) -> Option<Scenario> {
+    /// Parse a preset name from CLI text.
+    pub fn parse(s: &str) -> Option<ScenarioSpec> {
         match s {
-            "single-thread" | "st" | "1t" => Some(Scenario::SingleThread),
-            "one-socket" | "single-socket" | "1s" => Some(Scenario::SingleSocket),
-            "two-socket" | "2s" => Some(Scenario::TwoSocket),
+            "single-thread" | "st" | "1t" => Some(ScenarioSpec::single_thread()),
+            "one-socket" | "single-socket" | "1s" => Some(ScenarioSpec::one_socket()),
+            "two-socket" | "2s" => Some(ScenarioSpec::two_socket()),
+            "interleaved" | "il" => Some(ScenarioSpec::interleaved()),
+            "remote-only" | "remote" => Some(ScenarioSpec::remote_only()),
+            "half-socket" | "hs" => Some(ScenarioSpec::half_socket()),
             _ => None,
         }
+    }
+
+    /// The scenario's identifying *data* (name excluded) as JSON — the
+    /// cell-hash ingredient: two scenarios with identical data memoize to
+    /// the same measurement cell regardless of display name.
+    pub fn content_json(&self) -> Json {
+        Json::obj(vec![
+            ("threads", Json::str(format!("{:?}", self.threads))),
+            ("placement", Json::str(format!("{:?}", self.placement))),
+            ("mem", Json::str(format!("{:?}", self.mem))),
+        ])
     }
 }
 
@@ -78,33 +259,113 @@ mod tests {
     use super::*;
 
     #[test]
-    fn thread_counts() {
+    fn preset_thread_counts() {
         let m = MachineConfig::xeon_6248();
-        assert_eq!(Scenario::SingleThread.threads(&m), 1);
-        assert_eq!(Scenario::SingleSocket.threads(&m), 20);
-        assert_eq!(Scenario::TwoSocket.threads(&m), 40);
+        assert_eq!(ScenarioSpec::single_thread().threads(&m), 1);
+        assert_eq!(ScenarioSpec::one_socket().threads(&m), 20);
+        assert_eq!(ScenarioSpec::two_socket().threads(&m), 40);
+        assert_eq!(ScenarioSpec::half_socket().threads(&m), 10);
+        assert_eq!(ScenarioSpec::interleaved().threads(&m), 40);
+        assert_eq!(ScenarioSpec::remote_only().threads(&m), 20);
     }
 
     #[test]
     fn placements_respect_binding() {
         let m = MachineConfig::xeon_6248();
-        let p = Scenario::SingleSocket.placement(&m);
+        let p = ScenarioSpec::one_socket().placement(&m);
         assert!(p.pinned);
         assert_eq!(p.per_node(2), vec![20, 0]);
-        let p = Scenario::TwoSocket.placement(&m);
+        let p = ScenarioSpec::two_socket().placement(&m);
         assert_eq!(p.per_node(2), vec![20, 20]);
+        let p = ScenarioSpec::half_socket().placement(&m);
+        assert_eq!(p.per_node(2), vec![10, 0]);
     }
 
     #[test]
-    fn mem_policies() {
-        assert_eq!(Scenario::SingleThread.mem_policy(), MemPolicy::BindNode(0));
-        assert_eq!(Scenario::TwoSocket.mem_policy(), MemPolicy::FirstTouch);
+    fn mem_policies_match_paper() {
+        assert_eq!(ScenarioSpec::single_thread().mem_policy(), MemPolicy::BindNode(0));
+        assert_eq!(ScenarioSpec::two_socket().mem_policy(), MemPolicy::FirstTouch);
+        assert_eq!(ScenarioSpec::interleaved().mem_policy(), MemPolicy::Interleave);
+        assert_eq!(ScenarioSpec::remote_only().mem_policy(), MemPolicy::BindNode(1));
+    }
+
+    #[test]
+    fn nodes_used_derives_from_data() {
+        let m = MachineConfig::xeon_6248();
+        assert_eq!(ScenarioSpec::single_thread().nodes_used(&m), 1);
+        assert_eq!(ScenarioSpec::one_socket().nodes_used(&m), 1);
+        assert_eq!(ScenarioSpec::two_socket().nodes_used(&m), 2);
+        assert_eq!(ScenarioSpec::interleaved().nodes_used(&m), 2);
+        assert_eq!(ScenarioSpec::remote_only().nodes_used(&m), 1);
+        assert_eq!(ScenarioSpec::half_socket().nodes_used(&m), 1);
     }
 
     #[test]
     fn parse_aliases() {
-        assert_eq!(Scenario::parse("1s"), Some(Scenario::SingleSocket));
-        assert_eq!(Scenario::parse("two-socket"), Some(Scenario::TwoSocket));
-        assert_eq!(Scenario::parse("bogus"), None);
+        assert_eq!(ScenarioSpec::parse("1s"), Some(ScenarioSpec::one_socket()));
+        assert_eq!(ScenarioSpec::parse("two-socket"), Some(ScenarioSpec::two_socket()));
+        assert_eq!(ScenarioSpec::parse("interleaved"), Some(ScenarioSpec::interleaved()));
+        assert_eq!(ScenarioSpec::parse("remote"), Some(ScenarioSpec::remote_only()));
+        assert_eq!(ScenarioSpec::parse("hs"), Some(ScenarioSpec::half_socket()));
+        assert_eq!(ScenarioSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validate_rejects_inexpressible() {
+        let one = MachineConfig::xeon_6248_1s();
+        assert!(ScenarioSpec::remote_only().validate(&one).is_err());
+        assert!(ScenarioSpec::one_socket().validate(&one).is_ok());
+        let two = MachineConfig::xeon_6248();
+        for s in ScenarioSpec::presets() {
+            assert!(s.validate(&two).is_ok(), "{} invalid on 2s machine", s.name);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_node_oversubscription() {
+        // Pinning more threads to one node than it has cores is not
+        // physically expressible with numactl-style binding.
+        let m = MachineConfig::xeon_6248();
+        let s = ScenarioSpec::custom(
+            "all-on-one",
+            ThreadSpec::AllCores,
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(0),
+        );
+        let err = s.validate(&m).unwrap_err().to_string();
+        assert!(err.contains("40 threads"), "{err}");
+        let s = ScenarioSpec::custom(
+            "fits",
+            ThreadSpec::Fixed(20),
+            PlacementSpec::Bind(0),
+            MemPolicy::BindNode(0),
+        );
+        assert!(s.validate(&m).is_ok());
+    }
+
+    #[test]
+    fn content_json_excludes_name() {
+        let mut renamed = ScenarioSpec::one_socket();
+        renamed.name = "socket-0".into();
+        assert_eq!(
+            renamed.content_json().to_string_compact(),
+            ScenarioSpec::one_socket().content_json().to_string_compact()
+        );
+        assert_ne!(
+            ScenarioSpec::one_socket().content_json().to_string_compact(),
+            ScenarioSpec::half_socket().content_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn fixed_threads_clamped() {
+        let m = MachineConfig::xeon_6248();
+        let s = ScenarioSpec::custom(
+            "t99",
+            ThreadSpec::Fixed(999),
+            PlacementSpec::SpreadAll,
+            MemPolicy::Interleave,
+        );
+        assert_eq!(s.threads(&m), 40);
     }
 }

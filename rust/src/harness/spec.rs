@@ -1,0 +1,722 @@
+//! Declarative experiment specs — the executable index of DESIGN.md §4.
+//!
+//! A paper figure is *data*: a grid of measurement cells (kernel spec ×
+//! scenario × cache state) plus paper expectations and notes. The
+//! [`registry`] maps every experiment id (`f1`, `f3`..`f8`, `a1`..`a4`,
+//! `p1`, `p2`, `v1`, `v2`, `m1`, `g1`) to an [`ExperimentSpec`]; the old
+//! per-figure `match` monolith is gone. Narrative/characterisation
+//! experiments that are not grids (`p1`, `p2`, `v1`, `v2`, `m1`) stay as
+//! functions behind [`SpecKind::Special`].
+//!
+//! Grids expand to [`Cell`]s. A cell is identified by a *content hash* of
+//! (machine fingerprint, kernel identity, scenario data, cache state) —
+//! the memoization key the parallel plan executor
+//! ([`crate::coordinator::plan`]) uses to avoid re-simulating shared
+//! cells across figures (f3/f4/f5's convolution cells reappear verbatim
+//! inside the `g1` scenario grid, for example).
+
+use anyhow::{anyhow, Result};
+
+use crate::kernels::conv_direct::{ConvDirectBlocked, ConvDirectNchw};
+use crate::kernels::conv_winograd::ConvWinograd;
+use crate::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
+use crate::kernels::inner_product::InnerProduct;
+use crate::kernels::layernorm::LayerNorm;
+use crate::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, MaxPoolNote, PoolShape};
+use crate::kernels::{ConvShape, KernelModel};
+use crate::roofline::report::PaperExpectation;
+use crate::sim::machine::Machine;
+use crate::util::hash::fnv1a_64;
+use crate::util::json::Json;
+
+use super::cache_state::CacheState;
+use super::experiments::{
+    exp_binding_artifact, exp_conv_post, exp_f8_post, exp_p1, exp_p2, exp_v1, exp_v2,
+    ExperimentParams, ExperimentResult, FigureGroup,
+};
+use super::measure::{measure_kernel, KernelMeasurement};
+use super::scenario::ScenarioSpec;
+
+/// Declarative kernel constructor: which model, at which paper shape.
+/// Resolution against [`ExperimentParams`] (batch / `--full-size`)
+/// happens in [`KernelSpec::build`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSpec {
+    ConvWinograd,
+    ConvDirectNchw,
+    ConvDirectBlocked,
+    InnerProduct,
+    AvgPoolNchw,
+    AvgPoolBlocked,
+    /// Plain-NCHW GELU; `favourable` picks the appendix's C%16==0 shape.
+    GeluNchw { favourable: bool },
+    /// Blocked GELU; `forced` reproduces Fig 8's pathological dispatch.
+    GeluBlocked { favourable: bool, forced: bool },
+    LayerNorm,
+}
+
+impl KernelSpec {
+    /// Instantiate the kernel model at the params' workload scale.
+    pub fn build(&self, params: &ExperimentParams) -> Box<dyn KernelModel> {
+        match *self {
+            KernelSpec::ConvWinograd => {
+                Box::new(ConvWinograd::new(ConvShape::paper_conv(params.conv_batch())))
+            }
+            KernelSpec::ConvDirectNchw => {
+                Box::new(ConvDirectNchw::new(ConvShape::paper_conv(params.conv_batch())))
+            }
+            KernelSpec::ConvDirectBlocked => {
+                Box::new(ConvDirectBlocked::new(ConvShape::paper_conv(params.conv_batch())))
+            }
+            KernelSpec::InnerProduct => Box::new(InnerProduct::paper_shape()),
+            KernelSpec::AvgPoolNchw => {
+                Box::new(AvgPoolNchw::new(PoolShape::paper_pool(params.pool_batch())))
+            }
+            KernelSpec::AvgPoolBlocked => {
+                Box::new(AvgPoolBlocked::new(PoolShape::paper_pool(params.pool_batch())))
+            }
+            KernelSpec::GeluNchw { favourable } => {
+                Box::new(GeluNchw::new(gelu_shape(params, favourable)))
+            }
+            KernelSpec::GeluBlocked { favourable, forced } => {
+                let shape = gelu_shape(params, favourable);
+                Box::new(if forced {
+                    GeluBlocked::forced(shape)
+                } else {
+                    GeluBlocked::new(shape)
+                })
+            }
+            KernelSpec::LayerNorm => Box::new(LayerNorm::new(params.ln_rows(), 768)),
+        }
+    }
+
+    /// Kernel identity for cell hashing: the constructor variant plus the
+    /// built model's name/description/FLOPs, which encode the resolved
+    /// shape.
+    pub fn content_json(&self, params: &ExperimentParams) -> Json {
+        self.content_json_of(self.build(params).as_ref())
+    }
+
+    /// As [`Self::content_json`], reusing an already-built model (the
+    /// plan executor builds each cell's kernel once for both the key and
+    /// the display name).
+    pub fn content_json_of(&self, k: &dyn KernelModel) -> Json {
+        Json::obj(vec![
+            ("spec", Json::str(format!("{self:?}"))),
+            ("name", Json::str(k.name())),
+            ("description", Json::str(k.description())),
+            ("flops", Json::num(k.flops())),
+        ])
+    }
+}
+
+fn gelu_shape(params: &ExperimentParams, favourable: bool) -> EltwiseShape {
+    if favourable {
+        EltwiseShape::favourable(params.gelu_batch())
+    } else {
+        EltwiseShape::paper_gelu(params.gelu_batch())
+    }
+}
+
+/// A paper expectation row, attached to every scenario group of its
+/// experiment (matching the pre-registry behaviour of the shared
+/// experiment functions).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpectationRule {
+    pub kernel: &'static str,
+    pub utilization: Option<f64>,
+    pub claim: &'static str,
+}
+
+impl ExpectationRule {
+    fn to_expectation(self) -> PaperExpectation {
+        PaperExpectation {
+            kernel: self.kernel.into(),
+            utilization: self.utilization,
+            claim: self.claim.into(),
+        }
+    }
+}
+
+/// A declarative figure: one roofline group per scenario, each holding
+/// every kernel × cache-state measurement cell.
+#[derive(Clone)]
+pub struct GridSpec {
+    pub scenarios: Vec<ScenarioSpec>,
+    pub kernels: Vec<KernelSpec>,
+    pub cache_states: Vec<CacheState>,
+    pub expectations: Vec<ExpectationRule>,
+    pub notes: Vec<String>,
+    /// Optional post-assembly hook for derived notes (e.g. Fig 8's W/Q
+    /// ratio commentary) — computed from the measured cells.
+    pub post: Option<fn(&ExperimentParams, &mut ExperimentResult)>,
+}
+
+/// How an experiment is produced.
+#[derive(Clone)]
+pub enum SpecKind {
+    /// A declarative measurement grid.
+    Grid(GridSpec),
+    /// A narrative experiment (characterisation table, methodology
+    /// demonstration) that is not a cell grid.
+    Special(fn(&ExperimentParams) -> Result<ExperimentResult>),
+}
+
+/// One registry entry: id, title, and how to produce the result.
+#[derive(Clone)]
+pub struct ExperimentSpec {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub kind: SpecKind,
+}
+
+/// One independent measurement cell of a grid experiment.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Owning experiment id (not part of the content hash).
+    pub experiment: &'static str,
+    /// Scenario group index within the experiment.
+    pub group: usize,
+    pub kernel: KernelSpec,
+    pub scenario: ScenarioSpec,
+    pub cache: CacheState,
+}
+
+impl Cell {
+    /// The cell's identifying content as JSON. Object keys are sorted by
+    /// the JSON layer, so the hash is independent of field insertion
+    /// order; the experiment id and group index are deliberately
+    /// excluded so identical cells memoize across figures.
+    pub fn content_json(&self, params: &ExperimentParams) -> Json {
+        self.content_json_parts(
+            &params.machine.fingerprint_json(),
+            self.kernel.build(params).as_ref(),
+        )
+    }
+
+    /// As [`Self::content_json`] with the expensive parts precomputed:
+    /// the machine fingerprint document (identical for every cell of a
+    /// plan) and the built kernel model.
+    pub fn content_json_parts(&self, machine: &Json, kernel: &dyn KernelModel) -> Json {
+        Json::obj(vec![
+            ("machine", machine.clone()),
+            ("kernel", self.kernel.content_json_of(kernel)),
+            ("scenario", self.scenario.content_json()),
+            ("cache", Json::str(self.cache.label())),
+        ])
+    }
+
+    /// Content hash — the memoization key.
+    pub fn key(&self, params: &ExperimentParams) -> u64 {
+        content_hash_json(&self.content_json(params))
+    }
+
+    /// As [`Self::key`] with precomputed parts (see
+    /// [`Self::content_json_parts`]).
+    pub fn key_parts(&self, machine: &Json, kernel: &dyn KernelModel) -> u64 {
+        content_hash_json(&self.content_json_parts(machine, kernel))
+    }
+
+    /// Simulate this cell on a fresh machine.
+    pub fn simulate(&self, params: &ExperimentParams) -> Result<KernelMeasurement> {
+        let mut machine = Machine::new(params.machine.clone());
+        let kernel = self.kernel.build(params);
+        measure_kernel(&mut machine, kernel.as_ref(), &self.scenario, self.cache)
+    }
+}
+
+/// Hash an arbitrary JSON document's canonical (compact, key-sorted)
+/// serialisation.
+pub fn content_hash_json(doc: &Json) -> u64 {
+    fnv1a_64(doc.to_string_compact().as_bytes())
+}
+
+/// Hash a flat field list as a JSON object — insertion order of `fields`
+/// does not affect the result (objects sort keys).
+pub fn content_hash(fields: &[(&str, Json)]) -> u64 {
+    content_hash_json(&Json::obj(fields.to_vec()))
+}
+
+impl ExperimentSpec {
+    /// Expand a grid experiment to its cells (empty for specials).
+    pub fn cells(&self) -> Vec<Cell> {
+        match &self.kind {
+            SpecKind::Special(_) => Vec::new(),
+            SpecKind::Grid(g) => {
+                let mut cells = Vec::new();
+                for (gi, scenario) in g.scenarios.iter().enumerate() {
+                    for kernel in &g.kernels {
+                        for &cache in &g.cache_states {
+                            cells.push(Cell {
+                                experiment: self.id,
+                                group: gi,
+                                kernel: *kernel,
+                                scenario: scenario.clone(),
+                                cache,
+                            });
+                        }
+                    }
+                }
+                cells
+            }
+        }
+    }
+
+    /// Run the experiment serially. Grid cells are measured through
+    /// `measure` so callers can substitute memoized lookups — the
+    /// parallel plan executor does exactly that.
+    pub fn run_with(
+        &self,
+        params: &ExperimentParams,
+        measure: &mut dyn FnMut(&Cell) -> Result<KernelMeasurement>,
+    ) -> Result<ExperimentResult> {
+        match &self.kind {
+            SpecKind::Special(f) => f(params),
+            SpecKind::Grid(g) => {
+                // Single source of expansion: the same cells (and order)
+                // the plan executor sees, grouped by scenario index.
+                // Scenarios the machine cannot express are skipped with a
+                // note, never failed — the same filter the plan executor
+                // applies, so cell order stays aligned.
+                let cells = self.cells();
+                let mut groups = Vec::new();
+                let mut notes = g.notes.clone();
+                for (gi, scenario) in g.scenarios.iter().enumerate() {
+                    if let Err(e) = scenario.validate(&params.machine) {
+                        notes.push(format!("scenario group skipped: {e}"));
+                        continue;
+                    }
+                    let mut measurements = Vec::new();
+                    for cell in cells.iter().filter(|c| c.group == gi) {
+                        measurements.push(measure(cell)?);
+                    }
+                    groups.push(FigureGroup {
+                        roofline: super::experiments::roofline_for(params, scenario),
+                        measurements,
+                        expectations: g
+                            .expectations
+                            .iter()
+                            .map(|r| r.to_expectation())
+                            .collect(),
+                    });
+                }
+                let mut result = ExperimentResult {
+                    id: self.id.into(),
+                    title: self.title.into(),
+                    groups,
+                    tables: Vec::new(),
+                    notes,
+                };
+                if let Some(post) = g.post {
+                    post(params, &mut result);
+                }
+                Ok(result)
+            }
+        }
+    }
+
+    /// Run the experiment serially, simulating every cell directly.
+    pub fn run(&self, params: &ExperimentParams) -> Result<ExperimentResult> {
+        self.run_with(params, &mut |cell| cell.simulate(params))
+    }
+}
+
+/// Look up a spec by id.
+pub fn find(id: &str) -> Result<ExperimentSpec> {
+    let registry = registry();
+    find_in(&registry, id)
+}
+
+/// Resolve many ids against a single registry build (a sweep resolves
+/// its whole id list without reconstructing the registry per id).
+pub fn find_all(ids: &[&str]) -> Result<Vec<ExperimentSpec>> {
+    let registry = registry();
+    ids.iter().map(|id| find_in(&registry, id)).collect()
+}
+
+fn find_in(registry: &[ExperimentSpec], id: &str) -> Result<ExperimentSpec> {
+    registry
+        .iter()
+        .find(|s| s.id == id)
+        .cloned()
+        .ok_or_else(|| anyhow!("unknown experiment '{id}' (see `dlroofline list`)"))
+}
+
+/// Every experiment id in index order.
+pub fn ids() -> Vec<&'static str> {
+    registry().iter().map(|s| s.id).collect()
+}
+
+/// The registry: every paper artefact as a declarative spec.
+pub fn registry() -> Vec<ExperimentSpec> {
+    let cold = vec![CacheState::Cold];
+    let cold_warm = vec![CacheState::Cold, CacheState::Warm];
+    let conv_kernels = vec![
+        KernelSpec::ConvWinograd,
+        KernelSpec::ConvDirectNchw,
+        KernelSpec::ConvDirectBlocked,
+    ];
+    let pool_kernels = vec![KernelSpec::AvgPoolNchw, KernelSpec::AvgPoolBlocked];
+
+    let conv_expectations = |scenario: &'static str| -> Vec<ExpectationRule> {
+        match scenario {
+            "single-thread" => vec![
+                rule("conv_winograd", Some(0.3154), "lowest utilisation, fastest ET"),
+                rule("conv_direct_nchw", Some(0.4873), "ET = 100% baseline"),
+                rule("conv_direct_nchw16c", Some(0.8672), "highest utilisation"),
+            ],
+            "one-socket" => vec![
+                rule("conv_winograd", Some(0.2930), "slightly below single-thread"),
+                rule("conv_direct_nchw", Some(0.4568), "slightly below single-thread"),
+                rule("conv_direct_nchw16c", Some(0.7801), "slightly below single-thread"),
+            ],
+            _ => vec![
+                rule("conv_winograd", None, "relatively lower than one socket"),
+                rule("conv_direct_nchw", None, "relatively lower than one socket"),
+                rule("conv_direct_nchw16c",
+                    Some(0.48),
+                    "48% vs 78% on one socket — NUMA harness difficulty",
+                ),
+            ],
+        }
+    };
+    let conv_fig = |id: &'static str,
+                    title: &'static str,
+                    scenario: ScenarioSpec,
+                    expectations: Vec<ExpectationRule>| {
+        ExperimentSpec {
+            id,
+            title,
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![scenario],
+                kernels: conv_kernels.clone(),
+                cache_states: cold.clone(),
+                expectations,
+                notes: vec![],
+                post: Some(exp_conv_post),
+            }),
+        }
+    };
+
+    vec![
+        ExperimentSpec {
+            id: "f1",
+            title: "Fig 1: simplified roofline example",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::single_thread()],
+                kernels: vec![],
+                cache_states: cold.clone(),
+                expectations: vec![],
+                notes: vec![
+                    "P = min(π, I·β) — kernels left of the ridge are memory-bound, \
+                     right of it compute-bound."
+                        .into(),
+                ],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "p1",
+            title: "§2.1: peak computational performance (simulated π)",
+            kind: SpecKind::Special(exp_p1),
+        },
+        ExperimentSpec {
+            id: "p2",
+            title: "§2.2: peak memory throughput (simulated β, binding & migration)",
+            kind: SpecKind::Special(exp_p2),
+        },
+        ExperimentSpec {
+            id: "v1",
+            title: "§2.3: FMA PMU counting validation",
+            kind: SpecKind::Special(exp_v1),
+        },
+        ExperimentSpec {
+            id: "v2",
+            title: "§2.4: traffic methodology (LLC-miss vs IMC, prefetchers)",
+            kind: SpecKind::Special(exp_v2),
+        },
+        conv_fig(
+            "f3",
+            "Fig 3: convolution rooflines, single thread",
+            ScenarioSpec::single_thread(),
+            conv_expectations("single-thread"),
+        ),
+        conv_fig(
+            "f4",
+            "Fig 4: convolution rooflines, one socket",
+            ScenarioSpec::one_socket(),
+            conv_expectations("one-socket"),
+        ),
+        conv_fig(
+            "f5",
+            "Fig 5: convolution rooflines, two sockets",
+            ScenarioSpec::two_socket(),
+            conv_expectations("two-socket"),
+        ),
+        ExperimentSpec {
+            id: "f6",
+            title: "Fig 6: inner product, single thread, cold vs warm",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::single_thread()],
+                kernels: vec![KernelSpec::InnerProduct],
+                cache_states: cold_warm.clone(),
+                expectations: vec![rule("inner_product",
+                    Some(0.71),
+                    "≥71% of single-thread peak; warm AI ≫ cold AI",
+                )],
+                notes: vec![
+                    "shape M=256 K=2048 N=1000 (~11.4 MiB) fits the 27.5 MiB LLC — \
+                     warm-cache traffic collapses and arithmetic intensity rises."
+                        .into(),
+                ],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "f7",
+            title: "Fig 7: average pooling, single thread, NCHW vs NCHW16C",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::single_thread()],
+                kernels: pool_kernels.clone(),
+                cache_states: cold_warm.clone(),
+                expectations: vec![
+                    rule("avgpool_nchw", Some(0.0035), "simple_nchw scalar loop"),
+                    rule("avgpool_nchw16c",
+                        Some(0.148),
+                        "jit:avx512_common — ~42× better at equal AI",
+                    ),
+                ],
+                notes: vec![format!(
+                    "max pooling excluded by methodology: {}",
+                    MaxPoolNote::explanation()
+                )],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "f8",
+            title: "Fig 8: GELU forced-blocked pathology, single core",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::single_thread()],
+                kernels: vec![
+                    KernelSpec::GeluNchw { favourable: false },
+                    KernelSpec::GeluBlocked { favourable: false, forced: true },
+                ],
+                cache_states: cold_warm.clone(),
+                expectations: vec![
+                    rule("gelu_nchw", None, "baseline NCHW"),
+                    rule("gelu_nchw16c",
+                        None,
+                        "forced blocked on C=3: more W, ~4× Q (paper, 8-block), lower AI",
+                    ),
+                ],
+                notes: vec![],
+                post: Some(exp_f8_post),
+            }),
+        },
+        ExperimentSpec {
+            id: "a1",
+            title: "Appendix: layer normalisation rooflines (3 scenarios)",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: ScenarioSpec::paper().to_vec(),
+                kernels: vec![KernelSpec::LayerNorm],
+                cache_states: cold_warm.clone(),
+                expectations: vec![rule("layernorm", None, "memory-bound two-pass kernel")],
+                notes: vec![],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "a2",
+            title: "Appendix: GELU favourable dims (3 scenarios)",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: ScenarioSpec::paper().to_vec(),
+                kernels: vec![
+                    KernelSpec::GeluNchw { favourable: true },
+                    KernelSpec::GeluBlocked { favourable: true, forced: false },
+                ],
+                cache_states: cold_warm.clone(),
+                expectations: vec![
+                    rule("gelu_nchw", None, "favourable dims"),
+                    rule("gelu_nchw16c",
+                        None,
+                        "AI and efficiency ≈ NCHW when C % 16 == 0 (appendix)",
+                    ),
+                ],
+                notes: vec![],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "a3",
+            title: "Appendix: inner product, socket & two-socket",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::one_socket(), ScenarioSpec::two_socket()],
+                kernels: vec![KernelSpec::InnerProduct],
+                cache_states: cold_warm.clone(),
+                expectations: vec![rule("inner_product", None, "appendix scenario")],
+                notes: vec![
+                    "shape M=256 K=2048 N=1000 (~11.4 MiB) fits the 27.5 MiB LLC — \
+                     warm-cache traffic collapses and arithmetic intensity rises."
+                        .into(),
+                ],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "a4",
+            title: "Appendix: average pooling, socket & two-socket",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: vec![ScenarioSpec::one_socket(), ScenarioSpec::two_socket()],
+                kernels: pool_kernels,
+                cache_states: cold_warm,
+                expectations: vec![
+                    rule("avgpool_nchw", None, "appendix scenario"),
+                    rule("avgpool_nchw16c", None, "appendix scenario"),
+                ],
+                notes: vec![format!(
+                    "max pooling excluded by methodology: {}",
+                    MaxPoolNote::explanation()
+                )],
+                post: None,
+            }),
+        },
+        ExperimentSpec {
+            id: "g1",
+            title: "Scenario grid: convolution across all six placement presets",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: ScenarioSpec::presets(),
+                // Must stay identical to f3/f4/f5's kernel list — the
+                // sweep's cell-sharing memoization depends on it.
+                kernels: conv_kernels.clone(),
+                cache_states: vec![CacheState::Cold],
+                expectations: vec![],
+                notes: vec![
+                    "the grid the old per-figure harness could not express: the same \
+                     kernels under interleaved, remote-only and half-socket placements; \
+                     its single-thread/one-socket/two-socket cells are byte-identical to \
+                     f3/f4/f5 and memoize away in a sweep."
+                        .into(),
+                ],
+                post: Some(exp_conv_post),
+            }),
+        },
+        ExperimentSpec {
+            id: "m1",
+            title: "§2.5: unbound threads exceed the single-socket roof (why numactl matters)",
+            kind: SpecKind::Special(exp_binding_artifact),
+        },
+    ]
+}
+
+fn rule(kernel: &'static str, utilization: Option<f64>, claim: &'static str) -> ExpectationRule {
+    ExpectationRule { kernel, utilization, claim }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let ids = ids();
+        for required in [
+            "f1", "p1", "p2", "v1", "v2", "f3", "f4", "f5", "f6", "f7", "f8", "a1", "a2",
+            "a3", "a4", "g1", "m1",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate ids in registry");
+    }
+
+    #[test]
+    fn grid_cell_counts() {
+        assert_eq!(find("f3").unwrap().cells().len(), 3); // 3 kernels × 1 scenario × cold
+        assert_eq!(find("f6").unwrap().cells().len(), 2); // 1 kernel × cold+warm
+        assert_eq!(find("a2").unwrap().cells().len(), 12); // 2 × 3 scenarios × 2 states
+        assert_eq!(find("g1").unwrap().cells().len(), 18); // 3 kernels × 6 scenarios
+        assert!(find("p1").unwrap().cells().is_empty(), "specials have no cells");
+    }
+
+    #[test]
+    fn shared_cells_hash_identically_across_figures() {
+        let params = quick();
+        let f3_keys: Vec<u64> =
+            find("f3").unwrap().cells().iter().map(|c| c.key(&params)).collect();
+        let g1_keys: Vec<u64> =
+            find("g1").unwrap().cells().iter().map(|c| c.key(&params)).collect();
+        for k in &f3_keys {
+            assert!(g1_keys.contains(k), "f3 cell {k:#x} missing from g1 grid");
+        }
+    }
+
+    #[test]
+    fn cell_keys_distinct_across_configs() {
+        let params = quick();
+        let cells = find("g1").unwrap().cells();
+        let mut keys: Vec<u64> = cells.iter().map(|c| c.key(&params)).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), cells.len(), "distinct cells must hash distinctly");
+        // Changing the machine changes every key.
+        let mut other = quick();
+        other.machine = crate::sim::machine::MachineConfig::xeon_6248_1s();
+        assert_ne!(cells[0].key(&params), cells[0].key(&other));
+    }
+
+    #[test]
+    fn content_hash_order_independent() {
+        let a = content_hash(&[("x", Json::num(1.0)), ("y", Json::str("s"))]);
+        let b = content_hash(&[("y", Json::str("s")), ("x", Json::num(1.0))]);
+        assert_eq!(a, b);
+        let c = content_hash(&[("x", Json::num(2.0)), ("y", Json::str("s"))]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn f1_runs_without_cells() {
+        let r = find("f1").unwrap().run(&quick()).unwrap();
+        assert_eq!(r.groups.len(), 1);
+        assert!(r.groups[0].measurements.is_empty());
+        assert!(r.groups[0].roofline.peak() > 0.0);
+    }
+
+    #[test]
+    fn inexpressible_scenarios_skip_with_note() {
+        // g1 includes remote-only, which a single-node machine cannot
+        // express: the group is skipped, the rest of the grid still runs.
+        let mut params = quick();
+        params.machine = crate::sim::machine::MachineConfig::xeon_6248_1s();
+        let r = find("g1").unwrap().run(&params).unwrap();
+        assert_eq!(r.groups.len(), 5, "remote-only group must be skipped");
+        assert!(
+            r.notes.iter().any(|n| n.contains("skipped")),
+            "skip note missing: {:?}",
+            r.notes
+        );
+    }
+
+    #[test]
+    fn run_with_counts_cells() {
+        let spec = find("f6").unwrap();
+        let params = quick();
+        let mut seen = 0usize;
+        let r = spec
+            .run_with(&params, &mut |cell| {
+                seen += 1;
+                cell.simulate(&params)
+            })
+            .unwrap();
+        assert_eq!(seen, 2);
+        assert_eq!(r.groups.len(), 1);
+        assert_eq!(r.groups[0].measurements.len(), 2);
+        assert!(!r.groups[0].expectations.is_empty());
+    }
+}

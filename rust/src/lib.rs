@@ -26,13 +26,16 @@
 //! * the **roofline model** itself ([`roofline`]) with ASCII/SVG plots and
 //!   paper-style reports;
 //! * a **measurement harness** ([`harness`]) — cold/warm cache protocols,
-//!   single-thread / single-socket / two-socket scenarios, per-figure
-//!   experiment definitions;
+//!   data-driven execution scenarios (the paper's three plus
+//!   interleaved / remote-only / half-socket presets), and a declarative
+//!   experiment spec registry that replaces per-figure code with data;
 //! * a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX /
 //!   Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from Rust —
 //!   Python never runs on the measurement path;
 //! * a **coordinator** ([`coordinator`]) tying it all together behind the
-//!   `dlroofline` CLI.
+//!   `dlroofline` CLI — including a parallel, memoizing plan executor
+//!   (`sweep --jobs N`) and versioned `run.json` manifests that make
+//!   every run a reproducible artifact.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

@@ -9,16 +9,19 @@ use anyhow::Result;
 
 use dlroofline::cli::{opt, switch, AppSpec, CmdSpec, Parsed};
 use dlroofline::coordinator::config::resolve_machine;
-use dlroofline::coordinator::runner::{render_report, run_and_write};
-use dlroofline::coordinator::KernelRegistry;
+use dlroofline::coordinator::runner::{render_report, run_and_write, sweep_and_write};
+use dlroofline::coordinator::{plan, KernelRegistry};
 use dlroofline::harness::experiments::{experiment_index, ExperimentParams};
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, spec, CacheState, ScenarioSpec};
 use dlroofline::hostbench::{membw, peak_flops, CpuInfo, PeakIsa};
 use dlroofline::roofline::model::RooflineModel;
 use dlroofline::roofline::report::markdown_table;
 use dlroofline::runtime::{Engine, HostTensor};
 use dlroofline::sim::machine::Machine;
 use dlroofline::util::human::{fmt_flops, fmt_rate, fmt_seconds};
+
+const SCENARIO_HELP: &str =
+    "single-thread | one-socket | two-socket | interleaved | remote-only | half-socket";
 
 fn app() -> AppSpec {
     AppSpec {
@@ -28,13 +31,13 @@ fn app() -> AppSpec {
         commands: vec![
             CmdSpec {
                 name: "list",
-                help: "list experiments, kernels and artifacts",
+                help: "list experiments, kernels, scenarios and artifacts",
                 opts: vec![],
                 positional: vec![],
             },
             CmdSpec {
                 name: "figure",
-                help: "reproduce one paper figure/experiment (f1,f3..f8,a1..a4,p1,p2,v1,v2)",
+                help: "reproduce one paper figure/experiment (f1,f3..f8,a1..a4,g1,p1,p2,v1,v2,m1)",
                 opts: vec![
                     opt("out", "report output directory", Some("reports")),
                     opt("machine", "machine preset or config path", Some("xeon_6248")),
@@ -46,8 +49,33 @@ fn app() -> AppSpec {
                 positional: vec![("id", "experiment id, e.g. f3")],
             },
             CmdSpec {
+                name: "sweep",
+                help: "run a set of experiments as one parallel, memoized plan",
+                opts: vec![
+                    opt("out", "report output directory", Some("reports")),
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt("batch", "override workload batch", None),
+                    opt("only", "comma-separated experiment ids (default: all)", None),
+                    opt("jobs", "worker threads (0 = auto)", Some("0")),
+                    switch("full-size", "use the paper's full tensor sizes (slow)"),
+                    switch("svg", "also emit SVG plots"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "plan",
+                help: "dry-run a sweep: show its cells and memoization savings",
+                opts: vec![
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt("batch", "override workload batch", None),
+                    opt("only", "comma-separated experiment ids (default: all)", None),
+                    switch("full-size", "use the paper's full tensor sizes (slow)"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
                 name: "repro-all",
-                help: "reproduce every figure and write reports/",
+                help: "reproduce every figure and write reports/ (serial; see `sweep`)",
                 opts: vec![
                     opt("out", "report output directory", Some("reports")),
                     opt("machine", "machine preset or config path", Some("xeon_6248")),
@@ -61,7 +89,7 @@ fn app() -> AppSpec {
                 help: "measure one kernel on the simulated platform",
                 opts: vec![
                     opt("machine", "machine preset or config path", Some("xeon_6248")),
-                    opt("scenario", "single-thread | one-socket | two-socket", Some("single-thread")),
+                    opt("scenario", SCENARIO_HELP, Some("single-thread")),
                     opt("cache", "cold | warm", Some("cold")),
                     opt("scale", "workload scale (batch)", Some("4")),
                 ],
@@ -119,10 +147,24 @@ fn params_from(parsed: &Parsed) -> Result<ExperimentParams> {
     })
 }
 
+/// Resolve `--only a,b,c` (or every registry id when absent).
+fn ids_from(parsed: &Parsed) -> Vec<String> {
+    match parsed.opt("only") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => spec::ids().iter().map(|s| s.to_string()).collect(),
+    }
+}
+
 fn dispatch(parsed: &Parsed) -> Result<()> {
     match parsed.command.as_str() {
         "list" => cmd_list(),
         "figure" => cmd_figure(parsed),
+        "sweep" => cmd_sweep(parsed),
+        "plan" => cmd_plan(parsed),
         "repro-all" => cmd_repro_all(parsed),
         "measure" => cmd_measure(parsed),
         "characterize" => cmd_characterize(parsed),
@@ -133,13 +175,17 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("EXPERIMENTS (dlroofline figure <id>):");
+    println!("EXPERIMENTS (dlroofline figure <id> | sweep --only <ids>):");
     for (id, title) in experiment_index() {
         println!("  {id:<4} {title}");
     }
     println!("\nKERNELS (dlroofline measure <name>):");
     for name in KernelRegistry::with_builtins().names() {
         println!("  {name}");
+    }
+    println!("\nSCENARIOS (dlroofline measure --scenario <name>):");
+    for s in ScenarioSpec::presets() {
+        println!("  {}", s.name);
     }
     match dlroofline::runtime::Manifest::load_default() {
         Ok(m) => {
@@ -170,6 +216,60 @@ fn cmd_figure(parsed: &Parsed) -> Result<()> {
     for p in output.svgs.iter().chain(output.csvs.iter()) {
         println!("wrote {}", p.display());
     }
+    if let Some(m) = output.manifest {
+        println!("wrote {}", m.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(parsed: &Parsed) -> Result<()> {
+    let params = params_from(parsed)?;
+    let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
+    let jobs = parsed.opt_parse::<usize>("jobs")?.unwrap_or(0);
+    let ids = ids_from(parsed);
+    let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
+    let (results, sweep) =
+        sweep_and_write(&id_refs, &params, &out_dir, parsed.has("svg"), jobs)?;
+    for (result, output) in results.iter().zip(sweep.outputs.iter()) {
+        eprintln!("== {}: {}", result.id, result.title);
+        if let Some(md) = &output.markdown {
+            println!("wrote {}", md.display());
+        }
+    }
+    if let Some(m) = &sweep.manifest {
+        println!("wrote {}", m.display());
+    }
+    let s = sweep.stats;
+    println!(
+        "plan: {} experiments ({} narrative), {} cells → {} simulated, {} memoized away, {} inexpressible",
+        s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
+    );
+    Ok(())
+}
+
+fn cmd_plan(parsed: &Parsed) -> Result<()> {
+    let params = params_from(parsed)?;
+    let ids = ids_from(parsed);
+    let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
+    let expansion = plan::expand(&id_refs, &params)?;
+    println!("| experiment | kernel | scenario | cache | cell key | memoized |");
+    println!("|---|---|---|---|---|---|");
+    for c in &expansion.cells {
+        println!(
+            "| {} | {} | {} | {} | {} | {} |",
+            c.experiment,
+            c.kernel,
+            c.scenario,
+            c.cache,
+            dlroofline::util::hash::hex64(c.key),
+            if c.reused { "reuse" } else { "simulate" }
+        );
+    }
+    let s = expansion.stats;
+    println!(
+        "\nplan: {} experiments ({} narrative), {} cells → {} to simulate, {} memoized away, {} inexpressible",
+        s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
+    );
     Ok(())
 }
 
@@ -192,8 +292,8 @@ fn cmd_measure(parsed: &Parsed) -> Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("missing kernel name (try `dlroofline list`)"))?;
     let machine_cfg = resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?;
-    let scenario = Scenario::parse(parsed.opt("scenario").unwrap_or("single-thread"))
-        .ok_or_else(|| anyhow::anyhow!("bad --scenario"))?;
+    let scenario = ScenarioSpec::parse(parsed.opt("scenario").unwrap_or("single-thread"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scenario (expected {SCENARIO_HELP})"))?;
     let cache = CacheState::parse(parsed.opt("cache").unwrap_or("cold"))
         .ok_or_else(|| anyhow::anyhow!("bad --cache"))?;
     let scale = parsed.opt_parse::<usize>("scale")?.unwrap_or(4);
@@ -201,7 +301,7 @@ fn cmd_measure(parsed: &Parsed) -> Result<()> {
     let registry = KernelRegistry::with_builtins();
     let kernel = registry.create(name, scale)?;
     let mut machine = Machine::new(machine_cfg.clone());
-    let meas = measure_kernel(&mut machine, kernel.as_ref(), scenario, cache)?;
+    let meas = measure_kernel(&mut machine, kernel.as_ref(), &scenario, cache)?;
     let roofline = RooflineModel::for_machine(
         &machine_cfg,
         scenario.threads(&machine_cfg),

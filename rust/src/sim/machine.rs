@@ -81,6 +81,88 @@ impl MachineConfig {
         one * nodes_used as f64
     }
 
+    /// The machine's identifying parameters as a canonical JSON document
+    /// — every field that affects a simulated measurement. Cell
+    /// memoization keys and run-manifest fingerprints hash this, so two
+    /// configs that could produce different numbers must serialise
+    /// differently.
+    pub fn fingerprint_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let cache = |c: &CacheConfig| {
+            Json::obj(vec![
+                ("size", Json::num(c.size as f64)),
+                ("ways", Json::num(c.ways as f64)),
+                ("line", Json::num(c.line as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("sockets", Json::num(self.sockets as f64)),
+            ("cores_per_socket", Json::num(self.cores_per_socket as f64)),
+            (
+                "core",
+                Json::obj(vec![
+                    ("freq_scalar", Json::num(self.core.freq_scalar)),
+                    ("freq_avx2", Json::num(self.core.freq_avx2)),
+                    ("freq_avx512", Json::num(self.core.freq_avx512)),
+                    ("fma_ports", Json::num(self.core.fma_ports)),
+                    ("load_ports", Json::num(self.core.load_ports)),
+                    ("store_ports", Json::num(self.core.store_ports)),
+                    ("shuffle_ports", Json::num(self.core.shuffle_ports)),
+                    ("alu_ports", Json::num(self.core.alu_ports)),
+                    ("issue_width", Json::num(self.core.issue_width)),
+                    ("max_width", Json::str(format!("{:?}", self.core.max_width))),
+                ]),
+            ),
+            (
+                "hierarchy",
+                Json::obj(vec![
+                    ("l1", cache(&self.hierarchy.l1)),
+                    ("l2", cache(&self.hierarchy.l2)),
+                    ("llc", cache(&self.hierarchy.llc)),
+                    (
+                        "prefetch",
+                        Json::obj(vec![
+                            ("enabled", Json::Bool(self.hierarchy.prefetch.enabled)),
+                            ("streams", Json::num(self.hierarchy.prefetch.streams as f64)),
+                            ("degree", Json::num(self.hierarchy.prefetch.degree as f64)),
+                            ("confirm", Json::num(self.hierarchy.prefetch.confirm as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "dram",
+                Json::obj(vec![
+                    ("channels", Json::num(self.dram.channels as f64)),
+                    ("channel_bw", Json::num(self.dram.channel_bw)),
+                    ("efficiency", Json::num(self.dram.efficiency)),
+                    ("nt_store_bonus", Json::num(self.dram.nt_store_bonus)),
+                    ("latency", Json::num(self.dram.latency)),
+                    ("lfbs", Json::num(self.dram.lfbs as f64)),
+                    ("prefetch_mlp_boost", Json::num(self.dram.prefetch_mlp_boost)),
+                ]),
+            ),
+            (
+                "numa",
+                Json::obj(vec![
+                    ("nodes", Json::num(self.numa.nodes as f64)),
+                    ("remote_bw_factor", Json::num(self.numa.remote_bw_factor)),
+                    ("remote_latency_factor", Json::num(self.numa.remote_latency_factor)),
+                    ("remote_stall_factor", Json::num(self.numa.remote_stall_factor)),
+                ]),
+            ),
+            ("sync_coeff", Json::num(self.sync_coeff)),
+            ("imbalance_coeff", Json::num(self.imbalance_coeff)),
+        ])
+    }
+
+    /// Hex fingerprint of [`Self::fingerprint_json`] — the manifest's
+    /// machine identity.
+    pub fn fingerprint(&self) -> String {
+        crate::util::hash::fnv1a_64_hex(self.fingerprint_json().to_string_compact().as_bytes())
+    }
+
     /// Parse from a TOML-lite document (see `configs/xeon_6248.toml`).
     pub fn from_toml(doc: &Doc) -> Result<MachineConfig> {
         let base = MachineConfig::xeon_6248();
@@ -311,6 +393,18 @@ channels = 2
         assert_eq!(m.hierarchy.llc.size, 4096 * 1024);
         assert_eq!(m.dram.channels, 2);
         assert_eq!(m.numa.nodes, 1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        let a = MachineConfig::xeon_6248();
+        let b = MachineConfig::xeon_6248_1s();
+        assert_eq!(a.fingerprint(), MachineConfig::xeon_6248().fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut skinny = MachineConfig::xeon_6248();
+        skinny.dram.channels = 2;
+        assert_ne!(a.fingerprint(), skinny.fingerprint());
+        assert_eq!(a.fingerprint().len(), 16);
     }
 
     #[test]

@@ -9,6 +9,49 @@ pub mod prop;
 
 pub use prop::{check, check_with, Config as PropConfig};
 
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A unique, self-cleaning temporary directory for tests.
+///
+/// `std::env::temp_dir().join(format!("x-{pid}"))` collides when several
+/// tests in one process use the same label — and leaks the directory if
+/// the test panics before its `remove_dir_all`. This helper derives a
+/// unique path per instance (label × pid × process-wide counter) and
+/// removes it on drop, which also runs during unwinding.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `${TMPDIR}/dlroofline-<label>-<pid>-<n>`.
+    pub fn new(label: &str) -> TempDir {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "dlroofline-{label}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory.
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Assert two f64 values are within `tol` relative error (absolute for
 /// near-zero expectations).
 pub fn assert_close(actual: f64, expected: f64, tol: f64, what: &str) {
@@ -47,5 +90,17 @@ mod tests {
     #[test]
     fn range_works() {
         assert_in_range(0.5, 0.0, 1.0, "mid");
+    }
+
+    #[test]
+    fn tempdirs_are_unique_and_cleaned() {
+        let a = TempDir::new("t");
+        let b = TempDir::new("t");
+        assert_ne!(a.path(), b.path(), "same-label temp dirs must not collide");
+        assert!(a.path().is_dir() && b.path().is_dir());
+        std::fs::write(a.join("f.txt"), "x").unwrap();
+        let kept = a.path().to_path_buf();
+        drop(a);
+        assert!(!kept.exists(), "drop must remove the directory");
     }
 }

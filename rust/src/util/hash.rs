@@ -1,0 +1,55 @@
+//! FNV-1a 64-bit hashing — the content-hash primitive behind measurement
+//! cell memoization keys, machine fingerprints and run-manifest file
+//! checksums. Deliberately not a cryptographic hash: keys only need to be
+//! stable across runs and collision-free over the few hundred cells a
+//! sweep expands to.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Hash a byte slice with FNV-1a (64-bit).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fixed-width lowercase-hex rendering of a 64-bit hash.
+pub fn hex64(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Hash and render in one step (the manifest checksum format).
+pub fn fnv1a_64_hex(bytes: &[u8]) -> String {
+    hex64(fnv1a_64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        assert_eq!(hex64(0), "0000000000000000");
+        assert_eq!(hex64(0xabc), "0000000000000abc");
+        assert_eq!(fnv1a_64_hex(b"").len(), 16);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        assert_ne!(fnv1a_64(b"cell-a"), fnv1a_64(b"cell-b"));
+    }
+}

@@ -8,12 +8,14 @@
 //! formatting.
 
 pub mod fsutil;
+pub mod hash;
 pub mod human;
 pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod toml_lite;
 
+pub use hash::{fnv1a_64, fnv1a_64_hex};
 pub use human::{fmt_bytes, fmt_flops, fmt_rate, fmt_seconds};
 pub use json::Json;
 pub use prng::Prng;

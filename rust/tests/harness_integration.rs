@@ -5,7 +5,7 @@
 use dlroofline::coordinator::runner::{render_report, run_and_write};
 use dlroofline::coordinator::KernelRegistry;
 use dlroofline::harness::experiments::{experiment_index, run_experiment, ExperimentParams};
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
 use dlroofline::pmu::perf_iface::{MeasureProtocol, RunCounters};
 use dlroofline::pmu::FpEventSet;
 use dlroofline::sim::core::VecWidth;
@@ -31,8 +31,8 @@ fn every_indexed_experiment_runs() {
 
 #[test]
 fn reports_written_for_figure_with_groups() {
-    let dir = std::env::temp_dir().join(format!("dlr-it-{}", std::process::id()));
-    let (_, out) = run_and_write("f7", &quick(), &dir, true).unwrap();
+    let dir = dlroofline::testutil::TempDir::new("it-f7");
+    let (_, out) = run_and_write("f7", &quick(), dir.path(), true).unwrap();
     let md = std::fs::read_to_string(out.markdown.unwrap()).unwrap();
     assert!(md.contains("avgpool_nchw"));
     assert!(md.contains("roofline:"));
@@ -45,7 +45,6 @@ fn reports_written_for_figure_with_groups() {
         let body = std::fs::read_to_string(csv).unwrap();
         assert!(body.lines().count() > 1);
     }
-    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
@@ -54,8 +53,13 @@ fn registry_to_measurement_pipeline() {
     let mut machine = Machine::new(MachineConfig::xeon_6248());
     for name in registry.names() {
         let kernel = registry.create(name, 1).unwrap();
-        let m = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleThread, CacheState::Cold)
-            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let m = measure_kernel(
+            &mut machine,
+            kernel.as_ref(),
+            &ScenarioSpec::single_thread(),
+            CacheState::Cold,
+        )
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"));
         assert!(m.measured.work_flops > 0, "{name}: zero W");
         assert!(m.measured.traffic_bytes > 0, "{name}: zero Q (cold run!)");
         assert!(m.runtime.seconds > 0.0, "{name}: zero R");
@@ -80,18 +84,33 @@ fn scenario_threads_monotonic_speedup_compute_bound() {
     let registry = KernelRegistry::with_builtins();
     let kernel = registry.create("conv_direct_nchw16c", 2).unwrap();
     let mut machine = Machine::new(MachineConfig::xeon_6248());
-    let t1 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleThread, CacheState::Cold)
-        .unwrap()
-        .runtime
-        .seconds;
-    let t20 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
-        .unwrap()
-        .runtime
-        .seconds;
-    let t40 = measure_kernel(&mut machine, kernel.as_ref(), Scenario::TwoSocket, CacheState::Cold)
-        .unwrap()
-        .runtime
-        .seconds;
+    let t1 = measure_kernel(
+        &mut machine,
+        kernel.as_ref(),
+        &ScenarioSpec::single_thread(),
+        CacheState::Cold,
+    )
+    .unwrap()
+    .runtime
+    .seconds;
+    let t20 = measure_kernel(
+        &mut machine,
+        kernel.as_ref(),
+        &ScenarioSpec::one_socket(),
+        CacheState::Cold,
+    )
+    .unwrap()
+    .runtime
+    .seconds;
+    let t40 = measure_kernel(
+        &mut machine,
+        kernel.as_ref(),
+        &ScenarioSpec::two_socket(),
+        CacheState::Cold,
+    )
+    .unwrap()
+    .runtime
+    .seconds;
     assert!(t20 < t1 / 8.0, "socket speedup too small: {t1} → {t20}");
     assert!(t40 < t20, "two sockets must still beat one: {t20} → {t40}");
     // …but NUMA prevents 2×.
@@ -108,12 +127,12 @@ fn custom_machine_config_flows_through() {
     skinny.dram.channels = 2;
 
     let mut m1 = Machine::new(base);
-    let fast = measure_kernel(&mut m1, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
+    let fast = measure_kernel(&mut m1, kernel.as_ref(), &ScenarioSpec::one_socket(), CacheState::Cold)
         .unwrap()
         .runtime
         .seconds;
     let mut m2 = Machine::new(skinny);
-    let slow = measure_kernel(&mut m2, kernel.as_ref(), Scenario::SingleSocket, CacheState::Cold)
+    let slow = measure_kernel(&mut m2, kernel.as_ref(), &ScenarioSpec::one_socket(), CacheState::Cold)
         .unwrap()
         .runtime
         .seconds;

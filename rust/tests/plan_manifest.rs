@@ -1,0 +1,194 @@
+//! Integration tests for the declarative experiment-plan subsystem:
+//! manifest schema round-trips, cell content-hash properties, and the
+//! determinism contract between serial and parallel sweeps.
+
+use dlroofline::coordinator::plan;
+use dlroofline::coordinator::runner::sweep_and_write;
+use dlroofline::coordinator::RunManifest;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::spec::{self, content_hash};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
+use dlroofline::sim::machine::{Machine, MachineConfig};
+use dlroofline::testutil::prop::check;
+use dlroofline::testutil::TempDir;
+use dlroofline::util::json::Json;
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+// ----------------------------------------------------------- manifest
+
+#[test]
+fn manifest_roundtrips_through_json_layer() {
+    let dir = TempDir::new("pm-roundtrip");
+    let params = quick();
+    let (_, sweep) = sweep_and_write(&["f6", "f7"], &params, dir.path(), false, 1).unwrap();
+    let path = sweep.manifest.expect("sweep manifest");
+
+    let loaded = RunManifest::load(&path).unwrap();
+    assert_eq!(loaded.schema_version, dlroofline::coordinator::SCHEMA_VERSION);
+    assert_eq!(loaded.experiments, vec!["f6".to_string(), "f7".to_string()]);
+    assert_eq!(loaded.machine_fingerprint, params.machine.fingerprint());
+    assert!(!loaded.cells.is_empty());
+    assert!(!loaded.files.is_empty());
+
+    // Full value round-trip: emit → parse → rebuild → re-emit.
+    let text = loaded.to_string_pretty();
+    let again = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(loaded, again);
+    assert_eq!(text, again.to_string_pretty());
+}
+
+// ----------------------------------------------------------- cell hashes
+
+#[test]
+fn prop_content_hash_stable_under_field_reordering() {
+    check(
+        "hash(fields) independent of insertion order",
+        |rng, idx| {
+            let n = 2 + (idx % 5);
+            let mut fields: Vec<(String, f64)> = (0..n)
+                .map(|i| (format!("field_{i}"), rng.below(1_000_000) as f64))
+                .collect();
+            // A deterministic shuffle of the same fields.
+            let mut shuffled = fields.clone();
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                shuffled.swap(i, j);
+            }
+            fields.rotate_left(idx % fields.len().max(1));
+            (fields, shuffled)
+        },
+        |(fields, shuffled)| {
+            let to_json = |v: &[(String, f64)]| {
+                v.iter()
+                    .map(|(k, x)| (k.as_str(), Json::num(*x)))
+                    .collect::<Vec<_>>()
+            };
+            let a = content_hash(&to_json(fields));
+            let b = content_hash(&to_json(shuffled));
+            assert_eq!(a, b, "field order changed the hash");
+        },
+    );
+}
+
+#[test]
+fn prop_content_hash_distinct_across_configs() {
+    check(
+        "distinct field values hash distinctly",
+        |rng, _| {
+            let base = rng.below(1 << 40) as f64;
+            // Perturb exactly one field.
+            let delta = 1.0 + rng.below(1000) as f64;
+            (base, delta)
+        },
+        |&(base, delta)| {
+            let a = content_hash(&[("x", Json::num(base)), ("y", Json::str("k"))]);
+            let b = content_hash(&[("x", Json::num(base + delta)), ("y", Json::str("k"))]);
+            assert_ne!(a, b, "differing configs must not collide (x={base}, Δ={delta})");
+        },
+    );
+}
+
+#[test]
+fn cell_keys_change_with_machine_and_cache() {
+    let params = quick();
+    let mut skinny = quick();
+    skinny.machine.dram.channels = 2;
+
+    let cells = spec::find("f6").unwrap().cells();
+    assert_eq!(cells.len(), 2, "f6 = cold + warm");
+    // Cold vs warm differ.
+    assert_ne!(cells[0].key(&params), cells[1].key(&params));
+    // Same cell on a different machine differs.
+    assert_ne!(cells[0].key(&params), cells[0].key(&skinny));
+    // Keys are reproducible.
+    assert_eq!(cells[0].key(&params), cells[0].key(&params));
+}
+
+// ----------------------------------------------------------- determinism
+
+#[test]
+fn parallel_sweep_manifest_matches_serial() {
+    // The acceptance contract: `--jobs 1` and `--jobs N` produce
+    // byte-identical manifests (and therefore identical reports).
+    let params = quick();
+    let ids = ["f3", "f4", "f6", "g1"];
+
+    let dir1 = TempDir::new("pm-serial");
+    let (_, serial) = sweep_and_write(&ids, &params, dir1.path(), false, 1).unwrap();
+    let dirn = TempDir::new("pm-parallel");
+    let (_, parallel) = sweep_and_write(&ids, &params, dirn.path(), false, 4).unwrap();
+
+    let a = std::fs::read_to_string(serial.manifest.unwrap()).unwrap();
+    let b = std::fs::read_to_string(parallel.manifest.unwrap()).unwrap();
+    assert_eq!(a, b, "jobs=1 and jobs=4 manifests diverged");
+}
+
+#[test]
+fn sweep_memoizes_shared_cells() {
+    // f3/f4/f5's conv cells reappear inside g1's scenario grid: the plan
+    // must simulate observably fewer cells than the naive expansion.
+    let params = quick();
+    let expansion = plan::expand(&["f3", "f4", "f5", "g1"], &params).unwrap();
+    assert_eq!(expansion.stats.cells_total, 27);
+    assert_eq!(expansion.stats.cells_simulated, 18);
+    assert_eq!(expansion.stats.cells_reused, 9);
+}
+
+// ----------------------------------------------------------- scenarios
+
+#[test]
+fn new_scenario_presets_run_end_to_end() {
+    // The three presets the old enum could not express, driven through
+    // the full measure pipeline on the paper's machine.
+    let config = MachineConfig::xeon_6248();
+    let registry = dlroofline::coordinator::KernelRegistry::with_builtins();
+    let kernel = registry.create("gelu_nchw", 2).unwrap();
+    let mut results = Vec::new();
+    for scenario in [
+        ScenarioSpec::interleaved(),
+        ScenarioSpec::remote_only(),
+        ScenarioSpec::half_socket(),
+    ] {
+        let mut machine = Machine::new(config.clone());
+        let m = measure_kernel(&mut machine, kernel.as_ref(), &scenario, CacheState::Cold)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", scenario.name));
+        assert!(m.measured.work_flops > 0, "{}: zero W", scenario.name);
+        assert!(m.measured.traffic_bytes > 0, "{}: zero Q", scenario.name);
+        assert!(m.runtime.seconds > 0.0, "{}: zero R", scenario.name);
+        results.push((scenario.name.clone(), m));
+    }
+    // Physics sanity: remote-only must be slower than half-socket (same
+    // node-0 compute family, but every byte crosses UPI).
+    let seconds = |name: &str| {
+        results
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m.runtime.seconds)
+            .unwrap()
+    };
+    assert!(
+        seconds("remote-only") > seconds("half-socket") * 0.9,
+        "remote-only {} vs half-socket {}",
+        seconds("remote-only"),
+        seconds("half-socket")
+    );
+}
+
+#[test]
+fn sweep_covers_full_registry() {
+    // A whole-registry sweep (the `dlroofline sweep` default) must run
+    // every experiment, including specials, and emit one manifest.
+    let params = quick();
+    let ids = spec::ids();
+    let dir = TempDir::new("pm-full");
+    let (results, sweep) = sweep_and_write(&ids, &params, dir.path(), false, 0).unwrap();
+    assert_eq!(results.len(), ids.len());
+    assert_eq!(sweep.stats.experiments, ids.len());
+    assert!(sweep.stats.specials >= 5, "p1,p2,v1,v2,m1 at least");
+    assert!(sweep.stats.cells_reused > 0, "registry sweep must memoize: {:?}", sweep.stats);
+    let manifest = RunManifest::load(&sweep.manifest.unwrap()).unwrap();
+    assert_eq!(manifest.experiments.len(), ids.len());
+}

@@ -13,7 +13,7 @@ use dlroofline::sim::numa::{MemPolicy, PageMap, Placement};
 use dlroofline::sim::prefetch::PrefetchConfig;
 use dlroofline::sim::trace::{AccessKind, AccessRun, Trace};
 use dlroofline::testutil::prop::check;
-use dlroofline::harness::{measure_kernel, CacheState, Scenario};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
 
 // --------------------------------------------------------------- roofline
 
@@ -215,19 +215,20 @@ fn prop_measurement_roofline_consistent() {
     check(
         "R*pi >= W and R*beta >= Q",
         |rng, idx| {
-            let scenario = *rng.pick(&[Scenario::SingleThread, Scenario::SingleSocket]);
+            let scenario =
+                rng.pick(&[ScenarioSpec::single_thread(), ScenarioSpec::one_socket()]).clone();
             let kernel_id = idx % 3;
             let cache = *rng.pick(&[CacheState::Cold, CacheState::Warm]);
             (scenario, kernel_id, cache)
         },
-        |&(scenario, kernel_id, cache)| {
+        |(scenario, kernel_id, cache)| {
             let kernel: Box<dyn KernelModel> = match kernel_id {
                 0 => Box::new(SumReduction::new(1 << 18)),
                 1 => Box::new(InnerProduct::new(64, 256, 128)),
                 _ => Box::new(GeluNchw::new(EltwiseShape::favourable(2))),
             };
             let mut machine = Machine::new(machine_cfg.clone());
-            let m = measure_kernel(&mut machine, kernel.as_ref(), scenario, cache).unwrap();
+            let m = measure_kernel(&mut machine, kernel.as_ref(), scenario, *cache).unwrap();
             let threads = scenario.threads(&machine_cfg);
             let pi = machine_cfg.peak_flops(threads, dlroofline::sim::core::VecWidth::V512);
             let beta = machine_cfg.peak_bw(threads, scenario.nodes_used(&machine_cfg));
@@ -249,10 +250,10 @@ fn prop_warm_traffic_never_exceeds_cold() {
             let kernel = InnerProduct::new(m, k, 64);
             let mut machine = Machine::new(MachineConfig::xeon_6248());
             let cold =
-                measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Cold)
+                measure_kernel(&mut machine, &kernel, &ScenarioSpec::single_thread(), CacheState::Cold)
                     .unwrap();
             let warm =
-                measure_kernel(&mut machine, &kernel, Scenario::SingleThread, CacheState::Warm)
+                measure_kernel(&mut machine, &kernel, &ScenarioSpec::single_thread(), CacheState::Warm)
                     .unwrap();
             assert!(
                 warm.measured.traffic_bytes <= cold.measured.traffic_bytes,
