@@ -1,0 +1,325 @@
+//! Manifest diffing: per-cell W/Q/R and per-level-AI drift between two
+//! `run.json` manifests (ROADMAP: compare machines or code versions).
+//!
+//! Cells are matched by identity — (experiment, kernel, scenario,
+//! cache) — not by content hash, so runs from different machines or
+//! different code versions line up. Drift is relative:
+//! `|a − b| / max(|a|, |b|)`, 0 when both sides are 0.
+
+use std::collections::BTreeMap;
+
+use crate::util::human::fmt_pct;
+
+use super::manifest::{CellRecord, RunManifest};
+
+/// One metric's values on both sides and the relative drift.
+#[derive(Clone, Debug)]
+pub struct MetricDrift {
+    pub metric: &'static str,
+    pub a: f64,
+    pub b: f64,
+    pub rel: f64,
+}
+
+/// Drift of one matched cell.
+#[derive(Clone, Debug)]
+pub struct CellDrift {
+    /// `experiment/kernel/scenario/cache`.
+    pub identity: String,
+    /// Every compared metric (W, Q, R, per-level AI), drifting or not.
+    pub metrics: Vec<MetricDrift>,
+}
+
+impl CellDrift {
+    /// The cell's worst relative drift.
+    pub fn max_rel(&self) -> f64 {
+        self.metrics.iter().fold(0.0, |m, d| m.max(d.rel))
+    }
+}
+
+/// The complete comparison of two manifests.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Cell identities present only in the first manifest.
+    pub only_in_a: Vec<String>,
+    /// Cell identities present only in the second manifest.
+    pub only_in_b: Vec<String>,
+    /// Matched cells with their metric drifts, in identity order.
+    pub cells: Vec<CellDrift>,
+    /// Matched cells whose per-level AI could NOT be compared because at
+    /// least one side carries no level breakdown (pre-v2 manifest).
+    pub cells_without_levels: usize,
+    /// Whether the machine fingerprints differ.
+    pub machine_changed: bool,
+}
+
+impl DiffReport {
+    /// Worst relative drift across all matched cells.
+    pub fn max_rel(&self) -> f64 {
+        self.cells.iter().fold(0.0, |m, c| m.max(c.max_rel()))
+    }
+
+    /// True when the comparison should fail a `--tol` gate: any metric
+    /// drifts beyond `tol`, or the cell sets diverge structurally.
+    pub fn exceeds(&self, tol: f64) -> bool {
+        !self.only_in_a.is_empty() || !self.only_in_b.is_empty() || self.max_rel() > tol
+    }
+}
+
+fn identity(c: &CellRecord) -> String {
+    format!("{}/{}/{}/{}", c.experiment, c.kernel, c.scenario, c.cache)
+}
+
+fn rel_drift(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(b.abs());
+    if scale == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / scale
+    }
+}
+
+/// Below this many bytes a level is "quiet": AI = W/bytes is
+/// ill-conditioned as bytes → 0, so a single stray cache line would
+/// register as ~100% drift. Levels quiet on BOTH sides are not compared;
+/// a quiet→substantial transition still registers as ~full drift — the
+/// quiet side reports either a huge AI (few bytes) or the 0.0 sentinel
+/// (exactly zero bytes), and both land far from the substantial side.
+const QUIET_LEVEL_BYTES: f64 = 16.0 * 64.0;
+
+/// Compare two manifests cell by cell.
+pub fn diff_manifests(a: &RunManifest, b: &RunManifest) -> DiffReport {
+    let index = |m: &RunManifest| -> BTreeMap<String, &CellRecord> {
+        m.cells.iter().map(|c| (identity(c), c)).collect()
+    };
+    let ia = index(a);
+    let ib = index(b);
+
+    let mut report = DiffReport {
+        machine_changed: a.machine_fingerprint != b.machine_fingerprint,
+        ..Default::default()
+    };
+    for key in ia.keys() {
+        if !ib.contains_key(key) {
+            report.only_in_a.push(key.clone());
+        }
+    }
+    for key in ib.keys() {
+        if !ia.contains_key(key) {
+            report.only_in_b.push(key.clone());
+        }
+    }
+    for (key, ca) in &ia {
+        let Some(cb) = ib.get(key) else { continue };
+        let mut metrics = vec![
+            ("work_flops", ca.work_flops as f64, cb.work_flops as f64),
+            ("traffic_bytes", ca.traffic_bytes as f64, cb.traffic_bytes as f64),
+            ("runtime_seconds", ca.runtime_seconds, cb.runtime_seconds),
+        ];
+        if let (Some(la), Some(lb)) = (&ca.levels, &cb.levels) {
+            let (wa, wb) = (ca.work_flops as f64, cb.work_flops as f64);
+            let ai = |w: f64, bytes: f64| if bytes > 0.0 { w / bytes } else { 0.0 };
+            for (name, ba, bb) in [
+                ("ai_l1", la.l1, lb.l1),
+                ("ai_l2", la.l2, lb.l2),
+                ("ai_llc", la.llc, lb.llc),
+                ("ai_dram_local", la.dram_local, lb.dram_local),
+                ("ai_dram_remote", la.dram_remote, lb.dram_remote),
+            ] {
+                if ba < QUIET_LEVEL_BYTES && bb < QUIET_LEVEL_BYTES {
+                    continue;
+                }
+                metrics.push((name, ai(wa, ba), ai(wb, bb)));
+            }
+        } else {
+            // One side predates schema v2: the per-level comparison never
+            // ran for this cell — counted so the report can say so
+            // instead of implying "no drift" covered it.
+            report.cells_without_levels += 1;
+        }
+        report.cells.push(CellDrift {
+            identity: key.clone(),
+            metrics: metrics
+                .into_iter()
+                .map(|(metric, a, b)| MetricDrift { metric, a, b, rel: rel_drift(a, b) })
+                .collect(),
+        });
+    }
+    report
+}
+
+/// Render the report as markdown: one row per drifting metric, plus
+/// structural divergences. Quiet cells are summarised, not listed.
+pub fn render_diff(report: &DiffReport, tol: f64) -> String {
+    let mut out = String::new();
+    if report.machine_changed {
+        out.push_str("> machine fingerprints differ\n\n");
+    }
+    if report.cells_without_levels > 0 {
+        out.push_str(&format!(
+            "> per-level AI not compared for {} cell(s): at least one manifest \
+             predates schema v2 (no `levels`)\n\n",
+            report.cells_without_levels
+        ));
+    }
+    for (label, list) in [("only in A", &report.only_in_a), ("only in B", &report.only_in_b)] {
+        for id in list {
+            out.push_str(&format!("> {label}: {id}\n"));
+        }
+        if !list.is_empty() {
+            out.push('\n');
+        }
+    }
+    let drifting: Vec<(&CellDrift, Vec<&MetricDrift>)> = report
+        .cells
+        .iter()
+        .filter_map(|c| {
+            let bad: Vec<&MetricDrift> = c.metrics.iter().filter(|m| m.rel > tol).collect();
+            if bad.is_empty() { None } else { Some((c, bad)) }
+        })
+        .collect();
+    if drifting.is_empty() {
+        if report.only_in_a.is_empty() && report.only_in_b.is_empty() {
+            out.push_str(&format!(
+                "no drift above tolerance ({} cells compared, worst {})\n",
+                report.cells.len(),
+                fmt_pct(report.max_rel()),
+            ));
+        } else {
+            // Structural divergence only: don't print an empty metric
+            // table that reads like a pass.
+            out.push_str(&format!(
+                "cell sets diverge ({} only in A, {} only in B); the {} matched \
+                 cell(s) stay within tolerance\n",
+                report.only_in_a.len(),
+                report.only_in_b.len(),
+                report.cells.len(),
+            ));
+        }
+        return out;
+    }
+    out.push_str("| cell | metric | A | B | drift |\n|---|---|---|---|---|\n");
+    for (cell, metrics) in &drifting {
+        for m in metrics {
+            out.push_str(&format!(
+                "| {} | {} | {:.6e} | {:.6e} | {} |\n",
+                cell.identity,
+                m.metric,
+                m.a,
+                m.b,
+                fmt_pct(m.rel)
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\n{} of {} cells drift above {} (worst {})\n",
+        drifting.len(),
+        report.cells.len(),
+        fmt_pct(tol),
+        fmt_pct(report.max_rel()),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan;
+    use crate::coordinator::manifest::RunManifest;
+    use crate::harness::experiments::ExperimentParams;
+
+    // f8's GELU kernels scale with the batch override, so two batches
+    // produce genuinely different W/Q/R.
+    fn manifest(batch: usize) -> RunManifest {
+        let params = ExperimentParams { batch: Some(batch), ..Default::default() };
+        let outcome = plan::execute(&["f8"], &params, 1, false).unwrap();
+        RunManifest::new(&params, &["f8"], &outcome.cells, &outcome.stats)
+    }
+
+    #[test]
+    fn identical_manifests_do_not_drift() {
+        let a = manifest(1);
+        let b = manifest(1);
+        let report = diff_manifests(&a, &b);
+        assert!(!report.exceeds(0.0), "max_rel = {}", report.max_rel());
+        assert!(report.only_in_a.is_empty() && report.only_in_b.is_empty());
+        assert!(!report.machine_changed);
+        assert_eq!(report.cells.len(), 4); // f8: 2 kernels × cold + warm
+        let text = render_diff(&report, 0.0);
+        assert!(text.contains("no drift"), "{text}");
+    }
+
+    #[test]
+    fn workload_change_registers_as_drift() {
+        let a = manifest(1);
+        let b = manifest(2); // double batch: W and Q both move
+        let report = diff_manifests(&a, &b);
+        assert!(report.exceeds(0.01));
+        let text = render_diff(&report, 0.01);
+        assert!(text.contains("work_flops"), "{text}");
+        assert!(text.contains("drift"), "{text}");
+    }
+
+    #[test]
+    fn missing_cells_are_structural_drift() {
+        let a = manifest(1);
+        let mut b = manifest(1);
+        b.cells.pop();
+        let report = diff_manifests(&a, &b);
+        assert_eq!(report.only_in_a.len(), 1);
+        assert!(report.exceeds(f64::INFINITY), "structural drift ignores tol");
+        assert!(render_diff(&report, 0.0).contains("only in A"));
+    }
+
+    #[test]
+    fn v1_manifest_comparison_reports_skipped_level_metrics() {
+        let a = manifest(1);
+        let mut b = manifest(1);
+        for cell in &mut b.cells {
+            cell.levels = None; // what loading a v1 manifest produces
+        }
+        let report = diff_manifests(&a, &b);
+        assert_eq!(report.cells_without_levels, 4);
+        // W/Q/R still compare clean…
+        assert!(!report.exceeds(0.0));
+        // …but the report says the per-level check never ran.
+        let text = render_diff(&report, 0.0);
+        assert!(text.contains("per-level AI not compared for 4 cell(s)"), "{text}");
+    }
+
+    #[test]
+    fn rel_drift_is_symmetric_and_bounded() {
+        assert_eq!(rel_drift(0.0, 0.0), 0.0);
+        assert_eq!(rel_drift(1.0, 0.0), 1.0);
+        assert_eq!(rel_drift(1.0, 2.0), rel_drift(2.0, 1.0));
+        assert!((rel_drift(99.0, 100.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quiet_levels_do_not_register_noise_drift() {
+        // One stray cache line at an otherwise-silent level must not fail
+        // the gate; a substantial change at that level must.
+        let a = manifest(1);
+        let mut noisy = manifest(1);
+        let mut regressed = manifest(1);
+        for cell in &mut noisy.cells {
+            cell.levels.as_mut().unwrap().dram_remote = 64.0; // one line
+        }
+        for cell in &mut regressed.cells {
+            cell.levels.as_mut().unwrap().dram_remote = 64.0 * 1024.0 * 1024.0;
+        }
+        let quiet = diff_manifests(&a, &noisy);
+        assert!(
+            !quiet.cells.iter().any(|c| c.metrics.iter().any(|m| m.metric == "ai_dram_remote")),
+            "one stray line must stay below the quiet floor"
+        );
+        let loud = diff_manifests(&a, &regressed);
+        assert!(
+            loud.cells.iter().any(|c| c
+                .metrics
+                .iter()
+                .any(|m| m.metric == "ai_dram_remote" && m.rel > 0.9)),
+            "a 64 MiB remote-traffic regression must register"
+        );
+    }
+}

@@ -13,17 +13,21 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::harness::experiments::ExperimentParams;
+use crate::roofline::point::LevelBytes;
 use crate::util::fsutil::write_atomic;
 use crate::util::hash::{fnv1a_64_hex, hex64};
 use crate::util::json::Json;
 
 use super::plan::{ExecutedCell, PlanStats};
 
-/// Current manifest schema version. Bump on breaking layout changes;
-/// [`RunManifest::from_json`] rejects documents from other versions.
-pub const SCHEMA_VERSION: u64 = 1;
+/// Current manifest schema version. v2 adds the per-cell `levels` object
+/// (per-memory-level traffic for the hierarchical roofline).
+/// [`RunManifest::from_json`] also reads v1 documents (cells simply
+/// carry no level breakdown) and rejects newer versions.
+pub const SCHEMA_VERSION: u64 = 2;
 
-/// One measured cell's identity and W/Q/R results.
+/// One measured cell's identity and W/Q/R results, plus (schema v2) the
+/// per-memory-level traffic breakdown.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellRecord {
     pub experiment: String,
@@ -41,6 +45,9 @@ pub struct CellRecord {
     pub traffic_bytes: u64,
     /// Runtime R (modelled seconds).
     pub runtime_seconds: f64,
+    /// Per-level bytes (L1/L2/LLC/DRAM-local/DRAM-remote). `None` for
+    /// cells read from a v1 manifest.
+    pub levels: Option<LevelBytes>,
 }
 
 impl CellRecord {
@@ -56,11 +63,12 @@ impl CellRecord {
             work_flops: cell.measurement.measured.work_flops,
             traffic_bytes: cell.measurement.measured.traffic_bytes,
             runtime_seconds: cell.measurement.runtime.seconds,
+            levels: Some(cell.measurement.level_bytes()),
         }
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("experiment", Json::str(self.experiment.as_str())),
             ("kernel", Json::str(self.kernel.as_str())),
             ("scenario", Json::str(self.scenario.as_str())),
@@ -71,7 +79,11 @@ impl CellRecord {
             ("work_flops", Json::num(self.work_flops as f64)),
             ("traffic_bytes", Json::num(self.traffic_bytes as f64)),
             ("runtime_seconds", Json::num(self.runtime_seconds)),
-        ])
+        ];
+        if let Some(l) = &self.levels {
+            fields.push(("levels", levels_to_json(l)));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(v: &Json) -> Result<CellRecord> {
@@ -86,8 +98,32 @@ impl CellRecord {
             work_flops: v.expect("work_flops")?.as_f64()? as u64,
             traffic_bytes: v.expect("traffic_bytes")?.as_f64()? as u64,
             runtime_seconds: v.expect("runtime_seconds")?.as_f64()?,
+            levels: match v.get("levels") {
+                Some(Json::Null) | None => None,
+                Some(doc) => Some(levels_from_json(doc)?),
+            },
         })
     }
+}
+
+fn levels_to_json(l: &LevelBytes) -> Json {
+    Json::obj(vec![
+        ("l1_bytes", Json::num(l.l1)),
+        ("l2_bytes", Json::num(l.l2)),
+        ("llc_bytes", Json::num(l.llc)),
+        ("dram_local_bytes", Json::num(l.dram_local)),
+        ("dram_remote_bytes", Json::num(l.dram_remote)),
+    ])
+}
+
+fn levels_from_json(v: &Json) -> Result<LevelBytes> {
+    Ok(LevelBytes {
+        l1: v.expect("l1_bytes")?.as_f64()?,
+        l2: v.expect("l2_bytes")?.as_f64()?,
+        llc: v.expect("llc_bytes")?.as_f64()?,
+        dram_local: v.expect("dram_local_bytes")?.as_f64()?,
+        dram_remote: v.expect("dram_remote_bytes")?.as_f64()?,
+    })
 }
 
 /// A report file the run wrote, with its content checksum.
@@ -218,9 +254,9 @@ impl RunManifest {
 
     pub fn from_json(v: &Json) -> Result<RunManifest> {
         let version = v.expect("schema_version")?.as_f64()? as u64;
-        if version != SCHEMA_VERSION {
+        if version == 0 || version > SCHEMA_VERSION {
             bail!(
-                "run manifest schema version {version} unsupported (this build reads {SCHEMA_VERSION})"
+                "run manifest schema version {version} unsupported (this build reads 1..={SCHEMA_VERSION})"
             );
         }
         let batch = match v.expect("batch")? {
@@ -324,6 +360,54 @@ mod tests {
             assert_eq!(c.key.len(), 16);
         }
         assert_eq!(m.stats().cells_total, 2);
+    }
+
+    #[test]
+    fn v2_cells_carry_per_level_bytes() {
+        let m = small_manifest();
+        assert_eq!(m.schema_version, 2);
+        for c in &m.cells {
+            let levels = c.levels.as_ref().expect("v2 cell has levels");
+            assert!(levels.l1 > 0.0, "{}: empty L1 traffic", c.kernel);
+            // The DRAM split reconciles with the IMC-counted Q.
+            assert!(
+                (levels.dram() - c.traffic_bytes as f64).abs() < 1e-3,
+                "{}: dram {} vs Q {}",
+                c.kernel,
+                levels.dram(),
+                c.traffic_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn reads_v1_manifests_without_levels() {
+        // Build a v1 document the way PR 1 wrote them: no `levels` key,
+        // schema_version 1.
+        let mut doc = small_manifest().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema_version".into(), Json::num(1.0));
+            if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+                for cell in cells {
+                    if let Json::Obj(c) = cell {
+                        c.remove("levels");
+                    }
+                }
+            }
+        }
+        let back = RunManifest::from_json(&doc).unwrap();
+        assert_eq!(back.schema_version, 1);
+        assert!(back.cells.iter().all(|c| c.levels.is_none()));
+        // W/Q/R survive the migration untouched.
+        let orig = small_manifest();
+        for (a, b) in back.cells.iter().zip(orig.cells.iter()) {
+            assert_eq!(a.work_flops, b.work_flops);
+            assert_eq!(a.traffic_bytes, b.traffic_bytes);
+            assert_eq!(a.runtime_seconds, b.runtime_seconds);
+        }
+        // And a migrated document still round-trips.
+        let again = RunManifest::from_json(&Json::parse(&back.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, again);
     }
 
     #[test]

@@ -3,12 +3,17 @@
 //! behind the `dlroofline` CLI.
 
 pub mod config;
+pub mod diff;
 pub mod manifest;
 pub mod plan;
 pub mod registry;
 pub mod runner;
 
+pub use diff::{diff_manifests, render_diff, DiffReport};
 pub use manifest::{RunManifest, SCHEMA_VERSION};
 pub use plan::{PlanOutcome, PlanStats};
 pub use registry::KernelRegistry;
-pub use runner::{render_report, run_and_write, sweep_and_write, RunOutput, SweepOutput};
+pub use runner::{
+    render_report, run_and_write, sweep_and_write, sweep_grid_and_write, GridEntry, GridOutput,
+    RunOutput, SweepOutput,
+};

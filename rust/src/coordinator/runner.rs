@@ -121,6 +121,113 @@ pub fn run_and_write(
     Ok((result, output))
 }
 
+/// One machine's slice of a grid sweep.
+#[derive(Clone, Debug)]
+pub struct GridEntry {
+    /// Machine name (directory-name-sanitised, uniquified by fingerprint).
+    pub machine: String,
+    pub fingerprint: String,
+    /// Subdirectory the machine's reports and `run.json` were written to.
+    pub dir: PathBuf,
+    pub output: SweepOutput,
+}
+
+/// Everything a multi-machine grid sweep wrote.
+#[derive(Clone, Debug, Default)]
+pub struct GridOutput {
+    pub entries: Vec<GridEntry>,
+    /// The grid index (`machine_grid.json`) mapping machines to their
+    /// per-machine manifests.
+    pub index: Option<PathBuf>,
+    /// Names of configs skipped because an earlier machine in the list
+    /// had the same fingerprint — callers should surface these.
+    pub duplicates_skipped: Vec<String>,
+}
+
+/// Dedupe a machine list by fingerprint, preserving order. Returns the
+/// kept configs and the names of skipped duplicates. Shared by the grid
+/// sweep and the `plan` dry-run so a preview expands exactly the
+/// machines a sweep will run.
+pub fn dedupe_machines(
+    machines: &[crate::sim::machine::MachineConfig],
+) -> (Vec<&crate::sim::machine::MachineConfig>, Vec<String>) {
+    let mut seen = std::collections::HashSet::new();
+    let (mut kept, mut skipped) = (Vec::new(), Vec::new());
+    for machine in machines {
+        if seen.insert(machine.fingerprint()) {
+            kept.push(machine);
+        } else {
+            skipped.push(machine.name.clone());
+        }
+    }
+    (kept, skipped)
+}
+
+/// Run the same experiment plan across several machine configs
+/// (`sweep --machine a.toml,b.toml`): each machine sweeps into its own
+/// subdirectory of `out_dir` (named `<machine>-<fingerprint[..8]>`, so
+/// same-named configs cannot collide) with its own `run.json`, and a
+/// `machine_grid.json` index ties them together. Cell hashes already key
+/// on the machine fingerprint, so per-machine memo tables never mix.
+pub fn sweep_grid_and_write(
+    ids: &[&str],
+    base: &ExperimentParams,
+    machines: &[crate::sim::machine::MachineConfig],
+    out_dir: &Path,
+    with_svg: bool,
+    jobs: usize,
+) -> Result<GridOutput> {
+    use crate::util::json::Json;
+    anyhow::ensure!(!machines.is_empty(), "grid sweep needs at least one machine");
+    let (kept, skipped) = dedupe_machines(machines);
+    let mut grid = GridOutput { duplicates_skipped: skipped, ..Default::default() };
+    for machine in kept {
+        let fingerprint = machine.fingerprint();
+        let safe: String = machine
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        let dir = out_dir.join(format!("{safe}-{}", &fingerprint[..8]));
+        let params = ExperimentParams { machine: machine.clone(), ..base.clone() };
+        let (_, output) = sweep_and_write(ids, &params, &dir, with_svg, jobs)?;
+        grid.entries.push(GridEntry {
+            machine: safe,
+            fingerprint,
+            dir,
+            output,
+        });
+    }
+    let index = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        (
+            "machines",
+            Json::arr(
+                grid.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("machine", Json::str(e.machine.as_str())),
+                            ("fingerprint", Json::str(e.fingerprint.as_str())),
+                            (
+                                "manifest",
+                                Json::str(format!(
+                                    "{}/run.json",
+                                    e.dir.file_name().unwrap_or_default().to_string_lossy()
+                                )),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let index_path = out_dir.join("machine_grid.json");
+    write_atomic(&index_path, &index.to_string_pretty())?;
+    grid.index = Some(index_path);
+    Ok(grid)
+}
+
 /// Run many experiments as one memoized, parallel plan; write every
 /// report plus a sweep-wide `run.json` manifest.
 pub fn sweep_and_write(
@@ -197,6 +304,38 @@ mod tests {
                 f.path
             );
         }
+    }
+
+    #[test]
+    fn grid_sweep_writes_one_dir_per_machine() {
+        use crate::sim::machine::MachineConfig;
+        let dir = TempDir::new("grid");
+        let machines = vec![
+            MachineConfig::xeon_6248(),
+            MachineConfig::xeon_6248_1s(),
+            MachineConfig::xeon_6248(), // duplicate: must be skipped
+        ];
+        let grid = sweep_grid_and_write(
+            &["f6"],
+            &quick_params(),
+            &machines,
+            dir.path(),
+            false,
+            1,
+        )
+        .unwrap();
+        assert_eq!(grid.entries.len(), 2, "duplicate config must dedupe");
+        assert_eq!(grid.duplicates_skipped, vec!["xeon_6248_2s".to_string()]);
+        let mut fingerprints = std::collections::HashSet::new();
+        for e in &grid.entries {
+            assert!(fingerprints.insert(e.fingerprint.clone()));
+            let manifest = RunManifest::load(&e.dir.join("run.json")).unwrap();
+            assert_eq!(manifest.machine_fingerprint, e.fingerprint);
+            assert!(e.dir.join("f6.md").exists());
+        }
+        let index = std::fs::read_to_string(grid.index.unwrap()).unwrap();
+        assert!(index.contains("xeon_6248_1s"), "{index}");
+        assert!(index.contains("run.json"));
     }
 
     #[test]

@@ -416,7 +416,8 @@ pub(crate) fn exp_binding_artifact(params: &ExperimentParams) -> Result<Experime
         traffic.imc_bytes() as f64,
         est.seconds,
     )
-    .with_note("UNBOUND — above the roof");
+    .with_note("UNBOUND — above the roof")
+    .with_levels(crate::roofline::point::LevelBytes::from_traffic(&traffic));
 
     let over_roof = unbound_point.roof_fraction(&roofline);
     Ok(ExperimentResult {

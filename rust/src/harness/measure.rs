@@ -27,7 +27,7 @@ use super::scenario::ScenarioSpec;
 pub struct KernelMeasurement {
     pub kernel: String,
     pub description: String,
-    /// Scenario label the cell was measured under.
+    /// [`ScenarioSpec`] name the cell was measured under.
     pub scenario: String,
     pub cache_state: CacheState,
     /// W and Q after overhead subtraction.
@@ -41,7 +41,8 @@ pub struct KernelMeasurement {
 }
 
 impl KernelMeasurement {
-    /// The roofline point (name carries the cache-state note).
+    /// The roofline point (name carries the cache-state note), including
+    /// the per-memory-level traffic breakdown for hierarchical rooflines.
     pub fn point(&self) -> KernelPoint {
         KernelPoint::new(
             &self.kernel,
@@ -50,6 +51,12 @@ impl KernelMeasurement {
             self.runtime.seconds,
         )
         .with_note(self.cache_state.label())
+        .with_levels(self.level_bytes())
+    }
+
+    /// Bytes moved at each memory level during the measured run.
+    pub fn level_bytes(&self) -> crate::roofline::point::LevelBytes {
+        crate::roofline::point::LevelBytes::from_traffic(&self.traffic)
     }
 
     /// Utilisation of peak at `peak_flops`.
@@ -268,6 +275,29 @@ mod tests {
         let k = SumReduction::new(1 << 16);
         let err = measure_kernel(&mut m, &k, &ScenarioSpec::remote_only(), CacheState::Cold);
         assert!(err.is_err(), "remote-only must be rejected on a 1-node machine");
+    }
+
+    #[test]
+    fn point_carries_per_level_breakdown() {
+        let mut m = machine();
+        let k = SumReduction::new(1 << 20);
+        let meas =
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
+        let p = meas.point();
+        let levels = p.levels.expect("per-level breakdown attached");
+        // The DRAM split sums exactly to the IMC-counted Q.
+        assert!(
+            (levels.dram() - meas.measured.traffic_bytes as f64).abs() < 1e-3,
+            "dram {} vs Q {}",
+            levels.dram(),
+            meas.measured.traffic_bytes
+        );
+        assert!(levels.l1 > 0.0 && levels.l2 > 0.0 && levels.llc > 0.0);
+        // Memory bound to node 0 → every DRAM byte is local.
+        assert_eq!(levels.dram_remote, 0.0);
+        // Demand traffic is monotone down the hierarchy.
+        let chain = meas.traffic.demand_line_chain();
+        assert!(chain[0] >= chain[1] && chain[1] >= chain[2] && chain[2] >= chain[3]);
     }
 
     #[test]

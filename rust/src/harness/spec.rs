@@ -24,6 +24,7 @@ use crate::kernels::inner_product::InnerProduct;
 use crate::kernels::layernorm::LayerNorm;
 use crate::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, MaxPoolNote, PoolShape};
 use crate::kernels::{ConvShape, KernelModel};
+use crate::roofline::model::MemLevel;
 use crate::roofline::report::PaperExpectation;
 use crate::sim::machine::Machine;
 use crate::util::hash::fnv1a_64;
@@ -126,6 +127,9 @@ pub struct ExpectationRule {
     pub kernel: &'static str,
     pub utilization: Option<f64>,
     pub claim: &'static str,
+    /// Expected binding roof in the hierarchical model, when the claim
+    /// names one (e.g. "gelu is DRAM-bound at streaming shapes").
+    pub bound: Option<MemLevel>,
 }
 
 impl ExpectationRule {
@@ -134,6 +138,7 @@ impl ExpectationRule {
             kernel: self.kernel.into(),
             utilization: self.utilization,
             claim: self.claim.into(),
+            bound: self.bound,
         }
     }
 }
@@ -175,7 +180,7 @@ pub struct ExperimentSpec {
 pub struct Cell {
     /// Owning experiment id (not part of the content hash).
     pub experiment: &'static str,
-    /// Scenario group index within the experiment.
+    /// [`ScenarioSpec`] group index within the experiment.
     pub group: usize,
     pub kernel: KernelSpec,
     pub scenario: ScenarioSpec,
@@ -480,7 +485,12 @@ pub fn registry() -> Vec<ExperimentSpec> {
                 kernels: pool_kernels.clone(),
                 cache_states: cold_warm.clone(),
                 expectations: vec![
-                    rule("avgpool_nchw", Some(0.0035), "simple_nchw scalar loop"),
+                    rule_bound(
+                        "avgpool_nchw",
+                        Some(0.0035),
+                        "simple_nchw scalar loop",
+                        MemLevel::DramLocal,
+                    ),
                     rule("avgpool_nchw16c",
                         Some(0.148),
                         "jit:avx512_common — ~42× better at equal AI",
@@ -504,7 +514,12 @@ pub fn registry() -> Vec<ExperimentSpec> {
                 ],
                 cache_states: cold_warm.clone(),
                 expectations: vec![
-                    rule("gelu_nchw", None, "baseline NCHW"),
+                    rule_bound(
+                        "gelu_nchw",
+                        None,
+                        "baseline NCHW; DRAM-bound when streaming cold",
+                        MemLevel::DramLocal,
+                    ),
                     rule("gelu_nchw16c",
                         None,
                         "forced blocked on C=3: more W, ~4× Q (paper, 8-block), lower AI",
@@ -610,7 +625,18 @@ pub fn registry() -> Vec<ExperimentSpec> {
 }
 
 fn rule(kernel: &'static str, utilization: Option<f64>, claim: &'static str) -> ExpectationRule {
-    ExpectationRule { kernel, utilization, claim }
+    ExpectationRule { kernel, utilization, claim, bound: None }
+}
+
+/// A rule that also pins the level expected to bind the kernel on the
+/// hierarchical roofline (checked against the cold-cache measurement).
+fn rule_bound(
+    kernel: &'static str,
+    utilization: Option<f64>,
+    claim: &'static str,
+    bound: MemLevel,
+) -> ExpectationRule {
+    ExpectationRule { kernel, utilization, claim, bound: Some(bound) }
 }
 
 #[cfg(test)]

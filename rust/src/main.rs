@@ -49,11 +49,28 @@ fn app() -> AppSpec {
                 positional: vec![("id", "experiment id, e.g. f3")],
             },
             CmdSpec {
+                name: "diff",
+                help: "compare two run.json manifests: per-cell W/Q/R and per-level-AI drift",
+                opts: vec![opt(
+                    "tol",
+                    "relative drift tolerance; exit 3 on drift above it",
+                    Some("0"),
+                )],
+                positional: vec![
+                    ("run_a", "first run.json manifest"),
+                    ("run_b", "second run.json manifest"),
+                ],
+            },
+            CmdSpec {
                 name: "sweep",
                 help: "run a set of experiments as one parallel, memoized plan",
                 opts: vec![
                     opt("out", "report output directory", Some("reports")),
-                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt(
+                        "machine",
+                        "machine preset(s) or config path(s), comma-separated for a grid",
+                        Some("xeon_6248"),
+                    ),
                     opt("batch", "override workload batch", None),
                     opt("only", "comma-separated experiment ids (default: all)", None),
                     opt("jobs", "worker threads (0 = auto)", Some("0")),
@@ -66,7 +83,11 @@ fn app() -> AppSpec {
                 name: "plan",
                 help: "dry-run a sweep: show its cells and memoization savings",
                 opts: vec![
-                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt(
+                        "machine",
+                        "machine preset(s) or config path(s), comma-separated for a grid",
+                        Some("xeon_6248"),
+                    ),
                     opt("batch", "override workload batch", None),
                     opt("only", "comma-separated experiment ids (default: all)", None),
                     switch("full-size", "use the paper's full tensor sizes (slow)"),
@@ -139,12 +160,36 @@ fn main() {
     }
 }
 
-fn params_from(parsed: &Parsed) -> Result<ExperimentParams> {
+/// Shared workload params against an already-resolved machine.
+fn params_with_machine(
+    parsed: &Parsed,
+    machine: dlroofline::sim::machine::MachineConfig,
+) -> Result<ExperimentParams> {
     Ok(ExperimentParams {
-        machine: resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?,
+        machine,
         full_size: parsed.has("full-size"),
-        batch: parsed.opt_parse::<usize>("batch").unwrap_or(None),
+        batch: parsed.opt_parse::<usize>("batch")?,
     })
+}
+
+fn params_from(parsed: &Parsed) -> Result<ExperimentParams> {
+    let machine = resolve_machine(parsed.opt("machine").unwrap_or("xeon_6248"))?;
+    params_with_machine(parsed, machine)
+}
+
+/// Split a comma-separated `--machine` list (presets and/or config
+/// paths); shared by `sweep` and `plan` so a grid previews the way it
+/// runs.
+fn machine_args_from(parsed: &Parsed) -> Result<Vec<&str>> {
+    let args: Vec<&str> = parsed
+        .opt("machine")
+        .unwrap_or("xeon_6248")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!args.is_empty(), "--machine needs at least one preset or path");
+    Ok(args)
 }
 
 /// Resolve `--only a,b,c` (or every registry id when absent).
@@ -163,6 +208,7 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
     match parsed.command.as_str() {
         "list" => cmd_list(),
         "figure" => cmd_figure(parsed),
+        "diff" => cmd_diff(parsed),
         "sweep" => cmd_sweep(parsed),
         "plan" => cmd_plan(parsed),
         "repro-all" => cmd_repro_all(parsed),
@@ -222,12 +268,82 @@ fn cmd_figure(parsed: &Parsed) -> Result<()> {
     Ok(())
 }
 
+fn cmd_diff(parsed: &Parsed) -> Result<()> {
+    use dlroofline::coordinator::{diff_manifests, render_diff, RunManifest};
+    let [path_a, path_b] = parsed.positional.as_slice() else {
+        anyhow::bail!("diff needs two run.json paths");
+    };
+    let tol: f64 = parsed.opt_parse("tol")?.unwrap_or(0.0);
+    anyhow::ensure!(tol >= 0.0 && tol.is_finite(), "--tol must be a finite non-negative number");
+    let a = RunManifest::load(&PathBuf::from(path_a))?;
+    let b = RunManifest::load(&PathBuf::from(path_b))?;
+    let report = diff_manifests(&a, &b);
+    print!("{}", render_diff(&report, tol));
+    if report.exceeds(tol) {
+        std::process::exit(3);
+    }
+    Ok(())
+}
+
 fn cmd_sweep(parsed: &Parsed) -> Result<()> {
-    let params = params_from(parsed)?;
     let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
     let jobs = parsed.opt_parse::<usize>("jobs")?.unwrap_or(0);
     let ids = ids_from(parsed);
     let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
+
+    let machine_args = machine_args_from(parsed)?;
+    let machines = machine_args
+        .iter()
+        .map(|m| resolve_machine(m))
+        .collect::<Result<Vec<_>>>()?;
+    // Grid-vs-single dispatch happens AFTER dedupe: a repeated preset
+    // (`--machine a,a`) must behave exactly like `--machine a`, writing
+    // `reports/run.json` rather than a one-entry grid layout. The grid
+    // path hands the raw list to `sweep_grid_and_write`, which owns the
+    // dedupe and records what it skipped.
+    let note_skip = |name: &str| {
+        eprintln!("note: '{name}' skipped — same fingerprint as an earlier machine")
+    };
+    let (kept, skipped) = dlroofline::coordinator::runner::dedupe_machines(&machines);
+    if kept.len() > 1 {
+        // Machine-grid sweep: one subdirectory (and manifest) per config.
+        let base = params_with_machine(parsed, kept[0].clone())?;
+        let grid = dlroofline::coordinator::sweep_grid_and_write(
+            &id_refs,
+            &base,
+            &machines,
+            &out_dir,
+            parsed.has("svg"),
+            jobs,
+        )?;
+        for name in &grid.duplicates_skipped {
+            note_skip(name);
+        }
+        for entry in &grid.entries {
+            let s = entry.output.stats;
+            println!(
+                "{} ({}): {} cells → {} simulated, {} memoized away, {} inexpressible",
+                entry.machine,
+                entry.fingerprint,
+                s.cells_total,
+                s.cells_simulated,
+                s.cells_reused,
+                s.cells_skipped
+            );
+            if let Some(m) = &entry.output.manifest {
+                println!("wrote {}", m.display());
+            }
+        }
+        if let Some(index) = &grid.index {
+            println!("wrote {}", index.display());
+        }
+        return Ok(());
+    }
+
+    for name in &skipped {
+        note_skip(name);
+    }
+    let params = params_with_machine(parsed, kept[0].clone())?;
     let (results, sweep) =
         sweep_and_write(&id_refs, &params, &out_dir, parsed.has("svg"), jobs)?;
     for (result, output) in results.iter().zip(sweep.outputs.iter()) {
@@ -248,28 +364,49 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
 }
 
 fn cmd_plan(parsed: &Parsed) -> Result<()> {
-    let params = params_from(parsed)?;
     let ids = ids_from(parsed);
     let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
-    let expansion = plan::expand(&id_refs, &params)?;
-    println!("| experiment | kernel | scenario | cache | cell key | memoized |");
-    println!("|---|---|---|---|---|---|");
-    for c in &expansion.cells {
+    let machine_args = machine_args_from(parsed)?;
+    let machines = machine_args
+        .iter()
+        .map(|m| resolve_machine(m))
+        .collect::<Result<Vec<_>>>()?;
+    // The same dedupe the grid sweep applies, so the dry-run previews
+    // exactly what `sweep --machine ...` will run.
+    let (kept, skipped) = dlroofline::coordinator::runner::dedupe_machines(&machines);
+    for name in &skipped {
+        eprintln!("note: '{name}' skipped — same fingerprint as an earlier machine");
+    }
+    let multi = kept.len() > 1;
+    for machine in kept {
+        let params = params_with_machine(parsed, machine.clone())?;
+        if multi {
+            println!(
+                "## {} ({})",
+                params.machine.name,
+                params.machine.fingerprint()
+            );
+        }
+        let expansion = plan::expand(&id_refs, &params)?;
+        println!("| experiment | kernel | scenario | cache | cell key | memoized |");
+        println!("|---|---|---|---|---|---|");
+        for c in &expansion.cells {
+            println!(
+                "| {} | {} | {} | {} | {} | {} |",
+                c.experiment,
+                c.kernel,
+                c.scenario,
+                c.cache,
+                dlroofline::util::hash::hex64(c.key),
+                if c.reused { "reuse" } else { "simulate" }
+            );
+        }
+        let s = expansion.stats;
         println!(
-            "| {} | {} | {} | {} | {} | {} |",
-            c.experiment,
-            c.kernel,
-            c.scenario,
-            c.cache,
-            dlroofline::util::hash::hex64(c.key),
-            if c.reused { "reuse" } else { "simulate" }
+            "\nplan: {} experiments ({} narrative), {} cells → {} to simulate, {} memoized away, {} inexpressible",
+            s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
         );
     }
-    let s = expansion.stats;
-    println!(
-        "\nplan: {} experiments ({} narrative), {} cells → {} to simulate, {} memoized away, {} inexpressible",
-        s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
-    );
     Ok(())
 }
 

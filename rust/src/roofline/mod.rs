@@ -9,5 +9,5 @@ pub mod point;
 pub mod report;
 pub mod svg;
 
-pub use model::{Ceiling, RooflineModel};
-pub use point::KernelPoint;
+pub use model::{Binding, Ceiling, LevelRoof, MemLevel, RooflineModel};
+pub use point::{KernelPoint, LevelBytes};

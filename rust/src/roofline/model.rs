@@ -1,7 +1,57 @@
-//! Roofline model assembly: π ceilings and the β roof.
+//! Roofline model assembly: π ceilings and the hierarchical β roofs.
+//!
+//! The paper's model has a single β (DRAM, counted at the IMC). The
+//! hierarchical extension (arXiv 2009.05257, 2009.04598) adds one roof
+//! per memory level — L1, L2, LLC, local DRAM, remote DRAM — each with
+//! its own bandwidth and its own arithmetic intensity for a given
+//! kernel. The DRAM-local projection of the hierarchical model reduces
+//! *exactly* to the paper's single-β model: [`RooflineModel::attainable`],
+//! [`RooflineModel::ridge`] and [`RooflineModel::memory_bound`] keep
+//! their original (DRAM-β) semantics, while [`RooflineModel::attainable_hier`]
+//! takes the min over every level roof.
 
 use crate::sim::core::VecWidth;
 use crate::sim::machine::MachineConfig;
+
+use super::point::LevelBytes;
+
+/// One level of the memory hierarchy, shallowest first. The ordering is
+/// the hierarchy depth: data that reaches a deeper level crossed every
+/// shallower one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemLevel {
+    L1,
+    L2,
+    Llc,
+    /// DRAM behind the IMCs of the node(s) the scenario binds to.
+    DramLocal,
+    /// DRAM reached across the UPI link (cross-socket).
+    DramRemote,
+}
+
+impl MemLevel {
+    /// Every level, shallowest first.
+    pub fn all() -> [MemLevel; 5] {
+        [
+            MemLevel::L1,
+            MemLevel::L2,
+            MemLevel::Llc,
+            MemLevel::DramLocal,
+            MemLevel::DramRemote,
+        ]
+    }
+
+    /// Short display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemLevel::L1 => "L1",
+            MemLevel::L2 => "L2",
+            MemLevel::Llc => "LLC",
+            MemLevel::DramLocal => "DRAM-local",
+            MemLevel::DramRemote => "DRAM-remote",
+        }
+    }
+}
 
 /// One horizontal compute ceiling (e.g. "AVX-512 FMA", "AVX2", "scalar").
 #[derive(Clone, Debug, PartialEq)]
@@ -10,34 +60,98 @@ pub struct Ceiling {
     pub flops_per_sec: f64,
 }
 
-/// A roofline for one platform × one resource scenario.
+/// One diagonal bandwidth roof: the peak byte rate of one memory level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelRoof {
+    pub level: MemLevel,
+    /// β for this level (bytes/s).
+    pub bytes_per_sec: f64,
+    pub label: String,
+}
+
+/// Which roof binds a kernel in the hierarchical model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Binding {
+    /// The top compute ceiling π.
+    Compute,
+    /// A memory-level roof.
+    Level(MemLevel),
+}
+
+impl Binding {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Binding::Compute => "compute",
+            Binding::Level(l) => l.label(),
+        }
+    }
+}
+
+/// A roofline for one platform × one resource scenario: compute ceilings
+/// plus an ordered set of per-memory-level bandwidth roofs.
 #[derive(Clone, Debug)]
 pub struct RooflineModel {
     /// e.g. `xeon_6248 / single-thread`.
     pub name: String,
     /// Compute ceilings, ascending; the last is the peak π.
     pub ceilings: Vec<Ceiling>,
-    /// Peak memory bandwidth β (bytes/s).
-    pub bandwidth: f64,
-    pub bandwidth_label: String,
+    /// Bandwidth roofs, ordered shallowest level first. Always non-empty;
+    /// the paper's single-β model is the one-roof (DRAM-local) case.
+    pub roofs: Vec<LevelRoof>,
 }
 
 impl RooflineModel {
-    /// Build from measured/modelled peaks. Ceilings are sorted ascending.
-    pub fn new(name: &str, mut ceilings: Vec<Ceiling>, bandwidth: f64, bandwidth_label: &str) -> Self {
-        assert!(!ceilings.is_empty(), "need at least one ceiling");
-        assert!(bandwidth > 0.0);
-        ceilings.sort_by(|a, b| a.flops_per_sec.partial_cmp(&b.flops_per_sec).unwrap());
-        RooflineModel {
-            name: name.to_string(),
+    /// Build the paper's single-β model: one DRAM roof. Ceilings are
+    /// sorted ascending (NaN-safe `total_cmp`); all rates must be finite
+    /// and positive.
+    pub fn new(name: &str, ceilings: Vec<Ceiling>, bandwidth: f64, bandwidth_label: &str) -> Self {
+        RooflineModel::with_roofs(
+            name,
             ceilings,
-            bandwidth,
-            bandwidth_label: bandwidth_label.to_string(),
-        }
+            vec![LevelRoof {
+                level: MemLevel::DramLocal,
+                bytes_per_sec: bandwidth,
+                label: bandwidth_label.to_string(),
+            }],
+        )
     }
 
-    /// Build the paper-style roofline for a simulated machine scenario.
-    pub fn for_machine(config: &MachineConfig, threads: usize, nodes_used: usize, label: &str) -> Self {
+    /// Build a hierarchical model from measured/modelled peaks.
+    pub fn with_roofs(name: &str, mut ceilings: Vec<Ceiling>, mut roofs: Vec<LevelRoof>) -> Self {
+        assert!(!ceilings.is_empty(), "need at least one ceiling");
+        assert!(!roofs.is_empty(), "need at least one level roof");
+        for c in &ceilings {
+            assert!(
+                c.flops_per_sec.is_finite() && c.flops_per_sec > 0.0,
+                "ceiling '{}' must be finite and positive, got {}",
+                c.label,
+                c.flops_per_sec
+            );
+        }
+        for r in &roofs {
+            assert!(
+                r.bytes_per_sec.is_finite() && r.bytes_per_sec > 0.0,
+                "{} roof '{}' must be finite and positive, got {}",
+                r.level.label(),
+                r.label,
+                r.bytes_per_sec
+            );
+        }
+        ceilings.sort_by(|a, b| a.flops_per_sec.total_cmp(&b.flops_per_sec));
+        roofs.sort_by_key(|r| r.level);
+        RooflineModel { name: name.to_string(), ceilings, roofs }
+    }
+
+    /// Build the full hierarchical roofline for a simulated machine
+    /// scenario: three cache-level roofs derived from core geometry, the
+    /// paper's DRAM (NT-stream) roof, and — on multi-socket machines — a
+    /// UPI-limited remote-DRAM roof.
+    pub fn for_machine(
+        config: &MachineConfig,
+        threads: usize,
+        nodes_used: usize,
+        label: &str,
+    ) -> Self {
         let ceilings = vec![
             Ceiling {
                 label: "scalar".into(),
@@ -52,13 +166,36 @@ impl RooflineModel {
                 flops_per_sec: config.peak_flops(threads, VecWidth::V512),
             },
         ];
-        let bw = config.peak_bw(threads, nodes_used);
-        RooflineModel::new(
-            &format!("{} / {}", config.name, label),
-            ceilings,
-            bw,
-            "DRAM (NT-stream)",
-        )
+        let mut roofs = vec![
+            LevelRoof {
+                level: MemLevel::L1,
+                bytes_per_sec: config.peak_l1_bw(threads),
+                label: "L1 (load ports)".into(),
+            },
+            LevelRoof {
+                level: MemLevel::L2,
+                bytes_per_sec: config.peak_l2_bw(threads),
+                label: "L2 stream".into(),
+            },
+            LevelRoof {
+                level: MemLevel::Llc,
+                bytes_per_sec: config.peak_llc_bw(threads),
+                label: "LLC stream".into(),
+            },
+            LevelRoof {
+                level: MemLevel::DramLocal,
+                bytes_per_sec: config.peak_bw(threads, nodes_used),
+                label: "DRAM (NT-stream)".into(),
+            },
+        ];
+        if config.sockets > 1 {
+            roofs.push(LevelRoof {
+                level: MemLevel::DramRemote,
+                bytes_per_sec: config.peak_remote_bw(threads),
+                label: "DRAM remote (UPI)".into(),
+            });
+        }
+        RooflineModel::with_roofs(&format!("{} / {}", config.name, label), ceilings, roofs)
     }
 
     /// Peak compute π (the top ceiling).
@@ -66,29 +203,83 @@ impl RooflineModel {
         self.ceilings.last().unwrap().flops_per_sec
     }
 
-    /// The paper's equation: attainable P at arithmetic intensity `ai`.
+    /// The DRAM roof — the paper's β. Falls back to the deepest roof for
+    /// models without an explicit DRAM level.
+    pub fn dram_roof(&self) -> &LevelRoof {
+        self.roofs
+            .iter()
+            .find(|r| r.level == MemLevel::DramLocal)
+            .unwrap_or_else(|| self.roofs.last().unwrap())
+    }
+
+    /// The paper's single β (bytes/s): the DRAM-local roof.
+    pub fn bandwidth(&self) -> f64 {
+        self.dram_roof().bytes_per_sec
+    }
+
+    /// Label of the DRAM roof.
+    pub fn bandwidth_label(&self) -> &str {
+        &self.dram_roof().label
+    }
+
+    /// The roof for a specific level, if the model carries one.
+    pub fn roof(&self, level: MemLevel) -> Option<&LevelRoof> {
+        self.roofs.iter().find(|r| r.level == level)
+    }
+
+    /// The paper's equation: attainable P at DRAM arithmetic intensity
+    /// `ai`. This is the single-β (DRAM) projection of the hierarchical
+    /// model — numerically identical to the pre-hierarchy model.
     pub fn attainable(&self, ai: f64) -> f64 {
         assert!(ai >= 0.0);
-        self.peak().min(ai * self.bandwidth)
+        self.peak().min(ai * self.bandwidth())
+    }
+
+    /// Hierarchical attainable: the min over the compute peak and every
+    /// level roof evaluated at that level's own arithmetic intensity
+    /// (`work / levels.get(level)`). Levels the kernel moved no bytes
+    /// through do not bind. Returns the bound and which roof set it;
+    /// ties go to the shallower roof, compute winning exact ties.
+    pub fn attainable_hier(&self, work_flops: f64, levels: &LevelBytes) -> (f64, Binding) {
+        let mut best = self.peak();
+        let mut binding = Binding::Compute;
+        for roof in &self.roofs {
+            let bytes = levels.get(roof.level);
+            if bytes <= 0.0 {
+                continue;
+            }
+            let p = work_flops / bytes * roof.bytes_per_sec;
+            if p < best {
+                best = p;
+                binding = Binding::Level(roof.level);
+            }
+        }
+        (best, binding)
+    }
+
+    /// Which roof binds a kernel with the given per-level traffic.
+    pub fn binding(&self, work_flops: f64, levels: &LevelBytes) -> Binding {
+        self.attainable_hier(work_flops, levels).1
     }
 
     /// Attainable P under a specific ceiling (e.g. what a scalar kernel
-    /// could at best reach).
+    /// could at best reach), against the DRAM roof.
     pub fn attainable_under(&self, ai: f64, ceiling_label: &str) -> Option<f64> {
         self.ceilings
             .iter()
             .find(|c| c.label == ceiling_label)
-            .map(|c| c.flops_per_sec.min(ai * self.bandwidth))
+            .map(|c| c.flops_per_sec.min(ai * self.bandwidth()))
     }
 
-    /// The ridge point I* = π/β: the AI where the kernel stops being
-    /// memory-bound. The paper's §3.1.2 observation — moving from one
-    /// thread to a socket moves the ridge right — falls out of this.
+    /// The ridge point I* = π/β of the DRAM roof: the AI where the kernel
+    /// stops being memory-bound. The paper's §3.1.2 observation — moving
+    /// from one thread to a socket moves the ridge right — falls out of
+    /// this.
     pub fn ridge(&self) -> f64 {
-        self.peak() / self.bandwidth
+        self.peak() / self.bandwidth()
     }
 
-    /// Is a kernel at `ai` memory-bound on this platform?
+    /// Is a kernel at DRAM AI `ai` memory-bound on this platform?
     pub fn memory_bound(&self, ai: f64) -> bool {
         ai < self.ridge()
     }
@@ -167,8 +358,125 @@ mod tests {
     }
 
     #[test]
+    fn machine_roofs_are_monotone_down_the_hierarchy() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        for threads in [1usize, 10, 20, 40] {
+            let r = RooflineModel::for_machine(&m, threads, 1, "t");
+            let bw = |level| r.roof(level).unwrap().bytes_per_sec;
+            assert!(bw(MemLevel::L1) > bw(MemLevel::L2));
+            assert!(bw(MemLevel::L2) > bw(MemLevel::Llc));
+            assert!(bw(MemLevel::Llc) > bw(MemLevel::DramLocal), "t={threads}");
+            assert!(bw(MemLevel::DramLocal) > bw(MemLevel::DramRemote));
+        }
+    }
+
+    #[test]
+    fn single_socket_machine_has_no_remote_roof() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248_1s();
+        let r = RooflineModel::for_machine(&m, 1, 1, "t");
+        assert!(r.roof(MemLevel::DramRemote).is_none());
+        assert!(r.roof(MemLevel::DramLocal).is_some());
+    }
+
+    #[test]
+    fn dram_projection_matches_single_beta_model() {
+        // The acceptance contract: the hierarchical model's DRAM view is
+        // the old single-β model, point for point.
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        let hier = RooflineModel::for_machine(&m, 20, 1, "one-socket");
+        let flat = RooflineModel::new(
+            &hier.name,
+            hier.ceilings.clone(),
+            m.peak_bw(20, 1),
+            "DRAM (NT-stream)",
+        );
+        for ai in [0.01, 0.5, 2.0, 16.0, 1000.0] {
+            assert_eq!(hier.attainable(ai), flat.attainable(ai));
+        }
+        assert_eq!(hier.ridge(), flat.ridge());
+        assert_eq!(hier.bandwidth(), flat.bandwidth());
+    }
+
+    #[test]
+    fn hier_attainable_binds_at_the_tightest_roof() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        let r = RooflineModel::for_machine(&m, 1, 1, "single-thread");
+        // All traffic at DRAM, AI = 1 → DRAM roof binds.
+        let w = 1e9;
+        let dram_heavy = LevelBytes {
+            l1: w,
+            l2: w,
+            llc: w,
+            dram_local: w,
+            dram_remote: 0.0,
+        };
+        let (p, b) = r.attainable_hier(w, &dram_heavy);
+        assert_eq!(b, Binding::Level(MemLevel::DramLocal));
+        assert!((p - r.bandwidth()).abs() / p < 1e-12);
+        // LLC-resident: no DRAM bytes → the LLC roof binds instead.
+        let llc_resident = LevelBytes {
+            l1: w,
+            l2: w,
+            llc: w,
+            dram_local: 0.0,
+            dram_remote: 0.0,
+        };
+        let (p2, b2) = r.attainable_hier(w, &llc_resident);
+        assert_eq!(b2, Binding::Level(MemLevel::Llc));
+        assert!(p2 > p, "LLC roof must sit above the DRAM roof");
+        // No traffic anywhere → compute-bound at π.
+        let silent = LevelBytes::default();
+        let (p3, b3) = r.attainable_hier(w, &silent);
+        assert_eq!(b3, Binding::Compute);
+        assert_eq!(p3, r.peak());
+    }
+
+    #[test]
     #[should_panic]
     fn empty_ceilings_panic() {
         RooflineModel::new("x", vec![], 1.0, "b");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn nan_ceiling_rejected() {
+        RooflineModel::new(
+            "x",
+            vec![Ceiling { label: "nan".into(), flops_per_sec: f64::NAN }],
+            1.0,
+            "b",
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn non_positive_bandwidth_rejected() {
+        RooflineModel::new(
+            "x",
+            vec![Ceiling { label: "peak".into(), flops_per_sec: 1e9 }],
+            0.0,
+            "b",
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn infinite_roof_rejected() {
+        RooflineModel::with_roofs(
+            "x",
+            vec![Ceiling { label: "peak".into(), flops_per_sec: 1e9 }],
+            vec![LevelRoof {
+                level: MemLevel::L1,
+                bytes_per_sec: f64::INFINITY,
+                label: "bad".into(),
+            }],
+        );
+    }
+
+    #[test]
+    fn mem_level_labels_distinct() {
+        let labels: std::collections::HashSet<&str> =
+            MemLevel::all().iter().map(|l| l.label()).collect();
+        assert_eq!(labels.len(), MemLevel::all().len());
     }
 }

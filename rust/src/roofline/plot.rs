@@ -61,7 +61,7 @@ pub fn ascii_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
         let row = y_of(c.flops_per_sec);
         for col in 0..WIDTH {
             let ai = 10f64.powf(lx0 + (lx1 - lx0) * col as f64 / (WIDTH - 1) as f64);
-            if ai * roofline.bandwidth >= c.flops_per_sec && grid[row][col] == ' ' {
+            if ai * roofline.bandwidth() >= c.flops_per_sec && grid[row][col] == ' ' {
                 grid[row][col] = '.';
             }
         }
@@ -89,9 +89,19 @@ pub fn ascii_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
         "roofline: {}   π={}  β={}  ridge AI={:.2}\n",
         roofline.name,
         fmt_flops(peak),
-        crate::util::human::fmt_rate(roofline.bandwidth),
+        crate::util::human::fmt_rate(roofline.bandwidth()),
         ridge
     ));
+    if roofline.roofs.len() > 1 {
+        let levels: Vec<String> = roofline
+            .roofs
+            .iter()
+            .map(|r| {
+                format!("{}={}", r.level.label(), crate::util::human::fmt_rate(r.bytes_per_sec))
+            })
+            .collect();
+        out.push_str(&format!("level roofs: {}\n", levels.join("  ")));
+    }
     out.push_str(&format!("{:>14} ┐\n", fmt_flops(10f64.powf(ly1))));
     for row in grid {
         out.push_str("               │");
@@ -155,5 +165,18 @@ mod tests {
     fn empty_points_ok() {
         let s = ascii_plot(&roofline(), &[]);
         assert!(s.contains("roofline: unit"));
+        // A single-roof (paper-style) model needs no level legend.
+        assert!(!s.contains("level roofs:"));
+    }
+
+    #[test]
+    fn hierarchical_roofline_lists_level_roofs() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        let r = RooflineModel::for_machine(&m, 1, 1, "single-thread");
+        let s = ascii_plot(&r, &[]);
+        assert!(s.contains("level roofs:"), "{s}");
+        for label in ["L1=", "L2=", "LLC=", "DRAM-local=", "DRAM-remote="] {
+            assert!(s.contains(label), "missing {label}");
+        }
     }
 }

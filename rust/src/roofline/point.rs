@@ -1,6 +1,56 @@
-//! A kernel's point on the roofline: (W, Q, R) → (I, P, utilisation).
+//! A kernel's point on the roofline: (W, Q, R) → (I, P, utilisation),
+//! plus the per-memory-level traffic that gives the hierarchical model
+//! one arithmetic intensity per level (AI_L1 … AI_DRAM).
 
-use super::model::RooflineModel;
+use super::model::{Binding, MemLevel, RooflineModel};
+use crate::sim::hierarchy::TrafficStats;
+
+/// Bytes moved at each memory level for one kernel execution — the
+/// per-level Q the hierarchical roofline divides W by.
+///
+/// Levels are *boundaries*: `l1` is core↔L1 traffic (demand accesses
+/// plus NT-store lines), `l2` is what crossed the L1↔L2 boundary (L1
+/// fills + L1 dirty writebacks), `llc` the L2↔LLC boundary, and the two
+/// DRAM entries attribute every IMC line — reads, NT stores and victim
+/// writebacks — to its owning node. The DRAM entries therefore sum
+/// exactly to the paper's IMC-counted Q.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LevelBytes {
+    pub l1: f64,
+    pub l2: f64,
+    pub llc: f64,
+    pub dram_local: f64,
+    pub dram_remote: f64,
+}
+
+impl LevelBytes {
+    /// Derive the per-level breakdown from simulated traffic stats.
+    pub fn from_traffic(t: &TrafficStats) -> LevelBytes {
+        LevelBytes {
+            l1: t.l1_bytes() as f64,
+            l2: t.l2_bytes() as f64,
+            llc: t.llc_bytes() as f64,
+            dram_local: t.dram_local_bytes(),
+            dram_remote: t.dram_remote_bytes(),
+        }
+    }
+
+    /// Bytes at one level.
+    pub fn get(&self, level: MemLevel) -> f64 {
+        match level {
+            MemLevel::L1 => self.l1,
+            MemLevel::L2 => self.l2,
+            MemLevel::Llc => self.llc,
+            MemLevel::DramLocal => self.dram_local,
+            MemLevel::DramRemote => self.dram_remote,
+        }
+    }
+
+    /// Total DRAM bytes (local + remote) — the IMC-counted Q.
+    pub fn dram(&self) -> f64 {
+        self.dram_local + self.dram_remote
+    }
+}
 
 /// One measured kernel on one roofline.
 #[derive(Clone, Debug)]
@@ -14,6 +64,8 @@ pub struct KernelPoint {
     pub runtime: f64,
     /// Optional annotation, e.g. "cold caches".
     pub note: String,
+    /// Per-memory-level traffic, when the measurement carried it.
+    pub levels: Option<LevelBytes>,
 }
 
 impl KernelPoint {
@@ -25,6 +77,7 @@ impl KernelPoint {
             traffic_bytes,
             runtime,
             note: String::new(),
+            levels: None,
         }
     }
 
@@ -33,12 +86,43 @@ impl KernelPoint {
         self
     }
 
-    /// Arithmetic intensity I = W / Q.
+    /// Attach the per-level traffic breakdown.
+    pub fn with_levels(mut self, levels: LevelBytes) -> KernelPoint {
+        self.levels = Some(levels);
+        self
+    }
+
+    /// Arithmetic intensity I = W / Q (DRAM, the paper's definition).
     pub fn ai(&self) -> f64 {
         if self.traffic_bytes == 0.0 {
             f64::INFINITY
         } else {
             self.work_flops / self.traffic_bytes
+        }
+    }
+
+    /// Per-level arithmetic intensity AI_level = W / Q_level. `None` when
+    /// the point carries no per-level breakdown; infinite when the kernel
+    /// moved no bytes through that level.
+    pub fn ai_at(&self, level: MemLevel) -> Option<f64> {
+        let levels = self.levels.as_ref()?;
+        let bytes = levels.get(level);
+        Some(if bytes <= 0.0 { f64::INFINITY } else { self.work_flops / bytes })
+    }
+
+    /// Which roof binds this point in the hierarchical model. Falls back
+    /// to the DRAM view (memory vs compute) when the point carries no
+    /// per-level breakdown.
+    pub fn binding(&self, roofline: &RooflineModel) -> Binding {
+        match &self.levels {
+            Some(levels) => roofline.binding(self.work_flops, levels),
+            None => {
+                if self.ai().is_finite() && roofline.memory_bound(self.ai()) {
+                    Binding::Level(crate::roofline::model::MemLevel::DramLocal)
+                } else {
+                    Binding::Compute
+                }
+            }
         }
     }
 
@@ -108,6 +192,41 @@ mod tests {
     fn bandwidth_derivation() {
         let p = KernelPoint::new("k", 1.0, 1e9, 0.1);
         assert_eq!(p.bandwidth(), 10e9);
+    }
+
+    #[test]
+    fn per_level_ai() {
+        let levels = LevelBytes {
+            l1: 4e9,
+            l2: 2e9,
+            llc: 1e9,
+            dram_local: 0.5e9,
+            dram_remote: 0.0,
+        };
+        let p = KernelPoint::new("k", 1e9, 0.5e9, 0.02).with_levels(levels);
+        assert_eq!(p.ai_at(MemLevel::L1), Some(0.25));
+        assert_eq!(p.ai_at(MemLevel::L2), Some(0.5));
+        assert_eq!(p.ai_at(MemLevel::Llc), Some(1.0));
+        assert_eq!(p.ai_at(MemLevel::DramLocal), Some(2.0));
+        // No remote bytes → infinite AI, that roof can never bind.
+        assert_eq!(p.ai_at(MemLevel::DramRemote), Some(f64::INFINITY));
+        // AI at the whole-DRAM level matches the flat ai().
+        assert_eq!(p.ai(), p.work_flops / levels.dram());
+    }
+
+    #[test]
+    fn ai_at_none_without_levels() {
+        let p = KernelPoint::new("k", 1.0, 1.0, 1.0);
+        assert_eq!(p.ai_at(MemLevel::L1), None);
+    }
+
+    #[test]
+    fn binding_falls_back_to_dram_view() {
+        let r = roofline(); // ridge at 10
+        let mem = KernelPoint::new("m", 1e9, 1e9, 0.1); // AI 1 < 10
+        assert_eq!(mem.binding(&r), Binding::Level(MemLevel::DramLocal));
+        let comp = KernelPoint::new("c", 1e12, 1e9, 0.1); // AI 1000
+        assert_eq!(comp.binding(&r), Binding::Compute);
     }
 
     #[test]

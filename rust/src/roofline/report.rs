@@ -1,11 +1,13 @@
-//! Paper-style tabular reports: per-kernel W/Q/R/AI/P/utilisation rows,
+//! Paper-style tabular reports: per-kernel W/Q/R/AI/P/utilisation rows
+//! with per-level arithmetic intensities and the binding roof,
 //! paper-vs-measured comparison, markdown and CSV output.
 
-use super::model::RooflineModel;
+use super::model::{MemLevel, RooflineModel};
 use super::point::KernelPoint;
-use crate::util::human::{fmt_bytes, fmt_flops, fmt_pct, fmt_seconds};
+use crate::util::human::{fmt_bytes, fmt_flops, fmt_pct, fmt_rate, fmt_seconds};
 
-/// Expected utilisation from the paper for comparison rows.
+/// Expected utilisation (and optionally the binding memory level) from
+/// the paper for comparison rows.
 #[derive(Clone, Debug)]
 pub struct PaperExpectation {
     pub kernel: String,
@@ -13,37 +15,61 @@ pub struct PaperExpectation {
     pub utilization: Option<f64>,
     /// Free-text of what the paper claims (orderings etc.).
     pub claim: String,
+    /// Expected binding roof in the hierarchical model, if the claim
+    /// names one (e.g. "gelu is DRAM-bound").
+    pub bound: Option<MemLevel>,
+}
+
+fn fmt_ai(ai: f64) -> String {
+    if ai.is_finite() {
+        format!("{ai:.3}")
+    } else {
+        "∞".into()
+    }
+}
+
+fn fmt_ai_opt(ai: Option<f64>) -> String {
+    match ai {
+        Some(ai) => fmt_ai(ai),
+        None => "—".into(),
+    }
 }
 
 /// Render a markdown table for points on a roofline.
 pub fn markdown_table(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
     let mut out = String::new();
+    let betas: Vec<String> = roofline
+        .roofs
+        .iter()
+        .map(|r| format!("β_{} = {}", r.level.label(), fmt_rate(r.bytes_per_sec)))
+        .collect();
     out.push_str(&format!(
-        "### {} — π = {}, β = {}, ridge = {:.2} FLOP/byte\n\n",
+        "### {} — π = {}, {}, DRAM ridge = {:.2} FLOP/byte\n\n",
         roofline.name,
         fmt_flops(roofline.peak()),
-        crate::util::human::fmt_rate(roofline.bandwidth),
+        betas.join(", "),
         roofline.ridge()
     ));
     out.push_str(
-        "| kernel | W | Q | R | AI (FLOP/B) | P | util π | roof frac | bound |\n\
-         |---|---|---|---|---|---|---|---|---|\n",
+        "| kernel | W | Q | R | AI_L1 | AI_L2 | AI_LLC | AI (DRAM) | P | util π | roof frac | bound |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for p in points {
-        let ai = p.ai();
-        let bound = if ai.is_finite() && roofline.memory_bound(ai) { "memory" } else { "compute" };
         out.push_str(&format!(
-            "| {}{} | {} | {} | {} | {} | {} | {} | {:.2} | {} |\n",
+            "| {}{} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {:.2} | {} |\n",
             p.name,
             if p.note.is_empty() { String::new() } else { format!(" ({})", p.note) },
             fmt_flops_amount(p.work_flops),
             fmt_bytes(p.traffic_bytes),
             fmt_seconds(p.runtime),
-            if ai.is_finite() { format!("{ai:.3}") } else { "∞".into() },
+            fmt_ai_opt(p.ai_at(MemLevel::L1)),
+            fmt_ai_opt(p.ai_at(MemLevel::L2)),
+            fmt_ai_opt(p.ai_at(MemLevel::Llc)),
+            fmt_ai(p.ai()),
             fmt_flops(p.perf()),
             fmt_pct(p.utilization(roofline)),
             p.roof_fraction(roofline),
-            bound
+            p.binding(roofline).label()
         ));
     }
     out.push('\n');
@@ -57,10 +83,17 @@ pub fn comparison_table(
     expectations: &[PaperExpectation],
 ) -> String {
     let mut out = String::from(
-        "| kernel | paper util | measured util | Δ (pp) | paper claim |\n|---|---|---|---|---|\n",
+        "| kernel | paper util | measured util | Δ (pp) | bound | paper claim |\n\
+         |---|---|---|---|---|---|\n",
     );
     for e in expectations {
-        let measured = points.iter().find(|p| p.name == e.kernel);
+        // Prefer the cold-cache cell: expectations (and any pinned
+        // binding level) describe the cold measurement, and cold/warm
+        // points share a kernel name.
+        let measured = points
+            .iter()
+            .find(|p| p.name == e.kernel && p.note == "cold")
+            .or_else(|| points.iter().find(|p| p.name == e.kernel));
         let m_util = measured.map(|p| p.utilization(roofline));
         let (paper_s, meas_s, delta_s) = match (e.utilization, m_util) {
             (Some(pu), Some(mu)) => (
@@ -72,31 +105,61 @@ pub fn comparison_table(
             (Some(pu), None) => (fmt_pct(pu), "missing".into(), "—".into()),
             (None, None) => ("—".into(), "missing".into(), "—".into()),
         };
+        let bound_s = match (e.bound, measured) {
+            (Some(expected), Some(p)) => {
+                let got = p.binding(roofline);
+                let ok = got == super::model::Binding::Level(expected);
+                format!(
+                    "{} (expected {}) {}",
+                    got.label(),
+                    expected.label(),
+                    if ok { "✓" } else { "✗" }
+                )
+            }
+            (None, Some(p)) => p.binding(roofline).label().to_string(),
+            (_, None) => "—".into(),
+        };
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} |\n",
-            e.kernel, paper_s, meas_s, delta_s, e.claim
+            "| {} | {} | {} | {} | {} | {} |\n",
+            e.kernel, paper_s, meas_s, delta_s, bound_s, e.claim
         ));
     }
     out.push('\n');
     out
 }
 
-/// CSV rows for machine consumption.
+/// CSV rows for machine consumption. Per-level AI columns are empty when
+/// a point carries no level breakdown.
 pub fn csv(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
-    let mut out =
-        String::from("roofline,kernel,note,work_flops,traffic_bytes,runtime_s,ai,perf_flops,util\n");
+    let mut out = String::from(
+        "roofline,kernel,note,work_flops,traffic_bytes,runtime_s,ai,perf_flops,util,\
+         ai_l1,ai_l2,ai_llc,ai_dram_local,ai_dram_remote,bound\n",
+    );
+    let csv_ai = |ai: Option<f64>| -> String {
+        match ai {
+            Some(ai) if ai.is_finite() => format!("{ai:.6}"),
+            Some(_) => "inf".into(),
+            None => String::new(),
+        }
+    };
     for p in points {
         out.push_str(&format!(
-            "{},{},{},{:.0},{:.0},{:.9},{},{:.0},{:.6}\n",
+            "{},{},{},{:.0},{:.0},{:.9},{},{:.0},{:.6},{},{},{},{},{},{}\n",
             roofline.name,
             p.name,
             p.note,
             p.work_flops,
             p.traffic_bytes,
             p.runtime,
-            if p.ai().is_finite() { format!("{:.6}", p.ai()) } else { "inf".into() },
+            csv_ai(Some(p.ai())),
             p.perf(),
             p.utilization(roofline),
+            csv_ai(p.ai_at(MemLevel::L1)),
+            csv_ai(p.ai_at(MemLevel::L2)),
+            csv_ai(p.ai_at(MemLevel::Llc)),
+            csv_ai(p.ai_at(MemLevel::DramLocal)),
+            csv_ai(p.ai_at(MemLevel::DramRemote)),
+            p.binding(roofline).label(),
         ));
     }
     out
@@ -110,6 +173,7 @@ fn fmt_flops_amount(flops: f64) -> String {
 mod tests {
     use super::*;
     use crate::roofline::model::Ceiling;
+    use crate::roofline::point::LevelBytes;
 
     fn setup() -> (RooflineModel, Vec<KernelPoint>) {
         let r = RooflineModel::new(
@@ -134,8 +198,27 @@ mod tests {
         assert!(md.contains("gelu"));
         assert!(md.contains("| kernel |"));
         // gelu at AI 0.1 is memory-bound; conv at 20 is compute-bound.
-        assert!(md.contains("memory"));
+        assert!(md.contains("DRAM-local"));
         assert!(md.contains("compute"));
+        // The header names every roof the model carries.
+        assert!(md.contains("β_DRAM-local"));
+    }
+
+    #[test]
+    fn markdown_shows_per_level_ai() {
+        let (r, mut pts) = setup();
+        pts[1] = pts[1].clone().with_levels(LevelBytes {
+            l1: 4e9,
+            l2: 2e9,
+            llc: 1e9,
+            dram_local: 1e9,
+            dram_remote: 0.0,
+        });
+        let md = markdown_table(&r, &pts);
+        assert!(md.contains("0.025"), "AI_L1 = 1e8/4e9 missing: {md}");
+        assert!(md.contains("0.100"), "AI_LLC missing");
+        // Points without levels render em-dashes, not zeroes.
+        assert!(md.contains("—"));
     }
 
     #[test]
@@ -146,17 +229,43 @@ mod tests {
                 kernel: "conv_nchw16c".into(),
                 utilization: Some(0.867),
                 claim: "highest of the three".into(),
+                bound: None,
             },
             PaperExpectation {
                 kernel: "missing_kernel".into(),
                 utilization: Some(0.1),
                 claim: "".into(),
+                bound: None,
             },
         ];
         let md = comparison_table(&r, &pts, &exp);
         assert!(md.contains("86.7%"));
         assert!(md.contains("missing"));
         assert!(md.contains("Δ"));
+    }
+
+    #[test]
+    fn comparison_checks_expected_binding() {
+        let (r, pts) = setup();
+        let exp = vec![
+            PaperExpectation {
+                kernel: "gelu".into(),
+                utilization: None,
+                claim: "memory-bound".into(),
+                bound: Some(MemLevel::DramLocal),
+            },
+            PaperExpectation {
+                kernel: "conv_nchw16c".into(),
+                utilization: None,
+                claim: "compute-bound".into(),
+                bound: Some(MemLevel::DramLocal),
+            },
+        ];
+        let md = comparison_table(&r, &pts, &exp);
+        // gelu (AI 0.1, ridge 10) matches DRAM-local; conv (AI 20) is
+        // compute-bound and mismatches.
+        assert!(md.contains("✓"), "{md}");
+        assert!(md.contains("✗"), "{md}");
     }
 
     #[test]
@@ -167,5 +276,9 @@ mod tests {
         let row: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
         assert_eq!(row[1], "conv_nchw16c");
         assert!(row[3].parse::<f64>().is_ok());
+        assert_eq!(row.len(), 15);
+        // No level breakdown → empty per-level AI cells.
+        assert_eq!(row[9], "");
+        assert_eq!(row.last().unwrap(), &"compute");
     }
 }

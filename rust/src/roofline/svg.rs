@@ -1,6 +1,12 @@
 //! SVG roofline figures — publication-style output for `reports/`.
+//!
+//! Hierarchical models render one diagonal roof per memory level (the
+//! "roofline per level set" presentation of arXiv 2009.05257): the DRAM
+//! roof is the solid black paper roofline, cache-level roofs are grey
+//! dashed diagonals, and each kernel point is re-plotted at its
+//! per-level arithmetic intensity with smaller markers.
 
-use super::model::RooflineModel;
+use super::model::{MemLevel, RooflineModel};
 use super::point::KernelPoint;
 
 const W: f64 = 760.0;
@@ -15,11 +21,23 @@ const COLORS: &[&str] = &["#d62728", "#1f77b4", "#2ca02c", "#9467bd", "#ff7f0e",
 /// Render a complete SVG document for one roofline + points.
 pub fn svg_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
     let ridge = roofline.ridge();
-    let finite: Vec<f64> = points
+    let mut finite: Vec<f64> = points
         .iter()
         .map(|p| p.ai())
         .filter(|x| x.is_finite() && *x > 0.0)
         .collect();
+    // Cache-level AIs widen the x-range too (they sit left of the DRAM
+    // AI when a level moves more bytes). Only the levels that get echo
+    // markers below count — the DRAM split AIs are never drawn.
+    for p in points {
+        for level in [MemLevel::L1, MemLevel::L2, MemLevel::Llc] {
+            if let Some(ai) = p.ai_at(level) {
+                if ai.is_finite() && ai > 0.0 {
+                    finite.push(ai);
+                }
+            }
+        }
+    }
     let ai_min = finite.iter().fold(ridge / 64.0, |a, &b| a.min(b / 2.0)).max(1e-3);
     let ai_max = finite.iter().fold(ridge * 8.0, |a, &b| a.max(b * 2.0));
     let peak = roofline.peak();
@@ -93,19 +111,44 @@ pub fn svg_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
         H / 2.0
     ));
 
-    // Roof: diagonal to ridge, flat after.
+    // One diagonal roof per memory level above the DRAM roof, grey and
+    // dashed, clipped at the compute peak.
+    for roof in &roofline.roofs {
+        if roof.level == MemLevel::DramLocal {
+            continue; // drawn as the solid paper roofline below
+        }
+        let beta = roof.bytes_per_sec;
+        let ai_ridge = (peak / beta).clamp(ai_min, ai_max);
+        let (color, dash) = match roof.level {
+            MemLevel::DramRemote => ("#b22", "8 4"),
+            _ => ("#999", "5 4"),
+        };
+        s.push_str(&format!(
+            r##"<polyline fill="none" stroke="{color}" stroke-dasharray="{dash}" points="{:.1},{:.1} {:.1},{:.1}"/>
+<text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="10" fill="{color}">{}</text>"##,
+            x(ai_min),
+            y(roofline.peak().min(ai_min * beta)),
+            x(ai_ridge),
+            y(roofline.peak().min(ai_ridge * beta)),
+            x(ai_ridge) + 3.0,
+            y(roofline.peak().min(ai_ridge * beta)) - 4.0,
+            xml_escape(roof.level.label())
+        ));
+    }
+
+    // The paper's DRAM roofline: diagonal to the ridge, flat after.
     s.push_str(&format!(
         r##"<polyline fill="none" stroke="black" stroke-width="2" points="{:.1},{:.1} {:.1},{:.1} {:.1},{:.1}"/>"##,
         x(ai_min),
         y(roofline.attainable(ai_min)),
-        x(ridge),
+        x(ridge.clamp(ai_min, ai_max)),
         y(peak),
         x(ai_max),
         y(peak)
     ));
     // Secondary ceilings, dashed.
     for c in &roofline.ceilings[..roofline.ceilings.len().saturating_sub(1)] {
-        let ai_start = (c.flops_per_sec / roofline.bandwidth).max(ai_min);
+        let ai_start = (c.flops_per_sec / roofline.bandwidth()).max(ai_min);
         s.push_str(&format!(
             r##"<line x1="{:.1}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#777" stroke-dasharray="6 4"/>
 <text x="{:.1}" y="{:.1}" font-family="sans-serif" font-size="11" fill="#555">{}</text>"##,
@@ -119,10 +162,26 @@ pub fn svg_plot(roofline: &RooflineModel, points: &[KernelPoint]) -> String {
         ));
     }
 
-    // Points + vertical dashed AI lines (the paper's presentation).
+    // Points + vertical dashed AI lines (the paper's presentation). A
+    // point with a level breakdown is echoed at each level's AI with a
+    // small hollow marker — its walk across the level set.
     for (i, p) in points.iter().enumerate() {
         let color = COLORS[i % COLORS.len()];
         let ai = if p.ai().is_finite() { p.ai() } else { ai_max };
+        for level in MemLevel::all() {
+            if level == MemLevel::DramLocal || level == MemLevel::DramRemote {
+                continue; // the DRAM marker is the main (filled) one
+            }
+            if let Some(lai) = p.ai_at(level) {
+                if lai.is_finite() && lai > 0.0 {
+                    s.push_str(&format!(
+                        r##"<circle cx="{:.1}" cy="{:.1}" r="3" fill="none" stroke="{color}"/>"##,
+                        x(lai.clamp(ai_min, ai_max)),
+                        y(p.perf()),
+                    ));
+                }
+            }
+        }
         s.push_str(&format!(
             r##"<line x1="{0:.1}" y1="{MT}" x2="{0:.1}" y2="{1}" stroke="{color}" stroke-dasharray="3 5" opacity="0.6"/>
 <circle cx="{0:.1}" cy="{2:.1}" r="5" fill="{color}"/>
@@ -151,6 +210,7 @@ fn xml_escape(s: &str) -> String {
 mod tests {
     use super::*;
     use crate::roofline::model::Ceiling;
+    use crate::roofline::point::LevelBytes;
 
     #[test]
     fn svg_well_formed_ish() {
@@ -189,5 +249,26 @@ mod tests {
         );
         let svg = svg_plot(&r, &[]);
         assert!(svg.contains("polyline"));
+    }
+
+    #[test]
+    fn hierarchical_model_draws_level_roofs_and_markers() {
+        let m = crate::sim::machine::MachineConfig::xeon_6248();
+        let r = RooflineModel::for_machine(&m, 1, 1, "single-thread");
+        let p = KernelPoint::new("gelu", 1e9, 5e8, 0.05).with_levels(LevelBytes {
+            l1: 1e9,
+            l2: 8e8,
+            llc: 6e8,
+            dram_local: 5e8,
+            dram_remote: 0.0,
+        });
+        let svg = svg_plot(&r, &[p]);
+        // Level labels on the grey roofs.
+        for label in ["L1", "L2", "LLC", "DRAM-remote"] {
+            assert!(svg.contains(&format!(">{label}</text>")), "missing {label} roof");
+        }
+        // One filled DRAM marker + three hollow level echoes.
+        assert_eq!(svg.matches("<circle").count(), 4);
+        assert_eq!(svg.matches(r#"r="3" fill="none""#).count(), 3);
     }
 }

@@ -53,10 +53,18 @@ pub struct TrafficStats {
     pub sw_prefetch_lines: u64,
     /// Per-node IMC counters for this region (what the paper reads).
     pub imc: Vec<ImcCounters>,
-    /// Lines whose requesting thread and owning memory node matched.
+    /// Lines whose requesting thread and owning memory node matched
+    /// (reads and NT stores — what `remote_fraction` is derived from).
     pub local_lines: u64,
     /// Lines served from a remote node (cross-UPI).
     pub remote_lines: u64,
+    /// Victim-writeback lines that landed on the evicting thread's own
+    /// node. Kept separate from `local_lines` so the timing model's
+    /// `remote_fraction` (request-path locality) is unchanged, while the
+    /// DRAM byte split can attribute every IMC line exactly.
+    pub local_wb_lines: u64,
+    /// Victim-writeback lines that crossed to a remote node.
+    pub remote_wb_lines: u64,
     /// Non-temporal store lines (bypass traffic).
     pub nt_store_lines: u64,
     /// Total line probes processed (simulator work, for perf accounting).
@@ -80,6 +88,59 @@ impl TrafficStats {
     /// Traffic an LLC-demand-miss methodology would report (bytes).
     pub fn llc_demand_miss_bytes(&self) -> u64 {
         self.llc_demand_miss_lines * LINE
+    }
+
+    // --- Per-level traffic (the hierarchical roofline's Q_level) -----
+    //
+    // Each level is a *boundary*: bytes that crossed between this level
+    // and the one above it, counting everything — demand, prefetch and
+    // writebacks — in the same spirit as counting DRAM at the IMC (§2.4).
+
+    /// Core↔L1 traffic: demand accesses plus NT-store lines (which
+    /// bypass the caches but still leave the core).
+    pub fn l1_bytes(&self) -> u64 {
+        (self.l1.accesses() + self.nt_store_lines) * LINE
+    }
+
+    /// L1↔L2 boundary traffic: lines filled into L1 (demand misses +
+    /// prefetch fills) plus dirty L1 victims written down to L2.
+    pub fn l2_bytes(&self) -> u64 {
+        (self.l1.misses + self.l1.prefetch_fills + self.l1.writebacks) * LINE
+    }
+
+    /// L2↔LLC boundary traffic: lines filled into L2 plus dirty L2
+    /// victims written down to the LLC.
+    pub fn llc_bytes(&self) -> u64 {
+        (self.l2.misses + self.l2.prefetch_fills + self.l2.writebacks) * LINE
+    }
+
+    /// IMC bytes served by the requesting thread's own node. Every IMC
+    /// line the simulator records — demand and prefetch reads, NT
+    /// stores, *and* victim writebacks — is attributed at its
+    /// `node_of` resolution, so for simulator-produced stats
+    /// local + remote equals [`Self::imc_bytes`] — the paper's Q —
+    /// exactly.
+    pub fn dram_local_bytes(&self) -> f64 {
+        ((self.local_lines + self.local_wb_lines) * LINE) as f64
+    }
+
+    /// IMC bytes served cross-node (UPI-crossing lines, writebacks
+    /// included).
+    pub fn dram_remote_bytes(&self) -> f64 {
+        ((self.remote_lines + self.remote_wb_lines) * LINE) as f64
+    }
+
+    /// The demand-path line chain `[L1, L2, LLC, DRAM]`: probes that
+    /// reached each level on a demand access. Structurally monotone
+    /// non-increasing (each level is only probed after a miss above it) —
+    /// the traffic-conservation invariant the property tests pin down.
+    pub fn demand_line_chain(&self) -> [u64; 4] {
+        [
+            self.l1.accesses(),
+            self.l2.accesses(),
+            self.llc.accesses(),
+            self.llc_demand_miss_lines,
+        ]
     }
 
     /// Fraction of DRAM lines served cross-node.
@@ -290,14 +351,18 @@ impl MemorySystem {
                     if let Some(victim) =
                         self.llcs[thread_node].fill_prefetch(line)
                     {
-                        self.imc.record_write(node_of(victim * LINE, thread_node), 1);
+                        let wb_node = node_of(victim * LINE, thread_node);
+                        self.imc.record_write(wb_node, 1);
+                        count_wb_locality(stats, thread_node, wb_node, 1);
                     }
                 }
                 let t = &mut self.threads[tid];
                 if let Some(victim) = t.l2.fill_prefetch(line) {
                     // L2 dirty victim sinks into LLC.
                     if let Some(v2) = self.llcs[thread_node].writeback(victim) {
-                        self.imc.record_write(node_of(v2 * LINE, thread_node), 1);
+                        let wb_node = node_of(v2 * LINE, thread_node);
+                        self.imc.record_write(wb_node, 1);
+                        count_wb_locality(stats, thread_node, wb_node, 1);
                     }
                 }
                 t.l1.fill_prefetch(line);
@@ -314,7 +379,9 @@ impl MemorySystem {
                     // L1 dirty victim goes to L2.
                     if let Some(v2) = self.threads[tid].l2.writeback(victim) {
                         if let Some(v3) = self.llcs[thread_node].writeback(v2) {
-                            self.imc.record_write(node_of(v3 * LINE, thread_node), 1);
+                            let wb_node = node_of(v3 * LINE, thread_node);
+                            self.imc.record_write(wb_node, 1);
+                            count_wb_locality(stats, thread_node, wb_node, 1);
                         }
                     }
                 }
@@ -331,7 +398,9 @@ impl MemorySystem {
                     Probe::Miss { dirty_victim } => {
                         if let Some(v2) = dirty_victim {
                             if let Some(v3) = self.llcs[thread_node].writeback(v2) {
-                                self.imc.record_write(node_of(v3 * LINE, thread_node), 1);
+                                let wb_node = node_of(v3 * LINE, thread_node);
+                                self.imc.record_write(wb_node, 1);
+                                count_wb_locality(stats, thread_node, wb_node, 1);
                             }
                         }
                         // LLC.
@@ -339,8 +408,9 @@ impl MemorySystem {
                             Probe::Hit => {}
                             Probe::Miss { dirty_victim } => {
                                 if let Some(v3) = dirty_victim {
-                                    self.imc
-                                        .record_write(node_of(v3 * LINE, thread_node), 1);
+                                    let wb_node = node_of(v3 * LINE, thread_node);
+                                    self.imc.record_write(wb_node, 1);
+                                    count_wb_locality(stats, thread_node, wb_node, 1);
                                 }
                                 let mem_node = node_of(addr, thread_node);
                                 self.imc.record_read(mem_node, 1);
@@ -361,7 +431,9 @@ impl MemorySystem {
                     }
                     if let Some(v2) = l2_victim {
                         if let Some(v3) = self.llcs[thread_node].writeback(v2) {
-                            self.imc.record_write(node_of(v3 * LINE, thread_node), 1);
+                            let wb_node = node_of(v3 * LINE, thread_node);
+                            self.imc.record_write(wb_node, 1);
+                            count_wb_locality(stats, thread_node, wb_node, 1);
                         }
                     }
                     let (was_in_llc, llc_victim) =
@@ -372,7 +444,9 @@ impl MemorySystem {
                         stats.hw_prefetch_lines += 1;
                         count_locality(stats, thread_node, mem_node, 1);
                         if let Some(v) = llc_victim {
-                            self.imc.record_write(node_of(v * LINE, thread_node), 1);
+                            let wb_node = node_of(v * LINE, thread_node);
+                            self.imc.record_write(wb_node, 1);
+                            count_wb_locality(stats, thread_node, wb_node, 1);
                         }
                     }
                 }
@@ -398,6 +472,17 @@ fn count_locality(stats: &mut TrafficStats, thread_node: usize, mem_node: usize,
         stats.local_lines += lines;
     } else {
         stats.remote_lines += lines;
+    }
+}
+
+/// Locality of a victim writeback — tracked apart from demand locality
+/// (see [`TrafficStats::local_wb_lines`]).
+#[inline]
+fn count_wb_locality(stats: &mut TrafficStats, thread_node: usize, mem_node: usize, lines: u64) {
+    if thread_node == mem_node {
+        stats.local_wb_lines += lines;
+    } else {
+        stats.remote_wb_lines += lines;
     }
 }
 
@@ -603,6 +688,83 @@ mod tests {
             warm.imc_bytes() > 0,
             "12 KiB across threads cannot fit an 8 KiB LLC"
         );
+    }
+
+    #[test]
+    fn per_level_bytes_cold_stream() {
+        let mut ms = tiny_system(1);
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 64 * 64, AccessKind::Load)); // 64 lines
+        let stats = ms.run(&[t], &Placement::bound(1, 0), &mut node0);
+        // Every line misses every level once: all boundaries see 4 KiB.
+        assert_eq!(stats.l1_bytes(), 64 * 64);
+        assert_eq!(stats.l2_bytes(), 64 * 64);
+        assert_eq!(stats.llc_bytes(), 64 * 64);
+        assert_eq!(stats.imc_bytes(), 64 * 64);
+        assert_eq!(stats.dram_local_bytes(), (64 * 64) as f64);
+        assert_eq!(stats.dram_remote_bytes(), 0.0);
+        assert_eq!(stats.demand_line_chain(), [64, 64, 64, 64]);
+    }
+
+    #[test]
+    fn warm_rerun_traffic_collapses_below_l1() {
+        let mut ms = tiny_system(1);
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 512, AccessKind::Load)); // 8 lines fit L1
+        let _ = ms.run(&[t.clone()], &Placement::bound(1, 0), &mut node0);
+        let warm = ms.run(&[t], &Placement::bound(1, 0), &mut node0);
+        assert_eq!(warm.l1_bytes(), 8 * 64, "core still reads every line");
+        assert_eq!(warm.l2_bytes(), 0, "L1-resident rerun crosses no boundary");
+        assert_eq!(warm.llc_bytes(), 0);
+        assert_eq!(warm.imc_bytes(), 0);
+        assert_eq!(warm.demand_line_chain(), [8, 0, 0, 0]);
+    }
+
+    #[test]
+    fn nt_stores_count_as_core_traffic() {
+        let mut ms = tiny_system(1);
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 16384, AccessKind::StoreNT));
+        let stats = ms.run(&[t], &Placement::bound(1, 0), &mut node0);
+        assert_eq!(stats.l1_bytes(), 16384, "NT stores leave the core");
+        assert_eq!(stats.l2_bytes(), 0, "NT stores bypass the hierarchy");
+        assert_eq!(stats.dram_local_bytes() + stats.dram_remote_bytes(), 16384.0);
+    }
+
+    #[test]
+    fn writebacks_carry_locality_in_the_dram_split() {
+        // Loads from a node-1 region + a store stream over a node-0
+        // region twice the LLC: RFO reads and victim writebacks are
+        // node 0, loads are node 1. The byte split must attribute the
+        // writebacks too — not apportion them by the read fraction.
+        let mut ms = tiny_system(1);
+        let mut t = Trace::new();
+        let remote_base = 1u64 << 20;
+        t.push(AccessRun::contiguous(remote_base, 4096, AccessKind::Load)); // 64 lines, node 1
+        t.push(AccessRun::contiguous(0, 16384, AccessKind::Store)); // 256 lines, node 0
+        let stats = ms.run(&[t], &Placement::bound(1, 0), &mut |addr, _| {
+            usize::from(addr >= remote_base)
+        });
+        assert!(stats.imc_write_bytes() > 0, "store stream must write back");
+        assert_eq!(stats.remote_wb_lines, 0, "all dirty lines live on node 0");
+        // Remote bytes are exactly the 64 loaded lines; everything else
+        // (RFO reads + writebacks) is local — and the split still sums
+        // to the IMC total exactly.
+        assert_eq!(stats.dram_remote_bytes(), 4096.0);
+        assert_eq!(
+            stats.dram_local_bytes() + stats.dram_remote_bytes(),
+            stats.imc_bytes() as f64
+        );
+    }
+
+    #[test]
+    fn dram_split_follows_locality() {
+        let mut ms = tiny_system(1);
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 4096, AccessKind::Load));
+        let stats = ms.run(&[t], &Placement::bound(1, 0), &mut |_a, _t| 1);
+        assert_eq!(stats.dram_local_bytes(), 0.0);
+        assert_eq!(stats.dram_remote_bytes(), stats.imc_bytes() as f64);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use super::hierarchy::{HierarchyConfig, MemorySystem};
 use super::numa::{MemPolicy, NumaConfig, PageMap};
 use super::prefetch::PrefetchConfig;
 use super::cache::CacheConfig;
-use super::PAGE;
+use super::{LINE, PAGE};
 use crate::util::toml_lite::Doc;
 
 /// Full static description of a simulated platform.
@@ -79,6 +79,44 @@ impl MachineConfig {
             .effective_bw(per_node_threads, true, self.hierarchy.prefetch.enabled)
             .max(self.dram.effective_bw(per_node_threads, false, self.hierarchy.prefetch.enabled));
         one * nodes_used as f64
+    }
+
+    // --- Cache-level peak bandwidths (the hierarchical roofline's
+    // --- per-level β), derived from core geometry and thread counts the
+    // --- same way `peak_bw` derives DRAM's β. ------------------------
+
+    /// Widest vector load in bytes (a ZMM load on AVX-512 machines).
+    fn vec_load_bytes(&self) -> f64 {
+        self.core.max_width.lanes() as f64 * 4.0
+    }
+
+    /// Frequency under the streaming (widest-vector) license.
+    fn stream_freq(&self) -> f64 {
+        self.core.freq(self.core.max_width)
+    }
+
+    /// Peak L1 load bandwidth for `threads` threads: every load port
+    /// moves one full-width vector per cycle.
+    pub fn peak_l1_bw(&self, threads: usize) -> f64 {
+        threads as f64 * self.core.load_ports * self.vec_load_bytes() * self.stream_freq()
+    }
+
+    /// Peak L2→L1 bandwidth: one cache line per core per cycle
+    /// (Skylake-SP's sustained L2 read rate).
+    pub fn peak_l2_bw(&self, threads: usize) -> f64 {
+        threads as f64 * LINE as f64 * self.stream_freq()
+    }
+
+    /// Peak LLC→L2 bandwidth: half a line per core per cycle (the mesh
+    /// sustains roughly half the L2 rate per core).
+    pub fn peak_llc_bw(&self, threads: usize) -> f64 {
+        threads as f64 * (LINE / 2) as f64 * self.stream_freq()
+    }
+
+    /// Peak cross-socket (UPI-limited) DRAM bandwidth: the remote factor
+    /// applied to one node's β. Only meaningful on multi-socket machines.
+    pub fn peak_remote_bw(&self, threads: usize) -> f64 {
+        self.numa.remote_bw_factor * self.peak_bw(threads, 1)
     }
 
     /// The machine's identifying parameters as a canonical JSON document
@@ -346,6 +384,24 @@ mod tests {
         assert!((two / one - 2.0).abs() < 1e-9, "two-socket = 2× one-socket");
         // Single socket NT streaming ≈ 115–130 GB/s.
         assert!(one > 100e9 && one < 141e9, "one={one}");
+    }
+
+    #[test]
+    fn cache_bandwidths_monotone_down_the_hierarchy() {
+        let m = MachineConfig::xeon_6248();
+        for threads in [1usize, 10, 20, 40] {
+            let l1 = m.peak_l1_bw(threads);
+            let l2 = m.peak_l2_bw(threads);
+            let llc = m.peak_llc_bw(threads);
+            let dram = m.peak_bw(threads, 1);
+            assert!(l1 > l2 && l2 > llc && llc > dram, "t={threads}: {l1} {l2} {llc} {dram}");
+            let remote = m.peak_remote_bw(threads);
+            assert!(remote < dram, "remote {remote} must sit below local {dram}");
+        }
+        // 1 thread on the Xeon: 2 ports × 64 B × 1.6 GHz = 204.8 GB/s L1.
+        assert!((m.peak_l1_bw(1) - 204.8e9).abs() < 1e6);
+        assert!((m.peak_l2_bw(1) - 102.4e9).abs() < 1e6);
+        assert!((m.peak_llc_bw(1) - 51.2e9).abs() < 1e6);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! Acceptance tests for the hierarchical roofline redesign:
+//!
+//! * **parity** — the DRAM-level projection of the hierarchical model is
+//!   numerically identical to the paper's single-β model for every
+//!   f1–f8 cell (the old `P = min(π, I·β)` with β = `peak_bw`);
+//! * **traffic conservation** — demand traffic is monotone down the
+//!   hierarchy (L1 ≥ L2 ≥ LLC ≥ DRAM-demand) across kernels × scenarios,
+//!   and the local/remote DRAM split always reconciles with the
+//!   IMC-counted Q;
+//! * **manifest v2 / diff / grid plumbing** across real sweeps.
+
+use dlroofline::coordinator::runner::{sweep_and_write, sweep_grid_and_write};
+use dlroofline::coordinator::{diff_manifests, KernelRegistry, RunManifest};
+use dlroofline::harness::experiments::{run_experiment, ExperimentParams};
+use dlroofline::harness::spec::{self, SpecKind};
+use dlroofline::harness::{measure_kernel, CacheState, ScenarioSpec};
+use dlroofline::roofline::model::{Ceiling, MemLevel, RooflineModel};
+use dlroofline::sim::machine::{Machine, MachineConfig};
+use dlroofline::testutil::TempDir;
+
+fn params() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+// ----------------------------------------------------------- parity
+
+/// The pre-hierarchy model, reconstructed verbatim: one β, ceilings from
+/// the same machine peaks.
+fn flat_model(hier: &RooflineModel, beta: f64) -> RooflineModel {
+    RooflineModel::new(&hier.name, hier.ceilings.clone(), beta, "DRAM (NT-stream)")
+}
+
+#[test]
+fn dram_projection_identical_to_single_beta_model_for_f1_to_f8() {
+    let params = params();
+    let m = &params.machine;
+    for id in ["f1", "f3", "f4", "f5", "f6", "f7", "f8"] {
+        let spec = spec::find(id).unwrap();
+        let SpecKind::Grid(grid) = &spec.kind else {
+            panic!("{id} must be a grid experiment")
+        };
+        let result = run_experiment(id, &params).unwrap();
+        let scenarios: Vec<_> = grid
+            .scenarios
+            .iter()
+            .filter(|s| s.validate(m).is_ok())
+            .collect();
+        assert_eq!(scenarios.len(), result.groups.len(), "{id}: group/scenario zip");
+        for (scenario, group) in scenarios.iter().zip(&result.groups) {
+            // The hierarchical model's DRAM roof is exactly the old β.
+            let beta = m.peak_bw(scenario.threads(m), scenario.nodes_used(m));
+            assert_eq!(
+                group.roofline.bandwidth(),
+                beta,
+                "{id}/{}: DRAM roof drifted from peak_bw",
+                scenario.name
+            );
+            let flat = flat_model(&group.roofline, beta);
+            assert_eq!(group.roofline.ridge(), flat.ridge(), "{id}: ridge");
+            assert_eq!(group.roofline.peak(), flat.peak(), "{id}: π");
+            for meas in &group.measurements {
+                let p = meas.point();
+                let ai = p.ai();
+                if !ai.is_finite() {
+                    continue;
+                }
+                // Bitwise parity of the paper's equation at the cell's AI.
+                assert_eq!(
+                    group.roofline.attainable(ai).to_bits(),
+                    flat.attainable(ai).to_bits(),
+                    "{id}/{}: attainable({ai}) diverged",
+                    meas.kernel
+                );
+                assert_eq!(
+                    group.roofline.memory_bound(ai),
+                    flat.memory_bound(ai),
+                    "{id}/{}: bound classification diverged",
+                    meas.kernel
+                );
+                // And the point's DRAM AI is W/Q over the IMC-counted Q.
+                assert_eq!(ai, meas.measured.work_flops as f64 / meas.measured.traffic_bytes as f64);
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_constructor_still_builds_the_paper_model() {
+    // Library users constructing the pre-redesign way get the same
+    // numbers: one DRAM-local roof, same attainable curve.
+    let r = RooflineModel::new(
+        "legacy",
+        vec![Ceiling { label: "peak".into(), flops_per_sec: 1e12 }],
+        100e9,
+        "DRAM",
+    );
+    assert_eq!(r.roofs.len(), 1);
+    assert_eq!(r.roofs[0].level, MemLevel::DramLocal);
+    assert_eq!(r.attainable(2.0), 200e9);
+    assert_eq!(r.ridge(), 10.0);
+}
+
+// ------------------------------------------- traffic conservation
+
+#[test]
+fn demand_traffic_monotone_down_the_hierarchy_across_kernels_and_scenarios() {
+    let registry = KernelRegistry::with_builtins();
+    let config = MachineConfig::xeon_6248();
+    let scenarios = [ScenarioSpec::single_thread(), ScenarioSpec::two_socket()];
+    for name in registry.names() {
+        let kernel = registry.create(name, 1).unwrap();
+        for scenario in &scenarios {
+            for cache in [CacheState::Cold, CacheState::Warm] {
+                let mut machine = Machine::new(config.clone());
+                let meas = measure_kernel(&mut machine, kernel.as_ref(), scenario, cache)
+                    .unwrap_or_else(|e| panic!("{name}/{}: {e:#}", scenario.name));
+                let chain = meas.traffic.demand_line_chain();
+                for w in chain.windows(2) {
+                    assert!(
+                        w[0] >= w[1],
+                        "{name}/{}/{cache:?}: demand chain not monotone: {chain:?}",
+                        scenario.name
+                    );
+                }
+                // The DRAM split reconciles with the IMC-counted Q.
+                let levels = meas.level_bytes();
+                let q = meas.traffic.imc_bytes() as f64;
+                assert!(
+                    (levels.dram() - q).abs() <= 1e-6 * q.max(1.0),
+                    "{name}/{}: local {} + remote {} != Q {}",
+                    scenario.name,
+                    levels.dram_local,
+                    levels.dram_remote,
+                    q
+                );
+                // Boundary traffic is never negative and L1 sees at least
+                // the demand accesses.
+                assert!(levels.l1 >= (chain[0] * 64) as f64);
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_llc_resident_kernel_binds_above_dram() {
+    // Fig 6's inner product fits the LLC: warm-cached, its DRAM traffic
+    // collapses and the binding roof moves up the hierarchy — the effect
+    // the single-β model could not express.
+    let params = params();
+    let result = run_experiment("f6", &params).unwrap();
+    let group = &result.groups[0];
+    let warm = group
+        .measurements
+        .iter()
+        .find(|m| m.cache_state == CacheState::Warm)
+        .unwrap();
+    let p = warm.point();
+    let levels = p.levels.expect("levels attached");
+    assert!(
+        levels.dram() < levels.llc,
+        "warm rerun must hit cache: dram {} llc {}",
+        levels.dram(),
+        levels.llc
+    );
+    match p.binding(&group.roofline) {
+        dlroofline::roofline::model::Binding::Level(MemLevel::DramLocal)
+        | dlroofline::roofline::model::Binding::Level(MemLevel::DramRemote) => {
+            panic!("warm LLC-resident kernel must not be DRAM-bound")
+        }
+        _ => {}
+    }
+}
+
+// ------------------------------------------------- manifest + diff
+
+#[test]
+fn sweep_manifest_is_v2_with_levels_and_diffs_clean_against_itself() {
+    let params = params();
+    let dir_a = TempDir::new("hier-a");
+    let dir_b = TempDir::new("hier-b");
+    let (_, a) = sweep_and_write(&["f6", "f8"], &params, dir_a.path(), false, 1).unwrap();
+    let (_, b) = sweep_and_write(&["f6", "f8"], &params, dir_b.path(), false, 2).unwrap();
+    let ma = RunManifest::load(&a.manifest.unwrap()).unwrap();
+    let mb = RunManifest::load(&b.manifest.unwrap()).unwrap();
+    assert_eq!(ma.schema_version, 2);
+    assert!(ma.cells.iter().all(|c| c.levels.is_some()));
+    // Same plan, different job counts → zero drift.
+    let report = diff_manifests(&ma, &mb);
+    assert!(!report.exceeds(0.0), "max drift {}", report.max_rel());
+}
+
+#[test]
+fn diff_flags_cross_machine_drift() {
+    let base = params();
+    let mut one_socket = params();
+    one_socket.machine = MachineConfig::xeon_6248_1s();
+    let dir_a = TempDir::new("hier-m2");
+    let dir_b = TempDir::new("hier-m1");
+    let (_, a) = sweep_and_write(&["f6"], &base, dir_a.path(), false, 1).unwrap();
+    let (_, b) = sweep_and_write(&["f6"], &one_socket, dir_b.path(), false, 1).unwrap();
+    let ma = RunManifest::load(&a.manifest.unwrap()).unwrap();
+    let mb = RunManifest::load(&b.manifest.unwrap()).unwrap();
+    let report = diff_manifests(&ma, &mb);
+    assert!(report.machine_changed);
+    // f6 is single-thread on node 0 — W identical, R may move with the
+    // machine; the report must at least carry the matched cells.
+    assert_eq!(report.cells.len(), 2);
+}
+
+#[test]
+fn machine_grid_sweep_keys_cells_on_fingerprints() {
+    let dir = TempDir::new("hier-grid");
+    let machines = vec![MachineConfig::xeon_6248(), MachineConfig::xeon_6248_1s()];
+    let grid =
+        sweep_grid_and_write(&["f6"], &params(), &machines, dir.path(), false, 1).unwrap();
+    assert_eq!(grid.entries.len(), 2);
+    let m0 = RunManifest::load(&grid.entries[0].dir.join("run.json")).unwrap();
+    let m1 = RunManifest::load(&grid.entries[1].dir.join("run.json")).unwrap();
+    assert_ne!(m0.machine_fingerprint, m1.machine_fingerprint);
+    // Same cell identity, different content hash — the memo key honours
+    // the machine fingerprint.
+    assert_eq!(m0.cells[0].kernel, m1.cells[0].kernel);
+    assert_ne!(m0.cells[0].key, m1.cells[0].key);
+    assert!(grid.index.unwrap().exists());
+}
