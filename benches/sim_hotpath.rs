@@ -3,7 +3,8 @@
 //! access patterns that dominate the figures (streaming, strided,
 //! LLC-resident rescans, 20-thread interleaving).
 //!
-//! EXPERIMENTS.md §Perf tracks this number across optimisation steps.
+//! ROADMAP.md's simulator hot-path item tracks this number across
+//! optimisation steps.
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};

@@ -1,0 +1,53 @@
+//! Bench: incremental sweeps through the persistent cell cache
+//! (`coordinator/store.rs`).
+//!
+//! Three configurations over the same multi-figure plan:
+//!
+//! * `no_store`   — PR 1's in-process memoization only (the baseline);
+//! * `cold_store` — fresh cache directory every iteration: simulate
+//!   everything *and* pay the record write-back;
+//! * `warm_store` — pre-populated cache: zero simulations, pure
+//!   lookup + assembly — the steady state every repeated machine-grid
+//!   or parameter sweep reaches after its first run.
+//!
+//! The warm/no-store ratio is the amortization the ROADMAP item
+//! promised: repeated sweeps cost disk reads, not simulations.
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::coordinator::plan;
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::testutil::TempDir;
+
+fn main() {
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let ids = ["f3", "f4", "f5", "f6", "f7", "g1"];
+    let cells = plan::expand(&ids, &params).expect("plan expands").stats.cells_total as f64;
+
+    let mut b = Bencher::new("sweep_incremental");
+
+    b.bench("no_store", Throughput::Elements(cells), || {
+        plan::execute(&ids, &params, 0, true).expect("sweep").stats.cells_simulated
+    });
+
+    b.bench("cold_store", Throughput::Elements(cells), || {
+        let dir = TempDir::new("bench-cold");
+        let store = CellStore::open(dir.path()).expect("open store");
+        let out = plan::execute_with_store(&ids, &params, 0, true, Some(&store))
+            .expect("cold sweep");
+        assert_eq!(out.store.as_ref().map(|u| u.hits), Some(0));
+        out.stats.cells_simulated
+    });
+
+    let dir = TempDir::new("bench-warm");
+    let store = CellStore::open(dir.path()).expect("open store");
+    plan::execute_with_store(&ids, &params, 0, true, Some(&store)).expect("populate");
+    b.bench("warm_store", Throughput::Elements(cells), || {
+        let out = plan::execute_with_store(&ids, &params, 0, true, Some(&store))
+            .expect("warm sweep");
+        assert_eq!(out.store.as_ref().map(|u| u.simulated), Some(0));
+        out.store.map(|u| u.hits)
+    });
+
+    b.finish();
+}

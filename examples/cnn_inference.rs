@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  (interpret-mode Pallas lowers to scalarised HLO; the number to \
          watch is the three-layer composition, not absolute FLOP/s — see \
-         EXPERIMENTS.md §E2E)"
+         benches/e2e_pipeline.rs)"
     );
     Ok(())
 }

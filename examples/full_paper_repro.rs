@@ -114,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\nreports written to reports/ — see EXPERIMENTS.md for the analysis.");
+    println!("\nreports written to reports/ — each report carries its paper-vs-measured table.");
     let _ = CacheState::Cold; // (documented entry point for readers)
     Ok(())
 }

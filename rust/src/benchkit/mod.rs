@@ -23,6 +23,7 @@ pub struct Config {
     pub measure: Duration,
     /// Min/max sample count.
     pub min_samples: usize,
+    /// Maximum sample count.
     pub max_samples: usize,
     /// Std-dev multiple for outlier rejection (0 disables).
     pub outlier_k: f64,
@@ -78,9 +79,11 @@ pub enum Throughput {
 /// One finished measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Bench name, unique within its group.
     pub name: String,
     /// Per-iteration time statistics, seconds.
     pub time: Summary,
+    /// Work per iteration, for rate derivation.
     pub throughput: Throughput,
 }
 
@@ -113,6 +116,7 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// Bencher for `group` with [`Config::from_env`] settings.
     pub fn new(group: &str) -> Self {
         Bencher {
             config: Config::from_env(),
@@ -121,6 +125,7 @@ impl Bencher {
         }
     }
 
+    /// Bencher for `group` with explicit settings.
     pub fn with_config(group: &str, config: Config) -> Self {
         Bencher { config, results: Vec::new(), group: group.to_string() }
     }
@@ -177,6 +182,7 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Every measurement recorded so far, in bench order.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
@@ -206,7 +212,7 @@ impl Bencher {
         out
     }
 
-    /// Render CSV (for EXPERIMENTS.md tooling).
+    /// Render CSV (for external tracking/plotting tooling).
     pub fn csv(&self) -> String {
         let mut out = String::from("group,benchmark,mean_s,stddev_s,p05_s,p95_s,samples,rate\n");
         for m in &self.results {

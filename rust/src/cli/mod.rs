@@ -11,37 +11,52 @@ use anyhow::{anyhow, bail, Result};
 /// Specification of one option.
 #[derive(Clone, Debug)]
 pub struct OptSpec {
+    /// Option name as typed after `--`.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// Boolean switch (no value) vs valued option.
     pub takes_value: bool,
+    /// Default value applied when the option is absent.
     pub default: Option<&'static str>,
 }
 
 /// Specification of a subcommand.
 #[derive(Clone, Debug)]
 pub struct CmdSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Options and switches the subcommand accepts.
     pub opts: Vec<OptSpec>,
+    /// Positional arguments as (name, help) pairs, in order.
     pub positional: Vec<(&'static str, &'static str)>,
 }
 
 /// Top-level application spec.
 #[derive(Clone, Debug)]
 pub struct AppSpec {
+    /// Binary name, used in usage strings.
     pub name: &'static str,
+    /// One-line application description.
     pub about: &'static str,
+    /// Version reported by `--version`.
     pub version: &'static str,
+    /// Every subcommand, in help order.
     pub commands: Vec<CmdSpec>,
 }
 
 /// Parsed invocation.
 #[derive(Clone, Debug, Default)]
 pub struct Parsed {
+    /// The matched subcommand name.
     pub command: String,
+    /// Valued options (defaults already applied).
     pub opts: BTreeMap<String, String>,
+    /// Boolean switches present on the command line.
     pub switches: Vec<String>,
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -204,6 +219,7 @@ pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>
     OptSpec { name, help, takes_value: true, default }
 }
 
+/// Shorthand for a boolean switch spec.
 pub fn switch(name: &'static str, help: &'static str) -> OptSpec {
     OptSpec { name, help, takes_value: false, default: None }
 }

@@ -5,6 +5,29 @@
 //! cache) — not by content hash, so runs from different machines or
 //! different code versions line up. Drift is relative:
 //! `|a − b| / max(|a|, |b|)`, 0 when both sides are 0.
+//!
+//! ```
+//! use dlroofline::coordinator::{diff_manifests, RunManifest};
+//! use dlroofline::util::json::Json;
+//!
+//! let doc = r#"{
+//!   "schema_version": 1, "generator": "dlroofline 0.1.0",
+//!   "machine": {}, "machine_fingerprint": "00", "full_size": false,
+//!   "batch": null, "experiments": ["f6"], "specials": 0,
+//!   "cells_skipped": 0,
+//!   "cells": [{ "experiment": "f6", "kernel": "inner_product",
+//!     "scenario": "single-thread", "cache": "cold", "key": "ab",
+//!     "reused": false, "threads": 1, "work_flops": 100,
+//!     "traffic_bytes": 50, "runtime_seconds": 0.5 }],
+//!   "files": []
+//! }"#;
+//! let a = RunManifest::from_json(&Json::parse(doc).unwrap()).unwrap();
+//! let mut b = a.clone();
+//! b.cells[0].runtime_seconds *= 1.10; // a 10% runtime regression
+//! let report = diff_manifests(&a, &b);
+//! assert!(report.exceeds(0.05), "10% R drift trips a 5% gate");
+//! assert!(!report.exceeds(0.15), "…but not a 15% gate");
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -15,9 +38,13 @@ use super::manifest::{CellRecord, RunManifest};
 /// One metric's values on both sides and the relative drift.
 #[derive(Clone, Debug)]
 pub struct MetricDrift {
+    /// Metric name (`W`, `Q`, `R`, or a per-level AI).
     pub metric: &'static str,
+    /// Value in the first manifest.
     pub a: f64,
+    /// Value in the second manifest.
     pub b: f64,
+    /// Relative drift `|a - b| / max(|a|, |b|)` (0 when both are 0).
     pub rel: f64,
 }
 

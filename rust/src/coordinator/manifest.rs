@@ -30,14 +30,19 @@ pub const SCHEMA_VERSION: u64 = 2;
 /// per-memory-level traffic breakdown.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellRecord {
+    /// Owning experiment id.
     pub experiment: String,
+    /// Kernel display name.
     pub kernel: String,
+    /// Scenario preset name.
     pub scenario: String,
+    /// Cache-state label (`cold` / `warm`).
     pub cache: String,
     /// Content hash (hex) — the memoization key.
     pub key: String,
     /// Served from the memo table rather than re-simulated.
     pub reused: bool,
+    /// Threads the cell ran with.
     pub threads: usize,
     /// Work W (FLOPs, PMU-derived).
     pub work_flops: u64,
@@ -51,6 +56,7 @@ pub struct CellRecord {
 }
 
 impl CellRecord {
+    /// Record an executed plan cell.
     pub fn from_executed(cell: &ExecutedCell) -> CellRecord {
         CellRecord {
             experiment: cell.plan.experiment.clone(),
@@ -131,6 +137,7 @@ fn levels_from_json(v: &Json) -> Result<LevelBytes> {
 pub struct FileRecord {
     /// Path relative to the run's output directory.
     pub path: String,
+    /// File size in bytes.
     pub bytes: u64,
     /// `fnv1a64:<hex>` of the file contents.
     pub checksum: String,
@@ -166,14 +173,18 @@ impl FileRecord {
 /// The versioned description of one run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunManifest {
+    /// Manifest schema version (see [`SCHEMA_VERSION`]).
     pub schema_version: u64,
+    /// `dlroofline <version>` that wrote the manifest.
     pub generator: String,
     /// Machine fingerprint document (see
     /// [`crate::sim::machine::MachineConfig::fingerprint_json`]).
     pub machine: Json,
     /// Hex hash of the machine document.
     pub machine_fingerprint: String,
+    /// Whether the paper's full tensor sizes were used.
     pub full_size: bool,
+    /// Batch override, if any.
     pub batch: Option<usize>,
     /// Experiment ids in run order.
     pub experiments: Vec<String>,
@@ -181,7 +192,9 @@ pub struct RunManifest {
     pub specials: usize,
     /// Cells the machine could not express (not listed in `cells`).
     pub cells_skipped: usize,
+    /// Every executed cell with its W/Q/R results.
     pub cells: Vec<CellRecord>,
+    /// Checksums of every report file the run wrote.
     pub files: Vec<FileRecord>,
 }
 
@@ -227,6 +240,7 @@ impl RunManifest {
         }
     }
 
+    /// Serialise to the manifest JSON document.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("schema_version", Json::num(self.schema_version as f64)),
@@ -252,6 +266,7 @@ impl RunManifest {
         ])
     }
 
+    /// Parse and validate a manifest document (schema 1..=2).
     pub fn from_json(v: &Json) -> Result<RunManifest> {
         let version = v.expect("schema_version")?.as_f64()? as u64;
         if version == 0 || version > SCHEMA_VERSION {

@@ -14,6 +14,25 @@
 //! `remote-only` on one socket) are skipped at expansion — counted, not
 //! fatal — mirroring the skip in
 //! [`crate::harness::spec::ExperimentSpec::run_with`].
+//!
+//! With a persistent [`CellStore`] ([`execute_with_store`]), the memo
+//! table additionally survives the process: unique cells are resolved
+//! against the on-disk store first, so a repeated sweep only simulates
+//! cells the plan edit actually changed.
+//!
+//! ```
+//! use dlroofline::coordinator::plan;
+//! use dlroofline::harness::experiments::ExperimentParams;
+//!
+//! // Expanding a plan builds kernels and hashes cells but simulates
+//! // nothing — `dlroofline plan` is this call plus a table.
+//! let params = ExperimentParams { batch: Some(1), ..Default::default() };
+//! let e = plan::expand(&["f3", "g1"], &params).unwrap();
+//! assert_eq!(e.stats.cells_total, 21);
+//! // f3's three cells reappear inside g1's grid and memoize away.
+//! assert_eq!(e.stats.cells_reused, 3);
+//! assert_eq!(e.stats.cells_simulated, 18);
+//! ```
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -24,6 +43,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::harness::experiments::{ExperimentParams, ExperimentResult};
 use crate::harness::measure::KernelMeasurement;
 use crate::harness::spec::{self, ExperimentSpec, SpecKind};
+
+use super::store::{CellStore, Lookup};
 
 /// A sensible default for `--jobs 0` (auto).
 pub fn default_jobs() -> usize {
@@ -54,9 +75,13 @@ pub struct PlanStats {
 /// Static description of one planned (expressible) cell.
 #[derive(Clone, Debug)]
 pub struct CellPlan {
+    /// Owning experiment id.
     pub experiment: String,
+    /// Kernel display name.
     pub kernel: String,
+    /// Scenario preset name.
     pub scenario: String,
+    /// Cache-state label (`cold` / `warm`).
     pub cache: String,
     /// Content hash — render with [`crate::util::hash::hex64`] at
     /// display/manifest boundaries.
@@ -68,17 +93,21 @@ pub struct CellPlan {
 /// One planned cell with its (possibly memoized) measurement.
 #[derive(Clone, Debug)]
 pub struct ExecutedCell {
+    /// The planned cell's identity.
     pub plan: CellPlan,
+    /// The cell's (possibly memoized) measurement.
     pub measurement: KernelMeasurement,
 }
 
 /// The expansion of a list of experiment ids against fixed params.
 pub struct Expansion {
+    /// Resolved experiment specs, in request order.
     pub specs: Vec<ExperimentSpec>,
     /// Every expressible planned cell, in deterministic plan order.
     pub cells: Vec<CellPlan>,
     /// Unique cells to simulate: (content hash, representative cell).
     unique: Vec<(u64, spec::Cell)>,
+    /// Counters describing the expansion.
     pub stats: PlanStats,
 }
 
@@ -128,13 +157,59 @@ pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {
     Ok(Expansion { specs, cells, unique, stats })
 }
 
+/// How one unique cell was resolved against the persistent store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellFate {
+    /// Served from a valid on-disk record — not simulated.
+    Hit,
+    /// No record existed — simulated and written back.
+    Miss,
+    /// A record existed but was unusable (corrupt, wrong schema version,
+    /// or identity mismatch) — simulated and overwritten.
+    Stale,
+}
+
+impl CellFate {
+    /// Short display label for `--explain` tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            CellFate::Hit => "hit",
+            CellFate::Miss => "miss",
+            CellFate::Stale => "stale",
+        }
+    }
+}
+
+/// What the persistent cell store contributed to one execution.
+#[derive(Clone, Debug, Default)]
+pub struct StoreUsage {
+    /// Unique cells served from disk instead of simulating.
+    pub hits: usize,
+    /// Unique cells whose on-disk record was unusable.
+    pub stale: usize,
+    /// Unique cells actually simulated this run (misses + stale).
+    pub simulated: usize,
+    /// Per-unique-cell fate, keyed by cell content hash (`--explain`).
+    pub fates: HashMap<u64, CellFate>,
+    /// Cache *writes* (records or index) that failed. Write failures
+    /// never fail the run — a read-only or full cache directory costs
+    /// future hits, not this sweep's results.
+    pub write_errors: usize,
+    /// The first write failure, for surfacing to the user.
+    pub first_write_error: Option<String>,
+}
+
 /// Everything a plan execution produces.
 pub struct PlanOutcome {
     /// One result per requested experiment, in request order.
     pub results: Vec<ExperimentResult>,
     /// Every planned cell with its measurement, in plan order.
     pub cells: Vec<ExecutedCell>,
+    /// Plan-shape statistics (identical between cold- and warm-cache
+    /// executions of the same plan — the manifest records these).
     pub stats: PlanStats,
+    /// Persistent-store accounting, when a store was supplied.
+    pub store: Option<StoreUsage>,
 }
 
 /// Execute a plan: simulate unique cells on `jobs` worker threads
@@ -152,10 +227,92 @@ pub fn execute(
     jobs: usize,
     tolerate_special_failures: bool,
 ) -> Result<PlanOutcome> {
+    execute_with_store(ids, params, jobs, tolerate_special_failures, None)
+}
+
+/// As [`execute`], resolving unique cells against a persistent
+/// [`CellStore`] first: valid records are served from disk (zero
+/// simulation), everything else is simulated and written back, and the
+/// outcome's `store` field reports per-cell hit/miss/stale fates.
+///
+/// The store is *invisible* in the results: a served measurement is
+/// bit-identical to the simulation that produced it
+/// ([`KernelMeasurement::to_json`] round-trips losslessly), so reports
+/// and manifests come out byte-identical whether the cache was cold,
+/// warm, or absent. Served records are additionally identity-checked
+/// (kernel, scenario, cache state) against the plan, so even a content
+/// hash collision cannot substitute the wrong cell.
+pub fn execute_with_store(
+    ids: &[&str],
+    params: &ExperimentParams,
+    jobs: usize,
+    tolerate_special_failures: bool,
+    store: Option<&CellStore>,
+) -> Result<PlanOutcome> {
     let expansion = expand(ids, params)?;
     let jobs = if jobs == 0 { default_jobs() } else { jobs };
 
-    let memo = simulate_unique(&expansion.unique, params, jobs)?;
+    let mut usage = store.map(|_| StoreUsage::default());
+    let memo: HashMap<u64, KernelMeasurement> = if let (Some(st), Some(u)) =
+        (store, usage.as_mut())
+    {
+        // The i-th non-reused planned cell is exactly unique[i] (same
+        // expansion pass), which gives us the display identity to check
+        // served records against.
+        let mut memo = HashMap::with_capacity(expansion.unique.len());
+        let mut to_sim: Vec<(u64, spec::Cell)> = Vec::new();
+        let mut hit_keys: Vec<u64> = Vec::new();
+        let plans = expansion.cells.iter().filter(|c| !c.reused);
+        for ((key, cell), plan) in expansion.unique.iter().zip(plans) {
+            let fate = match st.lookup(*key) {
+                Lookup::Hit(m)
+                    if m.kernel == plan.kernel
+                        && m.scenario == plan.scenario
+                        && m.cache_state.label() == plan.cache =>
+                {
+                    memo.insert(*key, *m);
+                    u.hits += 1;
+                    hit_keys.push(*key);
+                    CellFate::Hit
+                }
+                // A parseable record whose identity disagrees with the
+                // plan: hash collision or a foreign file — never serve it.
+                Lookup::Hit(_) | Lookup::Stale(_) => {
+                    u.stale += 1;
+                    to_sim.push((*key, cell.clone()));
+                    CellFate::Stale
+                }
+                Lookup::Miss => {
+                    to_sim.push((*key, cell.clone()));
+                    CellFate::Miss
+                }
+            };
+            u.fates.insert(*key, fate);
+        }
+        u.simulated = to_sim.len();
+        let simulated = simulate_unique(&to_sim, params, jobs)?;
+        // Cache writes are best-effort: a read-only or full cache
+        // directory must not fail a sweep whose simulations succeeded.
+        let note_write_error = |u: &mut StoreUsage, e: anyhow::Error| {
+            u.write_errors += 1;
+            if u.first_write_error.is_none() {
+                u.first_write_error = Some(format!("{e:#}"));
+            }
+        };
+        for (key, m) in &simulated {
+            if let Err(e) = st.insert(*key, m) {
+                note_write_error(u, e);
+            }
+        }
+        st.mark_hits(&hit_keys);
+        if let Err(e) = st.save_index() {
+            note_write_error(u, e);
+        }
+        memo.extend(simulated);
+        memo
+    } else {
+        simulate_unique(&expansion.unique, params, jobs)?
+    };
 
     // Assemble experiments in request order from the memo table. The
     // grid walk in `run_with` visits cells in exactly the order `expand`
@@ -215,7 +372,7 @@ pub fn execute(
         })
         .collect();
 
-    Ok(PlanOutcome { results, cells, stats: expansion.stats })
+    Ok(PlanOutcome { results, cells, stats: expansion.stats, store: usage })
 }
 
 /// Simulate each unique cell exactly once, in parallel.
@@ -340,6 +497,48 @@ mod tests {
                 a.plan.key
             );
         }
+    }
+
+    #[test]
+    fn store_backed_execution_is_invisible_and_incremental() {
+        let dir = crate::testutil::TempDir::new("plan-store");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        let plain = execute(&["f6"], &params, 1, false).unwrap();
+        assert!(plain.store.is_none());
+
+        // Cold store: everything simulates, records are written back.
+        let cold = execute_with_store(&["f6"], &params, 1, false, Some(&store)).unwrap();
+        let u = cold.store.as_ref().unwrap();
+        assert_eq!((u.hits, u.stale, u.simulated), (0, 0, 2));
+
+        // Warm store: zero simulations, and the outcome is bit-identical
+        // to the storeless run — the cache is invisible in the results.
+        let warm = execute_with_store(&["f6"], &params, 1, false, Some(&store)).unwrap();
+        let u = warm.store.as_ref().unwrap();
+        assert_eq!((u.hits, u.stale, u.simulated), (2, 0, 0));
+        assert!(u.fates.values().all(|f| *f == CellFate::Hit));
+        for (a, b) in plain.cells.iter().zip(warm.cells.iter()) {
+            assert_eq!(a.plan.key, b.plan.key);
+            assert_eq!(a.measurement.measured, b.measurement.measured);
+            assert_eq!(
+                a.measurement.runtime.seconds.to_bits(),
+                b.measurement.runtime.seconds.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn plan_edit_resimulates_only_changed_cells() {
+        let dir = crate::testutil::TempDir::new("plan-edit");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        execute_with_store(&["f6"], &params, 1, false, Some(&store)).unwrap();
+        // Adding f3 to the plan re-simulates exactly f3's three cells;
+        // f6's two come from disk.
+        let edited = execute_with_store(&["f6", "f3"], &params, 2, false, Some(&store)).unwrap();
+        let u = edited.store.as_ref().unwrap();
+        assert_eq!((u.hits, u.stale, u.simulated), (2, 0, 3));
     }
 
     #[test]

@@ -30,6 +30,7 @@ impl Default for KernelRegistry {
 }
 
 impl KernelRegistry {
+    /// Registry with no kernels (for tests and custom setups).
     pub fn empty() -> KernelRegistry {
         KernelRegistry { factories: BTreeMap::new() }
     }
@@ -79,6 +80,7 @@ impl KernelRegistry {
         Ok(f(scale))
     }
 
+    /// Registered kernel names, sorted.
     pub fn names(&self) -> Vec<&str> {
         self.factories.keys().map(|s| s.as_str()).collect()
     }

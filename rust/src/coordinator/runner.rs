@@ -14,13 +14,17 @@ use crate::roofline::svg::svg_plot;
 use crate::util::fsutil::write_atomic;
 
 use super::manifest::RunManifest;
-use super::plan::{self, PlanStats};
+use super::plan::{self, CellPlan, PlanStats, StoreUsage};
+use super::store::CellStore;
 
 /// Paths written for one experiment.
 #[derive(Clone, Debug, Default)]
 pub struct RunOutput {
+    /// The markdown report.
     pub markdown: Option<PathBuf>,
+    /// SVG roofline plots (with `--svg`).
     pub svgs: Vec<PathBuf>,
+    /// Per-group CSV files.
     pub csvs: Vec<PathBuf>,
     /// The versioned `*.run.json` manifest for the run.
     pub manifest: Option<PathBuf>,
@@ -29,10 +33,17 @@ pub struct RunOutput {
 /// Everything a multi-experiment sweep wrote.
 #[derive(Clone, Debug, Default)]
 pub struct SweepOutput {
+    /// Per-experiment report files, in request order.
     pub outputs: Vec<RunOutput>,
     /// The sweep-wide `run.json`.
     pub manifest: Option<PathBuf>,
+    /// Plan-shape statistics (cells, memoization, skips).
     pub stats: PlanStats,
+    /// Persistent cell-cache accounting, when `--cache-dir` was active.
+    pub store: Option<StoreUsage>,
+    /// The executed plan's cell identities, in plan order — what
+    /// `--explain` joins cache fates against (avoids re-expanding).
+    pub plan_cells: Vec<CellPlan>,
 }
 
 /// Render the complete textual report for an experiment result.
@@ -126,15 +137,18 @@ pub fn run_and_write(
 pub struct GridEntry {
     /// Machine name (directory-name-sanitised, uniquified by fingerprint).
     pub machine: String,
+    /// The machine's full fingerprint hash.
     pub fingerprint: String,
     /// Subdirectory the machine's reports and `run.json` were written to.
     pub dir: PathBuf,
+    /// The machine's sweep output.
     pub output: SweepOutput,
 }
 
 /// Everything a multi-machine grid sweep wrote.
 #[derive(Clone, Debug, Default)]
 pub struct GridOutput {
+    /// One entry per deduplicated machine, in request order.
     pub entries: Vec<GridEntry>,
     /// The grid index (`machine_grid.json`) mapping machines to their
     /// per-machine manifests.
@@ -177,6 +191,22 @@ pub fn sweep_grid_and_write(
     with_svg: bool,
     jobs: usize,
 ) -> Result<GridOutput> {
+    sweep_grid_and_write_cached(ids, base, machines, out_dir, with_svg, jobs, None)
+}
+
+/// As [`sweep_grid_and_write`], resolving every machine's cells against
+/// one shared persistent [`CellStore`]. Cell hashes key on the machine
+/// fingerprint, so a single cache directory serves the whole grid
+/// without mixing machines.
+pub fn sweep_grid_and_write_cached(
+    ids: &[&str],
+    base: &ExperimentParams,
+    machines: &[crate::sim::machine::MachineConfig],
+    out_dir: &Path,
+    with_svg: bool,
+    jobs: usize,
+    store: Option<&CellStore>,
+) -> Result<GridOutput> {
     use crate::util::json::Json;
     anyhow::ensure!(!machines.is_empty(), "grid sweep needs at least one machine");
     let (kept, skipped) = dedupe_machines(machines);
@@ -190,7 +220,7 @@ pub fn sweep_grid_and_write(
             .collect();
         let dir = out_dir.join(format!("{safe}-{}", &fingerprint[..8]));
         let params = ExperimentParams { machine: machine.clone(), ..base.clone() };
-        let (_, output) = sweep_and_write(ids, &params, &dir, with_svg, jobs)?;
+        let (_, output) = sweep_and_write_cached(ids, &params, &dir, with_svg, jobs, store)?;
         grid.entries.push(GridEntry {
             machine: safe,
             fingerprint,
@@ -237,10 +267,28 @@ pub fn sweep_and_write(
     with_svg: bool,
     jobs: usize,
 ) -> Result<(Vec<ExperimentResult>, SweepOutput)> {
-    let outcome = plan::execute(ids, params, jobs, true)?;
+    sweep_and_write_cached(ids, params, out_dir, with_svg, jobs, None)
+}
+
+/// As [`sweep_and_write`], resolving cells against a persistent
+/// [`CellStore`] first (`sweep --cache-dir`). A warm store executes zero
+/// simulations and still writes byte-identical reports and `run.json` —
+/// the manifest deliberately records plan-shape statistics, not cache
+/// fates, so cached and uncached runs of the same plan cannot diverge.
+pub fn sweep_and_write_cached(
+    ids: &[&str],
+    params: &ExperimentParams,
+    out_dir: &Path,
+    with_svg: bool,
+    jobs: usize,
+    store: Option<&CellStore>,
+) -> Result<(Vec<ExperimentResult>, SweepOutput)> {
+    let outcome = plan::execute_with_store(ids, params, jobs, true, store)?;
     let mut manifest = RunManifest::new(params, ids, &outcome.cells, &outcome.stats);
     let mut sweep = SweepOutput {
         stats: outcome.stats,
+        store: outcome.store,
+        plan_cells: outcome.cells.iter().map(|c| c.plan.clone()).collect(),
         ..Default::default()
     };
     for result in &outcome.results {

@@ -1,0 +1,610 @@
+//! Persistent, content-addressed cell-result store — the plan executor's
+//! memo table, spilled to disk so it survives the process.
+//!
+//! PR 1's executor memoizes cells *within* a sweep; this store memoizes
+//! them *across* sweeps and processes: every simulated cell is written as
+//! a versioned JSON record keyed by the cell's FNV content hash (machine
+//! fingerprint × kernel identity × scenario × cache state — see
+//! [`crate::harness::spec::Cell`]), and the next sweep over an unchanged
+//! plan loads every record instead of simulating. Because the stored
+//! [`KernelMeasurement`] round-trips bit-identically
+//! ([`KernelMeasurement::to_json`]), a warm sweep emits byte-identical
+//! reports and `run.json` manifests — the cache is invisible in the
+//! output, only in the wall clock.
+//!
+//! ## Layout
+//!
+//! ```text
+//! <cache-dir>/
+//!   index.json            schema version, creation time, per-key hit counts
+//!   cells/<key16>.json    one versioned record per cell (atomic tmp+rename)
+//! ```
+//!
+//! ## Staleness rules
+//!
+//! A record is **stale** — treated as a miss, re-simulated and
+//! overwritten — when any of: its file fails to parse (truncation,
+//! corruption), its `schema_version` differs from
+//! [`STORE_SCHEMA_VERSION`], its embedded `key` disagrees with its file
+//! name, or its measurement payload fails validation. The executor
+//! additionally re-checks kernel/scenario/cache identity against the
+//! plan, so even an FNV collision cannot serve the wrong cell.
+//!
+//! Entries are written with [`write_atomic_unique`], so any number of
+//! concurrent writers (threads of one `--jobs N` sweep, or independent
+//! processes sharing a cache directory) can race on the same key: every
+//! observable file state is some writer's complete record, and identical
+//! keys hold identical content by construction.
+//!
+//! ```
+//! use dlroofline::coordinator::store::{CellStore, Lookup};
+//! let dir = std::env::temp_dir().join(format!("dlroofline-doc-store-{}", std::process::id()));
+//! let store = CellStore::open(&dir).unwrap();
+//! // A fresh store misses every key and holds no entries.
+//! assert!(matches!(store.lookup(0xdead_beef), Lookup::Miss));
+//! assert_eq!(store.stats().unwrap().entries, 0);
+//! std::fs::remove_dir_all(&dir).unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::harness::measure::KernelMeasurement;
+use crate::util::fsutil::write_atomic_unique;
+use crate::util::hash::hex64;
+use crate::util::json::Json;
+
+/// Current cell-record schema version. Records written by a different
+/// version are ignored (stale) and overwritten on the next simulation.
+pub const STORE_SCHEMA_VERSION: u64 = 1;
+
+/// Environment variable consulted when no `--cache-dir` flag is given.
+pub const CACHE_ENV: &str = "DLROOFLINE_CACHE";
+
+/// Outcome of probing the store for one cell key.
+#[derive(Debug)]
+pub enum Lookup {
+    /// A valid record was found; the boxed measurement is bit-identical
+    /// to the simulation that produced it.
+    Hit(Box<KernelMeasurement>),
+    /// No record on disk for this key.
+    Miss,
+    /// A record exists but cannot be used; the string says why
+    /// (corruption, schema mismatch, key mismatch).
+    Stale(String),
+}
+
+/// Aggregate description of a store directory (`dlroofline cache stats`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StoreStats {
+    /// Valid cell records on disk.
+    pub entries: usize,
+    /// Records that would be ignored (unparsable or wrong version).
+    pub stale: usize,
+    /// Total bytes across all cell records.
+    pub bytes: u64,
+    /// Sum of recorded hit counts across all keys.
+    pub hits_recorded: u64,
+    /// Unix timestamp the index was first created (0 if unknown).
+    pub created_unix: u64,
+}
+
+/// What a [`CellStore::gc`] pass did.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GcReport {
+    /// Stale records removed (always pruned, regardless of the cap).
+    pub removed_stale: usize,
+    /// Valid records evicted to respect `max_entries` (fewest hits
+    /// first, key order breaking ties).
+    pub evicted: usize,
+    /// Valid records kept.
+    pub kept: usize,
+}
+
+/// Per-key hit counts plus index metadata, guarded for thread safety.
+struct IndexState {
+    created_unix: u64,
+    hits: BTreeMap<String, u64>,
+}
+
+/// A disk-backed cell-result store rooted at one directory.
+///
+/// All methods take `&self`; the hit-count index is internally
+/// synchronised, and entry writes are atomic and collision-free, so a
+/// store may be shared freely across the executor's threads.
+pub struct CellStore {
+    root: PathBuf,
+    index: Mutex<IndexState>,
+}
+
+impl CellStore {
+    /// Open (creating if necessary) a store at `dir`. An unreadable or
+    /// corrupt `index.json` is replaced rather than reported — losing
+    /// hit counts only weakens `gc` heuristics, never correctness.
+    pub fn open(dir: &Path) -> Result<CellStore> {
+        std::fs::create_dir_all(dir.join("cells"))
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let index_path = dir.join("index.json");
+        let index = std::fs::read_to_string(&index_path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| Self::index_from_json(&doc))
+            .unwrap_or_else(|| IndexState {
+                created_unix: now_unix(),
+                hits: BTreeMap::new(),
+            });
+        let store = CellStore {
+            root: dir.to_path_buf(),
+            index: Mutex::new(index),
+        };
+        if !index_path.exists() {
+            // Best-effort: a read-only pre-seeded cache without an index
+            // still serves hits; only gc heuristics lose out.
+            let _ = store.save_index();
+        }
+        Ok(store)
+    }
+
+    /// Resolve the cache directory from an explicit flag value, falling
+    /// back to the [`CACHE_ENV`] environment variable. `None` means
+    /// caching is disabled.
+    pub fn resolve_dir(flag: Option<&str>) -> Option<PathBuf> {
+        match flag {
+            Some(dir) if !dir.is_empty() => Some(PathBuf::from(dir)),
+            _ => std::env::var(CACHE_ENV).ok().filter(|s| !s.is_empty()).map(PathBuf::from),
+        }
+    }
+
+    /// The directory this store is rooted at.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_path(&self, key: u64) -> PathBuf {
+        self.root.join("cells").join(format!("{}.json", hex64(key)))
+    }
+
+    /// Probe the store for `key`. Never fails: every unusable state maps
+    /// to [`Lookup::Miss`] or [`Lookup::Stale`] so the caller can always
+    /// fall back to simulation.
+    pub fn lookup(&self, key: u64) -> Lookup {
+        let path = self.entry_path(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Lookup::Miss,
+            Err(e) => return Lookup::Stale(format!("unreadable: {e}")),
+        };
+        let doc = match Json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => return Lookup::Stale(format!("corrupt record: {e}")),
+        };
+        match Self::record_from_json(&doc, key) {
+            Ok(m) => Lookup::Hit(Box::new(m)),
+            Err(e) => Lookup::Stale(format!("{e:#}")),
+        }
+    }
+
+    fn record_from_json(doc: &Json, key: u64) -> Result<KernelMeasurement> {
+        let version = doc.expect("schema_version")?.as_usize()? as u64;
+        if version != STORE_SCHEMA_VERSION {
+            anyhow::bail!(
+                "record schema version {version} (this build writes {STORE_SCHEMA_VERSION})"
+            );
+        }
+        let recorded = doc.expect("key")?.as_str()?;
+        if recorded != hex64(key) {
+            anyhow::bail!("record key {recorded} does not match file name {}", hex64(key));
+        }
+        KernelMeasurement::from_json(doc.expect("measurement")?)
+    }
+
+    /// Write `measurement` as the record for `key` (atomic; safe against
+    /// concurrent writers of the same key).
+    pub fn insert(&self, key: u64, measurement: &KernelMeasurement) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("schema_version", Json::num(STORE_SCHEMA_VERSION as f64)),
+            ("key", Json::str(hex64(key))),
+            ("measurement", measurement.to_json()),
+        ]);
+        write_atomic_unique(&self.entry_path(key), &doc.to_string_pretty())
+    }
+
+    /// Record one served hit for each key (in memory; call
+    /// [`CellStore::save_index`] to persist).
+    pub fn mark_hits(&self, keys: &[u64]) {
+        let mut index = self.index.lock().unwrap();
+        for &key in keys {
+            *index.hits.entry(hex64(key)).or_insert(0) += 1;
+        }
+    }
+
+    /// Persist the hit-count index, merging with whatever is on disk
+    /// (another process may have saved since we loaded): per key, the
+    /// larger count wins. Best-effort by design — hit counts only feed
+    /// `gc` eviction order.
+    pub fn save_index(&self) -> Result<()> {
+        self.save_index_inner(true)
+    }
+
+    /// Persist the index *without* the disk merge — what `clear`/`gc`
+    /// need, since merging would resurrect the very rows they purged.
+    fn save_index_replacing(&self) -> Result<()> {
+        self.save_index_inner(false)
+    }
+
+    fn save_index_inner(&self, merge: bool) -> Result<()> {
+        let index_path = self.root.join("index.json");
+        let mut state = self.index.lock().unwrap();
+        if merge {
+            if let Some(disk) = std::fs::read_to_string(&index_path)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .and_then(|doc| Self::index_from_json(&doc))
+            {
+                for (key, count) in disk.hits {
+                    let mine = state.hits.entry(key).or_insert(0);
+                    *mine = (*mine).max(count);
+                }
+                if disk.created_unix != 0 {
+                    state.created_unix = state.created_unix.min(disk.created_unix);
+                }
+            }
+        }
+        let doc = Json::obj(vec![
+            ("schema_version", Json::num(STORE_SCHEMA_VERSION as f64)),
+            ("created_unix", Json::num(state.created_unix as f64)),
+            (
+                "hits",
+                Json::Obj(
+                    state
+                        .hits
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        write_atomic_unique(&index_path, &doc.to_string_pretty())
+    }
+
+    fn index_from_json(doc: &Json) -> Option<IndexState> {
+        let version = doc.get("schema_version")?.as_usize().ok()? as u64;
+        if version != STORE_SCHEMA_VERSION {
+            return None;
+        }
+        let mut hits = BTreeMap::new();
+        for (k, v) in doc.get("hits")?.as_obj().ok()? {
+            hits.insert(k.clone(), v.as_usize().ok()? as u64);
+        }
+        Some(IndexState {
+            created_unix: doc.get("created_unix")?.as_usize().ok()? as u64,
+            hits,
+        })
+    }
+
+    /// Every record file currently in the store, as (key hex, path,
+    /// bytes, valid) — `valid` applies the same rules as
+    /// [`CellStore::lookup`].
+    fn scan(&self) -> Result<Vec<(String, PathBuf, u64, bool)>> {
+        let cells = self.root.join("cells");
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&cells)
+            .with_context(|| format!("reading cache dir {}", cells.display()))?
+        {
+            let entry = entry?;
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().to_string();
+            let Some(stem) = name.strip_suffix(".json") else {
+                continue; // in-flight tmp files and strangers are not records
+            };
+            let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+            let valid = u64::from_str_radix(stem, 16)
+                .ok()
+                .map(|key| matches!(self.lookup(key), Lookup::Hit(_)))
+                .unwrap_or(false);
+            out.push((stem.to_string(), path, bytes, valid));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Summarise the store (`dlroofline cache stats`).
+    pub fn stats(&self) -> Result<StoreStats> {
+        let scan = self.scan()?;
+        let index = self.index.lock().unwrap();
+        Ok(StoreStats {
+            entries: scan.iter().filter(|e| e.3).count(),
+            stale: scan.iter().filter(|e| !e.3).count(),
+            bytes: scan.iter().map(|e| e.2).sum(),
+            hits_recorded: index.hits.values().sum(),
+            created_unix: index.created_unix,
+        })
+    }
+
+    /// Remove every record and reset the index. Returns how many record
+    /// files were deleted.
+    pub fn clear(&self) -> Result<usize> {
+        let scan = self.scan()?;
+        let removed = scan.len();
+        for (_, path, _, _) in scan {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing {}", path.display()))?;
+        }
+        {
+            let mut index = self.index.lock().unwrap();
+            index.hits.clear();
+        }
+        self.save_index_replacing()?;
+        Ok(removed)
+    }
+
+    /// Prune the store: stale records always go; then, if more than
+    /// `max_entries` valid records remain, evict the least-hit ones
+    /// (ties broken by key order, so a gc pass is deterministic for a
+    /// given index).
+    pub fn gc(&self, max_entries: usize) -> Result<GcReport> {
+        let scan = self.scan()?;
+        let mut report = GcReport::default();
+        let mut valid: Vec<(String, PathBuf)> = Vec::new();
+        for (key, path, _, ok) in scan {
+            if ok {
+                valid.push((key, path));
+            } else {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale {}", path.display()))?;
+                report.removed_stale += 1;
+            }
+        }
+        let mut index = self.index.lock().unwrap();
+        // Fewest hits first; the scan's key order breaks ties.
+        valid.sort_by_key(|(key, _)| index.hits.get(key).copied().unwrap_or(0));
+        let excess = valid.len().saturating_sub(max_entries);
+        for (key, path) in valid.drain(..excess) {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("evicting {}", path.display()))?;
+            index.hits.remove(&key);
+            report.evicted += 1;
+        }
+        report.kept = valid.len();
+        // Drop index rows for records that no longer exist (stale ones
+        // removed above, or entries deleted out-of-band).
+        let live: std::collections::BTreeSet<String> =
+            valid.into_iter().map(|(k, _)| k).collect();
+        index.hits.retain(|k, _| live.contains(k));
+        drop(index);
+        self.save_index_replacing()?;
+        Ok(report)
+    }
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::experiments::ExperimentParams;
+    use crate::harness::spec;
+    use crate::testutil::TempDir;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    /// One real simulated cell (f6 cold) and its key.
+    fn one_cell() -> (u64, KernelMeasurement) {
+        let params = quick();
+        let cells = spec::find("f6").unwrap().cells();
+        let cell = &cells[0];
+        (cell.key(&params), cell.simulate(&params).unwrap())
+    }
+
+    #[test]
+    fn insert_then_lookup_hits() {
+        let dir = TempDir::new("store-hit");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        assert!(matches!(store.lookup(key), Lookup::Miss));
+        store.insert(key, &meas).unwrap();
+        match store.lookup(key) {
+            Lookup::Hit(back) => {
+                assert_eq!(back.kernel, meas.kernel);
+                assert_eq!(back.measured, meas.measured);
+                assert_eq!(back.runtime.seconds.to_bits(), meas.runtime.seconds.to_bits());
+            }
+            other => panic!("expected hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_record_is_stale() {
+        let dir = TempDir::new("store-trunc");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        store.insert(key, &meas).unwrap();
+        let path = store.entry_path(key);
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &body[..body.len() / 2]).unwrap();
+        assert!(matches!(store.lookup(key), Lookup::Stale(_)));
+    }
+
+    #[test]
+    fn version_mismatch_is_stale() {
+        let dir = TempDir::new("store-ver");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        store.insert(key, &meas).unwrap();
+        let path = store.entry_path(key);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(mut map) = doc {
+            map.insert("schema_version".into(), Json::num(99.0));
+            std::fs::write(&path, Json::Obj(map).to_string_pretty()).unwrap();
+        }
+        match store.lookup(key) {
+            Lookup::Stale(reason) => assert!(reason.contains("schema version 99"), "{reason}"),
+            other => panic!("expected stale, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn key_mismatch_is_stale() {
+        // A record copied to the wrong file name must not be served.
+        let dir = TempDir::new("store-keymix");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        store.insert(key, &meas).unwrap();
+        std::fs::copy(store.entry_path(key), store.entry_path(key ^ 1)).unwrap();
+        assert!(matches!(store.lookup(key ^ 1), Lookup::Stale(_)));
+    }
+
+    #[test]
+    fn stats_clear_and_gc() {
+        let dir = TempDir::new("store-gc");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        for i in 0..4u64 {
+            store.insert(key.wrapping_add(i), &meas).unwrap();
+        }
+        // Corrupt two of the four records by truncation → stale.
+        for i in 1..3u64 {
+            let path = store.entry_path(key.wrapping_add(i));
+            let body = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, &body[..20]).unwrap();
+        }
+        let s = store.stats().unwrap();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.stale, 2);
+        assert!(s.bytes > 0);
+
+        // gc removes the stale records and honours the cap.
+        let report = store.gc(10).unwrap();
+        assert_eq!(report.removed_stale, 2);
+        assert_eq!(report.kept, 2);
+        assert_eq!(report.evicted, 0);
+        assert_eq!(store.stats().unwrap().stale, 0);
+
+        assert_eq!(store.clear().unwrap(), 2);
+        let cleared = store.stats().unwrap();
+        assert_eq!(cleared.entries, 0);
+        assert_eq!(cleared.stale, 0);
+        assert_eq!(cleared.hits_recorded, 0);
+    }
+
+    #[test]
+    fn gc_evicts_fewest_hits_first() {
+        let dir = TempDir::new("store-evict");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        let cells = spec::find("f6").unwrap().cells();
+        let keys: Vec<u64> = cells.iter().map(|c| c.key(&params)).collect();
+        for (cell, &key) in cells.iter().zip(&keys) {
+            store.insert(key, &cell.simulate(&params).unwrap()).unwrap();
+        }
+        store.mark_hits(&[keys[1], keys[1], keys[0]]);
+        let report = store.gc(1).unwrap();
+        assert_eq!(report.evicted, 1);
+        assert!(matches!(store.lookup(keys[1]), Lookup::Hit(_)), "most-hit key must survive");
+        assert!(matches!(store.lookup(keys[0]), Lookup::Miss));
+    }
+
+    #[test]
+    fn index_survives_reopen_and_merges() {
+        let dir = TempDir::new("store-index");
+        let (key, _) = one_cell();
+        {
+            let store = CellStore::open(dir.path()).unwrap();
+            store.mark_hits(&[key, key]);
+            store.save_index().unwrap();
+        }
+        let store = CellStore::open(dir.path()).unwrap();
+        assert_eq!(store.stats().unwrap().hits_recorded, 2);
+        // Merging keeps the larger per-key count.
+        store.mark_hits(&[key]);
+        store.save_index().unwrap();
+        let again = CellStore::open(dir.path()).unwrap();
+        assert_eq!(again.stats().unwrap().hits_recorded, 3);
+    }
+
+    #[test]
+    fn clear_and_gc_purge_the_persisted_index() {
+        // clear/gc must not let the disk-merge resurrect purged rows:
+        // a reopened store sees the purge, not ghost hit counts.
+        let dir = TempDir::new("store-purge");
+        let (key, meas) = one_cell();
+        {
+            let store = CellStore::open(dir.path()).unwrap();
+            store.insert(key, &meas).unwrap();
+            store.mark_hits(&[key, key, key]);
+            store.save_index().unwrap();
+            assert_eq!(store.clear().unwrap(), 1);
+            assert_eq!(store.stats().unwrap().hits_recorded, 0);
+        }
+        let reopened = CellStore::open(dir.path()).unwrap();
+        assert_eq!(
+            reopened.stats().unwrap().hits_recorded,
+            0,
+            "cleared hit counts must stay cleared across reopen"
+        );
+
+        // gc: evicted keys' counts must not come back either.
+        reopened.insert(key, &meas).unwrap();
+        reopened.insert(key ^ 1, &meas).unwrap();
+        // Truncate the second record → stale.
+        let victim = reopened.entry_path(key ^ 1);
+        let body = std::fs::read_to_string(&victim).unwrap();
+        std::fs::write(&victim, &body[..16]).unwrap();
+        reopened.mark_hits(&[key]);
+        reopened.save_index().unwrap();
+        let report = reopened.gc(0).unwrap();
+        assert_eq!(report.removed_stale, 1);
+        assert_eq!(report.evicted, 1);
+        let again = CellStore::open(dir.path()).unwrap();
+        assert_eq!(again.stats().unwrap().hits_recorded, 0, "gc purge must persist");
+    }
+
+    #[test]
+    fn concurrent_inserts_never_clobber() {
+        // The robustness property ISSUE 3 pins: concurrent writers of the
+        // same and different keys leave only complete, valid records.
+        let dir = TempDir::new("store-conc");
+        let store = CellStore::open(dir.path()).unwrap();
+        let (key, meas) = one_cell();
+        std::thread::scope(|scope| {
+            for i in 0..8u64 {
+                let store = &store;
+                let meas = &meas;
+                scope.spawn(move || {
+                    store.insert(key, meas).unwrap(); // everyone races this key
+                    store.insert(key.wrapping_add(1000 + i), meas).unwrap();
+                });
+            }
+        });
+        assert!(matches!(store.lookup(key), Lookup::Hit(_)));
+        // Every record parses as complete JSON (stale-by-key-mismatch is
+        // fine for the shifted keys; torn files would be parse errors).
+        for (stem, path, _, _) in store.scan().unwrap() {
+            let text = std::fs::read_to_string(&path).unwrap();
+            Json::parse(&text).unwrap_or_else(|e| panic!("torn record {stem}: {e}"));
+        }
+        assert!(store.entry_path(key).exists());
+    }
+
+    #[test]
+    fn resolve_dir_prefers_flag() {
+        assert_eq!(
+            CellStore::resolve_dir(Some("/x/y")),
+            Some(PathBuf::from("/x/y"))
+        );
+        // Empty flag value falls through to the environment (not a panic
+        // and not an empty path).
+        let from_env = CellStore::resolve_dir(Some(""));
+        assert_eq!(from_env, CellStore::resolve_dir(None));
+    }
+}

@@ -11,6 +11,8 @@ pub enum CacheState {
 }
 
 impl CacheState {
+    /// Stable lowercase label (`cold` / `warm`), used in reports,
+    /// manifests and cache records.
     pub fn label(self) -> &'static str {
         match self {
             CacheState::Cold => "cold",
@@ -26,6 +28,7 @@ impl CacheState {
         }
     }
 
+    /// Inverse of [`CacheState::label`].
     pub fn parse(s: &str) -> Option<CacheState> {
         match s {
             "cold" => Some(CacheState::Cold),

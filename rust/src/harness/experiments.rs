@@ -33,6 +33,7 @@ use super::spec;
 /// Tunable workload parameters.
 #[derive(Clone, Debug)]
 pub struct ExperimentParams {
+    /// The simulated machine configuration.
     pub machine: MachineConfig,
     /// Use the paper's full tensor sizes (slower simulation).
     pub full_size: bool,
@@ -75,12 +76,16 @@ impl ExperimentParams {
 /// One roofline figure: a roofline + the kernels measured on it.
 #[derive(Clone, Debug)]
 pub struct FigureGroup {
+    /// The scenario's roofline model.
     pub roofline: RooflineModel,
+    /// Every kernel × cache-state measurement in the group.
     pub measurements: Vec<KernelMeasurement>,
+    /// Paper expectations to compare against.
     pub expectations: Vec<PaperExpectation>,
 }
 
 impl FigureGroup {
+    /// The measurements as roofline points.
     pub fn points(&self) -> Vec<KernelPoint> {
         self.measurements.iter().map(|m| m.point()).collect()
     }
@@ -89,12 +94,16 @@ impl FigureGroup {
 /// The result of reproducing one paper artefact.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentResult {
+    /// Experiment id, e.g. `f3`.
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// One group per expressible scenario.
     pub groups: Vec<FigureGroup>,
     /// Free-form markdown tables (characterisation / methodology
     /// experiments that are not roofline plots).
     pub tables: Vec<(String, String)>,
+    /// Free-form notes rendered under the report.
     pub notes: Vec<String>,
 }
 

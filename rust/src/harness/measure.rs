@@ -10,14 +10,19 @@
 //! 6. estimate Runtime R with the timing model;
 //! 7. emit a [`KernelPoint`] for the roofline.
 
+use anyhow::{anyhow, Result};
+
 use crate::kernels::KernelModel;
 use crate::pmu::events::FpEventSet;
 use crate::pmu::perf_iface::{MeasureProtocol, Measured, RunCounters};
 use crate::roofline::point::KernelPoint;
+use crate::sim::cache::CacheStats;
 use crate::sim::hierarchy::TrafficStats;
+use crate::sim::imc::ImcCounters;
 use crate::sim::machine::Machine;
 use crate::sim::numa::Placement;
-use crate::sim::timing::{estimate_phased, RuntimeEstimate};
+use crate::sim::timing::{estimate_phased, Bound, RuntimeEstimate};
+use crate::util::json::Json;
 
 use super::cache_state::CacheState;
 use super::scenario::ScenarioSpec;
@@ -25,10 +30,13 @@ use super::scenario::ScenarioSpec;
 /// Everything we know about one kernel execution.
 #[derive(Clone, Debug)]
 pub struct KernelMeasurement {
+    /// Kernel display name.
     pub kernel: String,
+    /// Kernel description (shape, layout).
     pub description: String,
     /// [`ScenarioSpec`] name the cell was measured under.
     pub scenario: String,
+    /// Cache protocol the cell was measured under.
     pub cache_state: CacheState,
     /// W and Q after overhead subtraction.
     pub measured: Measured,
@@ -63,6 +71,189 @@ impl KernelMeasurement {
     pub fn utilization(&self, peak_flops: f64) -> f64 {
         (self.measured.work_flops as f64 / self.runtime.seconds) / peak_flops
     }
+
+    /// Serialise the complete measurement — W/Q/R, raw FP counters, the
+    /// full [`TrafficStats`] detail and the runtime decomposition — as a
+    /// JSON document that [`KernelMeasurement::from_json`] restores
+    /// bit-identically.
+    ///
+    /// Losslessness is what lets the persistent cell cache
+    /// ([`crate::coordinator::store`]) substitute a stored record for a
+    /// fresh simulation and still emit byte-identical reports and
+    /// manifests: every `f64` is emitted in Rust's shortest round-trip
+    /// decimal form, and every counter is an exact integer (the simulator
+    /// stays far below the 2^53 range where `f64` integers stop being
+    /// exact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::str(self.kernel.as_str())),
+            ("description", Json::str(self.description.as_str())),
+            ("scenario", Json::str(self.scenario.as_str())),
+            ("cache", Json::str(self.cache_state.label())),
+            ("threads", Json::num(self.threads as f64)),
+            (
+                "measured",
+                Json::obj(vec![
+                    ("work_flops", Json::num(self.measured.work_flops as f64)),
+                    ("traffic_bytes", Json::num(self.measured.traffic_bytes as f64)),
+                    ("read_bytes", Json::num(self.measured.read_bytes as f64)),
+                    ("write_bytes", Json::num(self.measured.write_bytes as f64)),
+                    ("fp", fp_to_json(&self.measured.fp)),
+                ]),
+            ),
+            (
+                "runtime",
+                Json::obj(vec![
+                    ("seconds", Json::num(self.runtime.seconds)),
+                    ("compute_seconds", Json::num(self.runtime.compute_seconds)),
+                    ("memory_seconds", Json::num(self.runtime.memory_seconds)),
+                    ("remote_fraction", Json::num(self.runtime.remote_fraction)),
+                    ("bound", Json::str(self.runtime.bound.label())),
+                    ("sync_factor", Json::num(self.runtime.sync_factor)),
+                ]),
+            ),
+            ("traffic", traffic_to_json(&self.traffic)),
+        ])
+    }
+
+    /// Restore a measurement serialised by [`KernelMeasurement::to_json`].
+    pub fn from_json(v: &Json) -> Result<KernelMeasurement> {
+        let cache_label = v.expect("cache")?.as_str()?;
+        let cache_state = CacheState::parse(cache_label)
+            .ok_or_else(|| anyhow!("unknown cache state '{cache_label}'"))?;
+        let m = v.expect("measured")?;
+        let r = v.expect("runtime")?;
+        let bound_label = r.expect("bound")?.as_str()?;
+        Ok(KernelMeasurement {
+            kernel: v.expect("kernel")?.as_str()?.to_string(),
+            description: v.expect("description")?.as_str()?.to_string(),
+            scenario: v.expect("scenario")?.as_str()?.to_string(),
+            cache_state,
+            measured: Measured {
+                work_flops: u64_field(m, "work_flops")?,
+                traffic_bytes: u64_field(m, "traffic_bytes")?,
+                read_bytes: u64_field(m, "read_bytes")?,
+                write_bytes: u64_field(m, "write_bytes")?,
+                fp: fp_from_json(m.expect("fp")?)?,
+            },
+            runtime: RuntimeEstimate {
+                seconds: r.expect("seconds")?.as_f64()?,
+                compute_seconds: r.expect("compute_seconds")?.as_f64()?,
+                memory_seconds: r.expect("memory_seconds")?.as_f64()?,
+                remote_fraction: r.expect("remote_fraction")?.as_f64()?,
+                bound: Bound::parse(bound_label)
+                    .ok_or_else(|| anyhow!("unknown runtime bound '{bound_label}'"))?,
+                sync_factor: r.expect("sync_factor")?.as_f64()?,
+            },
+            traffic: traffic_from_json(v.expect("traffic")?)?,
+            threads: v.expect("threads")?.as_usize()?,
+        })
+    }
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    let x = v.expect(key)?.as_f64()?;
+    if !(x >= 0.0 && x.fract() == 0.0) {
+        anyhow::bail!("field '{key}' must be a non-negative integer, got {x}");
+    }
+    Ok(x as u64)
+}
+
+fn fp_to_json(fp: &FpEventSet) -> Json {
+    Json::obj(vec![
+        ("scalar", Json::num(fp.scalar as f64)),
+        ("p128", Json::num(fp.p128 as f64)),
+        ("p256", Json::num(fp.p256 as f64)),
+        ("p512", Json::num(fp.p512 as f64)),
+    ])
+}
+
+fn fp_from_json(v: &Json) -> Result<FpEventSet> {
+    Ok(FpEventSet {
+        scalar: u64_field(v, "scalar")?,
+        p128: u64_field(v, "p128")?,
+        p256: u64_field(v, "p256")?,
+        p512: u64_field(v, "p512")?,
+    })
+}
+
+fn cache_stats_to_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("evictions", Json::num(s.evictions as f64)),
+        ("writebacks", Json::num(s.writebacks as f64)),
+        ("prefetch_fills", Json::num(s.prefetch_fills as f64)),
+    ])
+}
+
+fn cache_stats_from_json(v: &Json) -> Result<CacheStats> {
+    Ok(CacheStats {
+        hits: u64_field(v, "hits")?,
+        misses: u64_field(v, "misses")?,
+        evictions: u64_field(v, "evictions")?,
+        writebacks: u64_field(v, "writebacks")?,
+        prefetch_fills: u64_field(v, "prefetch_fills")?,
+    })
+}
+
+fn traffic_to_json(t: &TrafficStats) -> Json {
+    Json::obj(vec![
+        ("l1", cache_stats_to_json(&t.l1)),
+        ("l2", cache_stats_to_json(&t.l2)),
+        ("llc", cache_stats_to_json(&t.llc)),
+        ("llc_demand_miss_lines", Json::num(t.llc_demand_miss_lines as f64)),
+        ("hw_prefetch_lines", Json::num(t.hw_prefetch_lines as f64)),
+        ("sw_prefetch_lines", Json::num(t.sw_prefetch_lines as f64)),
+        (
+            "imc",
+            Json::arr(
+                t.imc
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("read_lines", Json::num(c.read_lines as f64)),
+                            ("write_lines", Json::num(c.write_lines as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("local_lines", Json::num(t.local_lines as f64)),
+        ("remote_lines", Json::num(t.remote_lines as f64)),
+        ("local_wb_lines", Json::num(t.local_wb_lines as f64)),
+        ("remote_wb_lines", Json::num(t.remote_wb_lines as f64)),
+        ("nt_store_lines", Json::num(t.nt_store_lines as f64)),
+        ("probes", Json::num(t.probes as f64)),
+    ])
+}
+
+fn traffic_from_json(v: &Json) -> Result<TrafficStats> {
+    Ok(TrafficStats {
+        l1: cache_stats_from_json(v.expect("l1")?)?,
+        l2: cache_stats_from_json(v.expect("l2")?)?,
+        llc: cache_stats_from_json(v.expect("llc")?)?,
+        llc_demand_miss_lines: u64_field(v, "llc_demand_miss_lines")?,
+        hw_prefetch_lines: u64_field(v, "hw_prefetch_lines")?,
+        sw_prefetch_lines: u64_field(v, "sw_prefetch_lines")?,
+        imc: v
+            .expect("imc")?
+            .as_arr()?
+            .iter()
+            .map(|c| {
+                Ok(ImcCounters {
+                    read_lines: u64_field(c, "read_lines")?,
+                    write_lines: u64_field(c, "write_lines")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        local_lines: u64_field(v, "local_lines")?,
+        remote_lines: u64_field(v, "remote_lines")?,
+        local_wb_lines: u64_field(v, "local_wb_lines")?,
+        remote_wb_lines: u64_field(v, "remote_wb_lines")?,
+        nt_store_lines: u64_field(v, "nt_store_lines")?,
+        probes: u64_field(v, "probes")?,
+    })
 }
 
 /// Measure one kernel on the machine under a scenario + cache protocol.
@@ -298,6 +489,96 @@ mod tests {
         // Demand traffic is monotone down the hierarchy.
         let chain = meas.traffic.demand_line_chain();
         assert!(chain[0] >= chain[1] && chain[1] >= chain[2] && chain[2] >= chain[3]);
+    }
+
+    /// Assert two measurements are identical to the bit — the property
+    /// the persistent cell cache depends on for byte-identical manifests.
+    fn assert_bit_identical(a: &KernelMeasurement, b: &KernelMeasurement) {
+        assert_eq!(a.kernel, b.kernel);
+        assert_eq!(a.description, b.description);
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.cache_state, b.cache_state);
+        assert_eq!(a.threads, b.threads);
+        assert_eq!(a.measured, b.measured);
+        assert_eq!(a.runtime.seconds.to_bits(), b.runtime.seconds.to_bits());
+        assert_eq!(
+            a.runtime.compute_seconds.to_bits(),
+            b.runtime.compute_seconds.to_bits()
+        );
+        assert_eq!(
+            a.runtime.memory_seconds.to_bits(),
+            b.runtime.memory_seconds.to_bits()
+        );
+        assert_eq!(
+            a.runtime.remote_fraction.to_bits(),
+            b.runtime.remote_fraction.to_bits()
+        );
+        assert_eq!(a.runtime.bound, b.runtime.bound);
+        assert_eq!(a.runtime.sync_factor.to_bits(), b.runtime.sync_factor.to_bits());
+        assert_eq!(a.traffic.l1, b.traffic.l1);
+        assert_eq!(a.traffic.l2, b.traffic.l2);
+        assert_eq!(a.traffic.llc, b.traffic.llc);
+        assert_eq!(a.traffic.llc_demand_miss_lines, b.traffic.llc_demand_miss_lines);
+        assert_eq!(a.traffic.hw_prefetch_lines, b.traffic.hw_prefetch_lines);
+        assert_eq!(a.traffic.sw_prefetch_lines, b.traffic.sw_prefetch_lines);
+        assert_eq!(a.traffic.imc, b.traffic.imc);
+        assert_eq!(a.traffic.local_lines, b.traffic.local_lines);
+        assert_eq!(a.traffic.remote_lines, b.traffic.remote_lines);
+        assert_eq!(a.traffic.local_wb_lines, b.traffic.local_wb_lines);
+        assert_eq!(a.traffic.remote_wb_lines, b.traffic.remote_wb_lines);
+        assert_eq!(a.traffic.nt_store_lines, b.traffic.nt_store_lines);
+        assert_eq!(a.traffic.probes, b.traffic.probes);
+    }
+
+    #[test]
+    fn measurement_json_roundtrip_is_lossless() {
+        // Cover a NUMA scenario (non-trivial remote fractions and IMC
+        // splits) and a warm cache state — the f64s here are the hard
+        // case for text round-tripping.
+        let mut m = machine();
+        for (scenario, cache) in [
+            (ScenarioSpec::single_thread(), CacheState::Cold),
+            (ScenarioSpec::two_socket(), CacheState::Cold),
+            (ScenarioSpec::single_thread(), CacheState::Warm),
+        ] {
+            let k = GeluNchw::new(EltwiseShape::favourable(4));
+            let meas = measure_kernel(&mut m, &k, &scenario, cache).unwrap();
+            let text = meas.to_json().to_string_pretty();
+            let back = KernelMeasurement::from_json(
+                &crate::util::json::Json::parse(&text).unwrap(),
+            )
+            .unwrap();
+            assert_bit_identical(&meas, &back);
+            // A round-tripped measurement serialises to the same bytes.
+            assert_eq!(text, back.to_json().to_string_pretty());
+        }
+    }
+
+    #[test]
+    fn measurement_from_json_rejects_bad_fields() {
+        let mut m = machine();
+        let k = SumReduction::new(1 << 16);
+        let meas =
+            measure_kernel(&mut m, &k, &ScenarioSpec::single_thread(), CacheState::Cold).unwrap();
+        let good = meas.to_json();
+        // Unknown cache label.
+        let mut doc = good.clone();
+        if let crate::util::json::Json::Obj(map) = &mut doc {
+            map.insert("cache".into(), crate::util::json::Json::str("lukewarm"));
+        }
+        assert!(KernelMeasurement::from_json(&doc).is_err());
+        // Missing traffic subtree.
+        let mut doc = good.clone();
+        if let crate::util::json::Json::Obj(map) = &mut doc {
+            map.remove("traffic");
+        }
+        assert!(KernelMeasurement::from_json(&doc).is_err());
+        // Negative counter.
+        let mut doc = good;
+        if let crate::util::json::Json::Obj(map) = &mut doc {
+            map.insert("threads".into(), crate::util::json::Json::num(-1.0));
+        }
+        assert!(KernelMeasurement::from_json(&doc).is_err());
     }
 
     #[test]

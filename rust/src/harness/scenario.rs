@@ -49,8 +49,11 @@ pub enum PlacementSpec {
 pub struct ScenarioSpec {
     /// Report label, e.g. `one-socket`.
     pub name: String,
+    /// How many threads to run.
     pub threads: ThreadSpec,
+    /// Where the threads are placed.
     pub placement: PlacementSpec,
+    /// Memory allocation policy.
     pub mem: MemPolicy,
 }
 
@@ -149,6 +152,7 @@ impl ScenarioSpec {
         ]
     }
 
+    /// Report label (the scenario name).
     pub fn label(&self) -> &str {
         &self.name
     }

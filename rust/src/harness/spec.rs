@@ -13,7 +13,28 @@
 //! the memoization key the parallel plan executor
 //! ([`crate::coordinator::plan`]) uses to avoid re-simulating shared
 //! cells across figures (f3/f4/f5's convolution cells reappear verbatim
-//! inside the `g1` scenario grid, for example).
+//! inside the `g1` scenario grid, for example) and the persistent cell
+//! cache ([`crate::coordinator::store`]) uses to address records on
+//! disk.
+//!
+//! ```
+//! use dlroofline::harness::experiments::ExperimentParams;
+//! use dlroofline::harness::spec;
+//!
+//! // Figures are data: f3 is three convolution kernels, one scenario,
+//! // cold caches.
+//! let f3 = spec::find("f3").unwrap();
+//! let params = ExperimentParams { batch: Some(1), ..Default::default() };
+//! let cells = f3.cells();
+//! assert_eq!(cells.len(), 3);
+//!
+//! // Cell keys are stable content hashes: same cell, same key.
+//! assert_eq!(cells[0].key(&params), cells[0].key(&params));
+//! // Different cache state or machine → different key.
+//! let mut one_socket = params.clone();
+//! one_socket.machine = dlroofline::sim::machine::MachineConfig::xeon_6248_1s();
+//! assert_ne!(cells[0].key(&params), cells[0].key(&one_socket));
+//! ```
 
 use anyhow::{anyhow, Result};
 
@@ -43,16 +64,23 @@ use super::scenario::ScenarioSpec;
 /// happens in [`KernelSpec::build`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelSpec {
+    /// Winograd convolution at the paper's conv shape.
     ConvWinograd,
+    /// Direct convolution, plain NCHW layout.
     ConvDirectNchw,
+    /// Direct convolution, blocked NCHW16C layout.
     ConvDirectBlocked,
+    /// The Fig 6 inner product at the paper shape.
     InnerProduct,
+    /// Average pooling, plain NCHW layout.
     AvgPoolNchw,
+    /// Average pooling, blocked NCHW16C layout.
     AvgPoolBlocked,
     /// Plain-NCHW GELU; `favourable` picks the appendix's C%16==0 shape.
     GeluNchw { favourable: bool },
     /// Blocked GELU; `forced` reproduces Fig 8's pathological dispatch.
     GeluBlocked { favourable: bool, forced: bool },
+    /// Layer normalisation at the params' row count.
     LayerNorm,
 }
 
@@ -124,8 +152,11 @@ fn gelu_shape(params: &ExperimentParams, favourable: bool) -> EltwiseShape {
 /// experiment functions).
 #[derive(Clone, Copy, Debug)]
 pub struct ExpectationRule {
+    /// Kernel name the rule applies to.
     pub kernel: &'static str,
+    /// Paper-reported utilisation of peak, when quoted.
     pub utilization: Option<f64>,
+    /// The paper's qualitative claim.
     pub claim: &'static str,
     /// Expected binding roof in the hierarchical model, when the claim
     /// names one (e.g. "gelu is DRAM-bound at streaming shapes").
@@ -147,10 +178,15 @@ impl ExpectationRule {
 /// every kernel × cache-state measurement cell.
 #[derive(Clone)]
 pub struct GridSpec {
+    /// One roofline group per scenario.
     pub scenarios: Vec<ScenarioSpec>,
+    /// Kernels measured in every group.
     pub kernels: Vec<KernelSpec>,
+    /// Cache protocols per kernel (cold and/or warm).
     pub cache_states: Vec<CacheState>,
+    /// Paper expectations attached to every group.
     pub expectations: Vec<ExpectationRule>,
+    /// Notes rendered under the report.
     pub notes: Vec<String>,
     /// Optional post-assembly hook for derived notes (e.g. Fig 8's W/Q
     /// ratio commentary) — computed from the measured cells.
@@ -170,8 +206,11 @@ pub enum SpecKind {
 /// One registry entry: id, title, and how to produce the result.
 #[derive(Clone)]
 pub struct ExperimentSpec {
+    /// Experiment id, e.g. `f3`.
     pub id: &'static str,
+    /// Human-readable title.
     pub title: &'static str,
+    /// Grid or special (narrative) experiment.
     pub kind: SpecKind,
 }
 
@@ -182,8 +221,11 @@ pub struct Cell {
     pub experiment: &'static str,
     /// [`ScenarioSpec`] group index within the experiment.
     pub group: usize,
+    /// Which kernel to build.
     pub kernel: KernelSpec,
+    /// Execution scenario.
     pub scenario: ScenarioSpec,
+    /// Cache protocol.
     pub cache: CacheState,
 }
 

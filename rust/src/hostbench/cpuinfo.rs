@@ -3,11 +3,17 @@
 /// What the host offers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CpuInfo {
+    /// CPU model string from `/proc/cpuinfo`.
     pub model_name: String,
+    /// Logical CPU count.
     pub logical_cpus: usize,
+    /// NUMA node count (1 when undetectable).
     pub numa_nodes: usize,
+    /// FMA3 support.
     pub has_fma: bool,
+    /// AVX2 support.
     pub has_avx2: bool,
+    /// AVX-512F support.
     pub has_avx512f: bool,
 }
 

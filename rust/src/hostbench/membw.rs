@@ -18,12 +18,16 @@ use super::affinity;
 /// The §2.2 bandwidth methods.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MemBwMethod {
+    /// `memset`-style pure stores.
     Memset,
+    /// `memcpy`-style read + write.
     Memcpy,
+    /// Non-temporal (streaming) stores, bypassing the caches.
     NtStore,
 }
 
 impl MemBwMethod {
+    /// Short display label.
     pub fn label(self) -> &'static str {
         match self {
             MemBwMethod::Memset => "memset",
@@ -32,6 +36,7 @@ impl MemBwMethod {
         }
     }
 
+    /// Every method, in report order.
     pub fn all() -> [MemBwMethod; 3] {
         [MemBwMethod::Memset, MemBwMethod::Memcpy, MemBwMethod::NtStore]
     }
@@ -51,7 +56,9 @@ impl MemBwMethod {
 /// One bandwidth measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct MemBwResult {
+    /// Method measured.
     pub method: MemBwMethod,
+    /// Threads used.
     pub threads: usize,
     /// Application-visible bytes touched per second (what the paper
     /// plots as throughput).

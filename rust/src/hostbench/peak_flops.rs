@@ -27,6 +27,7 @@ pub enum PeakIsa {
 }
 
 impl PeakIsa {
+    /// FP32 lanes per instruction.
     pub fn lanes(self) -> usize {
         match self {
             PeakIsa::Scalar => 1,
@@ -35,6 +36,7 @@ impl PeakIsa {
         }
     }
 
+    /// Short display label.
     pub fn label(self) -> &'static str {
         match self {
             PeakIsa::Scalar => "scalar-fma",
@@ -47,8 +49,11 @@ impl PeakIsa {
 /// Result of one peak measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct PeakFlopsResult {
+    /// ISA variant measured.
     pub isa: PeakIsa,
+    /// Threads used.
     pub threads: usize,
+    /// Achieved FLOP/s.
     pub flops_per_sec: f64,
     /// True if the runtime-JIT path was used (vs intrinsics).
     pub jitted: bool,

@@ -32,6 +32,7 @@ const OH_CHUNK: usize = 8;
 /// Direct convolution on plain NCHW data.
 #[derive(Clone, Debug)]
 pub struct ConvDirectNchw {
+    /// Convolution shape.
     pub shape: ConvShape,
 }
 
@@ -44,6 +45,7 @@ const NCHW_ALU_PER_FMA: f64 = 0.35;
 const NCHW_ILP: f64 = 0.95;
 
 impl ConvDirectNchw {
+    /// Direct NCHW convolution at `shape`.
     pub fn new(shape: ConvShape) -> Self {
         ConvDirectNchw { shape }
     }
@@ -160,6 +162,7 @@ impl KernelModel for ConvDirectNchw {
 /// Direct convolution on blocked NCHW16C data.
 #[derive(Clone, Debug)]
 pub struct ConvDirectBlocked {
+    /// Convolution shape.
     pub shape: ConvShape,
 }
 
@@ -172,6 +175,7 @@ const BLOCKED_ALU_PER_FMA: f64 = 0.05;
 const BLOCKED_ILP: f64 = 0.87;
 
 impl ConvDirectBlocked {
+    /// Direct blocked (NCHW16C) convolution at `shape`.
     pub fn new(shape: ConvShape) -> Self {
         ConvDirectBlocked { shape }
     }

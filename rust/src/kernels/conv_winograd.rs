@@ -44,10 +44,12 @@ const GEMM_ILP: f64 = 0.80;
 /// Winograd convolution on blocked data. Requires a 3×3 stride-1 kernel.
 #[derive(Clone, Debug)]
 pub struct ConvWinograd {
+    /// Convolution shape.
     pub shape: ConvShape,
 }
 
 impl ConvWinograd {
+    /// Winograd F(2x2, 3x3) convolution at `shape`.
     pub fn new(shape: ConvShape) -> Self {
         assert_eq!((shape.kh, shape.kw), (3, 3), "Winograd F(4,3) needs a 3x3 kernel");
         assert_eq!(shape.stride, 1, "Winograd needs stride 1");

@@ -31,9 +31,13 @@ const GELU_ILP: f64 = 0.85;
 /// Activation tensor shape.
 #[derive(Clone, Copy, Debug)]
 pub struct EltwiseShape {
+    /// Batch.
     pub n: usize,
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
 }
 
@@ -53,10 +57,12 @@ impl EltwiseShape {
 /// GELU on plain NCHW.
 #[derive(Clone, Debug)]
 pub struct GeluNchw {
+    /// Element-wise tensor shape.
     pub shape: EltwiseShape,
 }
 
 impl GeluNchw {
+    /// Plain-NCHW GELU over `shape`.
     pub fn new(shape: EltwiseShape) -> Self {
         GeluNchw { shape }
     }
@@ -109,6 +115,7 @@ impl KernelModel for GeluNchw {
 /// in, padded eltwise, reorder out.
 #[derive(Clone, Debug)]
 pub struct GeluBlocked {
+    /// Element-wise tensor shape.
     pub shape: EltwiseShape,
     /// True when the layout was forced against the dispatcher's judgement
     /// (the paper's Fig 8 protocol).

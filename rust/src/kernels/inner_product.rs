@@ -29,12 +29,16 @@ const M_CHUNK: usize = 16;
 /// Inner product: `dst[M,N] = src[M,K] × wei[K,N] + bias[N]`.
 #[derive(Clone, Debug)]
 pub struct InnerProduct {
+    /// Output rows (batch).
     pub m: usize,
+    /// Reduction depth.
     pub k: usize,
+    /// Output columns.
     pub n: usize,
 }
 
 impl InnerProduct {
+    /// Inner product `dst[M,N] = src[M,K] x wei[K,N]`.
     pub fn new(m: usize, k: usize, n: usize) -> Self {
         assert!(m > 0 && k > 0 && n > 0);
         InnerProduct { m, k, n }
@@ -46,6 +50,7 @@ impl InnerProduct {
         InnerProduct::new(256, 2048, 1000)
     }
 
+    /// Multiply-accumulate count `M*K*N`.
     pub fn macs(&self) -> f64 {
         self.m as f64 * self.k as f64 * self.n as f64
     }
@@ -54,14 +59,17 @@ impl InnerProduct {
         self.macs() / VecWidth::V512.lanes() as f64
     }
 
+    /// Source tensor footprint.
     pub fn src_bytes(&self) -> u64 {
         (self.m * self.k) as u64 * ELEM
     }
 
+    /// Weights tensor footprint.
     pub fn wei_bytes(&self) -> u64 {
         (self.k * self.n) as u64 * ELEM
     }
 
+    /// Destination tensor footprint.
     pub fn dst_bytes(&self) -> u64 {
         (self.m * self.n) as u64 * ELEM
     }

@@ -26,11 +26,14 @@ const ROW_CHUNK: usize = 8;
 /// Layer normalisation over `[rows, hidden]` with affine parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct LayerNorm {
+    /// Row count (tokens).
     pub rows: usize,
+    /// Hidden dimension per row.
     pub hidden: usize,
 }
 
 impl LayerNorm {
+    /// Layer normalisation over `rows x hidden`.
     pub fn new(rows: usize, hidden: usize) -> Self {
         assert!(rows > 0 && hidden > 0);
         LayerNorm { rows, hidden }
@@ -42,6 +45,7 @@ impl LayerNorm {
         LayerNorm::new(64 * 512, 768)
     }
 
+    /// Footprint of one `rows x hidden` tensor.
     pub fn tensor_bytes(&self) -> u64 {
         (self.rows * self.hidden) as u64 * ELEM
     }

@@ -13,14 +13,17 @@ pub const ELEM: u64 = 4;
 /// Supported data arrangements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DataLayout {
+    /// Plain `[N, C, H, W]` — channel-strided scalar access.
     Nchw,
     /// `[N, ⌈C/16⌉, H, W, 16]` — all 16 lanes of a vector come from one
     /// cache line.
     Nchw16c,
+    /// `[N, H, W, C]` — channels innermost.
     Nhwc,
 }
 
 impl DataLayout {
+    /// Lowercase display label (`nchw`, `nchw16c`, `nhwc`).
     pub fn label(self) -> &'static str {
         match self {
             DataLayout::Nchw => "nchw",
@@ -33,14 +36,20 @@ impl DataLayout {
 /// A 4-D activation tensor descriptor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TensorDesc {
+    /// Batch.
     pub n: usize,
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Memory arrangement.
     pub layout: DataLayout,
 }
 
 impl TensorDesc {
+    /// Describe a `[N, C, H, W]` tensor in `layout`.
     pub fn new(n: usize, c: usize, h: usize, w: usize, layout: DataLayout) -> TensorDesc {
         assert!(n > 0 && c > 0 && h > 0 && w > 0);
         TensorDesc { n, c, h, w, layout }
@@ -118,6 +127,7 @@ impl TensorDesc {
         }
     }
 
+    /// The same logical tensor in another layout.
     pub fn with_layout(&self, layout: DataLayout) -> TensorDesc {
         TensorDesc { layout, ..*self }
     }
@@ -126,22 +136,33 @@ impl TensorDesc {
 /// Convolution problem shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvShape {
+    /// Batch.
     pub n: usize,
+    /// Input channels.
     pub ic: usize,
+    /// Output channels.
     pub oc: usize,
+    /// Input height.
     pub ih: usize,
+    /// Input width.
     pub iw: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Spatial stride.
     pub stride: usize,
+    /// Spatial padding.
     pub pad: usize,
 }
 
 impl ConvShape {
+    /// Output height.
     pub fn oh(&self) -> usize {
         (self.ih + 2 * self.pad - self.kh) / self.stride + 1
     }
 
+    /// Output width.
     pub fn ow(&self) -> usize {
         (self.iw + 2 * self.pad - self.kw) / self.stride + 1
     }
@@ -157,10 +178,12 @@ impl ConvShape {
             * self.kw as f64
     }
 
+    /// Input tensor descriptor in `layout`.
     pub fn src_desc(&self, layout: DataLayout) -> TensorDesc {
         TensorDesc::new(self.n, self.ic, self.ih, self.iw, layout)
     }
 
+    /// Output tensor descriptor in `layout`.
     pub fn dst_desc(&self, layout: DataLayout) -> TensorDesc {
         TensorDesc::new(self.n, self.oc, self.oh(), self.ow(), layout)
     }

@@ -46,6 +46,7 @@ pub struct TensorMap {
 }
 
 impl TensorMap {
+    /// Register a tensor allocation.
     pub fn insert(&mut self, name: &str, base: u64, bytes: u64) {
         self.map.insert(name.to_string(), (base, bytes));
     }
@@ -58,6 +59,7 @@ impl TensorMap {
             .0
     }
 
+    /// Size of a tensor; panics on unknown names (kernel bug).
     pub fn bytes(&self, name: &str) -> u64 {
         self.map
             .get(name)
@@ -70,6 +72,7 @@ impl TensorMap {
         self.map.values().map(|&(_, b)| b).sum()
     }
 
+    /// Registered tensor names.
     pub fn names(&self) -> Vec<&str> {
         self.map.keys().map(|s| s.as_str()).collect()
     }

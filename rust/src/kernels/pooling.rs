@@ -21,19 +21,27 @@ use super::{split_indices, KernelModel, TensorMap};
 /// Pooling problem: `kernel`×`kernel` window, stride `stride`, no padding.
 #[derive(Clone, Copy, Debug)]
 pub struct PoolShape {
+    /// Batch.
     pub n: usize,
+    /// Channels.
     pub c: usize,
+    /// Input height.
     pub ih: usize,
+    /// Input width.
     pub iw: usize,
+    /// Pooling window size.
     pub kernel: usize,
+    /// Window stride.
     pub stride: usize,
 }
 
 impl PoolShape {
+    /// Output height.
     pub fn oh(&self) -> usize {
         (self.ih - self.kernel) / self.stride + 1
     }
 
+    /// Output width.
     pub fn ow(&self) -> usize {
         (self.iw - self.kernel) / self.stride + 1
     }
@@ -66,10 +74,12 @@ const SIMPLE_ILP: f64 = 0.7;
 /// Average pooling, `simple_nchw` implementation.
 #[derive(Clone, Debug)]
 pub struct AvgPoolNchw {
+    /// Pooling shape.
     pub shape: PoolShape,
 }
 
 impl AvgPoolNchw {
+    /// Plain-NCHW average pooling at `shape`.
     pub fn new(shape: PoolShape) -> Self {
         AvgPoolNchw { shape }
     }
@@ -168,10 +178,12 @@ const JIT_ILP: f64 = 0.9;
 /// Average pooling, blocked `jit:avx512_common` implementation.
 #[derive(Clone, Debug)]
 pub struct AvgPoolBlocked {
+    /// Pooling shape.
     pub shape: PoolShape,
 }
 
 impl AvgPoolBlocked {
+    /// Blocked (NCHW16C) average pooling at `shape`.
     pub fn new(shape: PoolShape) -> Self {
         AvgPoolBlocked { shape }
     }
@@ -279,6 +291,8 @@ impl MaxPoolNote {
         0
     }
 
+    /// Why max pooling is excluded by the paper's methodology
+    /// (min/max retire into no FP event — S3.5).
     pub fn explanation() -> &'static str {
         "max pooling consists of data movement and max operations, which \
          retire no FP_ARITH_INST_RETIRED events; Work counted via FLOPS \

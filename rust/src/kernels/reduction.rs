@@ -14,15 +14,18 @@ use super::{KernelModel, TensorMap};
 /// `sum(x)` over `n` f32 elements, vectorised with 8 accumulators.
 #[derive(Clone, Copy, Debug)]
 pub struct SumReduction {
+    /// Element count.
     pub n: usize,
 }
 
 impl SumReduction {
+    /// Sum over `n` f32 elements.
     pub fn new(n: usize) -> Self {
         assert!(n >= 16);
         SumReduction { n }
     }
 
+    /// Input array footprint.
     pub fn bytes(&self) -> u64 {
         self.n as u64 * ELEM
     }

@@ -34,11 +34,20 @@
 //!   Python never runs on the measurement path;
 //! * a **coordinator** ([`coordinator`]) tying it all together behind the
 //!   `dlroofline` CLI — including a parallel, memoizing plan executor
-//!   (`sweep --jobs N`) and versioned `run.json` manifests that make
-//!   every run a reproducible artifact.
+//!   (`sweep --jobs N`), a persistent content-addressed cell cache
+//!   (`--cache-dir`, [`coordinator::store`]) that makes repeated sweeps
+//!   incremental, and versioned `run.json` manifests that make every
+//!   run a reproducible artifact.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `README.md` for the documentation map, `docs/` for the book
+//! (architecture overview, CLI reference, on-disk formats) and
+//! `DESIGN.md` for the architectural decisions; each generated report
+//! carries its own paper-vs-measured table.
+
+// Every public item carries documentation; the CI docs job promotes
+// rustdoc warnings (including missing docs and broken intra-doc links)
+// to errors.
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod cli;

@@ -9,8 +9,9 @@ use anyhow::Result;
 
 use dlroofline::cli::{opt, switch, AppSpec, CmdSpec, Parsed};
 use dlroofline::coordinator::config::resolve_machine;
-use dlroofline::coordinator::runner::{render_report, run_and_write, sweep_and_write};
-use dlroofline::coordinator::{plan, KernelRegistry};
+use dlroofline::coordinator::runner::{render_report, run_and_write, sweep_and_write_cached};
+use dlroofline::coordinator::store::{CellStore, CACHE_ENV};
+use dlroofline::coordinator::{plan, KernelRegistry, StoreUsage};
 use dlroofline::harness::experiments::{experiment_index, ExperimentParams};
 use dlroofline::harness::{measure_kernel, spec, CacheState, ScenarioSpec};
 use dlroofline::hostbench::{membw, peak_flops, CpuInfo, PeakIsa};
@@ -74,8 +75,10 @@ fn app() -> AppSpec {
                     opt("batch", "override workload batch", None),
                     opt("only", "comma-separated experiment ids (default: all)", None),
                     opt("jobs", "worker threads (0 = auto)", Some("0")),
+                    opt("cache-dir", "persistent cell cache dir (default: $DLROOFLINE_CACHE)", None),
                     switch("full-size", "use the paper's full tensor sizes (slow)"),
                     switch("svg", "also emit SVG plots"),
+                    switch("explain", "report per-cell cache hit/miss/stale fates"),
                 ],
                 positional: vec![],
             },
@@ -90,9 +93,19 @@ fn app() -> AppSpec {
                     ),
                     opt("batch", "override workload batch", None),
                     opt("only", "comma-separated experiment ids (default: all)", None),
+                    opt("cache-dir", "persistent cell cache dir (default: $DLROOFLINE_CACHE)", None),
                     switch("full-size", "use the paper's full tensor sizes (slow)"),
                 ],
                 positional: vec![],
+            },
+            CmdSpec {
+                name: "cache",
+                help: "inspect or prune the persistent cell cache (stats | clear | gc)",
+                opts: vec![
+                    opt("cache-dir", "cache directory (default: $DLROOFLINE_CACHE)", None),
+                    opt("max-entries", "gc: keep at most this many records", Some("1024")),
+                ],
+                positional: vec![("action", "stats | clear | gc")],
             },
             CmdSpec {
                 name: "repro-all",
@@ -211,6 +224,7 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
         "diff" => cmd_diff(parsed),
         "sweep" => cmd_sweep(parsed),
         "plan" => cmd_plan(parsed),
+        "cache" => cmd_cache(parsed),
         "repro-all" => cmd_repro_all(parsed),
         "measure" => cmd_measure(parsed),
         "characterize" => cmd_characterize(parsed),
@@ -285,11 +299,88 @@ fn cmd_diff(parsed: &Parsed) -> Result<()> {
     Ok(())
 }
 
+/// Open the persistent cell store named by `--cache-dir` (or the
+/// `DLROOFLINE_CACHE` environment variable); `None` disables caching.
+///
+/// An explicit `--cache-dir` that cannot be opened is an error — the
+/// user asked for that cache. An unusable `DLROOFLINE_CACHE` default
+/// only warns and runs uncached: a stale environment variable must not
+/// break every invocation.
+fn store_from(parsed: &Parsed) -> Result<Option<CellStore>> {
+    let explicit = parsed.opt("cache-dir").is_some();
+    match CellStore::resolve_dir(parsed.opt("cache-dir")) {
+        Some(dir) => match CellStore::open(&dir) {
+            Ok(store) => Ok(Some(store)),
+            Err(e) if !explicit => {
+                eprintln!(
+                    "warning: ignoring ${CACHE_ENV} ({}): {e:#} — running uncached",
+                    dir.display()
+                );
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        },
+        None => Ok(None),
+    }
+}
+
+/// One summary line for what the cell cache contributed to a sweep,
+/// plus a warning when cache writes failed (writes are best-effort —
+/// they never fail the sweep, only future hits).
+fn print_cache_summary(store: &CellStore, usage: &StoreUsage) {
+    println!(
+        "cache {}: {} hits, {} misses, {} stale → {} simulated",
+        store.root().display(),
+        usage.hits,
+        usage.simulated - usage.stale,
+        usage.stale,
+        usage.simulated
+    );
+    if usage.write_errors > 0 {
+        eprintln!(
+            "warning: {} cache write(s) failed (results are unaffected; first error: {})",
+            usage.write_errors,
+            usage.first_write_error.as_deref().unwrap_or("unknown")
+        );
+    }
+}
+
+/// `--explain`: per-cell cache fates, joined against the executed
+/// plan's cell list.
+fn print_explain(cells: &[dlroofline::coordinator::plan::CellPlan], usage: &StoreUsage) {
+    println!("| experiment | kernel | scenario | cache | cell key | fate |");
+    println!("|---|---|---|---|---|---|");
+    for c in cells {
+        let fate = if c.reused {
+            "memo"
+        } else {
+            usage
+                .fates
+                .get(&c.key)
+                .map(|f| f.label())
+                .unwrap_or("?")
+        };
+        println!(
+            "| {} | {} | {} | {} | {} | {} |",
+            c.experiment,
+            c.kernel,
+            c.scenario,
+            c.cache,
+            dlroofline::util::hash::hex64(c.key),
+            fate
+        );
+    }
+}
+
 fn cmd_sweep(parsed: &Parsed) -> Result<()> {
     let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
     let jobs = parsed.opt_parse::<usize>("jobs")?.unwrap_or(0);
     let ids = ids_from(parsed);
     let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
+    let store = store_from(parsed)?;
+    if parsed.has("explain") && store.is_none() {
+        eprintln!("warning: --explain needs a cell cache (--cache-dir or ${CACHE_ENV}); ignoring");
+    }
 
     let machine_args = machine_args_from(parsed)?;
     let machines = machine_args
@@ -307,14 +398,17 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
     let (kept, skipped) = dlroofline::coordinator::runner::dedupe_machines(&machines);
     if kept.len() > 1 {
         // Machine-grid sweep: one subdirectory (and manifest) per config.
+        // Cell hashes key on the machine fingerprint, so one cache
+        // directory serves every machine of the grid.
         let base = params_with_machine(parsed, kept[0].clone())?;
-        let grid = dlroofline::coordinator::sweep_grid_and_write(
+        let grid = dlroofline::coordinator::sweep_grid_and_write_cached(
             &id_refs,
             &base,
             &machines,
             &out_dir,
             parsed.has("svg"),
             jobs,
+            store.as_ref(),
         )?;
         for name in &grid.duplicates_skipped {
             note_skip(name);
@@ -330,6 +424,12 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
                 s.cells_reused,
                 s.cells_skipped
             );
+            if let (Some(st), Some(usage)) = (store.as_ref(), entry.output.store.as_ref()) {
+                print_cache_summary(st, usage);
+                if parsed.has("explain") {
+                    print_explain(&entry.output.plan_cells, usage);
+                }
+            }
             if let Some(m) = &entry.output.manifest {
                 println!("wrote {}", m.display());
             }
@@ -344,8 +444,14 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
         note_skip(name);
     }
     let params = params_with_machine(parsed, kept[0].clone())?;
-    let (results, sweep) =
-        sweep_and_write(&id_refs, &params, &out_dir, parsed.has("svg"), jobs)?;
+    let (results, sweep) = sweep_and_write_cached(
+        &id_refs,
+        &params,
+        &out_dir,
+        parsed.has("svg"),
+        jobs,
+        store.as_ref(),
+    )?;
     for (result, output) in results.iter().zip(sweep.outputs.iter()) {
         eprintln!("== {}: {}", result.id, result.title);
         if let Some(md) = &output.markdown {
@@ -360,12 +466,62 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
         "plan: {} experiments ({} narrative), {} cells → {} simulated, {} memoized away, {} inexpressible",
         s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
     );
+    if let (Some(st), Some(usage)) = (store.as_ref(), sweep.store.as_ref()) {
+        print_cache_summary(st, usage);
+        if parsed.has("explain") {
+            print_explain(&sweep.plan_cells, usage);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cache(parsed: &Parsed) -> Result<()> {
+    let action = parsed
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("stats");
+    let dir = CellStore::resolve_dir(parsed.opt("cache-dir")).ok_or_else(|| {
+        anyhow::anyhow!("no cache directory: pass --cache-dir or set ${CACHE_ENV}")
+    })?;
+    let store = CellStore::open(&dir)?;
+    match action {
+        "stats" => {
+            let s = store.stats()?;
+            println!("cache {}", dir.display());
+            println!("  entries:       {}", s.entries);
+            println!("  stale:         {}", s.stale);
+            println!(
+                "  size:          {}",
+                dlroofline::util::human::fmt_si(s.bytes as f64, "B")
+            );
+            println!("  hits recorded: {}", s.hits_recorded);
+            println!("  created_unix:  {}", s.created_unix);
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!("cleared {} record(s) from {}", removed, dir.display());
+        }
+        "gc" => {
+            let max = parsed.opt_parse::<usize>("max-entries")?.unwrap_or(1024);
+            let r = store.gc(max)?;
+            println!(
+                "gc {}: removed {} stale, evicted {}, kept {}",
+                dir.display(),
+                r.removed_stale,
+                r.evicted,
+                r.kept
+            );
+        }
+        other => anyhow::bail!("unknown cache action '{other}' (expected stats | clear | gc)"),
+    }
     Ok(())
 }
 
 fn cmd_plan(parsed: &Parsed) -> Result<()> {
     let ids = ids_from(parsed);
     let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
+    let store = store_from(parsed)?;
     let machine_args = machine_args_from(parsed)?;
     let machines = machine_args
         .iter()
@@ -388,17 +544,40 @@ fn cmd_plan(parsed: &Parsed) -> Result<()> {
             );
         }
         let expansion = plan::expand(&id_refs, &params)?;
-        println!("| experiment | kernel | scenario | cache | cell key | memoized |");
-        println!("|---|---|---|---|---|---|");
+        // One shared table; `--cache-dir` appends a `cached` column.
+        let with_cache = store.is_some();
+        let tail = |extra: &str| if with_cache { format!(" {extra} |") } else { String::new() };
+        println!(
+            "| experiment | kernel | scenario | cache | cell key | memoized |{}",
+            tail("cached")
+        );
+        println!("|---|---|---|---|---|---|{}", tail("---"));
+        let mut would_hit = 0usize;
         for c in &expansion.cells {
+            // Probe without serving: a dry-run predicts what the sweep
+            // would find on disk.
+            let cached = store.as_ref().map(|st| match st.lookup(c.key) {
+                dlroofline::coordinator::Lookup::Hit(_) => {
+                    if !c.reused {
+                        would_hit += 1;
+                    }
+                    "hit"
+                }
+                dlroofline::coordinator::Lookup::Stale(_) => "stale",
+                dlroofline::coordinator::Lookup::Miss => "miss",
+            });
             println!(
-                "| {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} |{}",
                 c.experiment,
                 c.kernel,
                 c.scenario,
                 c.cache,
                 dlroofline::util::hash::hex64(c.key),
-                if c.reused { "reuse" } else { "simulate" }
+                if c.reused { "reuse" } else { "simulate" },
+                match cached {
+                    Some(fate) => tail(fate),
+                    None => String::new(),
+                }
             );
         }
         let s = expansion.stats;
@@ -406,6 +585,14 @@ fn cmd_plan(parsed: &Parsed) -> Result<()> {
             "\nplan: {} experiments ({} narrative), {} cells → {} to simulate, {} memoized away, {} inexpressible",
             s.experiments, s.specials, s.cells_total, s.cells_simulated, s.cells_reused, s.cells_skipped
         );
+        if let Some(st) = store.as_ref() {
+            println!(
+                "cache {}: {} of {} unique cells already on disk",
+                st.root().display(),
+                would_hit,
+                s.cells_simulated
+            );
+        }
     }
     Ok(())
 }

@@ -22,6 +22,7 @@ pub struct CounterFile {
 }
 
 impl CounterFile {
+    /// Empty counter file.
     pub fn new() -> CounterFile {
         CounterFile::default()
     }
@@ -32,6 +33,7 @@ impl CounterFile {
         self.counters.insert(name.to_string(), Counter::default());
     }
 
+    /// Whether a counter is registered.
     pub fn is_open(&self, name: &str) -> bool {
         self.counters.contains_key(name)
     }

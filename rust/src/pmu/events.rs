@@ -18,13 +18,18 @@ use crate::sim::core::{InstrMix, VecWidth};
 /// The four FP_ARITH events the paper reads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FpEvent {
+    /// `fp_arith_inst_retired.scalar_single`.
     ScalarSingle,
+    /// `fp_arith_inst_retired.128b_packed_single`.
     Packed128Single,
+    /// `fp_arith_inst_retired.256b_packed_single`.
     Packed256Single,
+    /// `fp_arith_inst_retired.512b_packed_single`.
     Packed512Single,
 }
 
 impl FpEvent {
+    /// The event a packed instruction of `width` retires into.
     pub fn of_width(width: VecWidth) -> FpEvent {
         match width {
             VecWidth::Scalar => FpEvent::ScalarSingle,
@@ -55,6 +60,7 @@ impl FpEvent {
         }
     }
 
+    /// Every event, shallowest width first.
     pub fn all() -> [FpEvent; 4] {
         [
             FpEvent::ScalarSingle,
@@ -68,13 +74,18 @@ impl FpEvent {
 /// A snapshot of the four counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FpEventSet {
+    /// Scalar-single count.
     pub scalar: u64,
+    /// 128-bit packed count.
     pub p128: u64,
+    /// 256-bit packed count.
     pub p256: u64,
+    /// 512-bit packed count.
     pub p512: u64,
 }
 
 impl FpEventSet {
+    /// Read one counter.
     pub fn get(&self, e: FpEvent) -> u64 {
         match e {
             FpEvent::ScalarSingle => self.scalar,

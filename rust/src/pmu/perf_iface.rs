@@ -18,8 +18,11 @@ use super::events::FpEventSet;
 /// Counter snapshot for one run: FP events + platform-wide IMC traffic.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RunCounters {
+    /// FP_ARITH counter snapshot.
     pub fp: FpEventSet,
+    /// Platform-wide IMC read bytes.
     pub imc_read_bytes: u64,
+    /// Platform-wide IMC write bytes.
     pub imc_write_bytes: u64,
 }
 
@@ -32,7 +35,9 @@ pub struct Measured {
     pub traffic_bytes: u64,
     /// The raw subtracted FP events, for per-width reporting.
     pub fp: FpEventSet,
+    /// Subtracted IMC read bytes.
     pub read_bytes: u64,
+    /// Subtracted IMC write bytes.
     pub write_bytes: u64,
 }
 

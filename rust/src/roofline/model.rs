@@ -9,6 +9,24 @@
 //! [`RooflineModel::ridge`] and [`RooflineModel::memory_bound`] keep
 //! their original (DRAM-β) semantics, while [`RooflineModel::attainable_hier`]
 //! takes the min over every level roof.
+//!
+//! ```
+//! use dlroofline::roofline::model::{Ceiling, RooflineModel};
+//!
+//! // The paper's Fig 1 shape: π = 100 GFLOP/s over a 10 GB/s DRAM β.
+//! let roofline = RooflineModel::new(
+//!     "example",
+//!     vec![Ceiling { label: "peak".into(), flops_per_sec: 100e9 }],
+//!     10e9,
+//!     "DRAM",
+//! );
+//! // The ridge sits at π/β = 10 FLOP/byte.
+//! assert_eq!(roofline.ridge(), 10.0);
+//! // Left of the ridge performance is β·AI, right of it π.
+//! assert_eq!(roofline.attainable(2.0), 2.0 * 10e9);
+//! assert_eq!(roofline.attainable(40.0), 100e9);
+//! assert!(roofline.memory_bound(2.0) && !roofline.memory_bound(40.0));
+//! ```
 
 use crate::sim::core::VecWidth;
 use crate::sim::machine::MachineConfig;
@@ -20,8 +38,11 @@ use super::point::LevelBytes;
 /// shallower one.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum MemLevel {
+    /// Per-core L1 data cache.
     L1,
+    /// Per-core L2 cache.
     L2,
+    /// Per-socket shared last-level cache.
     Llc,
     /// DRAM behind the IMCs of the node(s) the scenario binds to.
     DramLocal,
@@ -56,16 +77,20 @@ impl MemLevel {
 /// One horizontal compute ceiling (e.g. "AVX-512 FMA", "AVX2", "scalar").
 #[derive(Clone, Debug, PartialEq)]
 pub struct Ceiling {
+    /// Display label, e.g. `AVX-512 FMA`.
     pub label: String,
+    /// Ceiling height (FLOP/s).
     pub flops_per_sec: f64,
 }
 
 /// One diagonal bandwidth roof: the peak byte rate of one memory level.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LevelRoof {
+    /// Which memory level the roof belongs to.
     pub level: MemLevel,
     /// β for this level (bytes/s).
     pub bytes_per_sec: f64,
+    /// Display label, e.g. `DRAM 1 node`.
     pub label: String,
 }
 
@@ -79,6 +104,7 @@ pub enum Binding {
 }
 
 impl Binding {
+    /// Short display label (`compute` or the level's label).
     pub fn label(&self) -> &'static str {
         match self {
             Binding::Compute => "compute",

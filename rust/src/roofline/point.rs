@@ -16,10 +16,15 @@ use crate::sim::hierarchy::TrafficStats;
 /// exactly to the paper's IMC-counted Q.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LevelBytes {
+    /// Core-L1 boundary bytes.
     pub l1: f64,
+    /// L1-L2 boundary bytes.
     pub l2: f64,
+    /// L2-LLC boundary bytes.
     pub llc: f64,
+    /// IMC bytes served by the requesting thread's own node.
     pub dram_local: f64,
+    /// IMC bytes served cross-node (UPI-crossing).
     pub dram_remote: f64,
 }
 
@@ -55,6 +60,7 @@ impl LevelBytes {
 /// One measured kernel on one roofline.
 #[derive(Clone, Debug)]
 pub struct KernelPoint {
+    /// Kernel display name.
     pub name: String,
     /// Work W (FLOPs, PMU-derived).
     pub work_flops: f64,
@@ -69,6 +75,7 @@ pub struct KernelPoint {
 }
 
 impl KernelPoint {
+    /// Point from W (FLOPs), Q (bytes) and R (seconds).
     pub fn new(name: &str, work_flops: f64, traffic_bytes: f64, runtime: f64) -> KernelPoint {
         assert!(work_flops >= 0.0 && traffic_bytes >= 0.0 && runtime > 0.0);
         KernelPoint {
@@ -81,6 +88,7 @@ impl KernelPoint {
         }
     }
 
+    /// Attach an annotation (builder style).
     pub fn with_note(mut self, note: &str) -> KernelPoint {
         self.note = note.to_string();
         self

@@ -10,6 +10,7 @@ use crate::util::human::{fmt_bytes, fmt_flops, fmt_pct, fmt_rate, fmt_seconds};
 /// the paper for comparison rows.
 #[derive(Clone, Debug)]
 pub struct PaperExpectation {
+    /// Kernel name the expectation applies to.
     pub kernel: String,
     /// The paper's reported utilisation of peak (0–1), if given.
     pub utilization: Option<f64>,

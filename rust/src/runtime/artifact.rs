@@ -13,11 +13,14 @@ use crate::util::json::Json;
 /// Data type of a tensor (artifacts are f32 throughout, like the paper).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Parse a manifest dtype string (`f32` / `i32`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "float32" | "f32" => Ok(DType::F32),
@@ -26,6 +29,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element.
     pub fn bytes(self) -> usize {
         4
     }
@@ -34,11 +38,14 @@ impl DType {
 /// Shape + dtype of one input/output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -58,20 +65,26 @@ impl TensorSpec {
 /// One exported computation.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
     /// HLO text file, relative to the manifest directory.
     pub file: String,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
     pub outputs: Vec<TensorSpec>,
     /// Analytic FLOPs per execution (from the python side).
     pub flops: f64,
+    /// Human-readable description.
     pub description: String,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every artifact listed.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -89,6 +102,7 @@ impl Manifest {
         Manifest::load(&crate::util::fsutil::artifacts_dir())
     }
 
+    /// Parse a manifest document rooted at `dir`.
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
         let root = Json::parse(text).context("parsing manifest.json")?;
         let list = root.expect("artifacts")?.as_arr()?;
@@ -120,6 +134,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// Look up an artifact by name.
     pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .iter()

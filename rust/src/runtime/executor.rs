@@ -15,6 +15,7 @@ use crate::util::stats::Summary;
 /// Wall-clock statistics for repeated executions.
 #[derive(Clone, Debug)]
 pub struct RunStats {
+    /// Artifact name.
     pub name: String,
     /// Per-execution seconds.
     pub time: Summary,
@@ -35,6 +36,7 @@ impl RunStats {
 
 /// A compiled executable plus its spec.
 pub struct LoadedKernel {
+    /// The artifact's manifest entry.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -134,10 +136,12 @@ impl Engine {
         Engine::new(&crate::util::fsutil::artifacts_dir())
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

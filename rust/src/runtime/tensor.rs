@@ -10,16 +10,20 @@ use crate::util::prng::Prng;
 /// A dense f32 tensor with a logical shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Row-major f32 elements.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// All-zero tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> HostTensor {
         let n: usize = shape.iter().product();
         HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Tensor from existing data; fails on element-count mismatch.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<HostTensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -35,6 +39,7 @@ impl HostTensor {
         HostTensor { shape: shape.to_vec(), data: rng.normal_f32(n) }
     }
 
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.data.len()
     }

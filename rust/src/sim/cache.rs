@@ -18,6 +18,7 @@ pub struct CacheConfig {
 }
 
 impl CacheConfig {
+    /// Geometry from total size and associativity (64-byte lines).
     pub fn new(size: u64, ways: usize) -> CacheConfig {
         CacheConfig { size, ways, line: super::LINE }
     }
@@ -39,19 +40,25 @@ impl CacheConfig {
 /// Hit/miss counters for one level.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
+    /// Demand accesses that hit.
     pub hits: u64,
+    /// Demand accesses that missed.
     pub misses: u64,
+    /// Lines displaced by fills.
     pub evictions: u64,
+    /// Dirty victims written to the next level.
     pub writebacks: u64,
     /// Lines installed by prefetch (HW or SW) rather than demand.
     pub prefetch_fills: u64,
 }
 
 impl CacheStats {
+    /// Total demand accesses (hits + misses).
     pub fn accesses(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// Demand miss ratio (0 when idle).
     pub fn miss_rate(&self) -> f64 {
         if self.accesses() == 0 {
             0.0
@@ -64,6 +71,7 @@ impl CacheStats {
 /// The outcome of probing a cache with a line.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Probe {
+    /// The line was present.
     Hit,
     /// Miss; `victim` carries an evicted dirty line's address if the fill
     /// displaced one (it must be written back to the next level / memory).
@@ -124,12 +132,14 @@ pub struct Cache {
     /// `sets × ways` entries, set-major.
     ways: Vec<Way>,
     clock: u64,
+    /// Counters accumulated since the last reset.
     pub stats: CacheStats,
 }
 
 const INVALID: u64 = u64::MAX;
 
 impl Cache {
+    /// Empty cache with `config` geometry.
     pub fn new(config: CacheConfig) -> Cache {
         let sets = config.sets();
         assert!(sets <= u32::MAX as usize);
@@ -143,6 +153,7 @@ impl Cache {
         }
     }
 
+    /// The cache's geometry.
     pub fn config(&self) -> CacheConfig {
         self.config
     }

@@ -13,9 +13,13 @@
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum VecWidth {
     #[default]
+    /// Scalar FP32.
     Scalar,
+    /// 128-bit SSE (4 lanes).
     V128,
+    /// 256-bit AVX2 (8 lanes).
     V256,
+    /// 512-bit AVX-512 (16 lanes).
     V512,
 }
 
@@ -30,6 +34,7 @@ impl VecWidth {
         }
     }
 
+    /// Every width, narrowest first.
     pub fn all() -> [VecWidth; 4] {
         [VecWidth::Scalar, VecWidth::V128, VecWidth::V256, VecWidth::V512]
     }

@@ -19,10 +19,13 @@ use super::LINE;
 /// Cache geometry + prefetcher for the whole hierarchy.
 #[derive(Clone, Copy, Debug)]
 pub struct HierarchyConfig {
+    /// Per-core L1 data cache.
     pub l1: CacheConfig,
+    /// Per-core L2 cache.
     pub l2: CacheConfig,
     /// Per-socket shared LLC.
     pub llc: CacheConfig,
+    /// The L2 stream prefetcher.
     pub prefetch: PrefetchConfig,
 }
 
@@ -41,8 +44,11 @@ impl HierarchyConfig {
 /// Aggregated outcome of simulating one measured region.
 #[derive(Clone, Debug, Default)]
 pub struct TrafficStats {
+    /// Aggregated per-thread L1 counters.
     pub l1: CacheStats,
+    /// Aggregated per-thread L2 counters.
     pub l2: CacheStats,
+    /// Per-socket LLC counters, merged.
     pub llc: CacheStats,
     /// Lines that missed LLC on a *demand* access (what an LLC-miss-based
     /// traffic methodology would count — §2.4's under-estimate).
@@ -77,10 +83,12 @@ impl TrafficStats {
         self.imc.iter().map(|c| c.total_bytes()).sum()
     }
 
+    /// Total IMC read bytes.
     pub fn imc_read_bytes(&self) -> u64 {
         self.imc.iter().map(|c| c.read_bytes()).sum()
     }
 
+    /// Total IMC write bytes.
     pub fn imc_write_bytes(&self) -> u64 {
         self.imc.iter().map(|c| c.write_bytes()).sum()
     }
@@ -189,6 +197,8 @@ pub struct MemorySystem {
 const CHUNK: u64 = 1024;
 
 impl MemorySystem {
+    /// Memory system for `nodes` NUMA nodes and up to `max_threads`
+    /// hardware threads.
     pub fn new(config: HierarchyConfig, nodes: usize, max_threads: usize) -> MemorySystem {
         assert!(nodes > 0 && max_threads > 0);
         MemorySystem {
@@ -207,10 +217,12 @@ impl MemorySystem {
         }
     }
 
+    /// The hierarchy geometry.
     pub fn config(&self) -> HierarchyConfig {
         self.config
     }
 
+    /// NUMA node count.
     pub fn nodes(&self) -> usize {
         self.nodes
     }
@@ -461,6 +473,7 @@ impl MemorySystem {
         &mut self.imc
     }
 
+    /// The per-node IMC counter bank.
     pub fn imc(&self) -> &ImcBank {
         &self.imc
     }

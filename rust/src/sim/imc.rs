@@ -24,14 +24,17 @@ pub struct ImcCounters {
 }
 
 impl ImcCounters {
+    /// Read traffic in bytes.
     pub fn read_bytes(&self) -> u64 {
         self.read_lines * LINE
     }
 
+    /// Write traffic in bytes.
     pub fn write_bytes(&self) -> u64 {
         self.write_lines * LINE
     }
 
+    /// Total traffic in bytes.
     pub fn total_bytes(&self) -> u64 {
         self.read_bytes() + self.write_bytes()
     }
@@ -47,6 +50,7 @@ pub struct ImcBank {
 }
 
 impl ImcBank {
+    /// One zeroed counter set per node.
     pub fn new(nodes: usize) -> ImcBank {
         ImcBank {
             counters: vec![ImcCounters::default(); nodes],
@@ -54,14 +58,17 @@ impl ImcBank {
         }
     }
 
+    /// Node count.
     pub fn nodes(&self) -> usize {
         self.counters.len()
     }
 
+    /// Count read CAS lines on `node`.
     pub fn record_read(&mut self, node: usize, lines: u64) {
         self.counters[node].read_lines += lines;
     }
 
+    /// Count write CAS lines on `node`.
     pub fn record_write(&mut self, node: usize, lines: u64) {
         self.counters[node].write_lines += lines;
     }
@@ -95,6 +102,7 @@ impl ImcBank {
         sum
     }
 
+    /// Zero every node's counters.
     pub fn reset(&mut self) {
         for c in &mut self.counters {
             *c = ImcCounters::default();

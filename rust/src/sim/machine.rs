@@ -16,12 +16,19 @@ use crate::util::toml_lite::Doc;
 /// Full static description of a simulated platform.
 #[derive(Clone, Debug)]
 pub struct MachineConfig {
+    /// Preset/config name, e.g. `xeon_6248_2s`.
     pub name: String,
+    /// Socket (NUMA node) count.
     pub sockets: usize,
+    /// Physical cores per socket.
     pub cores_per_socket: usize,
+    /// The core issue model.
     pub core: CoreConfig,
+    /// Cache geometry and prefetcher.
     pub hierarchy: HierarchyConfig,
+    /// DRAM channel configuration.
     pub dram: DramConfig,
+    /// NUMA topology factors.
     pub numa: NumaConfig,
     /// Thread-synchronisation overhead coefficient: runtime is multiplied
     /// by `1 + sync_coeff · log2(threads)` for multi-threaded runs.
@@ -277,7 +284,9 @@ impl MachineConfig {
 /// map.
 #[derive(Clone, Debug)]
 pub struct Region {
+    /// Allocation label (tensor name).
     pub name: String,
+    /// Page-to-node mapping for the range.
     pub map: PageMap,
 }
 
@@ -293,6 +302,7 @@ pub struct AddressSpace {
 }
 
 impl AddressSpace {
+    /// Empty address space.
     pub fn new() -> AddressSpace {
         // Start above the zero page to catch stray null-ish addresses.
         AddressSpace { regions: Vec::new(), next: PAGE, last_region: 0 }
@@ -330,6 +340,7 @@ impl AddressSpace {
         0
     }
 
+    /// Every live allocation, in allocation order.
     pub fn regions(&self) -> &[Region] {
         &self.regions
     }
@@ -344,12 +355,16 @@ impl AddressSpace {
 
 /// A live machine: config + memory system + address space.
 pub struct Machine {
+    /// Platform parameters.
     pub config: MachineConfig,
+    /// The cache/IMC memory system.
     pub memory: MemorySystem,
+    /// The machine's virtual address space.
     pub space: AddressSpace,
 }
 
 impl Machine {
+    /// A fresh machine for `config`.
     pub fn new(config: MachineConfig) -> Machine {
         let memory = MemorySystem::new(config.hierarchy, config.sockets, config.cores());
         Machine { config, memory, space: AddressSpace::new() }

@@ -38,6 +38,7 @@ pub struct NumaConfig {
 }
 
 impl NumaConfig {
+    /// The paper testbed's two-node topology.
     pub fn two_socket() -> NumaConfig {
         NumaConfig {
             nodes: 2,
@@ -47,6 +48,7 @@ impl NumaConfig {
         }
     }
 
+    /// Degenerate single-node topology (no remote effects).
     pub fn single_node() -> NumaConfig {
         NumaConfig {
             nodes: 1,
@@ -64,7 +66,9 @@ impl NumaConfig {
 /// this address" for traffic attribution.
 #[derive(Clone, Debug)]
 pub struct PageMap {
+    /// First address of the region.
     pub base: u64,
+    /// Region size.
     pub bytes: u64,
     policy: MemPolicy,
     nodes: usize,
@@ -73,6 +77,7 @@ pub struct PageMap {
 }
 
 impl PageMap {
+    /// Map `bytes` from `base` under `policy` across `nodes`.
     pub fn new(base: u64, bytes: u64, policy: MemPolicy, nodes: usize) -> PageMap {
         assert!(nodes > 0 && nodes <= u8::MAX as usize);
         if let MemPolicy::BindNode(n) = policy {
@@ -91,6 +96,7 @@ impl PageMap {
         }
     }
 
+    /// Whether `addr` falls inside the region.
     pub fn contains(&self, addr: u64) -> bool {
         addr >= self.base && addr < self.base + self.bytes
     }
@@ -164,6 +170,7 @@ impl Placement {
         Placement { thread_nodes: vec![node; threads], pinned: false }
     }
 
+    /// Thread count.
     pub fn threads(&self) -> usize {
         self.thread_nodes.len()
     }

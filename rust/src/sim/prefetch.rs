@@ -42,6 +42,7 @@ impl Default for PrefetchConfig {
 }
 
 impl PrefetchConfig {
+    /// A configuration with prefetching off (the S2.4 ladder).
     pub fn disabled() -> Self {
         PrefetchConfig { enabled: false, ..Default::default() }
     }
@@ -75,10 +76,12 @@ pub struct Prefetcher {
 }
 
 impl Prefetcher {
+    /// Prefetcher with `config`, no trained streams.
     pub fn new(config: PrefetchConfig) -> Prefetcher {
         Prefetcher { config, trackers: Vec::new(), clock: 0, last_hit: 0, issued: 0 }
     }
 
+    /// The prefetcher's configuration.
     pub fn config(&self) -> PrefetchConfig {
         self.config
     }

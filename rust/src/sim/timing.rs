@@ -17,8 +17,30 @@ use super::numa::Placement;
 /// What limited the runtime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Bound {
+    /// The compute model's time dominated (right of the ridge).
     Compute,
+    /// The memory model's time dominated (left of the ridge).
     Memory,
+}
+
+impl Bound {
+    /// Stable lowercase label, used by reports and by the persistent
+    /// cell cache's JSON records.
+    pub fn label(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+        }
+    }
+
+    /// Inverse of [`Bound::label`].
+    pub fn parse(s: &str) -> Option<Bound> {
+        match s {
+            "compute" => Some(Bound::Compute),
+            "memory" => Some(Bound::Memory),
+            _ => None,
+        }
+    }
 }
 
 /// A runtime estimate with its decomposition.

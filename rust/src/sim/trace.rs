@@ -30,10 +30,15 @@ pub enum AccessKind {
 /// `base`, each `stride` bytes after the previous one.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AccessRun {
+    /// First access address.
     pub base: u64,
+    /// Byte offset between consecutive accesses.
     pub stride: i64,
+    /// Number of accesses.
     pub count: u64,
+    /// Bytes per access.
     pub size: u32,
+    /// Load, store, NT store or SW prefetch.
     pub kind: AccessKind,
 }
 
@@ -93,14 +98,17 @@ impl Iterator for LineIter {
 /// simulated thread executes it.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// Ordered access runs.
     pub runs: Vec<AccessRun>,
 }
 
 impl Trace {
+    /// Empty trace.
     pub fn new() -> Trace {
         Trace { runs: Vec::new() }
     }
 
+    /// Append a run (empty runs are dropped).
     pub fn push(&mut self, run: AccessRun) {
         if run.count > 0 {
             self.runs.push(run);

@@ -36,6 +36,7 @@ impl TempDir {
         TempDir { path }
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }

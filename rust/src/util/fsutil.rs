@@ -2,19 +2,44 @@
 //! discovery for `artifacts/`.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
 /// Write `content` to `path`, creating parent directories. Writes through
 /// a temp file + rename so concurrent readers never observe a torn file.
+///
+/// The temp name is fixed (`<path>.tmp~`), so this is safe against
+/// concurrent *readers* but not against two *writers* racing on the same
+/// `path` — report emission owns its output directory, so that cannot
+/// happen there. Writers that may race (the cell cache under
+/// `--jobs N` or several processes) use [`write_atomic_unique`].
 pub fn write_atomic(path: &Path, content: &str) -> Result<()> {
+    write_via_tmp(path, content, &path.with_extension("tmp~"))
+}
+
+/// As [`write_atomic`], but with a temp name unique per process *and*
+/// per call (pid × process-wide counter), so any number of concurrent
+/// writers — threads or processes — can target the same `path` without
+/// clobbering each other's staging file. The last rename wins, and every
+/// observable state of `path` is some writer's complete content.
+pub fn write_atomic_unique(path: &Path, content: &str) -> Result<()> {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp{}-{n}~", std::process::id()));
+    write_via_tmp(path, content, &tmp)
+}
+
+fn write_via_tmp(path: &Path, content: &str, tmp: &Path) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
     }
-    let tmp = path.with_extension("tmp~");
-    std::fs::write(&tmp, content).with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    std::fs::write(tmp, content).with_context(|| format!("writing {}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(tmp, path) {
+        let _ = std::fs::remove_file(tmp);
+        return Err(anyhow::Error::new(e).context(format!("renaming into {}", path.display())));
+    }
     Ok(())
 }
 
@@ -49,6 +74,36 @@ mod tests {
         assert_eq!(read_to_string(&path).unwrap(), "hello");
         write_atomic(&path, "world").unwrap();
         assert_eq!(read_to_string(&path).unwrap(), "world");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unique_write_survives_concurrent_writers() {
+        let dir = std::env::temp_dir().join(format!(
+            "dlroofline-fsutil-conc-{}",
+            std::process::id()
+        ));
+        let path = dir.join("entry.json");
+        std::thread::scope(|scope| {
+            for i in 0..8 {
+                let path = path.clone();
+                scope.spawn(move || {
+                    // All writers write a complete document; any of them
+                    // is an acceptable final state.
+                    write_atomic_unique(&path, &format!("{{\"writer\":{i}}}"))
+                        .expect("concurrent atomic write");
+                });
+            }
+        });
+        let body = read_to_string(&path).unwrap();
+        assert!(body.starts_with("{\"writer\":"), "torn write observed: {body}");
+        // No staging files may be left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "leaked temp files: {leftovers:?}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -16,11 +16,17 @@ use anyhow::{anyhow, bail, Result};
 /// deterministic — important for golden-file tests.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (JSON numbers are f64 here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An ordered array.
     Arr(Vec<Json>),
+    /// An object with sorted keys (deterministic emission).
     Obj(BTreeMap<String, Json>),
 }
 

@@ -13,14 +13,20 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// Interpret as string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -28,6 +34,7 @@ impl Value {
         }
     }
 
+    /// Interpret as integer.
     pub fn as_i64(&self) -> Result<i64> {
         match self {
             Value::Int(x) => Ok(*x),
@@ -35,6 +42,7 @@ impl Value {
         }
     }
 
+    /// Interpret as non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_i64()?;
         usize::try_from(x).map_err(|_| anyhow!("expected non-negative integer, got {x}"))
@@ -49,6 +57,7 @@ impl Value {
         }
     }
 
+    /// Interpret as bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -56,6 +65,7 @@ impl Value {
         }
     }
 
+    /// Interpret as array.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -68,6 +78,7 @@ impl Value {
 /// Keys written before any section header live under the empty path `""`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Doc {
+    /// `[section]` tables, each a key-value map.
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 

@@ -1,0 +1,269 @@
+//! Integration tests for the persistent cell cache (ISSUE 3 tentpole):
+//! the warm-sweep property (a second sweep over an unchanged plan
+//! simulates **zero** cells and writes a byte-identical `run.json`),
+//! incremental plan edits, and robustness against corrupted, truncated,
+//! version-mismatched and concurrently-written records.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use dlroofline::coordinator::plan::{self, CellFate};
+use dlroofline::coordinator::runner::sweep_and_write_cached;
+use dlroofline::coordinator::store::{CellStore, Lookup, STORE_SCHEMA_VERSION};
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::spec;
+use dlroofline::testutil::TempDir;
+use dlroofline::util::json::Json;
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+/// Every regular file under `dir` (recursive), relative path → bytes.
+fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let entry = entry.unwrap();
+            let path = entry.path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn warm_sweep_simulates_zero_cells_and_is_byte_identical() {
+    let cache = TempDir::new("cache-warm");
+    let params = quick();
+    let ids = ["f3", "f6"];
+
+    let out_cold = TempDir::new("out-cold");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, cold) =
+        sweep_and_write_cached(&ids, &params, out_cold.path(), false, 2, Some(&store)).unwrap();
+    let cold_usage = cold.store.as_ref().unwrap();
+    assert_eq!(cold_usage.hits, 0);
+    assert_eq!(cold_usage.simulated, 5); // f3: 3 cold conv cells, f6: 2
+
+    // Second process (fresh store handle), unchanged plan: zero
+    // simulations, and every written byte — reports, CSVs and the
+    // run.json manifest — identical.
+    let out_warm = TempDir::new("out-warm");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, warm) =
+        sweep_and_write_cached(&ids, &params, out_warm.path(), false, 2, Some(&store)).unwrap();
+    let warm_usage = warm.store.as_ref().unwrap();
+    assert_eq!(warm_usage.simulated, 0, "warm sweep must simulate nothing");
+    assert_eq!(warm_usage.hits, 5);
+    assert_eq!(warm_usage.stale, 0);
+    assert!(warm_usage.fates.values().all(|f| *f == CellFate::Hit));
+
+    let a = snapshot(out_cold.path());
+    let b = snapshot(out_warm.path());
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "cold and warm sweeps wrote different file sets"
+    );
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "{name} differs between cold and warm sweep");
+    }
+    assert!(a.contains_key("run.json"), "sweep must write run.json: {:?}", a.keys());
+}
+
+#[test]
+fn plan_edit_resimulates_exactly_the_new_cells() {
+    let cache = TempDir::new("cache-edit");
+    let params = quick();
+    let store = CellStore::open(cache.path()).unwrap();
+
+    let out_a = TempDir::new("out-edit-a");
+    sweep_and_write_cached(&["f3"], &params, out_a.path(), false, 1, Some(&store)).unwrap();
+
+    // Editing the plan to add f6 re-simulates exactly f6's two cells.
+    let out_b = TempDir::new("out-edit-b");
+    let (_, edited) =
+        sweep_and_write_cached(&["f3", "f6"], &params, out_b.path(), false, 1, Some(&store))
+            .unwrap();
+    let usage = edited.store.as_ref().unwrap();
+    assert_eq!(usage.hits, 3, "f3's cells must come from disk");
+    assert_eq!(usage.simulated, 2, "only f6's cells may simulate");
+    assert_eq!(usage.stale, 0);
+
+    // Changing a workload parameter changes every key: nothing hits.
+    let out_c = TempDir::new("out-edit-c");
+    let other = ExperimentParams { batch: Some(2), ..Default::default() };
+    let (_, rebatched) =
+        sweep_and_write_cached(&["f3"], &other, out_c.path(), false, 1, Some(&store)).unwrap();
+    let usage = rebatched.store.as_ref().unwrap();
+    assert_eq!(usage.hits, 0);
+    assert_eq!(usage.simulated, 3);
+}
+
+/// The on-disk record path for one cell of `id`.
+fn entry_path_of(
+    cache: &Path,
+    id: &str,
+    cell_index: usize,
+    params: &ExperimentParams,
+) -> std::path::PathBuf {
+    let cells = spec::find(id).unwrap().cells();
+    let key = cells[cell_index].key(params);
+    cache
+        .join("cells")
+        .join(format!("{}.json", dlroofline::util::hash::hex64(key)))
+}
+
+#[test]
+fn corrupted_entry_falls_back_to_resimulation() {
+    let cache = TempDir::new("cache-corrupt");
+    let params = quick();
+    let store = CellStore::open(cache.path()).unwrap();
+    let out_a = TempDir::new("out-corrupt-a");
+    sweep_and_write_cached(&["f6"], &params, out_a.path(), false, 1, Some(&store)).unwrap();
+
+    // Truncate one record mid-document.
+    let victim = entry_path_of(cache.path(), "f6", 0, &params);
+    let body = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &body[..body.len() / 3]).unwrap();
+
+    let out_b = TempDir::new("out-corrupt-b");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, again) =
+        sweep_and_write_cached(&["f6"], &params, out_b.path(), false, 1, Some(&store)).unwrap();
+    let usage = again.store.as_ref().unwrap();
+    assert_eq!(usage.stale, 1, "truncated record must count stale");
+    assert_eq!(usage.hits, 1);
+    assert_eq!(usage.simulated, 1);
+
+    // The stale record was repaired in place: a third sweep is all hits,
+    // and the outputs never drifted.
+    let out_c = TempDir::new("out-corrupt-c");
+    let (_, healed) =
+        sweep_and_write_cached(&["f6"], &params, out_c.path(), false, 1, Some(&store)).unwrap();
+    assert_eq!(healed.store.as_ref().unwrap().hits, 2);
+    assert_eq!(snapshot(out_a.path()), snapshot(out_b.path()));
+    assert_eq!(snapshot(out_a.path()), snapshot(out_c.path()));
+}
+
+#[test]
+fn version_mismatched_entry_is_ignored_and_overwritten() {
+    let cache = TempDir::new("cache-version");
+    let params = quick();
+    let store = CellStore::open(cache.path()).unwrap();
+    let out_a = TempDir::new("out-version-a");
+    sweep_and_write_cached(&["f6"], &params, out_a.path(), false, 1, Some(&store)).unwrap();
+
+    // Rewrite one record as if a future build had written it.
+    let victim = entry_path_of(cache.path(), "f6", 1, &params);
+    let doc = Json::parse(&std::fs::read_to_string(&victim).unwrap()).unwrap();
+    if let Json::Obj(mut map) = doc {
+        map.insert(
+            "schema_version".into(),
+            Json::num((STORE_SCHEMA_VERSION + 1) as f64),
+        );
+        std::fs::write(&victim, Json::Obj(map).to_string_pretty()).unwrap();
+    }
+
+    let out_b = TempDir::new("out-version-b");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, again) =
+        sweep_and_write_cached(&["f6"], &params, out_b.path(), false, 1, Some(&store)).unwrap();
+    let usage = again.store.as_ref().unwrap();
+    assert_eq!((usage.hits, usage.stale, usage.simulated), (1, 1, 1));
+    assert_eq!(snapshot(out_a.path()), snapshot(out_b.path()));
+
+    // The overwrite restored the current schema version.
+    match CellStore::open(cache.path()).unwrap().lookup(
+        spec::find("f6").unwrap().cells()[1].key(&params),
+    ) {
+        Lookup::Hit(_) => {}
+        other => panic!("expected repaired record, got {other:?}"),
+    }
+}
+
+#[test]
+fn cache_write_failure_does_not_fail_the_sweep() {
+    // An unwritable cache costs future hits, never this sweep's
+    // results: writes are best-effort and surfaced via StoreUsage.
+    let cache = TempDir::new("cache-unwritable");
+    let store = CellStore::open(cache.path()).unwrap();
+    // Sabotage: replace the cells directory with a regular file so every
+    // record write (and lookup) fails regardless of process privileges.
+    std::fs::remove_dir_all(cache.path().join("cells")).unwrap();
+    std::fs::write(cache.path().join("cells"), "not a directory").unwrap();
+
+    let out = TempDir::new("out-unwritable");
+    let (_, sweep) =
+        sweep_and_write_cached(&["f6"], &quick(), out.path(), false, 1, Some(&store)).unwrap();
+    let usage = sweep.store.as_ref().unwrap();
+    assert_eq!(usage.simulated, 2, "{usage:?}");
+    assert_eq!(usage.hits, 0);
+    assert!(usage.write_errors >= 2, "record writes must be counted: {usage:?}");
+    assert!(usage.first_write_error.is_some());
+    // The sweep's outputs were written normally.
+    assert!(out.path().join("run.json").exists());
+    assert!(out.path().join("f6.md").exists());
+}
+
+#[test]
+fn concurrent_store_sharing_executions_stay_consistent() {
+    // Two plans with overlapping cells execute concurrently against one
+    // store with --jobs parallelism; afterwards every record is valid
+    // and a warm sweep hits everything.
+    let cache = TempDir::new("cache-conc");
+    let params = quick();
+    let store = CellStore::open(cache.path()).unwrap();
+    std::thread::scope(|scope| {
+        let store = &store;
+        let params = &params;
+        scope.spawn(move || {
+            plan::execute_with_store(&["f3", "g1"], params, 4, true, Some(store)).unwrap();
+        });
+        scope.spawn(move || {
+            plan::execute_with_store(&["g1", "f6"], params, 4, true, Some(store)).unwrap();
+        });
+    });
+    let warm = plan::execute_with_store(&["f3", "f6", "g1"], &params, 2, true, Some(&store))
+        .unwrap();
+    let usage = warm.store.as_ref().unwrap();
+    assert_eq!(usage.simulated, 0, "all cells must already be on disk: {usage:?}");
+    assert_eq!(usage.stale, 0);
+    assert_eq!(usage.hits, 20); // g1's 18 ∪ f3's 3 (shared) + f6's 2
+}
+
+#[test]
+fn cache_is_invisible_versus_uncached_sweep() {
+    // A cached sweep's outputs are byte-identical to an uncached one —
+    // including when everything is served from disk.
+    let params = quick();
+    let out_plain = TempDir::new("out-plain");
+    let (_, plain) = dlroofline::coordinator::runner::sweep_and_write(
+        &["f6"],
+        &params,
+        out_plain.path(),
+        false,
+        1,
+    )
+    .unwrap();
+    assert!(plain.store.is_none());
+
+    let cache = TempDir::new("cache-invisible");
+    let store = CellStore::open(cache.path()).unwrap();
+    for label in ["cold", "warm"] {
+        let out = TempDir::new(&format!("out-invisible-{label}"));
+        sweep_and_write_cached(&["f6"], &params, out.path(), false, 1, Some(&store)).unwrap();
+        assert_eq!(
+            snapshot(out_plain.path()),
+            snapshot(out.path()),
+            "{label} cached sweep diverged from uncached output"
+        );
+    }
+}
