@@ -4,7 +4,14 @@
 //! LLC-resident rescans, 20-thread interleaving).
 //!
 //! ROADMAP.md's simulator hot-path item tracks this number across
-//! optimisation steps.
+//! optimisation steps; the run also writes `BENCH_sim_hotpath.json` at
+//! the repo root so the trajectory is machine-readable across PRs.
+//!
+//! The `*_scalar_ref` series time the retained pre-batching walk
+//! (`MemorySystem::run_reference`, per-line probes + `dyn` dispatch) on
+//! the two ISSUE-target cases, so a single run records the speedup of
+//! the SoA/batch/monomorphization pass (§Perf step 6) as the ratio to
+//! the matching batched series.
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};
@@ -23,6 +30,16 @@ fn strided_trace(lines: u64, stride: i64) -> Trace {
     t
 }
 
+fn twenty_thread_traces() -> Vec<Trace> {
+    (0..20)
+        .map(|i| {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous((i as u64) << 26, 8 << 20, AccessKind::Load));
+            t
+        })
+        .collect()
+}
+
 fn main() {
     let cfg = HierarchyConfig::xeon_6248();
     let mut b = Bencher::new("sim_hotpath");
@@ -34,7 +51,12 @@ fn main() {
         let mut ms = MemorySystem::new(cfg, 2, 1);
         b.bench("stream_64MiB_cold", Throughput::Elements(probes), || {
             ms.flush_all();
-            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+            ms.run_with(std::slice::from_ref(&tr), &Placement::bound(1, 0), |_a, _t| 0)
+                .probes
+        });
+        b.bench("stream_64MiB_cold_scalar_ref", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run_reference(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
                 .probes
         });
     }
@@ -44,9 +66,9 @@ fn main() {
         let tr = streaming_trace(16);
         let probes = tr.line_probes() as f64;
         let mut ms = MemorySystem::new(cfg, 2, 1);
-        ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0);
+        ms.run_with(std::slice::from_ref(&tr), &Placement::bound(1, 0), |_a, _t| 0);
         b.bench("rescan_16MiB_warm", Throughput::Elements(probes), || {
-            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+            ms.run_with(std::slice::from_ref(&tr), &Placement::bound(1, 0), |_a, _t| 0)
                 .probes
         });
     }
@@ -58,27 +80,28 @@ fn main() {
         let mut ms = MemorySystem::new(cfg, 2, 1);
         b.bench("strided_4k_1Mi", Throughput::Elements(probes), || {
             ms.flush_all();
-            ms.run(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
+            ms.run_with(std::slice::from_ref(&tr), &Placement::bound(1, 0), |_a, _t| 0)
                 .probes
         });
     }
 
     // 20-thread interleaved streams (the one-socket figures).
     {
-        let traces: Vec<Trace> = (0..20)
-            .map(|i| {
-                let mut t = Trace::new();
-                t.push(AccessRun::contiguous((i as u64) << 26, 8 << 20, AccessKind::Load));
-                t
-            })
-            .collect();
+        let traces = twenty_thread_traces();
         let probes: f64 = traces.iter().map(|t| t.line_probes() as f64).sum();
         let mut ms = MemorySystem::new(cfg, 2, 20);
         b.bench("threads20_8MiB_each", Throughput::Elements(probes), || {
             ms.flush_all();
-            ms.run(&traces, &Placement::bound(20, 0), &mut |_a, _t| 0).probes
+            ms.run_with(&traces, &Placement::bound(20, 0), |_a, _t| 0).probes
+        });
+        b.bench("threads20_8MiB_each_scalar_ref", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run_reference(&traces, &Placement::bound(20, 0), &mut |_a, _t| 0)
+                .probes
         });
     }
 
     b.finish();
+    let path = b.emit_json().expect("write bench JSON");
+    println!("wrote {}", path.display());
 }

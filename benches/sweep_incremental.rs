@@ -11,7 +11,9 @@
 //!   or parameter sweep reaches after its first run.
 //!
 //! The warm/no-store ratio is the amortization the ROADMAP item
-//! promised: repeated sweeps cost disk reads, not simulations.
+//! promised: repeated sweeps cost disk reads, not simulations. The run
+//! also writes `BENCH_sweep_incremental.json` at the repo root so the
+//! trajectory is machine-readable across PRs.
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::coordinator::plan;
@@ -50,4 +52,6 @@ fn main() {
     });
 
     b.finish();
+    let path = b.emit_json().expect("write bench JSON");
+    println!("wrote {}", path.display());
 }

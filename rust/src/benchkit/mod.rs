@@ -9,10 +9,30 @@
 //! repeated executions, averaged, with optional warm-up ("warm caches")
 //! pre-runs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::util::human::{fmt_seconds, fmt_si, pad_left, pad_right};
+use crate::util::json::Json;
 use crate::util::stats::{reject_outliers, Summary};
+
+/// Schema version of the `BENCH_<group>.json` documents emitted by
+/// [`Bencher::write_json`].
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Identity of the benching host, embedded in emitted bench JSON so
+/// the perf trajectory across PRs compares like with like (numbers from
+/// different machines are different series).
+pub fn host_fingerprint() -> Json {
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    Json::obj(vec![
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("cpus", Json::num(cpus as f64)),
+    ])
+}
 
 /// Benchmark configuration.
 #[derive(Clone, Debug)]
@@ -212,6 +232,64 @@ impl Bencher {
         out
     }
 
+    /// The group's results as a machine-readable JSON document:
+    /// `{schema_version, group, quick, host, benches: {name → {mean_s,
+    /// stddev_s, p05_s, p95_s, samples, unit, rate}}}`. `rate` is the
+    /// mean throughput in `unit` (elements, bytes or FLOPs per second),
+    /// or `null` for time-only benches; `quick` records whether the run
+    /// used the shortened `DLROOFLINE_BENCH_QUICK` profile, so smoke
+    /// numbers aren't mistaken for trajectory points.
+    pub fn to_json(&self) -> Json {
+        let benches = self
+            .results
+            .iter()
+            .map(|m| {
+                let (unit, rate) = match (m.rate(), m.throughput) {
+                    (Some(r), Throughput::Bytes(_)) => ("B/s", Json::num(r)),
+                    (Some(r), Throughput::Flops(_)) => ("FLOP/s", Json::num(r)),
+                    (Some(r), Throughput::Elements(_)) => ("elem/s", Json::num(r)),
+                    _ => ("", Json::Null),
+                };
+                let fields = Json::obj(vec![
+                    ("mean_s", Json::num(m.time.mean)),
+                    ("stddev_s", Json::num(m.time.stddev)),
+                    ("p05_s", Json::num(m.time.p05)),
+                    ("p95_s", Json::num(m.time.p95)),
+                    ("samples", Json::num(m.time.n as f64)),
+                    ("unit", Json::str(unit)),
+                    ("rate", rate),
+                ]);
+                (m.name.clone(), fields)
+            })
+            .collect();
+        let quick = std::env::var("DLROOFLINE_BENCH_QUICK").as_deref() == Ok("1");
+        Json::obj(vec![
+            ("schema_version", Json::num(BENCH_SCHEMA_VERSION as f64)),
+            ("group", Json::str(self.group.as_str())),
+            ("quick", Json::Bool(quick)),
+            ("host", host_fingerprint()),
+            ("benches", Json::Obj(benches)),
+        ])
+    }
+
+    /// Write [`Bencher::to_json`] to `BENCH_<group>.json` under `dir`
+    /// (atomically), returning the path.
+    pub fn write_json(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        crate::util::fsutil::write_atomic(&path, &self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Emit the bench JSON where the perf trajectory is tracked: the
+    /// `DLROOFLINE_BENCH_OUT` directory if set, else the current
+    /// directory (the repo root under `cargo bench`).
+    pub fn emit_json(&self) -> anyhow::Result<PathBuf> {
+        let dir = std::env::var("DLROOFLINE_BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        self.write_json(&dir)
+    }
+
     /// Render CSV (for external tracking/plotting tooling).
     pub fn csv(&self) -> String {
         let mut out = String::from("group,benchmark,mean_s,stddev_s,p05_s,p95_s,samples,rate\n");
@@ -278,5 +356,36 @@ mod tests {
         let mut b = Bencher::new("u");
         let m = b.record("f", Throughput::Flops(2e9), &[1.0]);
         assert!(m.rate_str().contains("GFLOP/s"), "{}", m.rate_str());
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let mut b = Bencher::new("grp");
+        b.record("probe", Throughput::Elements(1e6), &[0.5, 0.5]);
+        b.record("timed", Throughput::None, &[1.0]);
+        let doc = b.to_json();
+        assert_eq!(doc.get("group").and_then(|g| g.as_str().ok()), Some("grp"));
+        assert!(doc.get("host").and_then(|h| h.get("arch")).is_some());
+        let benches = doc.get("benches").expect("benches object");
+        let probe = benches.get("probe").expect("probe entry");
+        assert_eq!(probe.get("unit").and_then(|u| u.as_str().ok()), Some("elem/s"));
+        assert_eq!(probe.get("rate").and_then(|r| r.as_f64().ok()), Some(2e6));
+        let timed = benches.get("timed").expect("timed entry");
+        assert_eq!(timed.get("rate"), Some(&Json::Null));
+        // The document round-trips through the parser.
+        let text = doc.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn write_json_lands_as_bench_group_file() {
+        let dir = crate::testutil::TempDir::new("benchkit-json");
+        let mut b = Bencher::new("sim_hotpath");
+        b.record("stream", Throughput::Elements(1e6), &[0.25]);
+        let path = b.write_json(dir.path()).unwrap();
+        assert!(path.ends_with("BENCH_sim_hotpath.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert!(doc.get("benches").and_then(|bs| bs.get("stream")).is_some());
     }
 }

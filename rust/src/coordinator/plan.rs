@@ -111,6 +111,16 @@ pub struct Expansion {
     pub stats: PlanStats,
 }
 
+impl Expansion {
+    /// The unique cells the plan would simulate, in plan order — one
+    /// `(content hash, cell)` pair per non-`reused` entry of
+    /// [`Expansion::cells`]. The parity suite uses this to seed a cell
+    /// store with independently produced measurements.
+    pub fn unique_cells(&self) -> &[(u64, spec::Cell)] {
+        &self.unique
+    }
+}
+
 /// Expand `ids` into a deduplicated cell plan. Fails on unknown ids;
 /// cells the machine cannot express are counted as skipped, not fatal.
 pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {

@@ -414,7 +414,7 @@ pub(crate) fn exp_binding_artifact(params: &ExperimentParams) -> Result<Experime
     let space = &mut machine2.space;
     let traffic = machine2
         .memory
-        .run(&traces, &migrated_placement, &mut |a, t| space.node_of(a, t));
+        .run_with(&traces, &migrated_placement, |a, t| space.node_of(a, t));
     let est = estimate_phased(&machine2.config, &kernel.phases(), &traffic, &migrated_placement);
 
     let roofline = roofline_for(params, &one_socket);

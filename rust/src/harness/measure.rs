@@ -20,8 +20,9 @@ use crate::sim::cache::CacheStats;
 use crate::sim::hierarchy::TrafficStats;
 use crate::sim::imc::ImcCounters;
 use crate::sim::machine::Machine;
-use crate::sim::numa::Placement;
+use crate::sim::numa::{NodeCache, Placement};
 use crate::sim::timing::{estimate_phased, Bound, RuntimeEstimate};
+use crate::sim::trace::Trace;
 use crate::util::json::Json;
 
 use super::cache_state::CacheState;
@@ -256,6 +257,32 @@ fn traffic_from_json(v: &Json) -> Result<TrafficStats> {
     })
 }
 
+/// Drive one simulated run for the measurement pipeline.
+///
+/// The production path goes through [`crate::sim::MemorySystem::run_with`]
+/// — monomorphized over a resolver that memoizes page→node answers in
+/// `pages` (§Perf step 6). The reference path goes through
+/// [`crate::sim::MemorySystem::run_reference`] with the bare `dyn`
+/// resolver, exactly as the pre-batching pipeline did.
+fn run_sim(
+    machine: &mut Machine,
+    pages: &mut NodeCache,
+    traces: &[Trace],
+    placement: &Placement,
+    reference: bool,
+) -> TrafficStats {
+    let space = &mut machine.space;
+    if reference {
+        machine.memory.run_reference(traces, placement, &mut |addr, toucher| {
+            space.node_of(addr, toucher)
+        })
+    } else {
+        machine.memory.run_with(traces, placement, |addr, toucher| {
+            pages.node_of(addr, toucher, |a, t| space.node_of(a, t))
+        })
+    }
+}
+
 /// Measure one kernel on the machine under a scenario + cache protocol.
 ///
 /// The machine is reset first (fresh address space and caches); its
@@ -266,12 +293,41 @@ pub fn measure_kernel(
     scenario: &ScenarioSpec,
     cache_state: CacheState,
 ) -> anyhow::Result<KernelMeasurement> {
+    measure_kernel_impl(machine, kernel, scenario, cache_state, false)
+}
+
+/// As [`measure_kernel`], but driving every simulated run through the
+/// retained scalar reference path
+/// ([`crate::sim::MemorySystem::run_reference`]) instead of the batched
+/// pipeline. This is the differential oracle: the parity suite
+/// (`rust/tests/sim_parity.rs`) pins its output bit-identical to
+/// [`measure_kernel`]'s across kernels × scenario presets, and uses it
+/// to produce "old-path" cell-store records.
+pub fn measure_kernel_reference(
+    machine: &mut Machine,
+    kernel: &dyn KernelModel,
+    scenario: &ScenarioSpec,
+    cache_state: CacheState,
+) -> anyhow::Result<KernelMeasurement> {
+    measure_kernel_impl(machine, kernel, scenario, cache_state, true)
+}
+
+fn measure_kernel_impl(
+    machine: &mut Machine,
+    kernel: &dyn KernelModel,
+    scenario: &ScenarioSpec,
+    cache_state: CacheState,
+    reference: bool,
+) -> anyhow::Result<KernelMeasurement> {
     machine.reset();
     let config = machine.config.clone();
     scenario.validate(&config)?;
     let placement = scenario.placement(&config);
     let policy = scenario.mem_policy();
     let nodes = config.sockets;
+    // One page→node memo for the whole pipeline: the address space is
+    // allocated once below and ownership is page-constant afterwards.
+    let mut pages = NodeCache::new();
 
     // 1. Allocate.
     let tensors = kernel.alloc(&mut machine.space, policy, nodes);
@@ -281,11 +337,12 @@ pub fn measure_kernel(
     //    do, and why two-socket runs see remote traffic).
     let init_placement = Placement::bound(1, 0);
     let init_trace = kernel.init_trace(&tensors);
-    let space = &mut machine.space;
-    let init_traffic = machine.memory.run(
+    let init_traffic = run_sim(
+        machine,
+        &mut pages,
         std::slice::from_ref(&init_trace),
         &init_placement,
-        &mut |addr, toucher| space.node_of(addr, toucher),
+        reference,
     );
     // The framework retires no measured FP work (data init is stores).
     let overhead = RunCounters {
@@ -300,19 +357,13 @@ pub fn measure_kernel(
         CacheState::Cold => machine.memory.flush_all(),
         CacheState::Warm => {
             for _ in 0..cache_state.warmup_runs() {
-                let space = &mut machine.space;
-                let _ = machine.memory.run(&traces, &placement, &mut |addr, toucher| {
-                    space.node_of(addr, toucher)
-                });
+                let _ = run_sim(machine, &mut pages, &traces, &placement, reference);
             }
         }
     }
 
     // 4. Full run.
-    let space = &mut machine.space;
-    let traffic = machine.memory.run(&traces, &placement, &mut |addr, toucher| {
-        space.node_of(addr, toucher)
-    });
+    let traffic = run_sim(machine, &mut pages, &traces, &placement, reference);
     let mut fp = FpEventSet::default();
     for phase in kernel.phases() {
         fp.retire_mix(&phase);

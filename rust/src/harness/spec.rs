@@ -56,7 +56,7 @@ use super::experiments::{
     exp_binding_artifact, exp_conv_post, exp_f8_post, exp_p1, exp_p2, exp_v1, exp_v2,
     ExperimentParams, ExperimentResult, FigureGroup,
 };
-use super::measure::{measure_kernel, KernelMeasurement};
+use super::measure::{measure_kernel, measure_kernel_reference, KernelMeasurement};
 use super::scenario::ScenarioSpec;
 
 /// Declarative kernel constructor: which model, at which paper shape.
@@ -269,6 +269,16 @@ impl Cell {
         let mut machine = Machine::new(params.machine.clone());
         let kernel = self.kernel.build(params);
         measure_kernel(&mut machine, kernel.as_ref(), &self.scenario, self.cache)
+    }
+
+    /// As [`Self::simulate`], but through the retained scalar reference
+    /// path ([`crate::harness::measure::measure_kernel_reference`]) —
+    /// the differential parity suite uses this to produce records the
+    /// pre-batching simulator would have written.
+    pub fn simulate_reference(&self, params: &ExperimentParams) -> Result<KernelMeasurement> {
+        let mut machine = Machine::new(params.machine.clone());
+        let kernel = self.kernel.build(params);
+        measure_kernel_reference(&mut machine, kernel.as_ref(), &self.scenario, self.cache)
     }
 }
 

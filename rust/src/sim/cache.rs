@@ -102,41 +102,82 @@ impl FastMod {
     }
 }
 
-/// One way's state, packed so a whole set shares as few host cache
-/// lines as possible (array-of-structures; §Perf step 4). `meta` packs
-/// the LRU stamp in the high bits and the dirty flag in bit 0 — the
-/// stamp dominates comparisons, so `meta` doubles as the LRU key.
-#[derive(Clone, Copy, Debug)]
-struct Way {
-    tag: u64,
-    meta: u64,
+/// One demand miss reported by [`Cache::access_batch`], in probe order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchMiss {
+    /// The line that missed (now installed by the demand fill).
+    pub line: u64,
+    /// Dirty line the fill displaced, to be written down a level.
+    pub dirty_victim: Option<u64>,
 }
 
-impl Way {
-    const EMPTY: Way = Way { tag: INVALID, meta: 0 };
-
-    #[inline(always)]
-    fn dirty(self) -> bool {
-        self.meta & 1 == 1
-    }
+/// One outcome reported by [`Cache::fill_prefetch_batch`], in target
+/// order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefetchFill {
+    /// The prefetch target line.
+    pub line: u64,
+    /// The line was already resident, so the fill was a no-op.
+    pub was_resident: bool,
+    /// Dirty line the fill displaced, to be written down a level.
+    pub dirty_victim: Option<u64>,
 }
 
 /// One cache level.
+///
+/// The tag store is SoA — parallel `tags[]` / `meta[]` arrays rather
+/// than an array of per-way structs — so the hit scan touches a dense
+/// run of tags (≤ 20 × 8 B: one or two host cache lines) and the victim
+/// scan a dense run of LRU stamps, and both ≤ 20-way loops vectorize
+/// (§Perf step 4). `meta` packs the LRU stamp in the high bits and the
+/// dirty flag in bit 0 — the stamp dominates comparisons, so `meta`
+/// doubles as the LRU key; an invalid way holds `tag == INVALID` and
+/// `meta == 0`, which sorts first in victim selection.
 #[derive(Clone, Debug)]
 pub struct Cache {
     config: CacheConfig,
-    /// Retained for diagnostics; `set_mod` carries the hot-path value.
-    #[allow(dead_code)]
-    sets: usize,
     set_mod: FastMod,
-    /// `sets × ways` entries, set-major.
-    ways: Vec<Way>,
+    /// `sets × ways` tags, set-major (parallel to `meta`).
+    tags: Vec<u64>,
+    /// `sets × ways` LRU stamps | dirty bits, set-major.
+    meta: Vec<u64>,
     clock: u64,
     /// Counters accumulated since the last reset.
     pub stats: CacheStats,
 }
 
 const INVALID: u64 = u64::MAX;
+
+/// Position of `needle` in `tags`, scanning every way without an early
+/// exit so the short fixed-length loop vectorizes. Valid tags are unique
+/// within a set and `needle` is a real line address (never `INVALID`),
+/// so at most one way matches.
+#[inline(always)]
+fn find_way(tags: &[u64], needle: u64) -> Option<usize> {
+    let mut hit = usize::MAX;
+    for (w, &t) in tags.iter().enumerate() {
+        if t == needle {
+            hit = w;
+        }
+    }
+    (hit != usize::MAX).then_some(hit)
+}
+
+/// First way with the minimal `meta` — the LRU victim (invalid ways
+/// have `meta == 0` and sort first). The strict `<` keeps the scalar
+/// scan's first-minimum tie-break.
+#[inline(always)]
+fn lru_way(meta: &[u64]) -> usize {
+    let mut victim = 0usize;
+    let mut best = u64::MAX;
+    for (w, &m) in meta.iter().enumerate() {
+        if m < best {
+            best = m;
+            victim = w;
+        }
+    }
+    victim
+}
 
 impl Cache {
     /// Empty cache with `config` geometry.
@@ -145,9 +186,9 @@ impl Cache {
         assert!(sets <= u32::MAX as usize);
         Cache {
             config,
-            sets,
             set_mod: FastMod::new(sets as u32),
-            ways: vec![Way::EMPTY; sets * config.ways],
+            tags: vec![INVALID; sets * config.ways],
+            meta: vec![0; sets * config.ways],
             clock: 0,
             stats: CacheStats::default(),
         }
@@ -158,11 +199,18 @@ impl Cache {
         self.config
     }
 
+    /// Number of sets (diagnostics; the hot path carries the value
+    /// inside the division-free `set_mod`, so nothing is recomputed).
+    pub fn sets(&self) -> usize {
+        self.set_mod.d as usize
+    }
+
     /// Invalidate all lines and clear dirty bits (a "cold caches" reset,
     /// §2.5.1 — the paper overwrote caches with junk; invalidation is the
     /// simulator's equivalent).
     pub fn flush(&mut self) {
-        self.ways.fill(Way::EMPTY);
+        self.tags.fill(INVALID);
+        self.meta.fill(0);
     }
 
     /// Reset statistics without touching contents (used between the
@@ -180,44 +228,55 @@ impl Cache {
         self.set_mod.rem(line_addr as u32) as usize
     }
 
-    #[inline]
-    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
-        let start = set * self.config.ways;
-        start..start + self.config.ways
-    }
-
     /// Probe for `line_addr`; on a hit refresh LRU (and set dirty for
     /// writes). On a miss, install the line (demand fill), evicting the
     /// LRU way. Returns what happened.
     ///
-    /// Hit detection and victim selection share a single scan over the
-    /// ways — this is the simulator's hottest loop (§Perf step 2).
+    /// The tag scan and the victim scan each run over one dense SoA
+    /// array — this is the simulator's hottest loop (§Perf steps 2/4);
+    /// the victim scan only runs on a miss.
     #[inline]
     pub fn access(&mut self, line_addr: u64, write: bool) -> Probe {
         self.clock += 1;
-        let set = self.set_of(line_addr);
-        let start = set * self.config.ways;
-        let set_ways = &mut self.ways[start..start + self.config.ways];
-
-        let mut victim = 0usize;
-        let mut best = u64::MAX;
-        for (w, way) in set_ways.iter().enumerate() {
-            if way.tag == line_addr {
-                let dirty = way.dirty() | write;
-                set_ways[w].meta = (self.clock << 1) | dirty as u64;
-                self.stats.hits += 1;
-                return Probe::Hit;
-            }
-            // Invalid ways (meta 0) sort first naturally.
-            if way.meta < best {
-                best = way.meta;
-                victim = w;
-            }
+        let ways = self.config.ways;
+        let start = self.set_of(line_addr) * ways;
+        if let Some(w) = find_way(&self.tags[start..start + ways], line_addr) {
+            let m = &mut self.meta[start + w];
+            *m = (self.clock << 1) | ((*m | write as u64) & 1);
+            self.stats.hits += 1;
+            return Probe::Hit;
         }
-
         self.stats.misses += 1;
+        let victim = lru_way(&self.meta[start..start + ways]);
         let dirty_victim = self.install(start + victim, line_addr, write);
         Probe::Miss { dirty_victim }
+    }
+
+    /// Probe a buffer of `(line, write)` demand accesses in order,
+    /// appending one [`BatchMiss`] per miss to `misses` (hits need no
+    /// further processing). Semantically identical to calling
+    /// [`Self::access`] per element — same LRU clocks, victims and
+    /// counters — but the hit/miss totals are accumulated locally and
+    /// folded into `stats` once per batch, and the whole loop inlines
+    /// into the caller's pipeline (§Perf step 6).
+    pub fn access_batch(&mut self, probes: &[(u64, bool)], misses: &mut Vec<BatchMiss>) {
+        let ways = self.config.ways;
+        let mut hits = 0u64;
+        for &(line, write) in probes {
+            self.clock += 1;
+            let start = self.set_of(line) * ways;
+            if let Some(w) = find_way(&self.tags[start..start + ways], line) {
+                let m = &mut self.meta[start + w];
+                *m = (self.clock << 1) | ((*m | write as u64) & 1);
+                hits += 1;
+            } else {
+                let victim = lru_way(&self.meta[start..start + ways]);
+                let dirty_victim = self.install(start + victim, line, write);
+                misses.push(BatchMiss { line, dirty_victim });
+            }
+        }
+        self.stats.hits += hits;
+        self.stats.misses += probes.len() as u64 - hits;
     }
 
     /// Install a line without counting a demand access — used for
@@ -228,28 +287,43 @@ impl Cache {
     }
 
     /// As [`Self::fill_prefetch`], but also reports whether the line was
-    /// already resident — presence check and fill share one scan, which
-    /// the prefetch-issue path on `MemorySystem` depends on (§Perf).
+    /// already resident — presence check and fill share one set lookup,
+    /// which the prefetch-issue path on `MemorySystem` depends on
+    /// (§Perf).
     pub fn fill_prefetch_probed(&mut self, line_addr: u64) -> (bool, Option<u64>) {
         self.clock += 1;
-        let set = self.set_of(line_addr);
-        let start = set * self.config.ways;
-        let set_ways = &self.ways[start..start + self.config.ways];
-        let mut victim = 0usize;
-        let mut best = u64::MAX;
-        for (w, way) in set_ways.iter().enumerate() {
-            if way.tag == line_addr {
-                // Already resident; prefetch is a no-op (do not refresh
-                // LRU: prefetchers don't update recency on Intel LLC).
-                return (true, None);
-            }
-            if way.meta < best {
-                best = way.meta;
-                victim = w;
-            }
+        let ways = self.config.ways;
+        let start = self.set_of(line_addr) * ways;
+        if find_way(&self.tags[start..start + ways], line_addr).is_some() {
+            // Already resident; prefetch is a no-op (do not refresh
+            // LRU: prefetchers don't update recency on Intel LLC).
+            return (true, None);
         }
         self.stats.prefetch_fills += 1;
+        let victim = lru_way(&self.meta[start..start + ways]);
         (false, self.install(start + victim, line_addr, false))
+    }
+
+    /// Issue a buffer of prefetch fills in order, appending one
+    /// [`PrefetchFill`] per target. Semantically identical to calling
+    /// [`Self::fill_prefetch_probed`] per element, with the
+    /// `prefetch_fills` counter folded in once per batch (§Perf step 6).
+    pub fn fill_prefetch_batch(&mut self, targets: &[u64], out: &mut Vec<PrefetchFill>) {
+        let ways = self.config.ways;
+        let mut fills = 0u64;
+        for &line in targets {
+            self.clock += 1;
+            let start = self.set_of(line) * ways;
+            if find_way(&self.tags[start..start + ways], line).is_some() {
+                out.push(PrefetchFill { line, was_resident: true, dirty_victim: None });
+            } else {
+                fills += 1;
+                let victim = lru_way(&self.meta[start..start + ways]);
+                let dirty_victim = self.install(start + victim, line, false);
+                out.push(PrefetchFill { line, was_resident: false, dirty_victim });
+            }
+        }
+        self.stats.prefetch_fills += fills;
     }
 
     /// Sink a dirty line evicted from an upper level into this cache: if
@@ -258,60 +332,54 @@ impl Cache {
     /// which must continue down the hierarchy.
     pub fn writeback(&mut self, line_addr: u64) -> Option<u64> {
         self.clock += 1;
-        let set = self.set_of(line_addr);
-        let start = set * self.config.ways;
-        let set_ways = &mut self.ways[start..start + self.config.ways];
-        let mut victim = 0usize;
-        let mut best = u64::MAX;
-        for (w, way) in set_ways.iter().enumerate() {
-            if way.tag == line_addr {
-                set_ways[w].meta = (self.clock << 1) | 1;
-                return None;
-            }
-            if way.meta < best {
-                best = way.meta;
-                victim = w;
-            }
+        let ways = self.config.ways;
+        let start = self.set_of(line_addr) * ways;
+        if let Some(w) = find_way(&self.tags[start..start + ways], line_addr) {
+            self.meta[start + w] = (self.clock << 1) | 1;
+            return None;
         }
+        let victim = lru_way(&self.meta[start..start + ways]);
         self.install(start + victim, line_addr, true)
     }
 
     /// True if the line is resident (no state change).
     pub fn contains(&self, line_addr: u64) -> bool {
-        let set = self.set_of(line_addr);
-        self.slot_range(set).any(|i| self.ways[i].tag == line_addr)
+        let ways = self.config.ways;
+        let start = self.set_of(line_addr) * ways;
+        find_way(&self.tags[start..start + ways], line_addr).is_some()
     }
 
     /// Drop a line if present (non-temporal stores invalidate stale
     /// copies). Returns whether it was present and dirty.
     pub fn invalidate(&mut self, line_addr: u64) -> bool {
-        let set = self.set_of(line_addr);
-        for i in self.slot_range(set) {
-            if self.ways[i].tag == line_addr {
-                let was_dirty = self.ways[i].dirty();
-                self.ways[i] = Way::EMPTY;
-                return was_dirty;
-            }
+        let ways = self.config.ways;
+        let start = self.set_of(line_addr) * ways;
+        if let Some(w) = find_way(&self.tags[start..start + ways], line_addr) {
+            let was_dirty = self.meta[start + w] & 1 == 1;
+            self.tags[start + w] = INVALID;
+            self.meta[start + w] = 0;
+            return was_dirty;
         }
         false
     }
 
     /// Number of resident lines (O(n); for tests/diagnostics).
     pub fn resident_lines(&self) -> usize {
-        self.ways.iter().filter(|w| w.tag != INVALID).count()
+        self.tags.iter().filter(|&&t| t != INVALID).count()
     }
 
     fn install(&mut self, slot: usize, line_addr: u64, write: bool) -> Option<u64> {
         let mut dirty_victim = None;
-        let old = self.ways[slot];
-        if old.tag != INVALID {
+        let old = self.tags[slot];
+        if old != INVALID {
             self.stats.evictions += 1;
-            if old.dirty() {
+            if self.meta[slot] & 1 == 1 {
                 self.stats.writebacks += 1;
-                dirty_victim = Some(old.tag);
+                dirty_victim = Some(old);
             }
         }
-        self.ways[slot] = Way { tag: line_addr, meta: (self.clock << 1) | write as u64 };
+        self.tags[slot] = line_addr;
+        self.meta[slot] = (self.clock << 1) | write as u64;
         dirty_victim
     }
 }
@@ -438,5 +506,83 @@ mod tests {
         }
         assert_eq!(c.stats.misses, 4);
         assert_eq!(c.stats.hits, 4);
+    }
+
+    #[test]
+    fn sets_accessor_matches_geometry() {
+        assert_eq!(tiny().sets(), 4);
+        assert_eq!(Cache::new(CacheConfig::new(32 * 1024, 8)).sets(), 64);
+        // Single-set cache: every line contends for the same ways.
+        assert_eq!(Cache::new(CacheConfig::new(4 * 64, 4)).sets(), 1);
+        // Direct-mapped: one way per set.
+        assert_eq!(Cache::new(CacheConfig::new(8 * 64, 1)).sets(), 8);
+    }
+
+    /// Drive `probes` through one cache with scalar [`Cache::access`]
+    /// calls and a twin with [`Cache::access_batch`]; the outcomes,
+    /// counters and final contents must match exactly.
+    fn assert_batch_equivalent(config: CacheConfig, probes: &[(u64, bool)]) {
+        let mut scalar = Cache::new(config);
+        let mut batched = Cache::new(config);
+        let mut expect = Vec::new();
+        for &(line, write) in probes {
+            if let Probe::Miss { dirty_victim } = scalar.access(line, write) {
+                expect.push(BatchMiss { line, dirty_victim });
+            }
+        }
+        let mut misses = Vec::new();
+        batched.access_batch(probes, &mut misses);
+        assert_eq!(misses, expect, "miss stream diverged ({config:?})");
+        assert_eq!(batched.stats, scalar.stats, "stats diverged ({config:?})");
+        assert_eq!(batched.tags, scalar.tags, "tag store diverged ({config:?})");
+        assert_eq!(batched.meta, scalar.meta, "LRU/dirty state diverged ({config:?})");
+    }
+
+    #[test]
+    fn access_batch_matches_scalar_access() {
+        let probes: Vec<(u64, bool)> = (0..64u64)
+            .map(|i| (i.wrapping_mul(7) % 23, i % 3 == 0))
+            .collect();
+        assert_batch_equivalent(CacheConfig::new(512, 2), &probes);
+    }
+
+    #[test]
+    fn access_batch_direct_mapped_and_single_set() {
+        let probes: Vec<(u64, bool)> = (0..96u64)
+            .map(|i| (i.wrapping_mul(13) % 17, i % 4 == 1))
+            .collect();
+        // 1-way (direct-mapped): every set conflict evicts.
+        assert_batch_equivalent(CacheConfig::new(8 * 64, 1), &probes);
+        // Single set: all lines contend for the same 4 ways.
+        assert_batch_equivalent(CacheConfig::new(4 * 64, 4), &probes);
+        // Degenerate 1-set × 1-way cache.
+        assert_batch_equivalent(CacheConfig::new(64, 1), &probes);
+    }
+
+    #[test]
+    fn fill_prefetch_batch_matches_scalar_fills() {
+        let config = CacheConfig::new(512, 2);
+        let mut scalar = Cache::new(config);
+        let mut batched = Cache::new(config);
+        // Pre-dirty a few lines so fills displace dirty victims.
+        for c in [&mut scalar, &mut batched] {
+            for line in 0..4u64 {
+                c.access(line, true);
+            }
+        }
+        let targets: Vec<u64> = (0..32u64).map(|i| i.wrapping_mul(5) % 19).collect();
+        let expect: Vec<PrefetchFill> = targets
+            .iter()
+            .map(|&line| {
+                let (was_resident, dirty_victim) = scalar.fill_prefetch_probed(line);
+                PrefetchFill { line, was_resident, dirty_victim }
+            })
+            .collect();
+        let mut out = Vec::new();
+        batched.fill_prefetch_batch(&targets, &mut out);
+        assert_eq!(out, expect);
+        assert_eq!(batched.stats, scalar.stats);
+        assert_eq!(batched.tags, scalar.tags);
+        assert_eq!(batched.meta, scalar.meta);
     }
 }

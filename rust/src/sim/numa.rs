@@ -140,6 +140,67 @@ impl PageMap {
     }
 }
 
+/// Direct-mapped slot count of a [`NodeCache`]; covers 8 MiB of working
+/// set without conflict, and collisions only cost a re-resolution.
+const NODE_CACHE_SLOTS: usize = 2048;
+
+/// Memoized page→node resolution at 4 KiB granularity.
+///
+/// Page ownership is constant once resolved — [`MemPolicy::BindNode`]
+/// and [`MemPolicy::Interleave`] are pure functions of the page, and
+/// [`MemPolicy::FirstTouch`] pins a page permanently on its first
+/// resolution — but the simulator asks per 64 B line, re-resolving the
+/// same page up to 64 times (walking the address-space region list each
+/// time). A `NodeCache` wraps the underlying resolver with a small
+/// direct-mapped memo so repeated lines of one page cost a single array
+/// probe (§Perf step 6).
+///
+/// Scope one `NodeCache` to one address-space lifetime: drop (or
+/// recreate) it whenever regions are re-allocated — e.g. one per
+/// [`crate::harness::measure_kernel`] call, whose measurement pipeline
+/// allocates once up front.
+#[derive(Clone, Debug)]
+pub struct NodeCache {
+    /// Direct-mapped entries `(page + 1, node)`; key 0 = empty slot.
+    entries: Vec<(u64, u32)>,
+}
+
+impl NodeCache {
+    /// An empty memo.
+    pub fn new() -> NodeCache {
+        NodeCache { entries: vec![(0, 0); NODE_CACHE_SLOTS] }
+    }
+
+    /// Resolve the node owning `addr`, consulting the memo first and
+    /// falling back to `resolve` (recording its answer) on a miss. The
+    /// fallback sees the exact `(addr, toucher_node)` the caller passed,
+    /// so first-touch pinning happens on the same probe it would have
+    /// without the memo.
+    #[inline]
+    pub fn node_of<F: FnMut(u64, usize) -> usize>(
+        &mut self,
+        addr: u64,
+        toucher_node: usize,
+        mut resolve: F,
+    ) -> usize {
+        let page = addr / PAGE;
+        let slot = (page as usize) & (NODE_CACHE_SLOTS - 1);
+        let entry = &mut self.entries[slot];
+        if entry.0 == page + 1 {
+            return entry.1 as usize;
+        }
+        let node = resolve(addr, toucher_node);
+        *entry = (page + 1, node as u32);
+        node
+    }
+}
+
+impl Default for NodeCache {
+    fn default() -> NodeCache {
+        NodeCache::new()
+    }
+}
+
 /// Thread placement for a scenario: the node each simulated thread is
 /// pinned to, or `Unbound` behaviour where the OS may move them.
 #[derive(Clone, Debug, PartialEq)]
@@ -309,5 +370,47 @@ mod tests {
         let p = Placement::unbound(4, 0);
         let (_, migrated) = p.after_pressure(&[10e9, 0.0], &[115e9, 115e9]);
         assert!(!migrated);
+    }
+
+    #[test]
+    fn node_cache_memoizes_per_page() {
+        let mut cache = NodeCache::new();
+        let mut calls = 0usize;
+        // 64 lines of one page: one underlying resolution.
+        for line in 0..64u64 {
+            let n = cache.node_of(line * 64, 0, |_a, _t| {
+                calls += 1;
+                1
+            });
+            assert_eq!(n, 1);
+        }
+        assert_eq!(calls, 1, "same page must resolve once");
+        // A different page resolves again.
+        cache.node_of(PAGE, 0, |_a, _t| {
+            calls += 1;
+            0
+        });
+        assert_eq!(calls, 2);
+    }
+
+    #[test]
+    fn node_cache_collision_re_resolves_correctly() {
+        let mut cache = NodeCache::new();
+        let far = super::NODE_CACHE_SLOTS as u64 * PAGE; // same slot as page 0
+        assert_eq!(cache.node_of(0, 0, |_a, _t| 0), 0);
+        assert_eq!(cache.node_of(far, 0, |_a, _t| 1), 1);
+        // Page 0 was evicted by the collision; the resolver answers again.
+        assert_eq!(cache.node_of(0, 0, |_a, _t| 0), 0);
+    }
+
+    #[test]
+    fn node_cache_preserves_first_touch_pinning() {
+        let mut map = PageMap::new(0, 2 * PAGE, MemPolicy::FirstTouch, 2);
+        let mut cache = NodeCache::new();
+        // First probe from node 1 pins the page; later probes from node 0
+        // must still see node 1, memoized or not.
+        assert_eq!(cache.node_of(100, 1, |a, t| map.node_of(a, t)), 1);
+        assert_eq!(cache.node_of(200, 0, |a, t| map.node_of(a, t)), 1);
+        assert_eq!(map.node_of(300, 0), 1, "underlying map agrees");
     }
 }

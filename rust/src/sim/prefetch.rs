@@ -95,6 +95,11 @@ impl Prefetcher {
 
     /// Observe a demand access to `line`; append prefetch target lines to
     /// `out` (cleared first). Targets never cross the 4KiB page.
+    ///
+    /// Called once per L1 miss from the level-filtered pipeline's
+    /// `descend` step; `#[inline]` lets the tracker fast path fold into
+    /// the monomorphized hot loop (§Perf step 6).
+    #[inline]
     pub fn observe(&mut self, line: u64, out: &mut Vec<u64>) {
         out.clear();
         if !self.config.enabled {

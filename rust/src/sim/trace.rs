@@ -76,6 +76,9 @@ pub struct LineIter {
 impl Iterator for LineIter {
     type Item = u64;
 
+    // Inlined into the chunk-drain loop of `MemorySystem::run_with` —
+    // one call per probe, on the simulator's hottest path (§Perf).
+    #[inline]
     fn next(&mut self) -> Option<u64> {
         while self.i < self.run.count {
             let addr = (self.run.base as i64 + self.run.stride * self.i as i64) as u64;

@@ -1,0 +1,269 @@
+//! Differential parity suite (ISSUE 4 tentpole): the batched, SoA,
+//! monomorphized simulator hot path must be *bit-identical* to the
+//! retained scalar reference path.
+//!
+//! Three layers of pinning:
+//!
+//! 1. **Measurement parity** — [`measure_kernel`] vs
+//!    [`measure_kernel_reference`] across every kernel family × the six
+//!    [`ScenarioSpec`] presets (and warm-cache protocols): identical
+//!    `TrafficStats`, per-level `CacheStats`, IMC counters, W/Q/R — the
+//!    whole measurement serialises to the same bytes.
+//! 2. **Edge geometry** — direct-mapped (1-way) and single-set caches,
+//!    batches that straddle the internal `CHUNK` boundary mid-run, and
+//!    NT-store / SW-prefetch kinds interleaved inside one batch, driven
+//!    at the `MemorySystem::run_with` / `run_reference` level.
+//! 3. **Store compatibility** — a warm `--cache-dir` sweep over records
+//!    produced by the *reference* path (what the pre-batching binary
+//!    would have written) simulates nothing and emits byte-identical
+//!    `run.json`/reports.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use dlroofline::coordinator::plan;
+use dlroofline::coordinator::runner::{sweep_and_write, sweep_and_write_cached};
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::measure::{measure_kernel, measure_kernel_reference};
+use dlroofline::harness::{CacheState, ScenarioSpec};
+use dlroofline::kernels::conv_direct::ConvDirectBlocked;
+use dlroofline::kernels::conv_winograd::ConvWinograd;
+use dlroofline::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
+use dlroofline::kernels::inner_product::InnerProduct;
+use dlroofline::kernels::layernorm::LayerNorm;
+use dlroofline::kernels::pooling::{AvgPoolNchw, PoolShape};
+use dlroofline::kernels::reduction::SumReduction;
+use dlroofline::kernels::{ConvShape, KernelModel};
+use dlroofline::sim::cache::CacheConfig;
+use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem, TrafficStats};
+use dlroofline::sim::machine::{Machine, MachineConfig};
+use dlroofline::sim::numa::Placement;
+use dlroofline::sim::prefetch::PrefetchConfig;
+use dlroofline::sim::trace::{AccessKind, AccessRun, Trace};
+use dlroofline::testutil::TempDir;
+
+/// One small instance per kernel family. Inner product and Winograd
+/// carry SW-prefetch runs; the rest cover load/store mixes, blocked
+/// layouts and reductions.
+fn kernel_zoo() -> Vec<Box<dyn KernelModel>> {
+    vec![
+        Box::new(SumReduction::new(1 << 18)),
+        Box::new(InnerProduct::new(64, 512, 256)),
+        Box::new(GeluNchw::new(EltwiseShape::favourable(2))),
+        Box::new(GeluBlocked::new(EltwiseShape::favourable(2))),
+        Box::new(LayerNorm::new(256, 768)),
+        Box::new(AvgPoolNchw::new(PoolShape::paper_pool(1))),
+        Box::new(ConvDirectBlocked::new(ConvShape::paper_conv(1))),
+        Box::new(ConvWinograd::new(ConvShape::paper_conv(1))),
+    ]
+}
+
+/// Assert two measurements are the same to the bit, with a readable
+/// context string on failure.
+fn assert_parity(
+    batched: &dlroofline::harness::KernelMeasurement,
+    reference: &dlroofline::harness::KernelMeasurement,
+    context: &str,
+) {
+    assert_eq!(batched.traffic, reference.traffic, "TrafficStats diverged: {context}");
+    assert_eq!(batched.measured, reference.measured, "W/Q diverged: {context}");
+    assert_eq!(
+        batched.runtime.seconds.to_bits(),
+        reference.runtime.seconds.to_bits(),
+        "R diverged: {context}"
+    );
+    // The whole record — every counter, every float — to the byte.
+    assert_eq!(
+        batched.to_json().to_string_pretty(),
+        reference.to_json().to_string_pretty(),
+        "serialised measurement diverged: {context}"
+    );
+}
+
+#[test]
+fn batched_path_matches_reference_across_kernels_and_presets() {
+    let config = MachineConfig::xeon_6248();
+    let presets = ScenarioSpec::presets();
+    assert_eq!(presets.len(), 6, "the six scenario presets");
+    for kernel in kernel_zoo() {
+        for scenario in &presets {
+            let mut a = Machine::new(config.clone());
+            let batched = measure_kernel(&mut a, kernel.as_ref(), scenario, CacheState::Cold)
+                .expect("batched measurement");
+            let mut b = Machine::new(config.clone());
+            let reference =
+                measure_kernel_reference(&mut b, kernel.as_ref(), scenario, CacheState::Cold)
+                    .expect("reference measurement");
+            assert_parity(
+                &batched,
+                &reference,
+                &format!("{} × {} × cold", kernel.name(), scenario.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_path_matches_reference_warm_protocol() {
+    // Warm protocols replay the kernel trace over warmed caches — the
+    // hit-heavy regime where the batched L1 filter actually filters.
+    let config = MachineConfig::xeon_6248();
+    let kernels: Vec<Box<dyn KernelModel>> = vec![
+        Box::new(InnerProduct::new(64, 512, 256)),
+        Box::new(GeluNchw::new(EltwiseShape::favourable(2))),
+        Box::new(SumReduction::new(1 << 18)),
+    ];
+    for kernel in kernels {
+        for scenario in [ScenarioSpec::single_thread(), ScenarioSpec::two_socket()] {
+            let mut a = Machine::new(config.clone());
+            let batched = measure_kernel(&mut a, kernel.as_ref(), &scenario, CacheState::Warm)
+                .expect("batched measurement");
+            let mut b = Machine::new(config.clone());
+            let reference =
+                measure_kernel_reference(&mut b, kernel.as_ref(), &scenario, CacheState::Warm)
+                    .expect("reference measurement");
+            assert_parity(
+                &batched,
+                &reference,
+                &format!("{} × {} × warm", kernel.name(), scenario.name),
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------- edge geometry
+
+/// Tiny hierarchy used by the synthetic-trace differential tests.
+fn edge_config(l1_ways: usize, prefetch: bool) -> HierarchyConfig {
+    HierarchyConfig {
+        // 8 sets × l1_ways; direct-mapped when l1_ways == 1.
+        l1: CacheConfig::new((8 * l1_ways * 64) as u64, l1_ways),
+        // Single-set L2: all lines contend for 4 ways.
+        l2: CacheConfig::new(4 * 64, 4),
+        llc: CacheConfig::new(4096, 8),
+        prefetch: if prefetch { PrefetchConfig::default() } else { PrefetchConfig::disabled() },
+    }
+}
+
+/// Run the same traces through the batched and reference paths on twin
+/// systems and assert identical deltas (twice, to cover warmed state).
+fn assert_run_parity(cfg: HierarchyConfig, traces: &[Trace], placement: &Placement) {
+    let threads = traces.len();
+    let mut batched = MemorySystem::new(cfg, 2, threads);
+    let mut reference = MemorySystem::new(cfg, 2, threads);
+    let node_of = |addr: u64, toucher: usize| {
+        // Page-parity ownership with a toucher-dependent twist, so
+        // resolution order matters and locality splits are non-trivial.
+        (((addr >> 12) as usize) ^ toucher) & 1
+    };
+    for round in 0..2 {
+        let got: TrafficStats = batched.run_with(traces, placement, node_of);
+        let mut oracle = node_of;
+        let want = reference.run_reference(traces, placement, &mut oracle);
+        assert_eq!(got, want, "round {round} diverged ({cfg:?})");
+        assert_eq!(got.probes, traces.iter().map(|t| t.line_probes()).sum::<u64>());
+    }
+}
+
+#[test]
+fn parity_direct_mapped_and_single_set_geometries() {
+    let mut t = Trace::new();
+    // Conflict-heavy mix: forward stream, rescan, strided writes.
+    t.push(AccessRun::contiguous(0, 16384, AccessKind::Load));
+    t.push(AccessRun::contiguous(0, 4096, AccessKind::Store));
+    t.push(AccessRun { base: 64, stride: 512, count: 200, size: 4, kind: AccessKind::Load });
+    for prefetch in [false, true] {
+        assert_run_parity(edge_config(1, prefetch), &[t.clone()], &Placement::bound(1, 0));
+        assert_run_parity(edge_config(2, prefetch), &[t.clone()], &Placement::bound(1, 0));
+    }
+}
+
+#[test]
+fn parity_chunk_straddling_access_runs() {
+    // CHUNK is 1024 probes: a 2500-line run straddles two chunk
+    // boundaries mid-`AccessRun`, and with two threads the round-robin
+    // interleaving lands mid-run on both sides.
+    let mk = |base: u64| {
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(base, 2500 * 64, AccessKind::Load));
+        t.push(AccessRun::contiguous(base, 600 * 64, AccessKind::Store));
+        t
+    };
+    let traces = [mk(0), mk(1 << 22)];
+    assert_run_parity(edge_config(2, true), &traces, &Placement::spread(2, 2));
+}
+
+#[test]
+fn parity_bypass_kinds_interleaved_inside_one_batch() {
+    // NT stores and SW prefetches split the demand batch mid-chunk; a
+    // run sized exactly CHUNK (1024 lines) also puts a kind switch flush
+    // right on the chunk boundary.
+    let mut t = Trace::new();
+    t.push(AccessRun::contiguous(0, 1024 * 64, AccessKind::Load));
+    t.push(AccessRun::contiguous(1 << 20, 128 * 64, AccessKind::StoreNT));
+    t.push(AccessRun::contiguous(0, 64 * 64, AccessKind::PrefetchSW));
+    t.push(AccessRun::contiguous(4096, 300 * 64, AccessKind::Store));
+    t.push(AccessRun::contiguous(1 << 20, 128 * 64, AccessKind::Load));
+    t.push(AccessRun::contiguous(0, 32 * 64, AccessKind::StoreNT));
+    for prefetch in [false, true] {
+        assert_run_parity(edge_config(2, prefetch), &[t.clone()], &Placement::bound(1, 1));
+    }
+}
+
+// ------------------------------------------------- store compatibility
+
+/// Every regular file under `dir` (recursive), relative path → bytes.
+fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn warm_sweep_over_reference_records_is_byte_identical() {
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let ids = ["f6"];
+
+    // Seed the store with records produced by the scalar reference
+    // path — byte-for-byte what the pre-batching binary persisted.
+    let cache = TempDir::new("parity-store");
+    let store = CellStore::open(cache.path()).unwrap();
+    let expansion = plan::expand(&ids, &params).unwrap();
+    assert!(!expansion.unique_cells().is_empty());
+    for (key, cell) in expansion.unique_cells() {
+        let m = cell.simulate_reference(&params).unwrap();
+        store.insert(*key, &m).unwrap();
+    }
+
+    // A warm cached sweep over those records must simulate nothing...
+    let out_cached = TempDir::new("parity-out-cached");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, cached) =
+        sweep_and_write_cached(&ids, &params, out_cached.path(), false, 1, Some(&store)).unwrap();
+    let usage = cached.store.as_ref().unwrap();
+    assert_eq!(usage.simulated, 0, "reference records must all be served");
+    assert_eq!(usage.hits, expansion.unique_cells().len());
+
+    // ...and write byte-identical outputs to an uncached batched sweep.
+    let out_plain = TempDir::new("parity-out-plain");
+    let _ = sweep_and_write(&ids, &params, out_plain.path(), false, 1).unwrap();
+    let a = snapshot(out_plain.path());
+    let b = snapshot(out_cached.path());
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "{name} differs between batched and reference-fed sweep");
+    }
+    assert!(a.contains_key("run.json"));
+}
