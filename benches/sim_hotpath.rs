@@ -12,6 +12,13 @@
 //! the two ISSUE-target cases, so a single run records the speedup of
 //! the SoA/batch/monomorphization pass (§Perf step 6) as the ratio to
 //! the matching batched series.
+//!
+//! The `*_twophase{1,2,8}` series time the two-phase parallel engine
+//! (`MemorySystem::run_parallel`, §Perf step 7) at 1/2/8 phase-A
+//! workers on the same cases: the 20-thread series against the serial
+//! pipeline is the ISSUE-5 target ratio (≥ 1.5× at 8 workers on a
+//! multi-core host); the single-thread stream documents the engine's
+//! overhead floor (phase A clamps to one worker there).
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};
@@ -59,6 +66,19 @@ fn main() {
             ms.run_reference(std::slice::from_ref(&tr), &Placement::bound(1, 0), &mut |_a, _t| 0)
                 .probes
         });
+        for workers in [1usize, 2, 8] {
+            let name = format!("stream_64MiB_cold_twophase{workers}");
+            b.bench(&name, Throughput::Elements(probes), || {
+                ms.flush_all();
+                ms.run_parallel(
+                    std::slice::from_ref(&tr),
+                    &Placement::bound(1, 0),
+                    |_a, _t| 0,
+                    workers,
+                )
+                .probes
+            });
+        }
     }
 
     // LLC-resident rescan (all hits below LLC): 16 MiB x2.
@@ -99,6 +119,17 @@ fn main() {
             ms.run_reference(&traces, &Placement::bound(20, 0), &mut |_a, _t| 0)
                 .probes
         });
+        // The ISSUE-5 A/B series: the big-cell shape the two-phase
+        // engine targets (20 private pipelines run concurrently, then
+        // one serial shared-level replay).
+        for workers in [1usize, 2, 8] {
+            let name = format!("threads20_8MiB_each_twophase{workers}");
+            b.bench(&name, Throughput::Elements(probes), || {
+                ms.flush_all();
+                ms.run_parallel(&traces, &Placement::bound(20, 0), |_a, _t| 0, workers)
+                    .probes
+            });
+        }
     }
 
     b.finish();

@@ -12,10 +12,11 @@ pub mod store;
 
 pub use diff::{diff_manifests, render_diff, DiffReport};
 pub use manifest::{RunManifest, SCHEMA_VERSION};
-pub use plan::{CellFate, PlanOutcome, PlanStats, StoreUsage};
+pub use plan::{job_split, CellFate, JobBudget, PlanOutcome, PlanStats, StoreUsage};
 pub use registry::KernelRegistry;
 pub use runner::{
-    render_report, run_and_write, sweep_and_write, sweep_and_write_cached, sweep_grid_and_write,
+    render_report, run_and_write, sweep_and_write, sweep_and_write_budget,
+    sweep_and_write_cached, sweep_grid_and_write, sweep_grid_and_write_budget,
     sweep_grid_and_write_cached, GridEntry, GridOutput, RunOutput, SweepOutput,
 };
 pub use store::{CellStore, GcReport, Lookup, StoreStats, CACHE_ENV, STORE_SCHEMA_VERSION};

@@ -6,7 +6,13 @@
 //! Cells are pure simulations of a fresh [`crate::sim::machine::Machine`]
 //! — embarrassingly parallel and fully deterministic — so a `--jobs N`
 //! sweep produces bit-identical results (and manifests) to `--jobs 1`;
-//! only wall-clock changes. Memoization is by the cell content hash
+//! only wall-clock changes. When the unique-cell queue is shallower
+//! than the budget, the spare workers flow *into* the cells: the
+//! [`JobBudget`]/[`job_split`] rule hands each cell up to `--sim-jobs`
+//! phase-A workers of the two-phase simulation engine (§Perf step 7)
+//! while keeping `cell workers × sim workers ≤ --jobs` — so the
+//! biggest cells no longer pin the sweep's wall-clock to one core, and
+//! the bit-identity guarantee extends across every budget. Memoization is by the cell content hash
 //! (machine fingerprint × kernel identity × scenario data × cache
 //! state), so multi-figure sweeps stop re-simulating shared cells: the
 //! `g1` scenario grid reuses all of f3/f4/f5's convolution cells, for
@@ -52,6 +58,51 @@ pub fn default_jobs() -> usize {
         .map(|n| n.get())
         .unwrap_or(1)
         .min(16)
+}
+
+/// Worker budget for one plan execution: cell-level workers plus the
+/// intra-cell phase-A workers of the two-phase simulation engine.
+///
+/// The two dimensions share one machine: [`job_split`] guarantees
+/// `cell workers × sim workers` never exceeds the `jobs` budget, so
+/// `--jobs × --sim-jobs` cannot oversubscribe cores. Results are
+/// bit-identical for every budget — only wall-clock changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobBudget {
+    /// Cell-level worker threads (`0` = auto ⇒ [`default_jobs`]).
+    pub jobs: usize,
+    /// Intra-cell simulation workers per cell
+    /// ([`crate::harness::measure_kernel_parallel`]): `1` pins the
+    /// serial batched pipeline, `N ≥ 2` allows up to `N` phase-A
+    /// workers per cell, `0` = auto (each cell worker's share of the
+    /// `jobs` budget — big cells get intra-cell workers exactly when
+    /// the cell queue is shallow).
+    pub sim_jobs: usize,
+}
+
+impl JobBudget {
+    /// `jobs` cell workers, serial per-cell simulation — the behaviour
+    /// of the plain `jobs: usize` entry points.
+    pub fn cells(jobs: usize) -> JobBudget {
+        JobBudget { jobs, sim_jobs: 1 }
+    }
+}
+
+/// Split a shared worker budget between cell-level and intra-cell
+/// parallelism for a queue of `cells` pending simulations. Returns
+/// `(cell_workers, sim_workers)` with both ≥ 1 and
+/// `cell_workers × sim_workers ≤ max(jobs, 1)`.
+///
+/// Cell-level parallelism wins first (it has no coordination cost);
+/// whatever budget the queue cannot absorb — the queue is shallower
+/// than `jobs` — is handed to the two-phase engine inside each cell,
+/// capped at `sim_jobs` (`0` = uncapped auto).
+pub fn job_split(jobs: usize, sim_jobs: usize, cells: usize) -> (usize, usize) {
+    let jobs = jobs.max(1);
+    let cell_workers = jobs.min(cells.max(1));
+    let spare = jobs / cell_workers;
+    let cap = if sim_jobs == 0 { spare } else { sim_jobs };
+    (cell_workers, spare.min(cap).max(1))
 }
 
 /// Counters describing what a plan did (or would do).
@@ -240,6 +291,20 @@ pub fn execute(
     execute_with_store(ids, params, jobs, tolerate_special_failures, None)
 }
 
+/// As [`execute_with_store`], with an explicit [`JobBudget`] so the
+/// unused share of the `jobs` budget flows into intra-cell two-phase
+/// workers (`sweep --jobs N --sim-jobs M` lands here). Outputs are
+/// bit-identical for every budget.
+pub fn execute_with_budget(
+    ids: &[&str],
+    params: &ExperimentParams,
+    budget: JobBudget,
+    tolerate_special_failures: bool,
+    store: Option<&CellStore>,
+) -> Result<PlanOutcome> {
+    execute_impl(ids, params, budget, tolerate_special_failures, store)
+}
+
 /// As [`execute`], resolving unique cells against a persistent
 /// [`CellStore`] first: valid records are served from disk (zero
 /// simulation), everything else is simulated and written back, and the
@@ -259,8 +324,21 @@ pub fn execute_with_store(
     tolerate_special_failures: bool,
     store: Option<&CellStore>,
 ) -> Result<PlanOutcome> {
+    execute_impl(ids, params, JobBudget::cells(jobs), tolerate_special_failures, store)
+}
+
+fn execute_impl(
+    ids: &[&str],
+    params: &ExperimentParams,
+    budget: JobBudget,
+    tolerate_special_failures: bool,
+    store: Option<&CellStore>,
+) -> Result<PlanOutcome> {
     let expansion = expand(ids, params)?;
-    let jobs = if jobs == 0 { default_jobs() } else { jobs };
+    let budget = JobBudget {
+        jobs: if budget.jobs == 0 { default_jobs() } else { budget.jobs },
+        ..budget
+    };
 
     let mut usage = store.map(|_| StoreUsage::default());
     let memo: HashMap<u64, KernelMeasurement> = if let (Some(st), Some(u)) =
@@ -300,7 +378,7 @@ pub fn execute_with_store(
             u.fates.insert(*key, fate);
         }
         u.simulated = to_sim.len();
-        let simulated = simulate_unique(&to_sim, params, jobs)?;
+        let simulated = simulate_unique(&to_sim, params, budget)?;
         // Cache writes are best-effort: a read-only or full cache
         // directory must not fail a sweep whose simulations succeeded.
         let note_write_error = |u: &mut StoreUsage, e: anyhow::Error| {
@@ -321,7 +399,7 @@ pub fn execute_with_store(
         memo.extend(simulated);
         memo
     } else {
-        simulate_unique(&expansion.unique, params, jobs)?
+        simulate_unique(&expansion.unique, params, budget)?
     };
 
     // Assemble experiments in request order from the memo table. The
@@ -385,20 +463,23 @@ pub fn execute_with_store(
     Ok(PlanOutcome { results, cells, stats: expansion.stats, store: usage })
 }
 
-/// Simulate each unique cell exactly once, in parallel.
+/// Simulate each unique cell exactly once, in parallel, splitting the
+/// budget between cell workers and intra-cell two-phase workers
+/// ([`job_split`] — derived from the *actual* queue depth, so a mostly
+/// cache-served sweep still hands its few misses intra-cell workers).
 fn simulate_unique(
     unique: &[(u64, spec::Cell)],
     params: &ExperimentParams,
-    jobs: usize,
+    budget: JobBudget,
 ) -> Result<HashMap<u64, KernelMeasurement>> {
     let mut memo = HashMap::with_capacity(unique.len());
     if unique.is_empty() {
         return Ok(memo);
     }
-    let workers = jobs.clamp(1, unique.len());
+    let (workers, sim_jobs) = job_split(budget.jobs, budget.sim_jobs, unique.len());
     if workers == 1 {
         for (key, cell) in unique {
-            memo.insert(*key, cell.simulate(params)?);
+            memo.insert(*key, cell.simulate_jobs(params, sim_jobs)?);
         }
         return Ok(memo);
     }
@@ -413,7 +494,7 @@ fn simulate_unique(
                 if idx >= unique.len() {
                     break;
                 }
-                let outcome = unique[idx].1.simulate(params);
+                let outcome = unique[idx].1.simulate_jobs(params, sim_jobs);
                 *slots[idx].lock().unwrap() = Some(outcome);
             });
         }
@@ -488,6 +569,63 @@ mod tests {
             assert_eq!(a.measured.work_flops, b.measured.work_flops);
             assert_eq!(a.measured.traffic_bytes, b.measured.traffic_bytes);
             assert_eq!(a.runtime.seconds.to_bits(), b.runtime.seconds.to_bits());
+        }
+    }
+
+    #[test]
+    fn job_split_never_oversubscribes() {
+        // (jobs, sim_jobs, cells) → (cell_workers, sim_workers)
+        for (jobs, sim_jobs, cells, want) in [
+            // Deep queue: all budget to cell-level workers.
+            (16, 8, 100, (16, 1)),
+            // Shallow queue: spare budget flows into the cells.
+            (16, 8, 2, (2, 8)),
+            (16, 0, 2, (2, 8)),   // sim auto = the worker's whole share
+            (16, 4, 2, (2, 4)),   // capped by sim_jobs
+            (8, 8, 3, (3, 2)),    // floor(8/3) = 2 per cell
+            // One cell: everything intra-cell.
+            (8, 0, 1, (1, 8)),
+            // sim_jobs = 1 pins the serial engine.
+            (16, 1, 2, (2, 1)),
+            // Degenerate budgets.
+            (0, 0, 5, (1, 1)),
+            (1, 8, 5, (1, 1)),
+            (4, 8, 0, (1, 4)),
+        ] {
+            let (cell_workers, sim_workers) = job_split(jobs, sim_jobs, cells);
+            assert_eq!((cell_workers, sim_workers), want, "split({jobs},{sim_jobs},{cells})");
+            assert!(cell_workers * sim_workers <= jobs.max(1), "oversubscribed");
+        }
+    }
+
+    #[test]
+    fn budgeted_execution_is_deterministic() {
+        // The two-phase engine must be invisible in the results: a
+        // budget that hands cells intra-cell workers produces the same
+        // bits as the serial plan.
+        let params = quick();
+        let serial = execute(&["f4", "f6"], &params, 1, false).unwrap();
+        // 5 unique cells under a 16-worker budget: job_split hands each
+        // of the 5 cell workers 3 intra-cell phase-A workers.
+        let budgeted = execute_with_budget(
+            &["f4", "f6"],
+            &params,
+            JobBudget { jobs: 16, sim_jobs: 4 },
+            false,
+            None,
+        )
+        .unwrap();
+        assert_eq!(serial.stats, budgeted.stats);
+        for (a, b) in serial.cells.iter().zip(budgeted.cells.iter()) {
+            assert_eq!(a.plan.key, b.plan.key);
+            assert_eq!(a.measurement.measured, b.measurement.measured);
+            assert_eq!(a.measurement.traffic, b.measurement.traffic);
+            assert_eq!(
+                a.measurement.runtime.seconds.to_bits(),
+                b.measurement.runtime.seconds.to_bits(),
+                "cell {} diverged under the two-phase budget",
+                a.plan.key
+            );
         }
     }
 

@@ -14,7 +14,7 @@ use crate::roofline::svg::svg_plot;
 use crate::util::fsutil::write_atomic;
 
 use super::manifest::RunManifest;
-use super::plan::{self, CellPlan, PlanStats, StoreUsage};
+use super::plan::{self, CellPlan, JobBudget, PlanStats, StoreUsage};
 use super::store::CellStore;
 
 /// Paths written for one experiment.
@@ -207,6 +207,22 @@ pub fn sweep_grid_and_write_cached(
     jobs: usize,
     store: Option<&CellStore>,
 ) -> Result<GridOutput> {
+    let budget = JobBudget::cells(jobs);
+    sweep_grid_and_write_budget(ids, base, machines, out_dir, with_svg, budget, store)
+}
+
+/// As [`sweep_grid_and_write_cached`], with an explicit [`JobBudget`]
+/// so spare `--jobs` capacity flows into intra-cell two-phase workers
+/// (`sweep --machine a,b --sim-jobs M`).
+pub fn sweep_grid_and_write_budget(
+    ids: &[&str],
+    base: &ExperimentParams,
+    machines: &[crate::sim::machine::MachineConfig],
+    out_dir: &Path,
+    with_svg: bool,
+    budget: JobBudget,
+    store: Option<&CellStore>,
+) -> Result<GridOutput> {
     use crate::util::json::Json;
     anyhow::ensure!(!machines.is_empty(), "grid sweep needs at least one machine");
     let (kept, skipped) = dedupe_machines(machines);
@@ -220,7 +236,7 @@ pub fn sweep_grid_and_write_cached(
             .collect();
         let dir = out_dir.join(format!("{safe}-{}", &fingerprint[..8]));
         let params = ExperimentParams { machine: machine.clone(), ..base.clone() };
-        let (_, output) = sweep_and_write_cached(ids, &params, &dir, with_svg, jobs, store)?;
+        let (_, output) = sweep_and_write_budget(ids, &params, &dir, with_svg, budget, store)?;
         grid.entries.push(GridEntry {
             machine: safe,
             fingerprint,
@@ -283,7 +299,22 @@ pub fn sweep_and_write_cached(
     jobs: usize,
     store: Option<&CellStore>,
 ) -> Result<(Vec<ExperimentResult>, SweepOutput)> {
-    let outcome = plan::execute_with_store(ids, params, jobs, true, store)?;
+    sweep_and_write_budget(ids, params, out_dir, with_svg, JobBudget::cells(jobs), store)
+}
+
+/// As [`sweep_and_write_cached`], with an explicit [`JobBudget`]: the
+/// share of `--jobs` the unique-cell queue cannot absorb is handed to
+/// the two-phase simulation engine inside each cell (`--sim-jobs`).
+/// Reports and manifests are byte-identical for every budget.
+pub fn sweep_and_write_budget(
+    ids: &[&str],
+    params: &ExperimentParams,
+    out_dir: &Path,
+    with_svg: bool,
+    budget: JobBudget,
+    store: Option<&CellStore>,
+) -> Result<(Vec<ExperimentResult>, SweepOutput)> {
+    let outcome = plan::execute_with_budget(ids, params, budget, true, store)?;
     let mut manifest = RunManifest::new(params, ids, &outcome.cells, &outcome.stats);
     let mut sweep = SweepOutput {
         stats: outcome.stats,

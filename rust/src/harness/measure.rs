@@ -257,29 +257,56 @@ fn traffic_from_json(v: &Json) -> Result<TrafficStats> {
     })
 }
 
+/// Which simulator engine drives a measurement pipeline's runs. All
+/// three produce bit-identical [`TrafficStats`] (pinned by
+/// `rust/tests/sim_parity.rs`); they differ only in wall-clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SimEngine {
+    /// The serial batched, level-filtered pipeline
+    /// ([`crate::sim::MemorySystem::run_with`], §Perf step 6).
+    Batched,
+    /// The retained scalar oracle
+    /// ([`crate::sim::MemorySystem::run_reference`]).
+    Reference,
+    /// The two-phase parallel engine
+    /// ([`crate::sim::MemorySystem::run_parallel`], §Perf step 7) with
+    /// this many phase-A workers.
+    TwoPhase(usize),
+}
+
 /// Drive one simulated run for the measurement pipeline.
 ///
-/// The production path goes through [`crate::sim::MemorySystem::run_with`]
-/// — monomorphized over a resolver that memoizes page→node answers in
-/// `pages` (§Perf step 6). The reference path goes through
-/// [`crate::sim::MemorySystem::run_reference`] with the bare `dyn`
-/// resolver, exactly as the pre-batching pipeline did.
+/// The production paths go through
+/// [`crate::sim::MemorySystem::run_with`] or — with intra-cell workers
+/// — [`crate::sim::MemorySystem::run_parallel`], monomorphized over a
+/// resolver that memoizes page→node answers in `pages` (§Perf steps
+/// 6–7; the two-phase engine only resolves nodes in its serial replay
+/// phase, so the memo never sees concurrent probes). The reference
+/// path goes through [`crate::sim::MemorySystem::run_reference`] with
+/// the bare `dyn` resolver, exactly as the pre-batching pipeline did.
 fn run_sim(
     machine: &mut Machine,
     pages: &mut NodeCache,
     traces: &[Trace],
     placement: &Placement,
-    reference: bool,
+    engine: SimEngine,
 ) -> TrafficStats {
     let space = &mut machine.space;
-    if reference {
-        machine.memory.run_reference(traces, placement, &mut |addr, toucher| {
-            space.node_of(addr, toucher)
-        })
-    } else {
-        machine.memory.run_with(traces, placement, |addr, toucher| {
+    match engine {
+        SimEngine::Reference => {
+            machine.memory.run_reference(traces, placement, &mut |addr, toucher| {
+                space.node_of(addr, toucher)
+            })
+        }
+        SimEngine::Batched => machine.memory.run_with(traces, placement, |addr, toucher| {
             pages.node_of(addr, toucher, |a, t| space.node_of(a, t))
-        })
+        }),
+        SimEngine::TwoPhase(workers) => machine.memory.run_parallel(
+            traces,
+            placement,
+            |addr, toucher| pages.node_of(addr, toucher, |a, t| space.node_of(a, t)),
+            workers,
+        ),
     }
 }
 
@@ -293,7 +320,34 @@ pub fn measure_kernel(
     scenario: &ScenarioSpec,
     cache_state: CacheState,
 ) -> anyhow::Result<KernelMeasurement> {
-    measure_kernel_impl(machine, kernel, scenario, cache_state, false)
+    measure_kernel_impl(machine, kernel, scenario, cache_state, SimEngine::Batched)
+}
+
+/// As [`measure_kernel`], but driving every simulated run — overhead,
+/// warm-up and measured alike — through the two-phase parallel engine
+/// ([`crate::sim::MemorySystem::run_parallel`]) with up to `workers`
+/// phase-A workers, so a single large cell (e.g. a 20-thread streaming
+/// kernel) scales with cores instead of pinning one.
+///
+/// The measurement is **bit-identical** to [`measure_kernel`]'s for
+/// every worker count (the engine replays shared-level traffic in the
+/// serial pipeline's exact order) — pinned across kernels × scenario
+/// presets × worker counts by `rust/tests/sim_parity.rs`. Only
+/// wall-clock changes.
+pub fn measure_kernel_parallel(
+    machine: &mut Machine,
+    kernel: &dyn KernelModel,
+    scenario: &ScenarioSpec,
+    cache_state: CacheState,
+    workers: usize,
+) -> anyhow::Result<KernelMeasurement> {
+    measure_kernel_impl(
+        machine,
+        kernel,
+        scenario,
+        cache_state,
+        SimEngine::TwoPhase(workers.max(1)),
+    )
 }
 
 /// As [`measure_kernel`], but driving every simulated run through the
@@ -309,7 +363,7 @@ pub fn measure_kernel_reference(
     scenario: &ScenarioSpec,
     cache_state: CacheState,
 ) -> anyhow::Result<KernelMeasurement> {
-    measure_kernel_impl(machine, kernel, scenario, cache_state, true)
+    measure_kernel_impl(machine, kernel, scenario, cache_state, SimEngine::Reference)
 }
 
 fn measure_kernel_impl(
@@ -317,7 +371,7 @@ fn measure_kernel_impl(
     kernel: &dyn KernelModel,
     scenario: &ScenarioSpec,
     cache_state: CacheState,
-    reference: bool,
+    engine: SimEngine,
 ) -> anyhow::Result<KernelMeasurement> {
     machine.reset();
     let config = machine.config.clone();
@@ -342,7 +396,7 @@ fn measure_kernel_impl(
         &mut pages,
         std::slice::from_ref(&init_trace),
         &init_placement,
-        reference,
+        engine,
     );
     // The framework retires no measured FP work (data init is stores).
     let overhead = RunCounters {
@@ -357,13 +411,13 @@ fn measure_kernel_impl(
         CacheState::Cold => machine.memory.flush_all(),
         CacheState::Warm => {
             for _ in 0..cache_state.warmup_runs() {
-                let _ = run_sim(machine, &mut pages, &traces, &placement, reference);
+                let _ = run_sim(machine, &mut pages, &traces, &placement, engine);
             }
         }
     }
 
     // 4. Full run.
-    let traffic = run_sim(machine, &mut pages, &traces, &placement, reference);
+    let traffic = run_sim(machine, &mut pages, &traces, &placement, engine);
     let mut fp = FpEventSet::default();
     for phase in kernel.phases() {
         fp.retire_mix(&phase);
@@ -630,6 +684,27 @@ mod tests {
             map.insert("threads".into(), crate::util::json::Json::num(-1.0));
         }
         assert!(KernelMeasurement::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn parallel_engine_measurement_matches_serial() {
+        // The two-phase engine drives the whole pipeline (overhead run,
+        // warm-ups, measured run): its measurement must serialise to
+        // the same bytes as the serial batched pipeline's, for every
+        // worker count.
+        let mut m = machine();
+        let k = GeluNchw::new(EltwiseShape::favourable(2));
+        for (scenario, cache) in [
+            (ScenarioSpec::two_socket(), CacheState::Cold),
+            (ScenarioSpec::single_thread(), CacheState::Warm),
+        ] {
+            let want = measure_kernel(&mut m, &k, &scenario, cache).unwrap();
+            for workers in [1usize, 2, 8] {
+                let got =
+                    measure_kernel_parallel(&mut m, &k, &scenario, cache, workers).unwrap();
+                assert_bit_identical(&got, &want);
+            }
+        }
     }
 
     #[test]

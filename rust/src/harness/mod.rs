@@ -10,6 +10,8 @@ pub mod scenario;
 pub mod spec;
 
 pub use cache_state::CacheState;
-pub use measure::{measure_kernel, measure_kernel_reference, KernelMeasurement};
+pub use measure::{
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference, KernelMeasurement,
+};
 pub use scenario::{PlacementSpec, ScenarioSpec, ThreadSpec};
 pub use spec::{Cell, ExperimentSpec, GridSpec, KernelSpec, SpecKind};

@@ -56,7 +56,9 @@ use super::experiments::{
     exp_binding_artifact, exp_conv_post, exp_f8_post, exp_p1, exp_p2, exp_v1, exp_v2,
     ExperimentParams, ExperimentResult, FigureGroup,
 };
-use super::measure::{measure_kernel, measure_kernel_reference, KernelMeasurement};
+use super::measure::{
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference, KernelMeasurement,
+};
 use super::scenario::ScenarioSpec;
 
 /// Declarative kernel constructor: which model, at which paper shape.
@@ -269,6 +271,32 @@ impl Cell {
         let mut machine = Machine::new(params.machine.clone());
         let kernel = self.kernel.build(params);
         measure_kernel(&mut machine, kernel.as_ref(), &self.scenario, self.cache)
+    }
+
+    /// As [`Self::simulate`], with up to `sim_jobs` intra-cell workers
+    /// driving the two-phase parallel engine
+    /// ([`crate::harness::measure::measure_kernel_parallel`]);
+    /// `sim_jobs ≤ 1` keeps the serial batched pipeline. The
+    /// measurement is bit-identical for every worker count — the plan
+    /// executor hands big cells intra-cell workers whenever the cell
+    /// queue is shallower than the `--jobs` budget.
+    pub fn simulate_jobs(
+        &self,
+        params: &ExperimentParams,
+        sim_jobs: usize,
+    ) -> Result<KernelMeasurement> {
+        if sim_jobs <= 1 {
+            return self.simulate(params);
+        }
+        let mut machine = Machine::new(params.machine.clone());
+        let kernel = self.kernel.build(params);
+        measure_kernel_parallel(
+            &mut machine,
+            kernel.as_ref(),
+            &self.scenario,
+            self.cache,
+            sim_jobs,
+        )
     }
 
     /// As [`Self::simulate`], but through the retained scalar reference

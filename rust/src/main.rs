@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use dlroofline::cli::{opt, switch, AppSpec, CmdSpec, Parsed};
 use dlroofline::coordinator::config::resolve_machine;
-use dlroofline::coordinator::runner::{render_report, run_and_write, sweep_and_write_cached};
+use dlroofline::coordinator::runner::{render_report, run_and_write, sweep_and_write_budget};
 use dlroofline::coordinator::store::{CellStore, CACHE_ENV};
 use dlroofline::coordinator::{plan, KernelRegistry, StoreUsage};
 use dlroofline::harness::experiments::{experiment_index, ExperimentParams};
@@ -75,6 +75,11 @@ fn app() -> AppSpec {
                     opt("batch", "override workload batch", None),
                     opt("only", "comma-separated experiment ids (default: all)", None),
                     opt("jobs", "worker threads (0 = auto)", Some("0")),
+                    opt(
+                        "sim-jobs",
+                        "intra-cell sim workers (0 = auto from the --jobs budget, 1 = serial)",
+                        Some("0"),
+                    ),
                     opt("cache-dir", "persistent cell cache dir (default: $DLROOFLINE_CACHE)", None),
                     switch("full-size", "use the paper's full tensor sizes (slow)"),
                     switch("svg", "also emit SVG plots"),
@@ -374,7 +379,10 @@ fn print_explain(cells: &[dlroofline::coordinator::plan::CellPlan], usage: &Stor
 
 fn cmd_sweep(parsed: &Parsed) -> Result<()> {
     let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports"));
-    let jobs = parsed.opt_parse::<usize>("jobs")?.unwrap_or(0);
+    let budget = dlroofline::coordinator::JobBudget {
+        jobs: parsed.opt_parse::<usize>("jobs")?.unwrap_or(0),
+        sim_jobs: parsed.opt_parse::<usize>("sim-jobs")?.unwrap_or(0),
+    };
     let ids = ids_from(parsed);
     let id_refs: Vec<&str> = ids.iter().map(|s| s.as_str()).collect();
     let store = store_from(parsed)?;
@@ -401,13 +409,13 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
         // Cell hashes key on the machine fingerprint, so one cache
         // directory serves every machine of the grid.
         let base = params_with_machine(parsed, kept[0].clone())?;
-        let grid = dlroofline::coordinator::sweep_grid_and_write_cached(
+        let grid = dlroofline::coordinator::sweep_grid_and_write_budget(
             &id_refs,
             &base,
             &machines,
             &out_dir,
             parsed.has("svg"),
-            jobs,
+            budget,
             store.as_ref(),
         )?;
         for name in &grid.duplicates_skipped {
@@ -444,12 +452,12 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
         note_skip(name);
     }
     let params = params_with_machine(parsed, kept[0].clone())?;
-    let (results, sweep) = sweep_and_write_cached(
+    let (results, sweep) = sweep_and_write_budget(
         &id_refs,
         &params,
         &out_dir,
         parsed.has("svg"),
-        jobs,
+        budget,
         store.as_ref(),
     )?;
     for (result, output) in results.iter().zip(sweep.outputs.iter()) {

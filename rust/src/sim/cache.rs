@@ -5,6 +5,11 @@
 //! timestamp (a 64-bit counter never wraps in practice), and lookups are a
 //! linear scan over ≤ 20 ways — this is the simulator's hottest loop and
 //! is deliberately allocation-free.
+//!
+//! A `Cache` is a plain owned value with no interior sharing, so the
+//! two-phase parallel engine (§Perf step 7) can probe each thread's
+//! private L1/L2 from concurrent phase-A workers without any
+//! synchronisation — only the shared LLCs stay on the serial path.
 
 /// Static description of one cache level.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -259,6 +264,12 @@ impl Cache {
     /// counters — but the hit/miss totals are accumulated locally and
     /// folded into `stats` once per batch, and the whole loop inlines
     /// into the caller's pipeline (§Perf step 6).
+    ///
+    /// The returned miss list is also the survivor source of the
+    /// two-phase parallel engine (§Perf step 7): phase A runs this
+    /// batch against each thread's private L1 concurrently and turns
+    /// the misses (lines + dirty victims) into that thread's survivor
+    /// stream for the serial shared-level replay.
     pub fn access_batch(&mut self, probes: &[(u64, bool)], misses: &mut Vec<BatchMiss>) {
         let ways = self.config.ways;
         let mut hits = 0u64;

@@ -16,6 +16,19 @@
 //! each cache's exact operation sequence, so it is bit-identical to the
 //! retained scalar walk ([`MemorySystem::run_reference`]) — pinned by
 //! the differential parity suite (`rust/tests/sim_parity.rs`).
+//!
+//! On top of that, [`MemorySystem::run_parallel`] exploits the
+//! hierarchy's ownership structure (§Perf step 7): L1, L2 and the
+//! prefetcher are strictly per-thread, so **phase A** simulates every
+//! thread's private levels concurrently, each worker emitting a
+//! compact, chunk-delimited *survivor stream* of the operations that
+//! reach the shared levels; **phase B** then replays those streams
+//! through the LLC and the IMCs serially, in the exact round-robin
+//! chunk order of the serial pipeline — shared-level traffic is
+//! bit-identical by construction, for every worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::cache::{BatchMiss, Cache, CacheConfig, CacheStats, PrefetchFill, Probe};
 use super::imc::{ImcBank, ImcCounters};
@@ -216,6 +229,206 @@ struct RunSnapshot {
     imc: Vec<ImcCounters>,
     caches: Vec<(CacheStats, CacheStats)>,
     llcs: Vec<CacheStats>,
+}
+
+/// Bits of a packed survivor op holding the kind tag; the line address
+/// occupies the remaining high bits (the simulated space stays below
+/// 2^38 bytes, so line addresses fit comfortably).
+const OP_KIND_BITS: u32 = 3;
+const OP_KIND_MASK: u64 = (1 << OP_KIND_BITS) - 1;
+
+/// Kind tags of the packed survivor ops a thread's private phase emits
+/// (§Perf step 7). Each tag names exactly one shared-level interaction
+/// of the serial pipeline, so replaying a stream reproduces the LLC/IMC
+/// operation sequence verbatim.
+mod op {
+    /// An L2 dirty victim sinking into the LLC (`Cache::writeback`);
+    /// emitted by the L1-victim, L2-demand-miss and L2-prefetch-fill
+    /// paths alike.
+    pub const WRITEBACK: u64 = 0;
+    /// A demand L2 miss probing the LLC (`Cache::access`).
+    pub const DEMAND: u64 = 1;
+    /// A hardware-prefetch target that missed L2 and continues to the
+    /// LLC (`Cache::fill_prefetch_probed`).
+    pub const HW_PREFETCH: u64 = 2;
+    /// A non-temporal store: invalidate the LLC copy, write the owning
+    /// IMC directly (no RFO read — the §2.2 win).
+    pub const NT_STORE: u64 = 3;
+    /// A software prefetch whose line was absent from the private L1/L2
+    /// (residency below that is only known at replay time, when the LLC
+    /// state is live).
+    pub const SW_PREFETCH: u64 = 4;
+}
+
+/// One thread's shared-level survivors, in private-pipeline order,
+/// delimited per round-robin chunk turn.
+///
+/// The stream is the phase-A → phase-B interface of
+/// [`MemorySystem::run_parallel`]: ops are packed as
+/// `(line << OP_KIND_BITS) | kind` (8 bytes each), and `chunk_ends[k]`
+/// is the exclusive end offset of the ops the thread's `k`-th chunk
+/// turn produced — exactly the ops the serial pipeline would issue to
+/// the shared levels during that turn.
+#[derive(Clone, Debug, Default)]
+struct SurvivorStream {
+    /// Packed `(line << OP_KIND_BITS) | kind` ops, in emission order.
+    ops: Vec<u64>,
+    /// Exclusive end offset into `ops` of each chunk turn.
+    chunk_ends: Vec<usize>,
+    /// Line probes the thread consumed (for `TrafficStats::probes`).
+    probes: u64,
+}
+
+impl SurvivorStream {
+    #[inline]
+    fn push(&mut self, line: u64, kind: u64) {
+        debug_assert!(line <= u64::MAX >> OP_KIND_BITS);
+        debug_assert!(kind <= OP_KIND_MASK);
+        self.ops.push((line << OP_KIND_BITS) | kind);
+    }
+
+    /// Close the current chunk turn.
+    fn end_chunk(&mut self) {
+        self.chunk_ends.push(self.ops.len());
+    }
+
+    /// The ops of chunk turn `round`, or `None` once the thread is done.
+    fn chunk(&self, round: usize) -> Option<&[u64]> {
+        let end = *self.chunk_ends.get(round)?;
+        let start = if round == 0 { 0 } else { self.chunk_ends[round - 1] };
+        Some(&self.ops[start..end])
+    }
+}
+
+/// Phase A of [`MemorySystem::run_parallel`]: walk one thread's trace
+/// through its private L1/L2/prefetcher exactly as the serial pipeline
+/// would — same chunk budget, same batched L1 filter, same bypass
+/// flushes — emitting the survivor stream instead of probing the shared
+/// levels. Pure function of `(ctx, trace)`: safe to run concurrently
+/// with other threads' private phases.
+fn private_phase(ctx: &mut ThreadCtx, trace: &Trace) -> SurvivorStream {
+    let mut stream = SurvivorStream::default();
+    let mut demand: Vec<(u64, bool)> = Vec::with_capacity(CHUNK as usize);
+    let mut misses: Vec<BatchMiss> = Vec::with_capacity(CHUNK as usize);
+    let mut targets: Vec<u64> = Vec::with_capacity(8);
+    let mut fills: Vec<PrefetchFill> = Vec::with_capacity(8);
+    let mut cursor = Cursor::new(trace);
+    while !cursor.done {
+        let mut budget = CHUNK;
+        while budget > 0 {
+            let Some((line, kind)) = cursor.next() else {
+                cursor.done = true;
+                break;
+            };
+            budget -= 1;
+            stream.probes += 1;
+            match kind {
+                AccessKind::Load | AccessKind::Store => {
+                    demand.push((line, kind == AccessKind::Store));
+                }
+                AccessKind::StoreNT | AccessKind::PrefetchSW => {
+                    drain_private(
+                        ctx,
+                        &mut demand,
+                        &mut misses,
+                        &mut targets,
+                        &mut fills,
+                        &mut stream,
+                    );
+                    bypass_private(ctx, line, kind, &mut stream);
+                }
+            }
+        }
+        drain_private(ctx, &mut demand, &mut misses, &mut targets, &mut fills, &mut stream);
+        stream.end_chunk();
+    }
+    stream
+}
+
+/// Resolve a pending demand batch against the private levels: one
+/// batched L1 pass, then each surviving miss runs the private half of
+/// `descend`, emitting its shared-level ops in the serial order.
+fn drain_private(
+    ctx: &mut ThreadCtx,
+    demand: &mut Vec<(u64, bool)>,
+    misses: &mut Vec<BatchMiss>,
+    targets: &mut Vec<u64>,
+    fills: &mut Vec<PrefetchFill>,
+    stream: &mut SurvivorStream,
+) {
+    if demand.is_empty() {
+        return;
+    }
+    misses.clear();
+    ctx.l1.access_batch(demand.as_slice(), misses);
+    for m in misses.iter() {
+        // L1 dirty victim goes to L2; an L2 victim survives to the LLC.
+        if let Some(victim) = m.dirty_victim {
+            if let Some(v2) = ctx.l2.writeback(victim) {
+                stream.push(v2, op::WRITEBACK);
+            }
+        }
+
+        // The L2 streamer observes L1 misses.
+        ctx.pf.observe(m.line, targets);
+
+        // L2; a demand miss (and its dirty victim) survive.
+        match ctx.l2.access(m.line, false) {
+            Probe::Hit => {}
+            Probe::Miss { dirty_victim } => {
+                if let Some(v2) = dirty_victim {
+                    stream.push(v2, op::WRITEBACK);
+                }
+                stream.push(m.line, op::DEMAND);
+            }
+        }
+
+        // Streamer fills: targets L2 didn't already hold survive.
+        if !targets.is_empty() {
+            fills.clear();
+            ctx.l2.fill_prefetch_batch(targets, fills);
+            for f in fills.iter() {
+                if f.was_resident {
+                    continue;
+                }
+                if let Some(v2) = f.dirty_victim {
+                    stream.push(v2, op::WRITEBACK);
+                }
+                stream.push(f.line, op::HW_PREFETCH);
+            }
+        }
+    }
+    demand.clear();
+}
+
+/// The private half of a cache-bypassing access (NT store or SW
+/// prefetch): mutate L1/L2, emit the op the shared levels must replay.
+fn bypass_private(ctx: &mut ThreadCtx, line: u64, kind: AccessKind, stream: &mut SurvivorStream) {
+    match kind {
+        AccessKind::StoreNT => {
+            ctx.l1.invalidate(line);
+            ctx.l2.invalidate(line);
+            stream.push(line, op::NT_STORE);
+        }
+        AccessKind::PrefetchSW => {
+            // The serial path's residency check short-circuits L1 → L2 →
+            // LLC; only the private half is known here, so the op is
+            // emitted (and the LLC consulted) only when L1/L2 both miss.
+            if !(ctx.l1.contains(line) || ctx.l2.contains(line)) {
+                stream.push(line, op::SW_PREFETCH);
+            }
+            // prefetcht0 fills L2 and L1 regardless; an L2 dirty victim
+            // survives to the LLC (the L1 fill's victim is dropped, as
+            // in the serial path).
+            if let Some(victim) = ctx.l2.fill_prefetch(line) {
+                stream.push(victim, op::WRITEBACK);
+            }
+            ctx.l1.fill_prefetch(line);
+        }
+        AccessKind::Load | AccessKind::Store => {
+            unreachable!("demand kinds take the batched pipeline")
+        }
+    }
 }
 
 impl MemorySystem {
@@ -462,6 +675,178 @@ impl MemorySystem {
         }
         self.finish(&before, &mut stats);
         stats
+    }
+
+    /// The two-phase parallel engine (§Perf step 7): identical
+    /// observable semantics to [`MemorySystem::run_with`], with the
+    /// per-thread private levels simulated concurrently.
+    ///
+    /// **Phase A** runs every thread's L1/L2/prefetcher on up to
+    /// `workers` scoped worker threads (clamped to the trace count; the
+    /// private levels are strictly per-thread, so the phase is
+    /// embarrassingly parallel and each thread's private state evolves
+    /// exactly as under the serial pipeline). Each thread emits a
+    /// compact, chunk-delimited survivor stream — the demand misses,
+    /// prefetch fills, writeback victims and NT-store/SW-prefetch
+    /// bypasses that reach the shared levels.
+    ///
+    /// **Phase B** replays the streams through the shared LLCs and IMCs
+    /// serially, in the exact round-robin `CHUNK` order the serial
+    /// pipeline interleaves threads, resolving `node_of` in the same
+    /// global order (so first-touch page pinning is identical too).
+    ///
+    /// Consequence: the returned [`TrafficStats`] — and therefore every
+    /// measurement built on it — is bit-identical to
+    /// [`MemorySystem::run_with`] and [`MemorySystem::run_reference`]
+    /// for **every** worker count, pinned by `rust/tests/sim_parity.rs`.
+    /// Only wall-clock changes.
+    pub fn run_parallel<F>(
+        &mut self,
+        traces: &[Trace],
+        placement: &Placement,
+        mut node_of: F,
+        workers: usize,
+    ) -> TrafficStats
+    where
+        F: FnMut(u64, usize) -> usize,
+    {
+        let before = self.snapshot(traces, placement);
+        let mut stats = TrafficStats {
+            imc: vec![ImcCounters::default(); self.nodes],
+            ..Default::default()
+        };
+
+        // Phase A: private levels, concurrently.
+        let n = traces.len();
+        let workers = workers.clamp(1, n.max(1));
+        let streams: Vec<SurvivorStream> = if workers <= 1 {
+            self.threads[..n]
+                .iter_mut()
+                .zip(traces)
+                .map(|(ctx, trace)| private_phase(ctx, trace))
+                .collect()
+        } else {
+            let ctxs: Vec<Mutex<&mut ThreadCtx>> =
+                self.threads[..n].iter_mut().map(Mutex::new).collect();
+            let slots: Vec<Mutex<Option<SurvivorStream>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let mut ctx = ctxs[i].lock().unwrap();
+                        *slots[i].lock().unwrap() = Some(private_phase(&mut **ctx, &traces[i]));
+                    });
+                }
+            });
+            slots
+                .into_iter()
+                .map(|s| s.into_inner().unwrap().expect("phase A covered every thread"))
+                .collect()
+        };
+        for s in &streams {
+            stats.probes += s.probes;
+        }
+
+        // Phase B: serial replay through the shared levels, round-robin
+        // over each thread's k-th chunk exactly as the serial pipeline's
+        // outer loop gives every live thread one turn per round.
+        let mut round = 0usize;
+        loop {
+            let mut any = false;
+            for (tid, stream) in streams.iter().enumerate() {
+                let Some(ops) = stream.chunk(round) else { continue };
+                any = true;
+                let thread_node = placement.thread_nodes[tid];
+                for &packed in ops {
+                    self.replay_shared(thread_node, packed, &mut node_of, &mut stats);
+                }
+            }
+            if !any {
+                break;
+            }
+            round += 1;
+        }
+
+        self.finish(&before, &mut stats);
+        stats
+    }
+
+    /// Phase B: apply one survivor op to the shared LLC/IMC levels —
+    /// the exact shared-level block the serial pipeline runs for that
+    /// op, in the same order, including the `node_of` resolution.
+    fn replay_shared<F: FnMut(u64, usize) -> usize>(
+        &mut self,
+        thread_node: usize,
+        packed: u64,
+        node_of: &mut F,
+        stats: &mut TrafficStats,
+    ) {
+        let line = packed >> OP_KIND_BITS;
+        match packed & OP_KIND_MASK {
+            op::WRITEBACK => {
+                if let Some(v3) = self.llcs[thread_node].writeback(line) {
+                    let wb_node = node_of(v3 * LINE, thread_node);
+                    self.imc.record_write(wb_node, 1);
+                    count_wb_locality(stats, thread_node, wb_node, 1);
+                }
+            }
+            op::DEMAND => match self.llcs[thread_node].access(line, false) {
+                Probe::Hit => {}
+                Probe::Miss { dirty_victim } => {
+                    if let Some(v3) = dirty_victim {
+                        let wb_node = node_of(v3 * LINE, thread_node);
+                        self.imc.record_write(wb_node, 1);
+                        count_wb_locality(stats, thread_node, wb_node, 1);
+                    }
+                    let mem_node = node_of(line * LINE, thread_node);
+                    self.imc.record_read(mem_node, 1);
+                    stats.llc_demand_miss_lines += 1;
+                    count_locality(stats, thread_node, mem_node, 1);
+                }
+            },
+            op::HW_PREFETCH => {
+                let (was_in_llc, llc_victim) = self.llcs[thread_node].fill_prefetch_probed(line);
+                if !was_in_llc {
+                    let mem_node = node_of(line * LINE, thread_node);
+                    self.imc.record_read(mem_node, 1);
+                    stats.hw_prefetch_lines += 1;
+                    count_locality(stats, thread_node, mem_node, 1);
+                    if let Some(v) = llc_victim {
+                        let wb_node = node_of(v * LINE, thread_node);
+                        self.imc.record_write(wb_node, 1);
+                        count_wb_locality(stats, thread_node, wb_node, 1);
+                    }
+                }
+            }
+            op::NT_STORE => {
+                let mem_node = node_of(line * LINE, thread_node);
+                self.llcs[thread_node].invalidate(line);
+                self.imc.record_write(mem_node, 1);
+                stats.nt_store_lines += 1;
+                count_locality(stats, thread_node, mem_node, 1);
+            }
+            op::SW_PREFETCH => {
+                // The private half already missed; the line is resident
+                // iff the LLC holds it now.
+                if !self.llcs[thread_node].contains(line) {
+                    let mem_node = node_of(line * LINE, thread_node);
+                    self.imc.record_read(mem_node, 1);
+                    stats.sw_prefetch_lines += 1;
+                    count_locality(stats, thread_node, mem_node, 1);
+                    if let Some(victim) = self.llcs[thread_node].fill_prefetch(line) {
+                        let wb_node = node_of(victim * LINE, thread_node);
+                        self.imc.record_write(wb_node, 1);
+                        count_wb_locality(stats, thread_node, wb_node, 1);
+                    }
+                }
+            }
+            other => unreachable!("corrupt survivor op kind {other}"),
+        }
     }
 
     /// Resolve a pending demand batch: one batched L1 pass, then the
@@ -1110,6 +1495,62 @@ mod tests {
         let want = reference.run_reference(&traces, &placement, &mut oracle);
         assert_eq!(got, want);
         assert!(got.nt_store_lines > 0 && got.sw_prefetch_lines > 0);
+    }
+
+    #[test]
+    fn two_phase_matches_serial_on_mixed_kinds() {
+        // Loads, stores, NT stores and SW prefetches across two threads
+        // with the prefetcher on: the two-phase engine must reproduce
+        // the serial pipeline's TrafficStats exactly, for every phase-A
+        // worker count.
+        let cfg = HierarchyConfig {
+            l1: CacheConfig::new(512, 2),
+            l2: CacheConfig::new(2048, 4),
+            llc: CacheConfig::new(8192, 8),
+            prefetch: PrefetchConfig::default(),
+        };
+        let mk = |base: u64| {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(base, 6144, AccessKind::Load));
+            t.push(AccessRun::contiguous(base + 1024, 2048, AccessKind::StoreNT));
+            t.push(AccessRun::contiguous(base, 2048, AccessKind::PrefetchSW));
+            t.push(AccessRun::contiguous(base + 4096, 4096, AccessKind::Store));
+            t.push(AccessRun::contiguous(base, 4096, AccessKind::Load));
+            t
+        };
+        let traces = [mk(0), mk(1 << 20)];
+        let placement = Placement::spread(2, 2);
+        let node_of = |addr: u64, _t: usize| usize::from(addr >= (1 << 20));
+
+        let mut serial = MemorySystem::new(cfg, 2, 2);
+        let want = serial.run_with(&traces, &placement, node_of);
+        assert!(want.nt_store_lines > 0 && want.sw_prefetch_lines > 0);
+        for workers in [1usize, 2, 8] {
+            let mut parallel = MemorySystem::new(cfg, 2, 2);
+            let got = parallel.run_parallel(&traces, &placement, node_of, workers);
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn two_phase_warm_rerun_matches_serial() {
+        // Retained cache state across runs: the engines must agree on
+        // the warm rerun too (phase A sees the first run's L1/L2 state,
+        // phase B the first run's LLC state).
+        let mk = || {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(0, 6144, AccessKind::Load));
+            t.push(AccessRun::contiguous(1 << 20, 6144, AccessKind::Store));
+            t
+        };
+        let placement = Placement::bound(2, 0);
+        let mut serial = tiny_system(2);
+        let mut parallel = tiny_system(2);
+        for round in 0..3 {
+            let want = serial.run_with(&[mk(), mk()], &placement, node0);
+            let got = parallel.run_parallel(&[mk(), mk()], &placement, node0, 2);
+            assert_eq!(got, want, "round {round}");
+        }
     }
 
     #[test]

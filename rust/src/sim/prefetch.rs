@@ -98,7 +98,11 @@ impl Prefetcher {
     ///
     /// Called once per L1 miss from the level-filtered pipeline's
     /// `descend` step; `#[inline]` lets the tracker fast path fold into
-    /// the monomorphized hot loop (§Perf step 6).
+    /// the monomorphized hot loop (§Perf step 6). The prefetcher is
+    /// per-core state, so the two-phase engine's concurrent phase-A
+    /// workers each drive their own instance (§Perf step 7) — the
+    /// tracker/frontier evolution is independent of how threads
+    /// interleave, which is what keeps the engines bit-identical.
     #[inline]
     pub fn observe(&mut self, line: u64, out: &mut Vec<u64>) {
         out.clear();

@@ -64,6 +64,43 @@ impl AccessRun {
     pub fn lines(&self) -> LineIter {
         LineIter { run: *self, i: 0, last: None }
     }
+
+    /// Append the run's line coverage to `out` as inclusive
+    /// `(first, last)` line intervals.
+    ///
+    /// Runs with `|stride| ≤ LINE` advance at most one line per access,
+    /// so their whole coverage is a **single interval** between the
+    /// endpoint lines — no per-probe work. Larger strides skip lines;
+    /// those walk the accesses once, collapsing ±1-line steps, and emit
+    /// one interval per gap (never more entries than distinct lines).
+    /// Addresses must not wrap the 64-bit space — the same contract the
+    /// simulator's ≤ 2^38-byte address space already imposes.
+    fn line_intervals(&self, out: &mut Vec<(u64, u64)>) {
+        if self.count == 0 {
+            return;
+        }
+        let line_at = |i: u64| ((self.base as i64 + self.stride * i as i64) as u64) / LINE;
+        let first = line_at(0);
+        let last = line_at(self.count - 1);
+        if self.stride.unsigned_abs() <= LINE {
+            out.push((first.min(last), first.max(last)));
+            return;
+        }
+        let (mut lo, mut hi, mut prev) = (first, first, first);
+        for i in 1..self.count {
+            let line = line_at(i);
+            if line == prev + 1 || (prev > 0 && line == prev - 1) {
+                lo = lo.min(line);
+                hi = hi.max(line);
+            } else {
+                out.push((lo, hi));
+                lo = line;
+                hi = line;
+            }
+            prev = line;
+        }
+        out.push((lo, hi));
+    }
 }
 
 /// Iterator over de-duplicated consecutive line addresses of a run.
@@ -128,12 +165,38 @@ impl Trace {
         self.runs.iter().map(|r| r.lines().count() as u64).sum()
     }
 
-    /// The unique footprint in bytes, at line granularity. O(probes log n).
+    /// The unique footprint in bytes, at line granularity.
+    ///
+    /// Computed as a sweep over per-run *line intervals*
+    /// (`AccessRun::line_intervals`) rather than by materializing,
+    /// sorting and deduplicating every line probe: contiguous and
+    /// small-stride runs contribute one interval each, so the cost
+    /// scales with the number of runs (plus the distinct lines of
+    /// large-stride runs), not with total probes — a 64 MiB streaming
+    /// trace costs one interval instead of a million-entry sort.
     pub fn footprint_bytes(&self) -> u64 {
-        let mut lines: Vec<u64> = self.runs.iter().flat_map(|r| r.lines()).collect();
-        lines.sort_unstable();
-        lines.dedup();
-        lines.len() as u64 * LINE
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for r in &self.runs {
+            r.line_intervals(&mut intervals);
+        }
+        intervals.sort_unstable();
+        let mut lines = 0u64;
+        let mut current: Option<(u64, u64)> = None;
+        for (lo, hi) in intervals {
+            match &mut current {
+                Some((_, cur_hi)) if lo <= *cur_hi => *cur_hi = (*cur_hi).max(hi),
+                _ => {
+                    if let Some((cur_lo, cur_hi)) = current {
+                        lines += cur_hi - cur_lo + 1;
+                    }
+                    current = Some((lo, hi));
+                }
+            }
+        }
+        if let Some((cur_lo, cur_hi)) = current {
+            lines += cur_hi - cur_lo + 1;
+        }
+        lines * LINE
     }
 }
 
@@ -197,5 +260,73 @@ mod tests {
     fn repeat_same_address_is_one_line_probe() {
         let r = AccessRun { base: 128, stride: 0, count: 1000, size: 4, kind: AccessKind::Load };
         assert_eq!(r.lines().count(), 1);
+    }
+
+    /// The old `footprint_bytes`: materialize every line probe, sort,
+    /// dedup. Kept here as the property-test oracle for the
+    /// interval-merge rewrite.
+    fn footprint_by_materialization(t: &Trace) -> u64 {
+        let mut lines: Vec<u64> = t.runs.iter().flat_map(|r| r.lines()).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        lines.len() as u64 * LINE
+    }
+
+    #[test]
+    fn footprint_interval_merge_matches_probe_materialization() {
+        // Deterministic splitmix64-style generator.
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut rnd = move |bound: u64| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (state >> 33) % bound.max(1)
+        };
+        for case in 0..250 {
+            let mut t = Trace::new();
+            for _ in 0..1 + rnd(6) {
+                // Bases high enough that negative strides never wrap.
+                let base = (1 << 22) + rnd(1 << 16);
+                let kind = AccessKind::Load; // kind is irrelevant to footprint
+                let sign: i64 = if rnd(2) == 0 { 1 } else { -1 };
+                let run = match rnd(5) {
+                    // Contiguous, random extent (line-aligned iteration).
+                    0 => AccessRun::contiguous(base, 1 + rnd(16 * 1024), kind),
+                    // Small stride (|s| ≤ LINE), either direction.
+                    1 => AccessRun {
+                        base,
+                        stride: sign * (1 + rnd(LINE)) as i64,
+                        count: 1 + rnd(500),
+                        size: 4,
+                        kind,
+                    },
+                    // Large stride, either direction (skips lines).
+                    2 => AccessRun {
+                        base,
+                        stride: sign * (65 + rnd(4096)) as i64,
+                        count: 1 + rnd(300),
+                        size: 4,
+                        kind,
+                    },
+                    // Borderline strides around one line.
+                    3 => AccessRun {
+                        base,
+                        stride: [63i64, 64, 65, 127, 128, -63, -64, -65][rnd(8) as usize],
+                        count: 1 + rnd(300),
+                        size: 4,
+                        kind,
+                    },
+                    // Repeated single address.
+                    _ => AccessRun { base, stride: 0, count: 1 + rnd(100), size: 4, kind },
+                };
+                t.push(run);
+            }
+            assert_eq!(
+                t.footprint_bytes(),
+                footprint_by_materialization(&t),
+                "case {case} diverged: {:?}",
+                t.runs
+            );
+        }
     }
 }

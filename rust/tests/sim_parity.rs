@@ -1,31 +1,41 @@
-//! Differential parity suite (ISSUE 4 tentpole): the batched, SoA,
-//! monomorphized simulator hot path must be *bit-identical* to the
-//! retained scalar reference path.
+//! Differential parity suite (ISSUE 4 + ISSUE 5 tentpoles): the
+//! batched, SoA, monomorphized simulator hot path **and** the two-phase
+//! parallel engine must be *bit-identical* to the retained scalar
+//! reference path.
 //!
-//! Three layers of pinning:
+//! Four layers of pinning:
 //!
 //! 1. **Measurement parity** — [`measure_kernel`] vs
-//!    [`measure_kernel_reference`] across every kernel family × the six
+//!    [`measure_kernel_reference`] vs [`measure_kernel_parallel`] at
+//!    worker counts {1, 2, 8}, across every kernel family × the six
 //!    [`ScenarioSpec`] presets (and warm-cache protocols): identical
 //!    `TrafficStats`, per-level `CacheStats`, IMC counters, W/Q/R — the
 //!    whole measurement serialises to the same bytes.
 //! 2. **Edge geometry** — direct-mapped (1-way) and single-set caches,
 //!    batches that straddle the internal `CHUNK` boundary mid-run, and
 //!    NT-store / SW-prefetch kinds interleaved inside one batch, driven
-//!    at the `MemorySystem::run_with` / `run_reference` level.
+//!    at the `MemorySystem::run_with` / `run_reference` /
+//!    `run_parallel` level (again at worker counts {1, 2, 8}).
 //! 3. **Store compatibility** — a warm `--cache-dir` sweep over records
 //!    produced by the *reference* path (what the pre-batching binary
-//!    would have written) simulates nothing and emits byte-identical
+//!    would have written) — or by a mix of the reference and two-phase
+//!    engines — simulates nothing and emits byte-identical
 //!    `run.json`/reports.
+//! 4. **Budget determinism** — `sweep` outputs are byte-identical
+//!    across `--sim-jobs 1/2/8` and vs. the serial engine.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use dlroofline::coordinator::plan;
-use dlroofline::coordinator::runner::{sweep_and_write, sweep_and_write_cached};
+use dlroofline::coordinator::plan::{self, JobBudget};
+use dlroofline::coordinator::runner::{
+    sweep_and_write, sweep_and_write_budget, sweep_and_write_cached,
+};
 use dlroofline::coordinator::store::CellStore;
 use dlroofline::harness::experiments::ExperimentParams;
-use dlroofline::harness::measure::{measure_kernel, measure_kernel_reference};
+use dlroofline::harness::measure::{
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference,
+};
 use dlroofline::harness::{CacheState, ScenarioSpec};
 use dlroofline::kernels::conv_direct::ConvDirectBlocked;
 use dlroofline::kernels::conv_winograd::ConvWinograd;
@@ -81,6 +91,11 @@ fn assert_parity(
     );
 }
 
+/// Phase-A worker counts every two-phase assertion runs at: serial
+/// fallback, minimal concurrency, more workers than most cells have
+/// threads (exercises the clamp).
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
 #[test]
 fn batched_path_matches_reference_across_kernels_and_presets() {
     let config = MachineConfig::xeon_6248();
@@ -100,6 +115,24 @@ fn batched_path_matches_reference_across_kernels_and_presets() {
                 &reference,
                 &format!("{} × {} × cold", kernel.name(), scenario.name),
             );
+            // Third column: the two-phase parallel engine, at every
+            // worker count, against the (reference-pinned) batched run.
+            for workers in WORKER_COUNTS {
+                let mut c = Machine::new(config.clone());
+                let parallel = measure_kernel_parallel(
+                    &mut c,
+                    kernel.as_ref(),
+                    scenario,
+                    CacheState::Cold,
+                    workers,
+                )
+                .expect("two-phase measurement");
+                assert_parity(
+                    &parallel,
+                    &batched,
+                    &format!("{} × {} × cold × {workers}w", kernel.name(), scenario.name),
+                );
+            }
         }
     }
 }
@@ -128,6 +161,22 @@ fn batched_path_matches_reference_warm_protocol() {
                 &reference,
                 &format!("{} × {} × warm", kernel.name(), scenario.name),
             );
+            for workers in WORKER_COUNTS {
+                let mut c = Machine::new(config.clone());
+                let parallel = measure_kernel_parallel(
+                    &mut c,
+                    kernel.as_ref(),
+                    &scenario,
+                    CacheState::Warm,
+                    workers,
+                )
+                .expect("two-phase measurement");
+                assert_parity(
+                    &parallel,
+                    &batched,
+                    &format!("{} × {} × warm × {workers}w", kernel.name(), scenario.name),
+                );
+            }
         }
     }
 }
@@ -146,23 +195,35 @@ fn edge_config(l1_ways: usize, prefetch: bool) -> HierarchyConfig {
     }
 }
 
-/// Run the same traces through the batched and reference paths on twin
-/// systems and assert identical deltas (twice, to cover warmed state).
+/// Run the same traces through the reference, batched and two-phase
+/// paths on twin systems and assert identical deltas (twice, to cover
+/// warmed state; the two-phase engine at every worker count).
 fn assert_run_parity(cfg: HierarchyConfig, traces: &[Trace], placement: &Placement) {
     let threads = traces.len();
-    let mut batched = MemorySystem::new(cfg, 2, threads);
     let mut reference = MemorySystem::new(cfg, 2, threads);
     let node_of = |addr: u64, toucher: usize| {
         // Page-parity ownership with a toucher-dependent twist, so
         // resolution order matters and locality splits are non-trivial.
         (((addr >> 12) as usize) ^ toucher) & 1
     };
-    for round in 0..2 {
+    let wants: Vec<TrafficStats> = (0..2)
+        .map(|_| {
+            let mut oracle = node_of;
+            reference.run_reference(traces, placement, &mut oracle)
+        })
+        .collect();
+    let mut batched = MemorySystem::new(cfg, 2, threads);
+    for (round, want) in wants.iter().enumerate() {
         let got: TrafficStats = batched.run_with(traces, placement, node_of);
-        let mut oracle = node_of;
-        let want = reference.run_reference(traces, placement, &mut oracle);
-        assert_eq!(got, want, "round {round} diverged ({cfg:?})");
+        assert_eq!(&got, want, "batched round {round} diverged ({cfg:?})");
         assert_eq!(got.probes, traces.iter().map(|t| t.line_probes()).sum::<u64>());
+    }
+    for workers in WORKER_COUNTS {
+        let mut twophase = MemorySystem::new(cfg, 2, threads);
+        for (round, want) in wants.iter().enumerate() {
+            let got = twophase.run_parallel(traces, placement, node_of, workers);
+            assert_eq!(&got, want, "two-phase({workers}) round {round} diverged ({cfg:?})");
+        }
     }
 }
 
@@ -229,6 +290,83 @@ fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
     let mut out = BTreeMap::new();
     walk(dir, dir, &mut out);
     out
+}
+
+// ----------------------------------------------- budget determinism
+
+#[test]
+fn sweep_output_byte_identical_across_sim_jobs() {
+    // The satellite determinism pin: `--sim-jobs 1/2/8` (and the plain
+    // serial engine) must write byte-identical reports and run.json.
+    // f4 is a 20-thread one-socket grid — the cell shape the two-phase
+    // engine exists for; f6 adds warm-protocol cells.
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let ids = ["f4", "f6"];
+
+    let serial_out = TempDir::new("simjobs-serial");
+    let _ = sweep_and_write(&ids, &params, serial_out.path(), false, 1).unwrap();
+    let want = snapshot(serial_out.path());
+    assert!(want.contains_key("run.json"));
+
+    for sim_jobs in [1usize, 2, 8] {
+        let out = TempDir::new("simjobs-n");
+        let budget = JobBudget { jobs: 2, sim_jobs };
+        let _ = sweep_and_write_budget(&ids, &params, out.path(), false, budget, None).unwrap();
+        let got = snapshot(out.path());
+        assert_eq!(
+            want.keys().collect::<Vec<_>>(),
+            got.keys().collect::<Vec<_>>(),
+            "--sim-jobs {sim_jobs} changed the file set"
+        );
+        for (name, bytes) in &want {
+            assert_eq!(bytes, &got[name], "{name} differs under --sim-jobs {sim_jobs}");
+        }
+    }
+}
+
+#[test]
+fn warm_sweep_over_mixed_engine_records_is_byte_identical() {
+    // A cache directory accumulated by BOTH engines — some records
+    // written by the reference walk, some by the two-phase engine —
+    // must serve a warm sweep completely and byte-identically: the
+    // engines' records are indistinguishable on disk.
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let ids = ["f4", "f6"];
+
+    let cache = TempDir::new("mixed-store");
+    let store = CellStore::open(cache.path()).unwrap();
+    let expansion = plan::expand(&ids, &params).unwrap();
+    assert!(expansion.unique_cells().len() >= 2);
+    for (i, (key, cell)) in expansion.unique_cells().iter().enumerate() {
+        let m = if i % 2 == 0 {
+            cell.simulate_reference(&params).unwrap()
+        } else {
+            cell.simulate_jobs(&params, 8).unwrap()
+        };
+        store.insert(*key, &m).unwrap();
+    }
+
+    // Warm cached sweep (itself running the two-phase budget): zero
+    // simulations...
+    let out_cached = TempDir::new("mixed-out-cached");
+    let store = CellStore::open(cache.path()).unwrap();
+    let budget = JobBudget { jobs: 4, sim_jobs: 8 };
+    let (_, cached) =
+        sweep_and_write_budget(&ids, &params, out_cached.path(), false, budget, Some(&store))
+            .unwrap();
+    let usage = cached.store.as_ref().unwrap();
+    assert_eq!(usage.simulated, 0, "mixed-engine records must all be served");
+    assert_eq!(usage.hits, expansion.unique_cells().len());
+
+    // ...and byte-identical outputs to an uncached serial sweep.
+    let out_plain = TempDir::new("mixed-out-plain");
+    let _ = sweep_and_write(&ids, &params, out_plain.path(), false, 1).unwrap();
+    let a = snapshot(out_plain.path());
+    let b = snapshot(out_cached.path());
+    assert_eq!(a.keys().collect::<Vec<_>>(), b.keys().collect::<Vec<_>>());
+    for (name, bytes) in &a {
+        assert_eq!(bytes, &b[name], "{name} differs between serial and mixed-engine-fed sweep");
+    }
 }
 
 #[test]
