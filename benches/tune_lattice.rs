@@ -1,0 +1,80 @@
+//! Bench: tuning-lattice search through the persistent cell cache
+//! (`tune/` on top of `coordinator/store.rs`).
+//!
+//! Three configurations over the same two-family lattice:
+//!
+//! * `cold` — fresh cache directory every iteration: simulate every
+//!   variant and pay the record write-back (the first-ever tune);
+//! * `warm` — pre-populated cache: a re-tune of an unchanged lattice,
+//!   zero simulations, pure lookup + ranking — the steady state;
+//! * `one_edit` — fresh cache, populate with the base lattice, then run
+//!   the edited lattice (one extra block factor): the edit's cost is
+//!   bounded by the added variants, not the lattice size. This case
+//!   times base-populate + edit together; its delta over `cold` is the
+//!   memoization saving the tuning workflow promises.
+//!
+//! Writes `BENCH_tune_lattice.json` at the repo root so the trajectory
+//! is machine-readable across PRs (bench-smoke uploads it).
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::coordinator::plan::JobBudget;
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::{CacheState, ScenarioSpec};
+use dlroofline::kernels::{DataLayout, LoopOrder, TuneKernel};
+use dlroofline::testutil::TempDir;
+use dlroofline::tune::{self, TuningLattice};
+
+fn lattice(blocks: Vec<usize>) -> TuningLattice {
+    TuningLattice {
+        kernels: vec![TuneKernel::ConvDirect, TuneKernel::InnerProduct],
+        scenarios: vec![ScenarioSpec::single_thread(), ScenarioSpec::one_socket()],
+        cache: CacheState::Cold,
+        layouts: vec![DataLayout::Nchw, DataLayout::Nchw16c],
+        blocks,
+        orders: vec![LoopOrder::IcInner],
+        prefetch: vec![0],
+    }
+}
+
+fn main() {
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let base = lattice(vec![8]);
+    let edited = lattice(vec![8, 4]);
+    let cells = edited.to_spec().cells().len() as f64;
+    let budget = JobBudget::cells(0);
+
+    let mut b = Bencher::new("tune_lattice");
+
+    b.bench("cold", Throughput::Elements(cells), || {
+        let dir = TempDir::new("bench-tune-cold");
+        let store = CellStore::open(dir.path()).expect("open store");
+        let report = tune::run(&edited, &params, budget, Some(&store)).expect("cold tune");
+        assert_eq!(report.store.as_ref().map(|u| u.hits), Some(0));
+        report.stats.cells_simulated
+    });
+
+    let dir = TempDir::new("bench-tune-warm");
+    let store = CellStore::open(dir.path()).expect("open store");
+    tune::run(&edited, &params, budget, Some(&store)).expect("populate");
+    b.bench("warm", Throughput::Elements(cells), || {
+        let report = tune::run(&edited, &params, budget, Some(&store)).expect("warm tune");
+        assert_eq!(report.store.as_ref().map(|u| u.simulated), Some(0));
+        report.store.map(|u| u.hits)
+    });
+
+    b.bench("one_edit", Throughput::Elements(cells), || {
+        let dir = TempDir::new("bench-tune-edit");
+        let store = CellStore::open(dir.path()).expect("open store");
+        let first = tune::run(&base, &params, budget, Some(&store)).expect("base tune");
+        let report = tune::run(&edited, &params, budget, Some(&store)).expect("edited tune");
+        let usage = report.store.as_ref().expect("store usage");
+        assert_eq!(usage.hits, first.stats.cells_simulated);
+        assert_eq!(usage.simulated, report.stats.cells_simulated - first.stats.cells_simulated);
+        usage.simulated
+    });
+
+    b.finish();
+    let path = b.emit_json().expect("write bench JSON");
+    println!("wrote {}", path.display());
+}

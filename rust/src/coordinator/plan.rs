@@ -40,7 +40,7 @@
 //! assert_eq!(e.stats.cells_simulated, 18);
 //! ```
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -175,14 +175,32 @@ impl Expansion {
 /// Expand `ids` into a deduplicated cell plan. Fails on unknown ids;
 /// cells the machine cannot express are counted as skipped, not fatal.
 pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {
-    let specs = spec::find_all(ids)?;
+    expand_specs(spec::find_all(ids)?, params)
+}
+
+/// Expand already-resolved specs into a deduplicated cell plan — the
+/// entry point for synthetic specs that never appear in the registry,
+/// such as the tuning lattice's variant grid
+/// ([`crate::tune::TuningLattice::to_spec`]). Registry ids go through
+/// [`expand`], which resolves them and lands here.
+///
+/// Memoization is guarded: two cells may share a content hash only if
+/// they agree on display identity (kernel, scenario, cache). A
+/// disagreement means the content hash under-describes the cell — e.g.
+/// a tuning knob that changes the trace but was left out of the hashed
+/// kernel identity — and silently sharing one measurement between the
+/// two would corrupt every ranking downstream, so expansion fails
+/// loudly instead.
+pub fn expand_specs(specs: Vec<ExperimentSpec>, params: &ExperimentParams) -> Result<Expansion> {
     // The machine fingerprint document is identical for every cell of the
     // plan; serialise it once.
     let machine_fp = params.machine.fingerprint_json();
 
-    let mut cells = Vec::new();
+    let mut cells: Vec<CellPlan> = Vec::new();
     let mut unique: Vec<(u64, spec::Cell)> = Vec::new();
-    let mut seen: HashSet<u64> = HashSet::new();
+    // Content hash → index of the first planned cell with that key, so
+    // a reuse can be identity-checked against its representative.
+    let mut seen: HashMap<u64, usize> = HashMap::new();
     let mut stats = PlanStats {
         experiments: specs.len(),
         ..Default::default()
@@ -199,15 +217,25 @@ pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {
             }
             let kernel = cell.kernel.build(params);
             let key = cell.key_parts(&machine_fp, kernel.as_ref());
-            let reused = !seen.insert(key);
-            if !reused {
-                unique.push((key, cell.clone()));
-            }
+            let name = kernel.name();
+            let scenario = cell.scenario.name.clone();
+            let cache = cell.cache.label().to_string();
+            let reused = match seen.get(&key) {
+                Some(&first) => {
+                    check_reuse_identity(&cells[first], &name, &scenario, &cache)?;
+                    true
+                }
+                None => {
+                    seen.insert(key, cells.len());
+                    unique.push((key, cell.clone()));
+                    false
+                }
+            };
             cells.push(CellPlan {
                 experiment: cell.experiment.to_string(),
-                kernel: kernel.name(),
-                scenario: cell.scenario.name.clone(),
-                cache: cell.cache.label().to_string(),
+                kernel: name,
+                scenario,
+                cache,
                 key,
                 reused,
             });
@@ -216,6 +244,34 @@ pub fn expand(ids: &[&str], params: &ExperimentParams) -> Result<Expansion> {
     stats.cells_simulated = unique.len();
     stats.cells_reused = stats.cells_total - stats.cells_skipped - unique.len();
     Ok(Expansion { specs, cells, unique, stats })
+}
+
+/// The memoization identity guard: a planned cell may reuse `first`'s
+/// measurement only if both agree on kernel, scenario and cache-state
+/// identity. Anything else is a content-hash collision — two distinct
+/// cells whose hashed identity documents came out equal — and must fail
+/// the expansion rather than silently serve one cell's measurement as
+/// the other's.
+fn check_reuse_identity(
+    first: &CellPlan,
+    kernel: &str,
+    scenario: &str,
+    cache: &str,
+) -> Result<()> {
+    if first.kernel == kernel && first.scenario == scenario && first.cache == cache {
+        return Ok(());
+    }
+    bail!(
+        "cell content-hash collision at {:#018x}: {}/{}/{} (experiment {}) and \
+         {kernel}/{scenario}/{cache} hash identically but are different cells — \
+         a knob that changes the simulation is missing from the hashed kernel \
+         identity (planner bug)",
+        first.key,
+        first.kernel,
+        first.scenario,
+        first.cache,
+        first.experiment,
+    )
 }
 
 /// How one unique cell was resolved against the persistent store.
@@ -302,7 +358,27 @@ pub fn execute_with_budget(
     tolerate_special_failures: bool,
     store: Option<&CellStore>,
 ) -> Result<PlanOutcome> {
-    execute_impl(ids, params, budget, tolerate_special_failures, store)
+    execute_impl(expand(ids, params)?, params, budget, tolerate_special_failures, store)
+}
+
+/// As [`execute_with_budget`], for already-resolved specs (see
+/// [`expand_specs`]): the tuning lattice drives its synthetic variant
+/// grid through the same memoizing executor and cell store here, so a
+/// warm re-tune executes zero simulations.
+pub fn execute_specs_with_budget(
+    specs: Vec<ExperimentSpec>,
+    params: &ExperimentParams,
+    budget: JobBudget,
+    tolerate_special_failures: bool,
+    store: Option<&CellStore>,
+) -> Result<PlanOutcome> {
+    execute_impl(
+        expand_specs(specs, params)?,
+        params,
+        budget,
+        tolerate_special_failures,
+        store,
+    )
 }
 
 /// As [`execute`], resolving unique cells against a persistent
@@ -324,17 +400,22 @@ pub fn execute_with_store(
     tolerate_special_failures: bool,
     store: Option<&CellStore>,
 ) -> Result<PlanOutcome> {
-    execute_impl(ids, params, JobBudget::cells(jobs), tolerate_special_failures, store)
+    execute_impl(
+        expand(ids, params)?,
+        params,
+        JobBudget::cells(jobs),
+        tolerate_special_failures,
+        store,
+    )
 }
 
 fn execute_impl(
-    ids: &[&str],
+    expansion: Expansion,
     params: &ExperimentParams,
     budget: JobBudget,
     tolerate_special_failures: bool,
     store: Option<&CellStore>,
 ) -> Result<PlanOutcome> {
-    let expansion = expand(ids, params)?;
     let budget = JobBudget {
         jobs: if budget.jobs == 0 { default_jobs() } else { budget.jobs },
         ..budget
@@ -549,6 +630,56 @@ mod tests {
     #[test]
     fn expand_rejects_unknown_id() {
         assert!(expand(&["f3", "zz"], &quick()).is_err());
+    }
+
+    #[test]
+    fn expand_specs_matches_id_expansion() {
+        let params = quick();
+        let by_id = expand(&["f3", "g1"], &params).unwrap();
+        let by_spec = expand_specs(spec::find_all(&["f3", "g1"]).unwrap(), &params).unwrap();
+        assert_eq!(by_id.stats, by_spec.stats);
+        assert_eq!(by_id.cells.len(), by_spec.cells.len());
+        for (a, b) in by_id.cells.iter().zip(by_spec.cells.iter()) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.reused, b.reused);
+        }
+    }
+
+    fn plan_cell(kernel: &str, scenario: &str, cache: &str) -> CellPlan {
+        CellPlan {
+            experiment: "f3".to_string(),
+            kernel: kernel.to_string(),
+            scenario: scenario.to_string(),
+            cache: cache.to_string(),
+            key: 0xdead_beef,
+            reused: false,
+        }
+    }
+
+    #[test]
+    fn identity_guard_accepts_matching_reuse() {
+        let first = plan_cell("conv_direct_nchw", "single-thread", "cold");
+        assert!(
+            check_reuse_identity(&first, "conv_direct_nchw", "single-thread", "cold").is_ok()
+        );
+    }
+
+    #[test]
+    fn identity_guard_rejects_colliding_cells() {
+        // A real FNV-1a collision cannot be constructed on demand, so the
+        // guard is exercised directly: same content hash, different
+        // variant identity (the failure mode a missing knob would cause).
+        let first = plan_cell("conv_direct_nchw", "single-thread", "cold");
+        for (kernel, scenario, cache) in [
+            ("conv_direct_nchw@rb4", "single-thread", "cold"),
+            ("conv_direct_nchw", "one-socket", "cold"),
+            ("conv_direct_nchw", "single-thread", "warm"),
+        ] {
+            let err = check_reuse_identity(&first, kernel, scenario, cache).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("content-hash collision"), "{msg}");
+            assert!(msg.contains("conv_direct_nchw"), "{msg}");
+        }
     }
 
     #[test]

@@ -19,21 +19,25 @@ use crate::sim::numa::MemPolicy;
 use crate::sim::trace::{AccessKind, AccessRun, Trace};
 
 use super::layouts::{ConvShape, DataLayout, CBLOCK, ELEM};
+use super::variant::{LoopOrder, VariantParams};
 use super::{split_indices, KernelModel, TensorMap};
-
-/// Rows of `oh` handled per parallel work unit (keeps enough units to
-/// feed a two-socket run even at small batch).
-const OH_CHUNK: usize = 8;
 
 // ---------------------------------------------------------------------
 // NCHW direct convolution
 // ---------------------------------------------------------------------
 
 /// Direct convolution on plain NCHW data.
+///
+/// Tunable over [`VariantParams`]: the output-row block per parallel
+/// work unit (baseline 8 — keeps enough units to feed a two-socket run
+/// even at small batch), the ic/oh loop order, and an optional
+/// software-prefetch distance. [`ConvDirectNchw::new`] is always the
+/// baseline and reproduces the pre-tuning trace bit-identically.
 #[derive(Clone, Debug)]
 pub struct ConvDirectNchw {
     /// Convolution shape.
     pub shape: ConvShape,
+    variant: VariantParams,
 }
 
 /// Structural μop costs of the NCHW inner loop (per 16-lane FMA):
@@ -45,26 +49,36 @@ const NCHW_ALU_PER_FMA: f64 = 0.35;
 const NCHW_ILP: f64 = 0.95;
 
 impl ConvDirectNchw {
-    /// Direct NCHW convolution at `shape`.
+    /// Direct NCHW convolution at `shape` (baseline tuning).
     pub fn new(shape: ConvShape) -> Self {
-        ConvDirectNchw { shape }
+        Self::with_variant(shape, VariantParams::conv_baseline(DataLayout::Nchw))
+    }
+
+    /// Direct NCHW convolution with explicit tuning knobs.
+    pub fn with_variant(shape: ConvShape, variant: VariantParams) -> Self {
+        assert!(variant.block >= 1, "conv row block must be >= 1");
+        ConvDirectNchw { shape, variant }
     }
 
     fn fma_uops(&self) -> f64 {
         self.shape.direct_flops() / 2.0 / VecWidth::V512.lanes() as f64
     }
+
+    fn tag(&self) -> String {
+        self.variant.tag(&VariantParams::conv_baseline(DataLayout::Nchw), "rb")
+    }
 }
 
 impl KernelModel for ConvDirectNchw {
     fn name(&self) -> String {
-        "conv_direct_nchw".into()
+        format!("conv_direct_nchw{}", self.tag())
     }
 
     fn description(&self) -> String {
         let s = &self.shape;
         format!(
-            "direct conv NCHW {}x{}x{}x{} k{}x{} s{} oc{}",
-            s.n, s.ic, s.ih, s.iw, s.kh, s.kw, s.stride, s.oc
+            "direct conv NCHW {}x{}x{}x{} k{}x{} s{} oc{}{}",
+            s.n, s.ic, s.ih, s.iw, s.kh, s.kw, s.stride, s.oc, self.tag()
         )
     }
 
@@ -101,12 +115,19 @@ impl KernelModel for ConvDirectNchw {
         let wei_base = t.base("wei");
         let dst_base = t.base("dst");
 
-        // Work units: (n, oc, oh-chunk).
-        let chunks = s.oh().div_ceil(OH_CHUNK);
+        // Work units: (n, oc, oh-block).
+        let block = self.variant.block;
+        let chunks = s.oh().div_ceil(block);
         let units: Vec<(usize, usize, usize)> = (0..s.n)
             .flat_map(|n| (0..s.oc).flat_map(move |oc| (0..chunks).map(move |ch| (n, oc, ch))))
             .collect();
         let parts = split_indices(units.len(), threads);
+
+        let wei_row = |oc: usize, ic: usize, kh: usize| {
+            // Weight row (oc, ic, kh, 0..kw).
+            let w_off = ((oc * s.ic + ic) * s.kh + kh) as u64 * s.kw as u64 * ELEM;
+            AccessRun::contiguous(wei_base + w_off, s.kw as u64 * ELEM, AccessKind::Load)
+        };
 
         parts
             .into_iter()
@@ -114,39 +135,80 @@ impl KernelModel for ConvDirectNchw {
                 let mut tr = Trace::new();
                 for i in idxs {
                     let (n, oc, ch) = units[i];
-                    let oh_lo = ch * OH_CHUNK;
-                    let oh_hi = ((ch + 1) * OH_CHUNK).min(s.oh());
-                    for oh in oh_lo..oh_hi {
-                        for ic in 0..s.ic {
-                            for kh in 0..s.kh {
-                                let ih = oh * s.stride + kh;
-                                let ih = ih.saturating_sub(s.pad);
-                                if ih >= s.ih {
-                                    continue;
+                    let oh_lo = ch * block;
+                    let oh_hi = ((ch + 1) * block).min(s.oh());
+                    if self.variant.prefetch_lines > 0 {
+                        // Prefetch the first input rows of the block a
+                        // configurable distance ahead, clamped to the
+                        // tensor so the run never strays past it.
+                        let ih0 = (oh_lo * s.stride).saturating_sub(s.pad).min(s.ih - 1);
+                        let off = src.row_offset(n, 0, ih0);
+                        let bytes = (self.variant.prefetch_lines as u64 * 64)
+                            .min(src.bytes() - off);
+                        tr.push(AccessRun::contiguous(
+                            src_base + off,
+                            bytes,
+                            AccessKind::PrefetchSW,
+                        ));
+                    }
+                    match self.variant.order {
+                        // Baseline nesting: ic inside oh — weight rows
+                        // re-read for every output row.
+                        LoopOrder::IcInner => {
+                            for oh in oh_lo..oh_hi {
+                                for ic in 0..s.ic {
+                                    for kh in 0..s.kh {
+                                        let ih = oh * s.stride + kh;
+                                        let ih = ih.saturating_sub(s.pad);
+                                        if ih >= s.ih {
+                                            continue;
+                                        }
+                                        // Input row for this (ic, ih).
+                                        tr.push(AccessRun::contiguous(
+                                            src_base + src.row_offset(n, ic, ih),
+                                            src.row_bytes(),
+                                            AccessKind::Load,
+                                        ));
+                                        tr.push(wei_row(oc, ic, kh));
+                                    }
                                 }
-                                // Input row for this (ic, ih).
+                                // Store the finished output row.
                                 tr.push(AccessRun::contiguous(
-                                    src_base + src.row_offset(n, ic, ih),
-                                    src.row_bytes(),
-                                    AccessKind::Load,
-                                ));
-                                // Weight row (oc, ic, kh, 0..kw).
-                                let w_off = ((oc * s.ic + ic) * s.kh + kh) as u64
-                                    * s.kw as u64
-                                    * ELEM;
-                                tr.push(AccessRun::contiguous(
-                                    wei_base + w_off,
-                                    s.kw as u64 * ELEM,
-                                    AccessKind::Load,
+                                    dst_base + dst.row_offset(n, oc, oh),
+                                    dst.row_bytes(),
+                                    AccessKind::Store,
                                 ));
                             }
                         }
-                        // Store the finished output row.
-                        tr.push(AccessRun::contiguous(
-                            dst_base + dst.row_offset(n, oc, oh),
-                            dst.row_bytes(),
-                            AccessKind::Store,
-                        ));
+                        // Tuned nesting: hoist each weight row across the
+                        // whole oh block, then sweep the input rows.
+                        LoopOrder::IcOuter => {
+                            for ic in 0..s.ic {
+                                for kh in 0..s.kh {
+                                    tr.push(wei_row(oc, ic, kh));
+                                }
+                            }
+                            for oh in oh_lo..oh_hi {
+                                for ic in 0..s.ic {
+                                    for kh in 0..s.kh {
+                                        let ih = (oh * s.stride + kh).saturating_sub(s.pad);
+                                        if ih >= s.ih {
+                                            continue;
+                                        }
+                                        tr.push(AccessRun::contiguous(
+                                            src_base + src.row_offset(n, ic, ih),
+                                            src.row_bytes(),
+                                            AccessKind::Load,
+                                        ));
+                                    }
+                                }
+                                tr.push(AccessRun::contiguous(
+                                    dst_base + dst.row_offset(n, oc, oh),
+                                    dst.row_bytes(),
+                                    AccessKind::Store,
+                                ));
+                            }
+                        }
                     }
                 }
                 tr
@@ -160,10 +222,15 @@ impl KernelModel for ConvDirectNchw {
 // ---------------------------------------------------------------------
 
 /// Direct convolution on blocked NCHW16C data.
+///
+/// Tunable over [`VariantParams`] like [`ConvDirectNchw`]; the baseline
+/// loop order here is [`LoopOrder::IcOuter`] (weight blocks pinned in
+/// registers across the row block, as jit:avx512 does).
 #[derive(Clone, Debug)]
 pub struct ConvDirectBlocked {
     /// Convolution shape.
     pub shape: ConvShape,
+    variant: VariantParams,
 }
 
 /// Structural μop costs of the jit:avx512 inner loop (per FMA): one
@@ -175,9 +242,19 @@ const BLOCKED_ALU_PER_FMA: f64 = 0.05;
 const BLOCKED_ILP: f64 = 0.87;
 
 impl ConvDirectBlocked {
-    /// Direct blocked (NCHW16C) convolution at `shape`.
+    /// Direct blocked (NCHW16C) convolution at `shape` (baseline tuning).
     pub fn new(shape: ConvShape) -> Self {
-        ConvDirectBlocked { shape }
+        Self::with_variant(shape, VariantParams::conv_baseline(DataLayout::Nchw16c))
+    }
+
+    /// Direct blocked convolution with explicit tuning knobs.
+    pub fn with_variant(shape: ConvShape, variant: VariantParams) -> Self {
+        assert!(variant.block >= 1, "conv row block must be >= 1");
+        ConvDirectBlocked { shape, variant }
+    }
+
+    fn tag(&self) -> String {
+        self.variant.tag(&VariantParams::conv_baseline(DataLayout::Nchw16c), "rb")
     }
 
     fn ic_blocks(&self) -> usize {
@@ -204,14 +281,14 @@ impl ConvDirectBlocked {
 
 impl KernelModel for ConvDirectBlocked {
     fn name(&self) -> String {
-        "conv_direct_nchw16c".into()
+        format!("conv_direct_nchw16c{}", self.tag())
     }
 
     fn description(&self) -> String {
         let s = &self.shape;
         format!(
-            "direct conv NCHW16C (jit:avx512) {}x{}x{}x{} k{}x{} s{} oc{}",
-            s.n, s.ic, s.ih, s.iw, s.kh, s.kw, s.stride, s.oc
+            "direct conv NCHW16C (jit:avx512) {}x{}x{}x{} k{}x{} s{} oc{}{}",
+            s.n, s.ic, s.ih, s.iw, s.kh, s.kw, s.stride, s.oc, self.tag()
         )
     }
 
@@ -253,7 +330,8 @@ impl KernelModel for ConvDirectBlocked {
         // Weight block bytes for one (ocb, icb) pair: 16×16×kh×kw f32.
         let wblk = (CBLOCK * CBLOCK * s.kh * s.kw) as u64 * ELEM;
 
-        let chunks = s.oh().div_ceil(OH_CHUNK);
+        let block = self.variant.block;
+        let chunks = s.oh().div_ceil(block);
         let units: Vec<(usize, usize, usize)> = (0..s.n)
             .flat_map(|n| (0..ocb).flat_map(move |ob| (0..chunks).map(move |ch| (n, ob, ch))))
             .collect();
@@ -265,27 +343,68 @@ impl KernelModel for ConvDirectBlocked {
                 let mut tr = Trace::new();
                 for i in idxs {
                     let (n, ob, ch) = units[i];
-                    let oh_lo = ch * OH_CHUNK;
-                    let oh_hi = ((ch + 1) * OH_CHUNK).min(s.oh());
-                    for ib in 0..icb {
-                        // Weight block loaded once per (ob, ib) chunk;
-                        // stays in registers across the row block.
+                    let oh_lo = ch * block;
+                    let oh_hi = ((ch + 1) * block).min(s.oh());
+                    if self.variant.prefetch_lines > 0 {
+                        let ih0 = (oh_lo * s.stride).saturating_sub(s.pad).min(s.ih - 1);
+                        let off = src.row_offset(n, 0, ih0);
+                        let bytes = (self.variant.prefetch_lines as u64 * 64)
+                            .min(src.bytes() - off);
                         tr.push(AccessRun::contiguous(
-                            wei_base + ((ob * icb + ib) as u64) * wblk,
-                            wblk,
-                            AccessKind::Load,
+                            src_base + off,
+                            bytes,
+                            AccessKind::PrefetchSW,
                         ));
-                        for oh in oh_lo..oh_hi {
-                            for kh in 0..s.kh {
-                                let ih = (oh * s.stride + kh).saturating_sub(s.pad);
-                                if ih >= s.ih {
-                                    continue;
-                                }
+                    }
+                    match self.variant.order {
+                        // Baseline nesting: weight block loaded once per
+                        // (ob, ib) chunk; stays in registers across the
+                        // row block.
+                        LoopOrder::IcOuter => {
+                            for ib in 0..icb {
                                 tr.push(AccessRun::contiguous(
-                                    src_base + src.row_offset(n, ib, ih),
-                                    src.row_bytes(),
+                                    wei_base + ((ob * icb + ib) as u64) * wblk,
+                                    wblk,
                                     AccessKind::Load,
                                 ));
+                                for oh in oh_lo..oh_hi {
+                                    for kh in 0..s.kh {
+                                        let ih = (oh * s.stride + kh).saturating_sub(s.pad);
+                                        if ih >= s.ih {
+                                            continue;
+                                        }
+                                        tr.push(AccessRun::contiguous(
+                                            src_base + src.row_offset(n, ib, ih),
+                                            src.row_bytes(),
+                                            AccessKind::Load,
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                        // Tuned nesting: ic-block loop inside the row
+                        // loop — weight blocks lose register residency
+                        // and are re-read for every output row.
+                        LoopOrder::IcInner => {
+                            for oh in oh_lo..oh_hi {
+                                for ib in 0..icb {
+                                    tr.push(AccessRun::contiguous(
+                                        wei_base + ((ob * icb + ib) as u64) * wblk,
+                                        wblk,
+                                        AccessKind::Load,
+                                    ));
+                                    for kh in 0..s.kh {
+                                        let ih = (oh * s.stride + kh).saturating_sub(s.pad);
+                                        if ih >= s.ih {
+                                            continue;
+                                        }
+                                        tr.push(AccessRun::contiguous(
+                                            src_base + src.row_offset(n, ib, ih),
+                                            src.row_bytes(),
+                                            AccessKind::Load,
+                                        ));
+                                    }
+                                }
                             }
                         }
                     }
@@ -398,5 +517,107 @@ mod tests {
         let t = k.alloc(&mut space, MemPolicy::BindNode(0), 1);
         let traces = k.traces(&t, 64);
         assert_eq!(traces.len(), 64);
+    }
+
+    #[test]
+    fn baseline_variant_keeps_plain_name_and_trace() {
+        let base = ConvDirectNchw::new(shape());
+        assert_eq!(base.name(), "conv_direct_nchw");
+        assert_eq!(ConvDirectBlocked::new(shape()).name(), "conv_direct_nchw16c");
+        // new() and with_variant(baseline) are the same kernel.
+        let explicit = ConvDirectNchw::with_variant(
+            shape(),
+            VariantParams::conv_baseline(DataLayout::Nchw),
+        );
+        let mut space = AddressSpace::new();
+        let t = base.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let a = &base.traces(&t, 2);
+        let b = &explicit.traces(&t, 2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.runs, y.runs);
+        }
+    }
+
+    #[test]
+    fn variant_names_carry_knob_tags() {
+        let v = VariantParams {
+            block: 4,
+            order: LoopOrder::IcOuter,
+            prefetch_lines: 8,
+            ..VariantParams::conv_baseline(DataLayout::Nchw)
+        };
+        let k = ConvDirectNchw::with_variant(shape(), v);
+        assert_eq!(k.name(), "conv_direct_nchw@rb4+ic-outer+pf8");
+        // The tag reaches the description (and hence the content hash).
+        assert!(k.description().contains("@rb4+ic-outer+pf8"));
+    }
+
+    #[test]
+    fn ic_outer_hoists_weight_rows() {
+        let s = shape();
+        let mut space = AddressSpace::new();
+        let base = ConvDirectNchw::new(s);
+        let t = base.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let hoisted = ConvDirectNchw::with_variant(
+            s,
+            VariantParams {
+                order: LoopOrder::IcOuter,
+                ..VariantParams::conv_baseline(DataLayout::Nchw)
+            },
+        );
+        let wei_bytes = |k: &ConvDirectNchw| -> u64 {
+            k.traces(&t, 1)[0]
+                .runs
+                .iter()
+                .filter(|r| r.kind == AccessKind::Load && r.base >= t.base("wei"))
+                .filter(|r| r.base < t.base("wei") + t.bytes("wei"))
+                .map(|r| r.bytes())
+                .sum()
+        };
+        // Baseline re-reads weight rows per output row (8 rows per
+        // block); hoisting reads them once per block.
+        let b = wei_bytes(&base);
+        let h = wei_bytes(&hoisted);
+        assert!(h * 4 < b, "hoisted {h} vs baseline {b}");
+        // Same FLOPs, same stores either way.
+        assert_eq!(base.flops(), hoisted.flops());
+    }
+
+    #[test]
+    fn prefetch_variant_emits_sw_prefetch() {
+        let v = VariantParams {
+            prefetch_lines: 16,
+            ..VariantParams::conv_baseline(DataLayout::Nchw16c)
+        };
+        let k = ConvDirectBlocked::with_variant(shape(), v);
+        let mut space = AddressSpace::new();
+        let t = k.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let tr = &k.traces(&t, 1)[0];
+        assert!(tr.runs.iter().any(|r| r.kind == AccessKind::PrefetchSW));
+        // Baseline emits none.
+        let tr0 = &ConvDirectBlocked::new(shape()).traces(&t, 1)[0];
+        assert!(tr0.runs.iter().all(|r| r.kind != AccessKind::PrefetchSW));
+    }
+
+    #[test]
+    fn row_block_changes_unit_count_not_coverage() {
+        let s = shape();
+        let mut space = AddressSpace::new();
+        let k4 = ConvDirectBlocked::with_variant(
+            s,
+            VariantParams { block: 4, ..VariantParams::conv_baseline(DataLayout::Nchw16c) },
+        );
+        let t = k4.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let stores = |trs: &[Trace]| -> u64 {
+            trs.iter()
+                .flat_map(|tr| tr.runs.iter())
+                .filter(|r| r.kind == AccessKind::Store)
+                .map(|r| r.bytes())
+                .sum()
+        };
+        let full = stores(&k4.traces(&t, 3));
+        let base = stores(&ConvDirectBlocked::new(s).traces(&t, 3));
+        assert_eq!(full, base, "every output row stored exactly once");
     }
 }

@@ -14,6 +14,7 @@ use crate::sim::numa::MemPolicy;
 use crate::sim::trace::{AccessKind, AccessRun, Trace};
 
 use super::layouts::ELEM;
+use super::variant::VariantParams;
 use super::{split_indices, KernelModel, TensorMap};
 
 /// Structural μop costs of the jit GEMM inner loop (per FMA): weight
@@ -23,10 +24,13 @@ const IP_LOADS_PER_FMA: f64 = 1.25;
 const IP_ALU_PER_FMA: f64 = 0.06;
 const IP_ILP: f64 = 0.88;
 
-/// Rows of M per parallel work unit.
-const M_CHUNK: usize = 16;
-
 /// Inner product: `dst[M,N] = src[M,K] × wei[K,N] + bias[N]`.
+///
+/// Tunable over [`VariantParams`]: `block` is the M-tile per parallel
+/// work unit (baseline 16), `prefetch_lines` overrides the software
+/// prefetch stripe ahead of the weight panel (baseline 0 keeps the
+/// shipped `wei/16` stripe). [`InnerProduct::new`] is always the
+/// baseline and reproduces the pre-tuning trace bit-identically.
 #[derive(Clone, Debug)]
 pub struct InnerProduct {
     /// Output rows (batch).
@@ -35,13 +39,20 @@ pub struct InnerProduct {
     pub k: usize,
     /// Output columns.
     pub n: usize,
+    variant: VariantParams,
 }
 
 impl InnerProduct {
-    /// Inner product `dst[M,N] = src[M,K] x wei[K,N]`.
+    /// Inner product `dst[M,N] = src[M,K] x wei[K,N]` (baseline tuning).
     pub fn new(m: usize, k: usize, n: usize) -> Self {
+        Self::with_variant(m, k, n, VariantParams::inner_product_baseline())
+    }
+
+    /// Inner product with explicit tuning knobs.
+    pub fn with_variant(m: usize, k: usize, n: usize, variant: VariantParams) -> Self {
         assert!(m > 0 && k > 0 && n > 0);
-        InnerProduct { m, k, n }
+        assert!(variant.block >= 1, "M-tile must be >= 1");
+        InnerProduct { m, k, n, variant }
     }
 
     /// The paper's Fig 6 shape: batch 256 tokens, K=2048, N=1000 — about
@@ -77,11 +88,13 @@ impl InnerProduct {
 
 impl KernelModel for InnerProduct {
     fn name(&self) -> String {
-        "inner_product".into()
+        let tag = self.variant.tag(&VariantParams::inner_product_baseline(), "mt");
+        format!("inner_product{tag}")
     }
 
     fn description(&self) -> String {
-        format!("inner product (jit GEMM) M{} K{} N{}", self.m, self.k, self.n)
+        let tag = self.variant.tag(&VariantParams::inner_product_baseline(), "mt");
+        format!("inner product (jit GEMM) M{} K{} N{}{tag}", self.m, self.k, self.n)
     }
 
     fn alloc(&self, space: &mut AddressSpace, policy: MemPolicy, nodes: usize) -> TensorMap {
@@ -110,21 +123,29 @@ impl KernelModel for InnerProduct {
     }
 
     fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace> {
-        // Blocked GEMM: loop over M-chunks; each chunk streams the whole
+        // Blocked GEMM: loop over M-tiles; each tile streams the whole
         // weight panel (K×N) and its src rows; software prefetch runs a
         // panel ahead, as oneDNN's GEMM driver does (§2.4).
-        let chunks = self.m.div_ceil(M_CHUNK);
+        let m_tile = self.variant.block;
+        let chunks = self.m.div_ceil(m_tile);
         let parts = split_indices(chunks, threads);
         let src_row = self.k as u64 * ELEM;
         let dst_row = self.n as u64 * ELEM;
+        // Prefetch stripe: shipped wei/16 heuristic, or an explicit
+        // line-count knob.
+        let stripe = if self.variant.prefetch_lines == 0 {
+            (self.wei_bytes() / 16).max(64)
+        } else {
+            (self.variant.prefetch_lines as u64 * 64).min(self.wei_bytes())
+        };
         // Weight panel sliced K-major: chunk reads all of it.
         parts
             .into_iter()
             .map(|idxs| {
                 let mut tr = Trace::new();
                 for ch in idxs {
-                    let m_lo = ch * M_CHUNK;
-                    let m_hi = ((ch + 1) * M_CHUNK).min(self.m);
+                    let m_lo = ch * m_tile;
+                    let m_hi = ((ch + 1) * m_tile).min(self.m);
                     // src rows for the chunk.
                     tr.push(AccessRun::contiguous(
                         t.base("src") + m_lo as u64 * src_row,
@@ -135,7 +156,7 @@ impl KernelModel for InnerProduct {
                     // the full panel.
                     tr.push(AccessRun::contiguous(
                         t.base("wei"),
-                        (self.wei_bytes() / 16).max(64),
+                        stripe,
                         AccessKind::PrefetchSW,
                     ));
                     tr.push(AccessRun::contiguous(
@@ -213,6 +234,54 @@ mod tests {
         let t = ip.alloc(&mut space, MemPolicy::BindNode(0), 1);
         let tr = &ip.traces(&t, 1)[0];
         assert!(tr.runs.iter().any(|r| r.kind == AccessKind::PrefetchSW));
+    }
+
+    #[test]
+    fn baseline_variant_keeps_plain_name() {
+        assert_eq!(InnerProduct::paper_shape().name(), "inner_product");
+        let explicit = InnerProduct::with_variant(
+            256,
+            2048,
+            1000,
+            VariantParams::inner_product_baseline(),
+        );
+        assert_eq!(explicit.name(), "inner_product");
+    }
+
+    #[test]
+    fn m_tile_variant_changes_weight_streaming() {
+        let v = VariantParams { block: 32, ..VariantParams::inner_product_baseline() };
+        let ip = InnerProduct::with_variant(64, 128, 64, v);
+        assert_eq!(ip.name(), "inner_product@mt32");
+        let mut space = AddressSpace::new();
+        let t = ip.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let tr = &ip.traces(&t, 1)[0];
+        let wei_loads: u64 = tr
+            .runs
+            .iter()
+            .filter(|r| r.kind == AccessKind::Load && r.base == t.base("wei"))
+            .map(|r| r.bytes())
+            .sum();
+        // 64/32 = 2 tiles ⇒ weights streamed 2× (baseline tile 16 → 4×).
+        assert_eq!(wei_loads, 2 * ip.wei_bytes());
+    }
+
+    #[test]
+    fn prefetch_knob_overrides_stripe() {
+        let v = VariantParams { prefetch_lines: 16, ..VariantParams::inner_product_baseline() };
+        let ip = InnerProduct::with_variant(64, 128, 64, v);
+        assert_eq!(ip.name(), "inner_product@pf16");
+        let mut space = AddressSpace::new();
+        let t = ip.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        let tr = &ip.traces(&t, 1)[0];
+        let stripe: Vec<u64> = tr
+            .runs
+            .iter()
+            .filter(|r| r.kind == AccessKind::PrefetchSW)
+            .map(|r| r.bytes())
+            .collect();
+        assert!(!stripe.is_empty());
+        assert!(stripe.iter().all(|&b| b == 16 * 64));
     }
 
     #[test]

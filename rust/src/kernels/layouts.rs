@@ -31,6 +31,16 @@ impl DataLayout {
             DataLayout::Nhwc => "nhwc",
         }
     }
+
+    /// Parse a [`Self::label`] string.
+    pub fn parse(s: &str) -> Option<DataLayout> {
+        match s {
+            "nchw" => Some(DataLayout::Nchw),
+            "nchw16c" => Some(DataLayout::Nchw16c),
+            "nhwc" => Some(DataLayout::Nhwc),
+            _ => None,
+        }
+    }
 }
 
 /// A 4-D activation tensor descriptor.

@@ -29,6 +29,7 @@ pub mod layernorm;
 pub mod layouts;
 pub mod pooling;
 pub mod reduction;
+pub mod variant;
 
 use std::collections::BTreeMap;
 
@@ -38,6 +39,7 @@ use crate::sim::numa::MemPolicy;
 use crate::sim::trace::{AccessKind, AccessRun, Trace};
 
 pub use layouts::{ConvShape, DataLayout, TensorDesc};
+pub use variant::{LoopOrder, TuneKernel, VariantParams, VariantSpec};
 
 /// Named tensor allocations for one kernel instance.
 #[derive(Clone, Debug, Default)]

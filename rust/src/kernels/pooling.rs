@@ -16,7 +16,27 @@ use crate::sim::numa::MemPolicy;
 use crate::sim::trace::{AccessKind, AccessRun, Trace};
 
 use super::layouts::{DataLayout, TensorDesc, CBLOCK};
+use super::variant::VariantParams;
 use super::{split_indices, KernelModel, TensorMap};
+
+/// Output-row chunks per work unit for a pooling row block of `block`
+/// (`0` = the baseline's one unit per (n, channel) with all rows).
+fn row_chunks(oh: usize, block: usize) -> usize {
+    if block == 0 {
+        1
+    } else {
+        oh.div_ceil(block)
+    }
+}
+
+/// The `oh` range of `chunk` for a row block of `block`.
+fn chunk_range(oh: usize, block: usize, chunk: usize) -> (usize, usize) {
+    if block == 0 {
+        (0, oh)
+    } else {
+        (chunk * block, ((chunk + 1) * block).min(oh))
+    }
+}
 
 /// Pooling problem: `kernel`×`kernel` window, stride `stride`, no padding.
 #[derive(Clone, Copy, Debug)]
@@ -72,16 +92,28 @@ const SIMPLE_ALU_PER_FP: f64 = 10.0;
 const SIMPLE_ILP: f64 = 0.7;
 
 /// Average pooling, `simple_nchw` implementation.
+///
+/// Tunable over [`VariantParams`]: `block > 0` splits each channel's
+/// output rows into blocks of that many rows, multiplying the parallel
+/// work-unit count (the baseline `block == 0` keeps one `(n, c)` unit
+/// per channel — identical traces at one thread, coarser partitioning
+/// at many).
 #[derive(Clone, Debug)]
 pub struct AvgPoolNchw {
     /// Pooling shape.
     pub shape: PoolShape,
+    variant: VariantParams,
 }
 
 impl AvgPoolNchw {
-    /// Plain-NCHW average pooling at `shape`.
+    /// Plain-NCHW average pooling at `shape` (baseline tuning).
     pub fn new(shape: PoolShape) -> Self {
-        AvgPoolNchw { shape }
+        Self::with_variant(shape, VariantParams::avgpool_baseline(DataLayout::Nchw))
+    }
+
+    /// Plain-NCHW average pooling with explicit tuning knobs.
+    pub fn with_variant(shape: PoolShape, variant: VariantParams) -> Self {
+        AvgPoolNchw { shape, variant }
     }
 
     fn descs(&self) -> (TensorDesc, TensorDesc) {
@@ -95,7 +127,9 @@ impl AvgPoolNchw {
 
 impl KernelModel for AvgPoolNchw {
     fn name(&self) -> String {
-        "avgpool_nchw".into()
+        let tag =
+            self.variant.tag(&VariantParams::avgpool_baseline(DataLayout::Nchw), "ob");
+        format!("avgpool_nchw{tag}")
     }
 
     fn description(&self) -> String {
@@ -132,9 +166,10 @@ impl KernelModel for AvgPoolNchw {
     fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace> {
         let s = self.shape;
         let (src, dst) = self.descs();
-        // Units: (n, c).
-        let units: Vec<(usize, usize)> = (0..s.n)
-            .flat_map(|n| (0..s.c).map(move |c| (n, c)))
+        // Units: (n, c, oh-chunk) — one chunk per channel at baseline.
+        let chunks = row_chunks(s.oh(), self.variant.block);
+        let units: Vec<(usize, usize, usize)> = (0..s.n)
+            .flat_map(|n| (0..s.c).flat_map(move |c| (0..chunks).map(move |ch| (n, c, ch))))
             .collect();
         let parts = split_indices(units.len(), threads);
         parts
@@ -142,8 +177,9 @@ impl KernelModel for AvgPoolNchw {
             .map(|idxs| {
                 let mut tr = Trace::new();
                 for i in idxs {
-                    let (n, c) = units[i];
-                    for oh in 0..s.oh() {
+                    let (n, c, ch) = units[i];
+                    let (oh_lo, oh_hi) = chunk_range(s.oh(), self.variant.block, ch);
+                    for oh in oh_lo..oh_hi {
                         for kh in 0..s.kernel {
                             let ih = oh * s.stride + kh;
                             tr.push(AccessRun::contiguous(
@@ -176,16 +212,25 @@ const JIT_ALU_PER_FP: f64 = 0.3;
 const JIT_ILP: f64 = 0.9;
 
 /// Average pooling, blocked `jit:avx512_common` implementation.
+///
+/// Tunable over [`VariantParams`] like [`AvgPoolNchw`] (row blocking of
+/// the parallel work units).
 #[derive(Clone, Debug)]
 pub struct AvgPoolBlocked {
     /// Pooling shape.
     pub shape: PoolShape,
+    variant: VariantParams,
 }
 
 impl AvgPoolBlocked {
-    /// Blocked (NCHW16C) average pooling at `shape`.
+    /// Blocked (NCHW16C) average pooling at `shape` (baseline tuning).
     pub fn new(shape: PoolShape) -> Self {
-        AvgPoolBlocked { shape }
+        Self::with_variant(shape, VariantParams::avgpool_baseline(DataLayout::Nchw16c))
+    }
+
+    /// Blocked average pooling with explicit tuning knobs.
+    pub fn with_variant(shape: PoolShape, variant: VariantParams) -> Self {
+        AvgPoolBlocked { shape, variant }
     }
 
     fn descs(&self) -> (TensorDesc, TensorDesc) {
@@ -203,7 +248,9 @@ impl AvgPoolBlocked {
 
 impl KernelModel for AvgPoolBlocked {
     fn name(&self) -> String {
-        "avgpool_nchw16c".into()
+        let tag =
+            self.variant.tag(&VariantParams::avgpool_baseline(DataLayout::Nchw16c), "ob");
+        format!("avgpool_nchw16c{tag}")
     }
 
     fn description(&self) -> String {
@@ -241,8 +288,11 @@ impl KernelModel for AvgPoolBlocked {
     fn traces(&self, t: &TensorMap, threads: usize) -> Vec<Trace> {
         let s = self.shape;
         let (src, dst) = self.descs();
-        let units: Vec<(usize, usize)> = (0..s.n)
-            .flat_map(|n| (0..self.cb()).map(move |cb| (n, cb)))
+        let chunks = row_chunks(s.oh(), self.variant.block);
+        let units: Vec<(usize, usize, usize)> = (0..s.n)
+            .flat_map(|n| {
+                (0..self.cb()).flat_map(move |cb| (0..chunks).map(move |ch| (n, cb, ch)))
+            })
             .collect();
         let parts = split_indices(units.len(), threads);
         parts
@@ -250,8 +300,9 @@ impl KernelModel for AvgPoolBlocked {
             .map(|idxs| {
                 let mut tr = Trace::new();
                 for i in idxs {
-                    let (n, cb) = units[i];
-                    for oh in 0..s.oh() {
+                    let (n, cb, ch) = units[i];
+                    let (oh_lo, oh_hi) = chunk_range(s.oh(), self.variant.block, ch);
+                    for oh in oh_lo..oh_hi {
                         for kh in 0..s.kernel {
                             let ih = oh * s.stride + kh;
                             tr.push(AccessRun::contiguous(
@@ -370,5 +421,28 @@ mod tests {
         let s = shape();
         assert_eq!(s.oh(), 55);
         assert_eq!(s.ow(), 55);
+    }
+
+    #[test]
+    fn row_block_variant_refines_partitioning_only() {
+        let base = AvgPoolBlocked::new(shape());
+        assert_eq!(base.name(), "avgpool_nchw16c");
+        let v = VariantParams {
+            block: 8,
+            ..VariantParams::avgpool_baseline(DataLayout::Nchw16c)
+        };
+        let blocked = AvgPoolBlocked::with_variant(shape(), v);
+        assert_eq!(blocked.name(), "avgpool_nchw16c@ob8");
+        let mut space = AddressSpace::new();
+        let t = base.alloc(&mut space, MemPolicy::BindNode(0), 1);
+        // Single thread: sequential chunks reproduce the baseline run
+        // order exactly — the knob only changes how units split across
+        // threads.
+        assert_eq!(base.traces(&t, 1)[0].runs, blocked.traces(&t, 1)[0].runs);
+        // Many threads: the finer units spread real work onto threads the
+        // baseline leaves idle at this shape.
+        let threads = 2 * shape().n * shape().c.div_ceil(CBLOCK);
+        let busy = |trs: &[Trace]| trs.iter().filter(|tr| !tr.runs.is_empty()).count();
+        assert!(busy(&blocked.traces(&t, threads)) > busy(&base.traces(&t, threads)));
     }
 }

@@ -1,0 +1,325 @@
+//! Kernel tuning variants — the knob space the `dlroofline tune`
+//! lattice search explores (see [`crate::tune`]).
+//!
+//! A [`VariantParams`] bundles the implementation knobs the PolyDL-style
+//! optimisation loop varies: data layout, a blocking factor (the conv
+//! output-row block / inner-product M-tile / pooling row chunk), the
+//! convolution loop order, and a software-prefetch distance. Each hot
+//! kernel ([`super::conv_direct`], [`super::inner_product`],
+//! [`super::pooling`]) carries a `VariantParams` whose *baseline* value
+//! reproduces the pre-tuning trace and instruction mix bit-identically —
+//! `Kernel::new` is always the baseline, so every existing cell hash is
+//! untouched.
+//!
+//! Variants reach the measurement pipeline as
+//! [`crate::harness::spec::KernelSpec::Variant`] cells: the params are
+//! part of the spec's `Debug` string and the kernel's display name, so
+//! they fold into the cell content hash and distinct variants can never
+//! collide silently (the plan executor additionally fails loudly on a
+//! same-hash/different-identity pair).
+
+use super::layouts::DataLayout;
+
+/// Baseline output-row block of the direct convolutions (the historical
+/// `OH_CHUNK`): rows of `oh` per parallel work unit.
+pub const CONV_ROW_BLOCK: usize = 8;
+
+/// Baseline M-tile of the inner product (the historical `M_CHUNK`).
+pub const IP_M_TILE: usize = 16;
+
+/// Loop-order knob of the direct convolutions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// Input-channel loop *inside* the output-row loop. The plain NCHW
+    /// kernel's shipped nesting: weights are re-read per output row.
+    IcInner,
+    /// Input-channel loop *outside* the output-row loop, hoisting each
+    /// weight row/block across the whole row block. The blocked
+    /// NCHW16C kernel's shipped nesting.
+    IcOuter,
+}
+
+impl LoopOrder {
+    /// Lowercase display label (`ic-inner`, `ic-outer`).
+    pub fn label(self) -> &'static str {
+        match self {
+            LoopOrder::IcInner => "ic-inner",
+            LoopOrder::IcOuter => "ic-outer",
+        }
+    }
+
+    /// Parse a [`Self::label`] string.
+    pub fn parse(s: &str) -> Option<LoopOrder> {
+        match s {
+            "ic-inner" => Some(LoopOrder::IcInner),
+            "ic-outer" => Some(LoopOrder::IcOuter),
+            _ => None,
+        }
+    }
+}
+
+/// One point of the tuning knob space. `Copy + Eq` so it can live inside
+/// [`crate::harness::spec::KernelSpec`] and fold into cell content
+/// hashes via the spec's `Debug` string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantParams {
+    /// Data layout (selects the NCHW vs blocked NCHW16C implementation
+    /// for kernels that ship both).
+    pub layout: DataLayout,
+    /// Blocking factor: conv output-row block, inner-product M-tile, or
+    /// pooling row chunk (`0` = the pooling baseline's unchunked units).
+    pub block: usize,
+    /// Convolution loop order (pinned to the baseline for kernels
+    /// without the knob).
+    pub order: LoopOrder,
+    /// Software-prefetch distance in cache lines (`0` = the kernel's
+    /// shipped prefetch behaviour).
+    pub prefetch_lines: usize,
+}
+
+impl VariantParams {
+    /// The shipped direct-convolution configuration for `layout`: row
+    /// block [`CONV_ROW_BLOCK`], the layout's native loop order, no
+    /// extra prefetch.
+    pub fn conv_baseline(layout: DataLayout) -> VariantParams {
+        VariantParams {
+            layout,
+            block: CONV_ROW_BLOCK,
+            order: if layout == DataLayout::Nchw16c {
+                LoopOrder::IcOuter
+            } else {
+                LoopOrder::IcInner
+            },
+            prefetch_lines: 0,
+        }
+    }
+
+    /// The shipped inner-product configuration: M-tile [`IP_M_TILE`],
+    /// default prefetch stripe. Layout and loop order carry no meaning
+    /// for the GEMM and are pinned.
+    pub fn inner_product_baseline() -> VariantParams {
+        VariantParams {
+            layout: DataLayout::Nchw,
+            block: IP_M_TILE,
+            order: LoopOrder::IcInner,
+            prefetch_lines: 0,
+        }
+    }
+
+    /// The shipped pooling configuration for `layout`: unchunked
+    /// `(n, c)` work units (`block == 0`), no prefetch knob.
+    pub fn avgpool_baseline(layout: DataLayout) -> VariantParams {
+        VariantParams {
+            layout,
+            block: 0,
+            order: LoopOrder::IcInner,
+            prefetch_lines: 0,
+        }
+    }
+
+    /// Compact knob tag appended to a kernel's display name, listing
+    /// only the knobs that differ from `baseline` — the baseline variant
+    /// keeps the plain kernel name. `block_prefix` names the blocking
+    /// knob per family (`rb` row block, `mt` M-tile, `ob` row chunk).
+    /// `+`-separated (a `,` would break CSV report rows).
+    pub fn tag(&self, baseline: &VariantParams, block_prefix: &str) -> String {
+        let mut knobs: Vec<String> = Vec::new();
+        if self.block != baseline.block {
+            knobs.push(format!("{block_prefix}{}", self.block));
+        }
+        if self.order != baseline.order {
+            knobs.push(self.order.label().to_string());
+        }
+        if self.prefetch_lines != baseline.prefetch_lines {
+            knobs.push(format!("pf{}", self.prefetch_lines));
+        }
+        if knobs.is_empty() {
+            String::new()
+        } else {
+            format!("@{}", knobs.join("+"))
+        }
+    }
+}
+
+/// Which tunable kernel family a lattice variant instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneKernel {
+    /// Direct convolution (NCHW or blocked NCHW16C by layout knob).
+    ConvDirect,
+    /// The Fig 6 inner product.
+    InnerProduct,
+    /// Average pooling (NCHW or blocked NCHW16C by layout knob).
+    AvgPool,
+}
+
+impl TuneKernel {
+    /// Lowercase display label (`conv_direct`, `inner_product`,
+    /// `avgpool`).
+    pub fn label(self) -> &'static str {
+        match self {
+            TuneKernel::ConvDirect => "conv_direct",
+            TuneKernel::InnerProduct => "inner_product",
+            TuneKernel::AvgPool => "avgpool",
+        }
+    }
+
+    /// Parse a [`Self::label`] string.
+    pub fn parse(s: &str) -> Option<TuneKernel> {
+        match s {
+            "conv_direct" => Some(TuneKernel::ConvDirect),
+            "inner_product" => Some(TuneKernel::InnerProduct),
+            "avgpool" => Some(TuneKernel::AvgPool),
+            _ => None,
+        }
+    }
+
+    /// The family's shipped (baseline) params at `layout`.
+    pub fn baseline(self, layout: DataLayout) -> VariantParams {
+        match self {
+            TuneKernel::ConvDirect => VariantParams::conv_baseline(layout),
+            TuneKernel::InnerProduct => VariantParams::inner_product_baseline(),
+            TuneKernel::AvgPool => VariantParams::avgpool_baseline(layout),
+        }
+    }
+}
+
+/// A fully specified tuning-lattice point: kernel family + knob values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantSpec {
+    /// Kernel family.
+    pub base: TuneKernel,
+    /// Knob values (canonical — see [`VariantSpec::canonical`]).
+    pub params: VariantParams,
+}
+
+impl VariantSpec {
+    /// Build a variant with knobs the family cannot express pinned to
+    /// the baseline, so two lattice points that would produce identical
+    /// traces collapse to one spec *by construction* (the lattice dedups
+    /// on equality) instead of producing duplicate cells.
+    pub fn canonical(base: TuneKernel, params: VariantParams) -> VariantSpec {
+        let params = match base {
+            TuneKernel::ConvDirect => VariantParams {
+                layout: if params.layout == DataLayout::Nchw16c {
+                    DataLayout::Nchw16c
+                } else {
+                    DataLayout::Nchw
+                },
+                block: params.block.max(1),
+                ..params
+            },
+            TuneKernel::InnerProduct => VariantParams {
+                block: params.block.max(1),
+                prefetch_lines: params.prefetch_lines,
+                ..VariantParams::inner_product_baseline()
+            },
+            TuneKernel::AvgPool => VariantParams {
+                layout: if params.layout == DataLayout::Nchw16c {
+                    DataLayout::Nchw16c
+                } else {
+                    DataLayout::Nchw
+                },
+                block: params.block,
+                ..VariantParams::avgpool_baseline(params.layout)
+            },
+        };
+        VariantSpec { base, params }
+    }
+
+    /// Whether this variant is the shipped configuration of its family
+    /// at its layout (the untuned reference point in rankings).
+    pub fn is_baseline(&self) -> bool {
+        self.params == self.base.baseline(self.params.layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_tags_are_empty() {
+        for layout in [DataLayout::Nchw, DataLayout::Nchw16c] {
+            let b = VariantParams::conv_baseline(layout);
+            assert_eq!(b.tag(&b, "rb"), "");
+        }
+        let ip = VariantParams::inner_product_baseline();
+        assert_eq!(ip.tag(&ip, "mt"), "");
+    }
+
+    #[test]
+    fn tags_list_only_changed_knobs() {
+        let base = VariantParams::conv_baseline(DataLayout::Nchw);
+        let v = VariantParams { block: 4, ..base };
+        assert_eq!(v.tag(&base, "rb"), "@rb4");
+        let v = VariantParams { block: 4, order: LoopOrder::IcOuter, prefetch_lines: 8, ..base };
+        assert_eq!(v.tag(&base, "rb"), "@rb4+ic-outer+pf8");
+        // No commas: kernel names appear in CSV rows.
+        assert!(!v.tag(&base, "rb").contains(','));
+    }
+
+    #[test]
+    fn conv_baseline_order_follows_layout() {
+        assert_eq!(VariantParams::conv_baseline(DataLayout::Nchw).order, LoopOrder::IcInner);
+        assert_eq!(
+            VariantParams::conv_baseline(DataLayout::Nchw16c).order,
+            LoopOrder::IcOuter
+        );
+    }
+
+    #[test]
+    fn canonical_pins_inexpressible_knobs() {
+        // The inner product has no layout or loop-order knob: two
+        // lattice points differing only there collapse to one spec.
+        let a = VariantSpec::canonical(
+            TuneKernel::InnerProduct,
+            VariantParams {
+                layout: DataLayout::Nchw16c,
+                block: 32,
+                order: LoopOrder::IcOuter,
+                prefetch_lines: 8,
+            },
+        );
+        let b = VariantSpec::canonical(
+            TuneKernel::InnerProduct,
+            VariantParams {
+                layout: DataLayout::Nchw,
+                block: 32,
+                order: LoopOrder::IcInner,
+                prefetch_lines: 8,
+            },
+        );
+        assert_eq!(a, b);
+        // Conv clamps a degenerate zero block instead of dividing by it.
+        let c = VariantSpec::canonical(
+            TuneKernel::ConvDirect,
+            VariantParams { block: 0, ..VariantParams::conv_baseline(DataLayout::Nchw) },
+        );
+        assert_eq!(c.params.block, 1);
+    }
+
+    #[test]
+    fn baseline_detection() {
+        let b = VariantSpec::canonical(
+            TuneKernel::ConvDirect,
+            VariantParams::conv_baseline(DataLayout::Nchw16c),
+        );
+        assert!(b.is_baseline());
+        let v = VariantSpec::canonical(
+            TuneKernel::ConvDirect,
+            VariantParams { block: 4, ..VariantParams::conv_baseline(DataLayout::Nchw16c) },
+        );
+        assert!(!v.is_baseline());
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for k in [TuneKernel::ConvDirect, TuneKernel::InnerProduct, TuneKernel::AvgPool] {
+            assert_eq!(TuneKernel::parse(k.label()), Some(k));
+        }
+        for o in [LoopOrder::IcInner, LoopOrder::IcOuter] {
+            assert_eq!(LoopOrder::parse(o.label()), Some(o));
+        }
+        assert!(TuneKernel::parse("bogus").is_none());
+    }
+}

@@ -37,7 +37,12 @@
 //!   (`sweep --jobs N`), a persistent content-addressed cell cache
 //!   (`--cache-dir`, [`coordinator::store`]) that makes repeated sweeps
 //!   incremental, and versioned `run.json` manifests that make every
-//!   run a reproducible artifact.
+//!   run a reproducible artifact;
+//! * a **tuning subsystem** ([`tune`]) — `dlroofline tune` expands
+//!   kernel tuning knobs (blocking, loop order, layout, SW prefetch)
+//!   into a variant lattice, drives it through the cached plan executor
+//!   (warm re-tunes simulate nothing) and ranks variants per scenario
+//!   by attainable FLOP/s with a binding-level explanation per winner.
 //!
 //! See `README.md` for the documentation map, `docs/` for the book
 //! (architecture overview, CLI reference, on-disk formats) and
@@ -60,6 +65,7 @@ pub mod roofline;
 pub mod runtime;
 pub mod sim;
 pub mod testutil;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result type.

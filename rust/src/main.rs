@@ -104,6 +104,48 @@ fn app() -> AppSpec {
                 positional: vec![],
             },
             CmdSpec {
+                name: "tune",
+                help: "roofline-guided variant search: rank kernel tuning knobs per scenario",
+                opts: vec![
+                    opt("out", "report output directory", Some("reports/tune")),
+                    opt("machine", "machine preset or config path", Some("xeon_6248")),
+                    opt("batch", "override workload batch", None),
+                    opt(
+                        "kernels",
+                        "kernel families to tune: conv_direct | inner_product | avgpool",
+                        Some("conv_direct,inner_product"),
+                    ),
+                    opt(
+                        "scenarios",
+                        "comma-separated scenario presets to rank under",
+                        Some("single-thread,one-socket"),
+                    ),
+                    opt("layouts", "data layouts to try: nchw | nchw16c | nhwc", Some("nchw,nchw16c")),
+                    opt(
+                        "blocks",
+                        "blocking factors (conv row block / inner-product M-tile)",
+                        Some("4,8,16"),
+                    ),
+                    opt("orders", "loop orders to try: ic-inner | ic-outer", Some("ic-inner,ic-outer")),
+                    opt(
+                        "prefetch",
+                        "SW-prefetch distances in cache lines (0 = shipped behaviour)",
+                        Some("0,8"),
+                    ),
+                    opt("cache", "cell cache protocol: cold | warm", Some("cold")),
+                    opt("jobs", "worker threads (0 = auto)", Some("0")),
+                    opt(
+                        "sim-jobs",
+                        "intra-cell sim workers (0 = auto from the --jobs budget, 1 = serial)",
+                        Some("0"),
+                    ),
+                    opt("cache-dir", "persistent cell cache dir (default: $DLROOFLINE_CACHE)", None),
+                    switch("full-size", "use the paper's full tensor sizes (slow)"),
+                    switch("explain", "report per-cell cache hit/miss/stale fates"),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
                 name: "cache",
                 help: "inspect or prune the persistent cell cache (stats | clear | gc)",
                 opts: vec![
@@ -228,6 +270,7 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
         "figure" => cmd_figure(parsed),
         "diff" => cmd_diff(parsed),
         "sweep" => cmd_sweep(parsed),
+        "tune" => cmd_tune(parsed),
         "plan" => cmd_plan(parsed),
         "cache" => cmd_cache(parsed),
         "repro-all" => cmd_repro_all(parsed),
@@ -478,6 +521,111 @@ fn cmd_sweep(parsed: &Parsed) -> Result<()> {
         print_cache_summary(st, usage);
         if parsed.has("explain") {
             print_explain(&sweep.plan_cells, usage);
+        }
+    }
+    Ok(())
+}
+
+/// Parse one comma-separated lattice axis, rejecting unknown values.
+fn parse_axis<T>(
+    raw: &str,
+    what: &str,
+    expected: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<Vec<T>> {
+    let items = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            parse(s).ok_or_else(|| anyhow::anyhow!("bad {what} '{s}' (expected {expected})"))
+        })
+        .collect::<Result<Vec<T>>>()?;
+    anyhow::ensure!(!items.is_empty(), "--{what} needs at least one value");
+    Ok(items)
+}
+
+fn cmd_tune(parsed: &Parsed) -> Result<()> {
+    use dlroofline::kernels::{DataLayout, LoopOrder, TuneKernel};
+    use dlroofline::tune::{self, TuningLattice};
+
+    let lattice = TuningLattice {
+        kernels: parse_axis(
+            parsed.opt("kernels").unwrap_or("conv_direct,inner_product"),
+            "kernels",
+            "conv_direct | inner_product | avgpool",
+            TuneKernel::parse,
+        )?,
+        scenarios: parse_axis(
+            parsed.opt("scenarios").unwrap_or("single-thread,one-socket"),
+            "scenarios",
+            SCENARIO_HELP,
+            ScenarioSpec::parse,
+        )?,
+        cache: CacheState::parse(parsed.opt("cache").unwrap_or("cold"))
+            .ok_or_else(|| anyhow::anyhow!("bad --cache (expected cold | warm)"))?,
+        layouts: parse_axis(
+            parsed.opt("layouts").unwrap_or("nchw,nchw16c"),
+            "layouts",
+            "nchw | nchw16c | nhwc",
+            DataLayout::parse,
+        )?,
+        blocks: parse_axis(
+            parsed.opt("blocks").unwrap_or("4,8,16"),
+            "blocks",
+            "a non-negative integer",
+            |s| s.parse::<usize>().ok(),
+        )?,
+        orders: parse_axis(
+            parsed.opt("orders").unwrap_or("ic-inner,ic-outer"),
+            "orders",
+            "ic-inner | ic-outer",
+            LoopOrder::parse,
+        )?,
+        prefetch: parse_axis(
+            parsed.opt("prefetch").unwrap_or("0,8"),
+            "prefetch",
+            "a cache-line count (0 = shipped behaviour)",
+            |s| s.parse::<usize>().ok(),
+        )?,
+    };
+    let params = params_from(parsed)?;
+    let budget = dlroofline::coordinator::JobBudget {
+        jobs: parsed.opt_parse::<usize>("jobs")?.unwrap_or(0),
+        sim_jobs: parsed.opt_parse::<usize>("sim-jobs")?.unwrap_or(0),
+    };
+    let store = store_from(parsed)?;
+    if parsed.has("explain") && store.is_none() {
+        eprintln!("warning: --explain needs a cell cache (--cache-dir or ${CACHE_ENV}); ignoring");
+    }
+
+    let report = tune::run(&lattice, &params, budget, store.as_ref())?;
+    let out_dir = PathBuf::from(parsed.opt("out").unwrap_or("reports/tune"));
+    let output = tune::write_reports(&report, &params, &out_dir)?;
+
+    for sc in &report.scenarios {
+        for r in &sc.rankings {
+            println!("[{}] {}", sc.scenario, tune::report::winner_line(r));
+        }
+    }
+    for p in [&output.markdown, &output.csv, &output.json, &output.manifest] {
+        println!("wrote {}", p.display());
+    }
+    let s = report.stats;
+    println!(
+        "lattice: {} variants, {} scenario group(s), {} cells ({} unique, {} memoized, {} inexpressible)",
+        report.variant_count,
+        report.scenarios.len(),
+        s.cells_total,
+        s.cells_simulated,
+        s.cells_reused,
+        s.cells_skipped
+    );
+    if let (Some(st), Some(usage)) = (store.as_ref(), report.store.as_ref()) {
+        print_cache_summary(st, usage);
+        if parsed.has("explain") {
+            let plan_cells: Vec<_> = report.cells.iter().map(|c| c.plan.clone()).collect();
+            print_explain(&plan_cells, usage);
         }
     }
     Ok(())

@@ -1,0 +1,430 @@
+//! Roofline-guided kernel autotuning (`dlroofline tune`).
+//!
+//! A [`TuningLattice`] expands a small set of kernel families into a
+//! variant space — blocking factors, loop orders, data layouts and
+//! software-prefetch distances ([`crate::kernels::VariantParams`]) —
+//! and drives the whole lattice through the parallel, memoizing plan
+//! executor ([`crate::coordinator::plan::execute_specs_with_budget`])
+//! as one synthetic grid experiment. Every variant is an ordinary
+//! measurement cell whose content hash folds in the knob values, so
+//! with a persistent cell store (`--cache-dir`):
+//!
+//! * a **warm re-tune** of an unchanged lattice executes **zero
+//!   simulations** and emits byte-identical reports, and
+//! * a **lattice edit** re-simulates exactly the added variants — the
+//!   incremental-sweep property of the cell cache, inherited for free.
+//!
+//! Ranking follows the hierarchical roofline (DESIGN.md §10): per
+//! scenario and kernel family, variants are ordered by attainable
+//! FLOP/s from [`crate::roofline::model::RooflineModel::attainable_hier`]
+//! over the variant's *measured* per-level traffic (tie-break: measured
+//! FLOP/s, then name — total and deterministic, so `--jobs N` and warm
+//! re-tunes reproduce the ranking bit-for-bit). Each winner is
+//! explained through its [`Binding`] level — e.g. a blocking factor
+//! that moved a convolution from DRAM-bound to LLC-bound.
+
+pub mod report;
+
+use std::cmp::Ordering;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::manifest::{FileRecord, RunManifest};
+use crate::coordinator::plan::{self, ExecutedCell, JobBudget, PlanStats, StoreUsage};
+use crate::coordinator::store::CellStore;
+use crate::harness::experiments::{roofline_for, ExperimentParams};
+use crate::harness::spec::{ExperimentSpec, GridSpec, KernelSpec, SpecKind};
+use crate::harness::{CacheState, ScenarioSpec};
+use crate::kernels::{DataLayout, LoopOrder, TuneKernel, VariantParams, VariantSpec};
+use crate::roofline::model::Binding;
+use crate::util::fsutil::write_atomic;
+
+/// The variant space `dlroofline tune` searches: the cross product of
+/// every knob axis, canonicalised per kernel family (knobs a family
+/// cannot express are pinned, so the lattice never contains two names
+/// for the same simulation) with the shipped baseline configuration
+/// always injected as the ranking's reference point.
+#[derive(Clone, Debug)]
+pub struct TuningLattice {
+    /// Kernel families to tune.
+    pub kernels: Vec<TuneKernel>,
+    /// Scenario presets to rank under (one ranking group each).
+    pub scenarios: Vec<ScenarioSpec>,
+    /// Cache protocol for every cell.
+    pub cache: CacheState,
+    /// Data layouts to try.
+    pub layouts: Vec<DataLayout>,
+    /// Blocking factors to try (conv output-row block / inner-product
+    /// M-tile; `0` = a pool kernel's unchunked baseline).
+    pub blocks: Vec<usize>,
+    /// Loop orders to try.
+    pub orders: Vec<LoopOrder>,
+    /// Software-prefetch distances (cache lines; `0` = the kernel's
+    /// shipped prefetch behaviour).
+    pub prefetch: Vec<usize>,
+}
+
+impl TuningLattice {
+    /// The default search space: both hot kernel families, the paper's
+    /// two main resource scenarios, both shipped layouts, three
+    /// blocking factors, both loop orders and two prefetch distances —
+    /// 30 canonical variants, 60 cold cells.
+    pub fn default_lattice() -> TuningLattice {
+        TuningLattice {
+            kernels: vec![TuneKernel::ConvDirect, TuneKernel::InnerProduct],
+            scenarios: vec![ScenarioSpec::single_thread(), ScenarioSpec::one_socket()],
+            cache: CacheState::Cold,
+            layouts: vec![DataLayout::Nchw, DataLayout::Nchw16c],
+            blocks: vec![4, 8, 16],
+            orders: vec![LoopOrder::IcInner, LoopOrder::IcOuter],
+            prefetch: vec![0, 8],
+        }
+    }
+
+    /// Expand the axes into canonical, deduplicated variant specs, in
+    /// deterministic order: per family, the shipped baselines first
+    /// (one per layout — rankings always contain their reference
+    /// point), then the knob cross product. Canonicalisation collapses
+    /// inexpressible knob combinations, so e.g. the inner product
+    /// contributes one variant per (block, prefetch) pair regardless of
+    /// how many layouts the lattice lists.
+    pub fn variants(&self) -> Vec<VariantSpec> {
+        let mut out: Vec<VariantSpec> = Vec::new();
+        for &kernel in &self.kernels {
+            for &layout in &self.layouts {
+                let v = VariantSpec::canonical(kernel, kernel.baseline(layout));
+                if !out.contains(&v) {
+                    out.push(v);
+                }
+            }
+            for &layout in &self.layouts {
+                for &block in &self.blocks {
+                    for &order in &self.orders {
+                        for &prefetch_lines in &self.prefetch {
+                            let v = VariantSpec::canonical(
+                                kernel,
+                                VariantParams { layout, block, order, prefetch_lines },
+                            );
+                            if !out.contains(&v) {
+                                out.push(v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The lattice as a synthetic grid experiment for the plan
+    /// executor: one [`KernelSpec::Variant`] per canonical variant,
+    /// every scenario, one cache state. The spec never enters the
+    /// registry — [`plan::execute_specs_with_budget`] accepts it
+    /// directly — but its cells hash and memoize exactly like registry
+    /// cells, which is what makes warm re-tunes free.
+    pub fn to_spec(&self) -> ExperimentSpec {
+        ExperimentSpec {
+            id: "tune",
+            title: "roofline-guided variant tuning",
+            kind: SpecKind::Grid(GridSpec {
+                scenarios: self.scenarios.clone(),
+                kernels: self
+                    .variants()
+                    .into_iter()
+                    .map(KernelSpec::Variant)
+                    .collect(),
+                cache_states: vec![self.cache],
+                expectations: vec![],
+                notes: vec![],
+                post: None,
+            }),
+        }
+    }
+}
+
+/// One variant's measured position against its scenario's roofline.
+#[derive(Clone, Debug)]
+pub struct RankedVariant {
+    /// Knob-tagged kernel display name (e.g. `conv_direct_nchw@rb4+pf8`).
+    pub name: String,
+    /// The variant's canonical knob values.
+    pub spec: VariantSpec,
+    /// Cell content hash (joins the ranking to `--explain` and the
+    /// manifest).
+    pub key: u64,
+    /// Whether this is the family's shipped baseline configuration.
+    pub baseline: bool,
+    /// Work W (FLOPs).
+    pub work_flops: f64,
+    /// DRAM-level arithmetic intensity W/Q.
+    pub ai: f64,
+    /// Attainable FLOP/s under the hierarchical roofline at this
+    /// variant's measured per-level traffic — the ranking key.
+    pub attainable: f64,
+    /// The roof that binds the variant (the winner's explanation).
+    pub binding: Binding,
+    /// Measured FLOP/s (W/R) — the first tie-break.
+    pub perf: f64,
+    /// Measured fraction of peak π.
+    pub utilization: f64,
+}
+
+/// One kernel family's ranked variants under one scenario.
+#[derive(Clone, Debug)]
+pub struct KernelRanking {
+    /// The family being ranked.
+    pub kernel: TuneKernel,
+    /// Variants, best first (see [`rank_order`]). Never empty.
+    pub variants: Vec<RankedVariant>,
+}
+
+impl KernelRanking {
+    /// The best-ranked variant.
+    pub fn winner(&self) -> &RankedVariant {
+        &self.variants[0]
+    }
+
+    /// The best-ranked shipped baseline, the winner's reference point.
+    pub fn baseline(&self) -> Option<&RankedVariant> {
+        self.variants.iter().find(|v| v.baseline)
+    }
+}
+
+/// Rankings for every tuned family under one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioRanking {
+    /// Scenario preset name.
+    pub scenario: String,
+    /// One ranking per kernel family, in lattice order.
+    pub rankings: Vec<KernelRanking>,
+}
+
+/// Everything one tuning run produced.
+pub struct TuneReport {
+    /// The lattice that was searched.
+    pub lattice: TuningLattice,
+    /// Canonical variants in the lattice.
+    pub variant_count: usize,
+    /// Per-scenario rankings, in lattice scenario order (inexpressible
+    /// scenarios are skipped, like everywhere else in the executor).
+    pub scenarios: Vec<ScenarioRanking>,
+    /// Plan-shape statistics of the underlying execution.
+    pub stats: PlanStats,
+    /// Persistent-store accounting, when `--cache-dir` was active.
+    pub store: Option<StoreUsage>,
+    /// Every executed cell, in plan order (feeds the run manifest).
+    pub cells: Vec<ExecutedCell>,
+}
+
+/// Total, deterministic ranking order: attainable FLOP/s descending,
+/// then measured FLOP/s descending, then name ascending. All inputs are
+/// finite (attainable is capped by π), so `partial_cmp` cannot
+/// misorder; the name tie-break makes warm re-tunes and every `--jobs`
+/// budget reproduce the ranking byte-for-byte.
+pub fn rank_order(a: &RankedVariant, b: &RankedVariant) -> Ordering {
+    b.attainable
+        .partial_cmp(&a.attainable)
+        .unwrap_or(Ordering::Equal)
+        .then(b.perf.partial_cmp(&a.perf).unwrap_or(Ordering::Equal))
+        .then_with(|| a.name.cmp(&b.name))
+}
+
+/// Execute a tuning lattice through the memoizing plan executor and
+/// rank every variant. With a persistent `store`, unchanged variants
+/// are served from disk — a warm re-tune of an unchanged lattice
+/// simulates nothing.
+pub fn run(
+    lattice: &TuningLattice,
+    params: &ExperimentParams,
+    budget: JobBudget,
+    store: Option<&CellStore>,
+) -> Result<TuneReport> {
+    let variants = lattice.variants();
+    ensure!(!variants.is_empty(), "tuning lattice expands to no variants");
+    ensure!(!lattice.scenarios.is_empty(), "tuning lattice names no scenarios");
+    // Display name → canonical variant, via the same kernel construction
+    // the executor uses (names are unique: distinct canonical variants
+    // differ in at least one tagged knob).
+    let by_name: Vec<(String, VariantSpec)> = variants
+        .iter()
+        .map(|v| (KernelSpec::Variant(*v).build(params).name(), *v))
+        .collect();
+
+    let outcome = plan::execute_specs_with_budget(vec![lattice.to_spec()], params, budget, false, store)?;
+
+    let mut scenarios = Vec::new();
+    for scenario in &lattice.scenarios {
+        if scenario.validate(&params.machine).is_err() {
+            continue;
+        }
+        let roofline = roofline_for(params, scenario);
+        let mut rankings: Vec<KernelRanking> = lattice
+            .kernels
+            .iter()
+            .map(|&kernel| KernelRanking { kernel, variants: Vec::new() })
+            .collect();
+        for cell in outcome
+            .cells
+            .iter()
+            .filter(|c| !c.plan.reused && c.plan.scenario == scenario.name)
+        {
+            let spec = by_name
+                .iter()
+                .find(|(n, _)| *n == cell.plan.kernel)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| {
+                    anyhow!("cell kernel '{}' is not in the lattice (planner bug)", cell.plan.kernel)
+                })?;
+            let point = cell.measurement.point();
+            let levels = cell.measurement.level_bytes();
+            let (attainable, binding) = roofline.attainable_hier(point.work_flops, &levels);
+            let ranked = RankedVariant {
+                name: cell.plan.kernel.clone(),
+                spec,
+                key: cell.plan.key,
+                baseline: spec.is_baseline(),
+                work_flops: point.work_flops,
+                ai: point.ai(),
+                attainable,
+                binding,
+                perf: point.perf(),
+                utilization: point.utilization(&roofline),
+            };
+            let slot = rankings
+                .iter_mut()
+                .find(|r| r.kernel == spec.base)
+                .ok_or_else(|| anyhow!("variant family not in lattice (planner bug)"))?;
+            slot.variants.push(ranked);
+        }
+        for r in &mut rankings {
+            r.variants.sort_by(rank_order);
+        }
+        rankings.retain(|r| !r.variants.is_empty());
+        scenarios.push(ScenarioRanking { scenario: scenario.name.clone(), rankings });
+    }
+
+    Ok(TuneReport {
+        lattice: lattice.clone(),
+        variant_count: variants.len(),
+        scenarios,
+        stats: outcome.stats,
+        store: outcome.store,
+        cells: outcome.cells,
+    })
+}
+
+/// Paths one tuning run wrote.
+#[derive(Clone, Debug)]
+pub struct TuneOutput {
+    /// The ranked markdown report.
+    pub markdown: PathBuf,
+    /// The flat per-variant CSV.
+    pub csv: PathBuf,
+    /// The structured tuning manifest section (`tune.json`).
+    pub json: PathBuf,
+    /// The standard versioned run manifest (`tune.run.json`).
+    pub manifest: PathBuf,
+}
+
+/// Write the tuning report set under `out_dir`: `tune.md`, `tune.csv`,
+/// `tune.json` (the structured manifest section) and `tune.run.json`
+/// (the standard versioned run manifest recording every cell and file
+/// checksum). All four are deterministic functions of the measurements
+/// — no wall clock — so a warm re-tune rewrites them byte-identically.
+pub fn write_reports(
+    report: &TuneReport,
+    params: &ExperimentParams,
+    out_dir: &Path,
+) -> Result<TuneOutput> {
+    let md = report::markdown(report);
+    let csv = report::csv(report);
+    write_atomic(&out_dir.join("tune.md"), &md)?;
+    write_atomic(&out_dir.join("tune.csv"), &csv)?;
+    let files = vec![
+        FileRecord::from_content("tune.md", &md),
+        FileRecord::from_content("tune.csv", &csv),
+    ];
+    let json_text = report::manifest_json(report, params, &files).to_string_pretty();
+    write_atomic(&out_dir.join("tune.json"), &json_text)?;
+    let mut manifest = RunManifest::new(params, &["tune"], &report.cells, &report.stats);
+    manifest.add_file("tune.md", &md);
+    manifest.add_file("tune.csv", &csv);
+    manifest.add_file("tune.json", &json_text);
+    manifest.write(&out_dir.join("tune.run.json"))?;
+    Ok(TuneOutput {
+        markdown: out_dir.join("tune.md"),
+        csv: out_dir.join("tune.csv"),
+        json: out_dir.join("tune.json"),
+        manifest: out_dir.join("tune.run.json"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    #[test]
+    fn default_lattice_meets_search_floor() {
+        let lattice = TuningLattice::default_lattice();
+        let variants = lattice.variants();
+        // Conv: 2 layouts × 3 blocks × 2 orders × 2 prefetch = 24;
+        // inner product canonicalises to 3 blocks × 2 prefetch = 6.
+        assert_eq!(variants.len(), 30);
+        assert!(variants.iter().any(|v| v.base == TuneKernel::ConvDirect && v.is_baseline()));
+        assert!(variants.iter().any(|v| v.base == TuneKernel::InnerProduct && v.is_baseline()));
+        // Canonicalisation + dedup leaves no duplicates.
+        for (i, a) in variants.iter().enumerate() {
+            assert!(!variants[i + 1..].contains(a), "duplicate variant {a:?}");
+        }
+    }
+
+    #[test]
+    fn to_spec_builds_full_grid() {
+        let lattice = TuningLattice::default_lattice();
+        let spec = lattice.to_spec();
+        assert_eq!(spec.id, "tune");
+        // 30 variants × 2 scenarios × 1 cache state.
+        assert_eq!(spec.cells().len(), 60);
+    }
+
+    #[test]
+    fn tiny_lattice_ranks_deterministically() {
+        let lattice = TuningLattice {
+            kernels: vec![TuneKernel::ConvDirect],
+            scenarios: vec![ScenarioSpec::single_thread()],
+            cache: CacheState::Cold,
+            layouts: vec![DataLayout::Nchw],
+            blocks: vec![8],
+            orders: vec![LoopOrder::IcInner, LoopOrder::IcOuter],
+            prefetch: vec![0],
+        };
+        let params = quick();
+        let report = run(&lattice, &params, JobBudget::cells(1), None).unwrap();
+        assert_eq!(report.variant_count, 2);
+        assert_eq!(report.scenarios.len(), 1);
+        let ranking = &report.scenarios[0].rankings[0];
+        assert_eq!(ranking.variants.len(), 2);
+        // Sorted best-first by attainable FLOP/s.
+        assert!(ranking.variants[0].attainable >= ranking.variants[1].attainable);
+        assert!(ranking.baseline().is_some());
+        // Every variant carries a binding-level explanation.
+        for v in &ranking.variants {
+            assert!(!v.binding.label().is_empty());
+        }
+        // The ranking is reproducible bit-for-bit.
+        let again = run(&lattice, &params, JobBudget::cells(1), None).unwrap();
+        for (a, b) in report.scenarios[0].rankings[0]
+            .variants
+            .iter()
+            .zip(again.scenarios[0].rankings[0].variants.iter())
+        {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.attainable.to_bits(), b.attainable.to_bits());
+        }
+    }
+}

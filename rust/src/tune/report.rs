@@ -1,0 +1,293 @@
+//! Tuning report renderers: ranked markdown tables, a flat per-variant
+//! CSV, and the structured `tune.json` manifest section. Every renderer
+//! is a pure function of the [`TuneReport`] — no wall clock, no
+//! environment — so warm re-tunes reproduce all three byte-for-byte.
+
+use crate::coordinator::manifest::FileRecord;
+use crate::harness::experiments::ExperimentParams;
+use crate::util::hash::hex64;
+use crate::util::human::fmt_flops;
+use crate::util::json::Json;
+
+use super::{KernelRanking, RankedVariant, TuneReport};
+
+fn axis_list<T, F: Fn(&T) -> String>(items: &[T], f: F) -> String {
+    items.iter().map(f).collect::<Vec<_>>().join(", ")
+}
+
+/// One line explaining a family's winner through its binding roof,
+/// against the best-ranked shipped baseline.
+pub fn winner_line(ranking: &KernelRanking) -> String {
+    let w = ranking.winner();
+    let mut line = format!(
+        "winner: `{}` — {}-bound, attainable {}, measured {}",
+        w.name,
+        w.binding.label(),
+        fmt_flops(w.attainable),
+        fmt_flops(w.perf),
+    );
+    match ranking.baseline() {
+        Some(b) if b.name == w.name => {
+            line.push_str(" (the shipped baseline already wins this lattice)");
+        }
+        Some(b) => {
+            let ratio = if b.attainable > 0.0 { w.attainable / b.attainable } else { f64::INFINITY };
+            if b.binding == w.binding {
+                line.push_str(&format!(
+                    " (baseline `{}` binds at the same {} roof; attainable ×{ratio:.2})",
+                    b.name,
+                    b.binding.label(),
+                ));
+            } else {
+                line.push_str(&format!(
+                    " (baseline `{}` is {}-bound — the winner moved the binding roof from {} to {}; attainable ×{ratio:.2})",
+                    b.name,
+                    b.binding.label(),
+                    b.binding.label(),
+                    w.binding.label(),
+                ));
+            }
+        }
+        None => line.push_str(" (no shipped baseline in this lattice)"),
+    }
+    line
+}
+
+/// The ranked markdown report (`tune.md`).
+pub fn markdown(report: &TuneReport) -> String {
+    let mut out = String::from("# roofline-guided tuning report\n\n");
+    let l = &report.lattice;
+    out.push_str(&format!(
+        "lattice: {} canonical variants of [{}] under [{}] ({} cache)\n\n",
+        report.variant_count,
+        axis_list(&l.kernels, |k| k.label().to_string()),
+        axis_list(&l.scenarios, |s| s.name.clone()),
+        l.cache.label(),
+    ));
+    out.push_str(&format!(
+        "axes: layouts [{}] × blocks [{}] × orders [{}] × prefetch [{}]\n\n",
+        axis_list(&l.layouts, |d| d.label().to_string()),
+        axis_list(&l.blocks, |b| b.to_string()),
+        axis_list(&l.orders, |o| o.label().to_string()),
+        axis_list(&l.prefetch, |p| p.to_string()),
+    ));
+    for scenario in &report.scenarios {
+        out.push_str(&format!("## scenario {}\n\n", scenario.scenario));
+        for ranking in &scenario.rankings {
+            out.push_str(&format!("### {}\n\n", ranking.kernel.label()));
+            out.push_str(
+                "| rank | variant | layout | block | order | pf | AI | attainable | measured P | util π | bound |\n",
+            );
+            out.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+            for (i, v) in ranking.variants.iter().enumerate() {
+                out.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} | {:.3} | {} | {} | {:.1}% | {} |\n",
+                    i + 1,
+                    v.name,
+                    v.spec.params.layout.label(),
+                    v.spec.params.block,
+                    v.spec.params.order.label(),
+                    v.spec.params.prefetch_lines,
+                    v.ai,
+                    fmt_flops(v.attainable),
+                    fmt_flops(v.perf),
+                    v.utilization * 100.0,
+                    v.binding.label(),
+                ));
+            }
+            out.push_str(&format!("\n{}\n\n", winner_line(ranking)));
+        }
+    }
+    out
+}
+
+fn csv_row(scenario: &str, kernel: &str, v: &RankedVariant) -> String {
+    format!(
+        "{scenario},{kernel},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+        v.name,
+        v.spec.params.layout.label(),
+        v.spec.params.block,
+        v.spec.params.order.label(),
+        v.spec.params.prefetch_lines,
+        v.work_flops,
+        v.ai,
+        v.attainable,
+        v.perf,
+        v.utilization,
+        v.binding.label(),
+        v.baseline,
+        hex64(v.key),
+    )
+}
+
+/// The flat per-variant CSV (`tune.csv`), rows in ranking order.
+/// Variant name tags use `@`/`+` separators precisely so they can never
+/// introduce a column.
+pub fn csv(report: &TuneReport) -> String {
+    let mut out = String::from(
+        "scenario,kernel,variant,layout,block,order,prefetch_lines,work_flops,ai,attainable_flops,perf_flops,util,bound,baseline,cell_key\n",
+    );
+    for scenario in &report.scenarios {
+        for ranking in &scenario.rankings {
+            for v in &ranking.variants {
+                out.push_str(&csv_row(&scenario.scenario, ranking.kernel.label(), v));
+            }
+        }
+    }
+    out
+}
+
+fn variant_json(v: &RankedVariant) -> Json {
+    Json::obj(vec![
+        ("variant", Json::str(v.name.as_str())),
+        ("layout", Json::str(v.spec.params.layout.label())),
+        ("block", Json::num(v.spec.params.block as f64)),
+        ("order", Json::str(v.spec.params.order.label())),
+        ("prefetch_lines", Json::num(v.spec.params.prefetch_lines as f64)),
+        ("work_flops", Json::num(v.work_flops)),
+        ("ai", Json::num(v.ai)),
+        ("attainable_flops", Json::num(v.attainable)),
+        ("perf_flops", Json::num(v.perf)),
+        ("util", Json::num(v.utilization)),
+        ("bound", Json::str(v.binding.label())),
+        ("baseline", Json::Bool(v.baseline)),
+        ("cell_key", Json::str(hex64(v.key))),
+    ])
+}
+
+/// The structured tuning manifest section (`tune.json`): the lattice
+/// axes, every ranking, plan statistics and the checksums of the sibling
+/// report files.
+pub fn manifest_json(report: &TuneReport, params: &ExperimentParams, files: &[FileRecord]) -> Json {
+    let l = &report.lattice;
+    let lattice = Json::obj(vec![
+        ("kernels", Json::arr(l.kernels.iter().map(|k| Json::str(k.label())).collect())),
+        ("scenarios", Json::arr(l.scenarios.iter().map(|s| Json::str(s.name.as_str())).collect())),
+        ("cache", Json::str(l.cache.label())),
+        ("layouts", Json::arr(l.layouts.iter().map(|d| Json::str(d.label())).collect())),
+        ("blocks", Json::arr(l.blocks.iter().map(|&b| Json::num(b as f64)).collect())),
+        ("orders", Json::arr(l.orders.iter().map(|o| Json::str(o.label())).collect())),
+        ("prefetch", Json::arr(l.prefetch.iter().map(|&p| Json::num(p as f64)).collect())),
+        ("variant_count", Json::num(report.variant_count as f64)),
+    ]);
+    let scenarios = Json::arr(
+        report
+            .scenarios
+            .iter()
+            .map(|sc| {
+                Json::obj(vec![
+                    ("scenario", Json::str(sc.scenario.as_str())),
+                    (
+                        "rankings",
+                        Json::arr(
+                            sc.rankings
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("kernel", Json::str(r.kernel.label())),
+                                        ("winner", Json::str(r.winner().name.as_str())),
+                                        (
+                                            "variants",
+                                            Json::arr(r.variants.iter().map(variant_json).collect()),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let stats = Json::obj(vec![
+        ("cells_total", Json::num(report.stats.cells_total as f64)),
+        ("cells_simulated", Json::num(report.stats.cells_simulated as f64)),
+        ("cells_reused", Json::num(report.stats.cells_reused as f64)),
+        ("cells_skipped", Json::num(report.stats.cells_skipped as f64)),
+    ]);
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("generator", Json::str(format!("dlroofline {}", crate::VERSION))),
+        ("machine", params.machine.fingerprint_json()),
+        ("machine_fingerprint", Json::str(params.machine.fingerprint())),
+        ("lattice", lattice),
+        ("scenarios", scenarios),
+        ("stats", stats),
+        (
+            "files",
+            Json::arr(
+                files
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("path", Json::str(f.path.as_str())),
+                            ("bytes", Json::num(f.bytes as f64)),
+                            ("checksum", Json::str(f.checksum.as_str())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::JobBudget;
+    use crate::harness::{CacheState, ScenarioSpec};
+    use crate::kernels::{DataLayout, LoopOrder, TuneKernel};
+    use crate::tune::TuningLattice;
+
+    fn tiny_report() -> TuneReport {
+        let lattice = TuningLattice {
+            kernels: vec![TuneKernel::InnerProduct],
+            scenarios: vec![ScenarioSpec::single_thread()],
+            cache: CacheState::Cold,
+            layouts: vec![DataLayout::Nchw],
+            blocks: vec![16, 32],
+            orders: vec![LoopOrder::IcInner],
+            prefetch: vec![0],
+        };
+        let params = ExperimentParams { batch: Some(1), ..Default::default() };
+        crate::tune::run(&lattice, &params, JobBudget::cells(1), None).unwrap()
+    }
+
+    #[test]
+    fn markdown_ranks_and_explains() {
+        let report = tiny_report();
+        let md = markdown(&report);
+        assert!(md.contains("## scenario single-thread"), "{md}");
+        assert!(md.contains("### inner_product"), "{md}");
+        assert!(md.contains("winner: `inner_product"), "{md}");
+        assert!(md.contains("-bound"), "{md}");
+        assert!(md.contains("inner_product@mt32"), "{md}");
+    }
+
+    #[test]
+    fn csv_has_one_row_per_variant_and_no_stray_commas() {
+        let report = tiny_report();
+        let body = csv(&report);
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 1 + 2, "{body}");
+        let columns = lines[0].split(',').count();
+        for line in &lines {
+            assert_eq!(line.split(',').count(), columns, "{line}");
+        }
+        assert!(body.contains(",bound,") || lines[0].ends_with("cell_key"));
+    }
+
+    #[test]
+    fn manifest_json_is_structured_and_versioned() {
+        let report = tiny_report();
+        let params = ExperimentParams { batch: Some(1), ..Default::default() };
+        let files = vec![FileRecord::from_content("tune.md", "x")];
+        let doc = manifest_json(&report, &params, &files);
+        assert_eq!(doc.expect("schema_version").unwrap().as_f64().unwrap(), 1.0);
+        let text = doc.to_string_compact();
+        assert!(text.contains("\"winner\""), "{text}");
+        assert!(text.contains("\"tune.md\""), "{text}");
+        // Round-trips through the parser.
+        assert!(Json::parse(&text).is_ok());
+    }
+}

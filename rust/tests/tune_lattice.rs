@@ -1,0 +1,191 @@
+//! Integration: roofline-guided variant tuning (`tune/`) on the cached
+//! parallel executor.
+//!
+//! The contract under test is the tuning workflow's incrementality and
+//! determinism:
+//!
+//! * a **warm re-tune** of an unchanged lattice against the same cell
+//!   store executes zero simulations and rewrites every report file
+//!   byte-identically;
+//! * a **lattice edit** re-simulates exactly the added variants — the
+//!   unchanged variants come from disk;
+//! * rankings are bit-identical across every `--jobs` budget;
+//! * the default lattice satisfies the feature's acceptance floor
+//!   (≥ 12 variants, ≥ 2 kernel families, ≥ 2 scenarios, every winner
+//!   explained by a binding level).
+
+use dlroofline::coordinator::plan::JobBudget;
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::harness::{CacheState, ScenarioSpec};
+use dlroofline::kernels::{DataLayout, LoopOrder, TuneKernel};
+use dlroofline::testutil::TempDir;
+use dlroofline::tune::{self, TuningLattice};
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+/// A small two-family lattice whose size is controlled by the block
+/// axis: blocks `[8]` → 5 variants / 10 cells, blocks `[8, 4]` →
+/// 8 variants / 16 cells (the 3-variant difference is the "edit").
+fn small_lattice(blocks: Vec<usize>) -> TuningLattice {
+    TuningLattice {
+        kernels: vec![TuneKernel::ConvDirect, TuneKernel::InnerProduct],
+        scenarios: vec![ScenarioSpec::single_thread(), ScenarioSpec::one_socket()],
+        cache: CacheState::Cold,
+        layouts: vec![DataLayout::Nchw, DataLayout::Nchw16c],
+        blocks,
+        orders: vec![LoopOrder::IcInner],
+        prefetch: vec![0],
+    }
+}
+
+fn report_files(dir: &std::path::Path) -> Vec<(String, String)> {
+    ["tune.md", "tune.csv", "tune.json", "tune.run.json"]
+        .iter()
+        .map(|name| {
+            (
+                name.to_string(),
+                std::fs::read_to_string(dir.join(name)).expect("report file exists"),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn default_lattice_meets_acceptance_floor() {
+    let report = tune::run(
+        &TuningLattice::default_lattice(),
+        &quick(),
+        JobBudget::cells(0),
+        None,
+    )
+    .unwrap();
+    assert!(report.variant_count >= 12, "only {} variants", report.variant_count);
+    assert!(report.scenarios.len() >= 2, "only {} scenarios", report.scenarios.len());
+    for sc in &report.scenarios {
+        assert!(sc.rankings.len() >= 2, "only {} kernel families ranked", sc.rankings.len());
+        for r in &sc.rankings {
+            assert!(!r.variants.is_empty());
+            // Best-first order and a binding-level explanation per winner.
+            for pair in r.variants.windows(2) {
+                assert!(pair[0].attainable >= pair[1].attainable);
+            }
+            assert!(!r.winner().binding.label().is_empty());
+            assert!(r.baseline().is_some(), "ranking must contain the shipped baseline");
+        }
+    }
+}
+
+#[test]
+fn warm_retune_executes_zero_simulations_byte_identically() {
+    let cache = TempDir::new("tune-warm-cache");
+    let store = CellStore::open(cache.path()).unwrap();
+    let params = quick();
+    let lattice = small_lattice(vec![8]);
+
+    let cold_dir = TempDir::new("tune-cold-out");
+    let cold = tune::run(&lattice, &params, JobBudget::cells(2), Some(&store)).unwrap();
+    tune::write_reports(&cold, &params, cold_dir.path()).unwrap();
+    let cold_usage = cold.store.as_ref().unwrap();
+    assert_eq!(cold_usage.hits, 0);
+    assert_eq!(cold_usage.simulated, cold.stats.cells_simulated);
+
+    let warm_dir = TempDir::new("tune-warm-out");
+    let warm = tune::run(&lattice, &params, JobBudget::cells(2), Some(&store)).unwrap();
+    tune::write_reports(&warm, &params, warm_dir.path()).unwrap();
+    let warm_usage = warm.store.as_ref().unwrap();
+    assert_eq!(warm_usage.simulated, 0, "warm re-tune must simulate nothing");
+    assert_eq!(warm_usage.hits, cold.stats.cells_simulated);
+
+    for ((name, a), (_, b)) in report_files(cold_dir.path())
+        .iter()
+        .zip(report_files(warm_dir.path()).iter())
+    {
+        assert_eq!(a, b, "{name} must be byte-identical on a warm re-tune");
+    }
+}
+
+#[test]
+fn lattice_edit_resimulates_only_added_variants() {
+    let cache = TempDir::new("tune-edit-cache");
+    let store = CellStore::open(cache.path()).unwrap();
+    let params = quick();
+
+    let base = tune::run(&small_lattice(vec![8]), &params, JobBudget::cells(2), Some(&store))
+        .unwrap();
+    let base_unique = base.stats.cells_simulated;
+
+    // Adding block 4 to the axis keeps every base variant (the edit is a
+    // strict superset), so the edited run must serve all base cells from
+    // disk and simulate exactly the added ones.
+    let edited = tune::run(&small_lattice(vec![8, 4]), &params, JobBudget::cells(2), Some(&store))
+        .unwrap();
+    let usage = edited.store.as_ref().unwrap();
+    assert_eq!(usage.hits, base_unique, "base variants must come from the cache");
+    assert_eq!(usage.stale, 0);
+    assert_eq!(
+        usage.simulated,
+        edited.stats.cells_simulated - base_unique,
+        "edit must re-simulate exactly the added variants"
+    );
+    assert!(usage.simulated > 0, "the edit adds variants");
+}
+
+#[test]
+fn rankings_are_deterministic_across_job_budgets() {
+    let params = quick();
+    let lattice = small_lattice(vec![8, 4]);
+
+    let serial_dir = TempDir::new("tune-jobs1");
+    let serial = tune::run(&lattice, &params, JobBudget::cells(1), None).unwrap();
+    tune::write_reports(&serial, &params, serial_dir.path()).unwrap();
+
+    let parallel_dir = TempDir::new("tune-jobs4");
+    let parallel = tune::run(&lattice, &params, JobBudget { jobs: 4, sim_jobs: 2 }, None).unwrap();
+    tune::write_reports(&parallel, &params, parallel_dir.path()).unwrap();
+
+    for ((name, a), (_, b)) in report_files(serial_dir.path())
+        .iter()
+        .zip(report_files(parallel_dir.path()).iter())
+    {
+        assert_eq!(a, b, "{name} diverged between --jobs 1 and --jobs 4 --sim-jobs 2");
+    }
+}
+
+#[test]
+fn reports_rank_and_explain_variants() {
+    let params = quick();
+    let lattice = small_lattice(vec![8]);
+    let out = TempDir::new("tune-report-out");
+    let report = tune::run(&lattice, &params, JobBudget::cells(2), None).unwrap();
+    let output = tune::write_reports(&report, &params, out.path()).unwrap();
+
+    let md = std::fs::read_to_string(&output.markdown).unwrap();
+    assert!(md.contains("## scenario single-thread"), "{md}");
+    assert!(md.contains("## scenario one-socket"), "{md}");
+    assert!(md.contains("### conv_direct"), "{md}");
+    assert!(md.contains("### inner_product"), "{md}");
+    assert!(md.contains("winner: `"), "{md}");
+    assert!(md.contains("-bound"), "{md}");
+
+    let csv = std::fs::read_to_string(&output.csv).unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    // Header + one row per variant per scenario (5 variants × 2).
+    assert_eq!(lines.len(), 1 + 2 * report.variant_count, "{csv}");
+    let columns = lines[0].split(',').count();
+    for line in &lines {
+        assert_eq!(line.split(',').count(), columns, "variant tags must not add columns: {line}");
+    }
+
+    // The run manifest is the standard versioned format and records the
+    // three sibling report files with checksums.
+    let manifest =
+        dlroofline::coordinator::RunManifest::load(&output.manifest).unwrap();
+    assert_eq!(manifest.experiments, vec!["tune".to_string()]);
+    assert_eq!(manifest.cells.len(), report.stats.cells_total - report.stats.cells_skipped);
+    for name in ["tune.md", "tune.csv", "tune.json"] {
+        assert!(manifest.files.iter().any(|f| f.path == name), "{name} missing from manifest");
+    }
+}
