@@ -1,0 +1,73 @@
+//! Bench: claim-coordinated store fill (`serve/worker.rs`) versus the
+//! plain plan executor.
+//!
+//! Three configurations over the same multi-figure plan:
+//!
+//! * `direct`    — PR 4's plan executor, no store, the baseline cost of
+//!   simulating every unique cell;
+//! * `fill_cold` — `fill_store_sharded` into a fresh cache every
+//!   iteration: the same simulations plus claim-file coordination and
+//!   record write-back — the overhead a sweep-service worker pays;
+//! * `fill_warm` — `fill_store_sharded` over a populated cache: every
+//!   cell is a store hit, measuring the pure claim + lookup path a
+//!   second daemon sharing the cache dir would follow.
+//!
+//! The cold/direct gap is the price of crash-safe worker sharding; the
+//! warm row is why it amortizes. Writes `BENCH_serve_shard.json` at the
+//! repo root so the trajectory is machine-readable across PRs.
+
+use std::time::Duration;
+
+use dlroofline::benchkit::{Bencher, Throughput};
+use dlroofline::coordinator::plan::{self, JobBudget};
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::serve::{fill_store_sharded, ClaimSet, ShardProgress};
+use dlroofline::testutil::TempDir;
+
+fn main() {
+    let params = ExperimentParams { batch: Some(1), ..Default::default() };
+    let ids = ["f3", "f6"];
+    let expansion = plan::expand(&ids, &params).expect("plan expands");
+    let unique = expansion.unique_cells().len();
+    let budget = JobBudget { jobs: 2, sim_jobs: 1 };
+    let ttl = Duration::from_secs(600);
+
+    let mut b = Bencher::new("serve_shard");
+
+    b.bench("direct", Throughput::Elements(unique as f64), || {
+        plan::execute(&ids, &params, 2, true).expect("sweep").stats.cells_simulated
+    });
+
+    b.bench("fill_cold", Throughput::Elements(unique as f64), || {
+        let dir = TempDir::new("bench-fill-cold");
+        let store = CellStore::open(dir.path()).expect("open store");
+        let claims = ClaimSet::new(store.root(), ttl);
+        let progress = ShardProgress::new(unique);
+        let stats = fill_store_sharded(&store, &expansion, &params, budget, &claims, &progress)
+            .expect("cold fill");
+        assert_eq!(stats.simulated, unique);
+        stats.simulated
+    });
+
+    let dir = TempDir::new("bench-fill-warm");
+    let store = CellStore::open(dir.path()).expect("open store");
+    {
+        let claims = ClaimSet::new(store.root(), ttl);
+        let progress = ShardProgress::new(unique);
+        fill_store_sharded(&store, &expansion, &params, budget, &claims, &progress)
+            .expect("populate");
+    }
+    b.bench("fill_warm", Throughput::Elements(unique as f64), || {
+        let claims = ClaimSet::new(store.root(), ttl);
+        let progress = ShardProgress::new(unique);
+        let stats = fill_store_sharded(&store, &expansion, &params, budget, &claims, &progress)
+            .expect("warm fill");
+        assert_eq!(stats.simulated, 0);
+        stats.hits
+    });
+
+    b.finish();
+    let path = b.emit_json().expect("write bench JSON");
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,382 @@
+//! Distributable run artifacts: pack a finished run directory (reports,
+//! `run.json`, and optionally the store records behind it) into a
+//! checksummed, deterministic bundle that another host can verify,
+//! extract, and use to seed its own cell cache.
+//!
+//! A pack directory holds exactly two files:
+//!
+//! - `manifest.json` — the [`ArtifactManifest`]: machine fingerprint,
+//!   plan hash, and a [`FileRecord`] (byte length + FNV-1a checksum)
+//!   for every bundled report and cell record.
+//! - `payload.tar` — a deterministic ustar ([`tar`]) whose first entry
+//!   is a byte-identical copy of `manifest.json`, followed by
+//!   `files/<rel>` report entries and `cells/<key>.json` store records.
+//!
+//! `unpack --verify` cross-checks the embedded manifest against the
+//! side file and every entry against its record, so transport
+//! corruption or tampering fails loudly. Seeding writes each bundled
+//! cell record byte-verbatim into a cache directory via
+//! [`CellStore::seed_record`] — a sweep of the same plan there then
+//! simulates nothing.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::manifest::{FileRecord, RunManifest};
+use crate::coordinator::store::CellStore;
+use crate::util::fsutil::{read_to_string, write_atomic, write_atomic_bytes};
+use crate::util::hash::fnv1a_64_hex;
+use crate::util::json::Json;
+
+pub mod tar;
+
+/// Artifact manifest schema version.
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+/// Name of the side manifest inside a pack directory (also the payload's
+/// first entry).
+pub const MANIFEST_NAME: &str = "manifest.json";
+/// Name of the tarball inside a pack directory.
+pub const PAYLOAD_NAME: &str = "payload.tar";
+
+/// The checksummed table of contents of one packed run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactManifest {
+    /// Schema version ([`ARTIFACT_SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Tool + version that wrote the pack.
+    pub generator: String,
+    /// Fingerprint of the machine model the run simulated.
+    pub machine_fingerprint: String,
+    /// Plan content hash of the packed run (hex), from
+    /// [`RunManifest::plan_hash`].
+    pub plan_hash: String,
+    /// Experiment ids of the packed run, in run order.
+    pub experiments: Vec<String>,
+    /// Report files, paths relative to the run directory (payload entry
+    /// `files/<path>` each).
+    pub files: Vec<FileRecord>,
+    /// Bundled store records, paths as payload entry names
+    /// (`cells/<key>.json`).
+    pub cells: Vec<FileRecord>,
+    /// Payload file name ([`PAYLOAD_NAME`]).
+    pub payload: String,
+}
+
+impl ArtifactManifest {
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("generator", Json::str(self.generator.as_str())),
+            ("machine_fingerprint", Json::str(self.machine_fingerprint.as_str())),
+            ("plan_hash", Json::str(self.plan_hash.as_str())),
+            (
+                "experiments",
+                Json::arr(self.experiments.iter().map(|e| Json::str(e.as_str())).collect()),
+            ),
+            ("files", Json::arr(self.files.iter().map(file_record_json).collect())),
+            ("cells", Json::arr(self.cells.iter().map(file_record_json).collect())),
+            ("payload", Json::str(self.payload.as_str())),
+        ])
+    }
+
+    /// Parse a manifest document (inverse of [`ArtifactManifest::to_json`]).
+    pub fn from_json(v: &Json) -> Result<ArtifactManifest> {
+        let schema_version = v.expect("schema_version")?.as_usize()? as u64;
+        ensure!(
+            schema_version == ARTIFACT_SCHEMA_VERSION,
+            "artifact schema v{schema_version} is not supported (this build reads v{ARTIFACT_SCHEMA_VERSION})"
+        );
+        Ok(ArtifactManifest {
+            schema_version,
+            generator: v.expect("generator")?.as_str()?.to_string(),
+            machine_fingerprint: v.expect("machine_fingerprint")?.as_str()?.to_string(),
+            plan_hash: v.expect("plan_hash")?.as_str()?.to_string(),
+            experiments: v
+                .expect("experiments")?
+                .as_arr()?
+                .iter()
+                .map(|e| Ok(e.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            files: v
+                .expect("files")?
+                .as_arr()?
+                .iter()
+                .map(file_record_from_json)
+                .collect::<Result<_>>()?,
+            cells: v
+                .expect("cells")?
+                .as_arr()?
+                .iter()
+                .map(file_record_from_json)
+                .collect::<Result<_>>()?,
+            payload: v.expect("payload")?.as_str()?.to_string(),
+        })
+    }
+}
+
+fn file_record_json(record: &FileRecord) -> Json {
+    Json::obj(vec![
+        ("path", Json::str(record.path.as_str())),
+        ("bytes", Json::num(record.bytes as f64)),
+        ("checksum", Json::str(record.checksum.as_str())),
+    ])
+}
+
+fn file_record_from_json(v: &Json) -> Result<FileRecord> {
+    Ok(FileRecord {
+        path: v.expect("path")?.as_str()?.to_string(),
+        bytes: v.expect("bytes")?.as_usize()? as u64,
+        checksum: v.expect("checksum")?.as_str()?.to_string(),
+    })
+}
+
+/// What [`pack`] wrote.
+#[derive(Clone, Debug)]
+pub struct PackReport {
+    /// The pack directory holding `manifest.json` + `payload.tar`.
+    pub dir: PathBuf,
+    /// Report files bundled.
+    pub files: usize,
+    /// Store records bundled.
+    pub cells: usize,
+    /// Non-reused cells of the run whose store record was absent (run
+    /// executed storeless, or the cache was pruned).
+    pub cells_missing: usize,
+    /// Size of the written payload tarball.
+    pub payload_bytes: usize,
+}
+
+/// Pack the finished run at `run_dir` (must contain `run.json`) into
+/// `out_dir`. With a store, the run's non-reused cell records are
+/// bundled byte-verbatim so the receiving host can seed its cache;
+/// records already pruned from the store are skipped (counted in the
+/// report), never fatal. Every file is checksummed into the manifest,
+/// and files that `run.json` itself records are cross-checked first —
+/// a run directory modified after the run fails the pack.
+pub fn pack(run_dir: &Path, out_dir: &Path, store: Option<&CellStore>) -> Result<PackReport> {
+    let run_manifest = RunManifest::load(&run_dir.join("run.json"))
+        .with_context(|| format!("loading run manifest from {}", run_dir.display()))?;
+
+    let mut rel_paths = Vec::new();
+    walk_files(run_dir, run_dir, &mut rel_paths)?;
+    rel_paths.sort();
+
+    let mut files = Vec::new();
+    let mut file_entries = Vec::new();
+    for rel in &rel_paths {
+        let content = read_to_string(&run_dir.join(rel))?;
+        let record = FileRecord::from_content(rel, &content);
+        if let Some(recorded) = run_manifest.files.iter().find(|f| &f.path == rel) {
+            ensure!(
+                recorded.checksum == record.checksum,
+                "'{rel}' was modified after the run (checksum differs from run.json); refusing to pack"
+            );
+        }
+        file_entries.push((format!("files/{rel}"), content.into_bytes()));
+        files.push(record);
+    }
+
+    let mut cells = Vec::new();
+    let mut cell_entries = Vec::new();
+    let mut cells_missing = 0usize;
+    if let Some(store) = store {
+        let mut seen = BTreeSet::new();
+        for cell in run_manifest.cells.iter().filter(|c| !c.reused) {
+            if !seen.insert(cell.key.as_str()) {
+                continue;
+            }
+            let key = u64::from_str_radix(&cell.key, 16)
+                .with_context(|| format!("run.json cell key '{}' is not hex", cell.key))?;
+            // Byte-verbatim, not re-serialized: the receiving host must
+            // see the exact record this run's sweeps would serve.
+            match std::fs::read_to_string(store.record_path(key)) {
+                Ok(text) => {
+                    let name = format!("cells/{}.json", cell.key);
+                    cells.push(FileRecord::from_content(&name, &text));
+                    cell_entries.push((name, text.into_bytes()));
+                }
+                Err(_) => cells_missing += 1,
+            }
+        }
+    }
+
+    let manifest = ArtifactManifest {
+        schema_version: ARTIFACT_SCHEMA_VERSION,
+        generator: format!("dlroofline {}", crate::VERSION),
+        machine_fingerprint: run_manifest.machine_fingerprint.clone(),
+        plan_hash: crate::util::hash::hex64(run_manifest.plan_hash()),
+        experiments: run_manifest.experiments.clone(),
+        files,
+        cells,
+        payload: PAYLOAD_NAME.to_string(),
+    };
+    let manifest_text = manifest.to_json().to_string_pretty();
+
+    let mut entries = vec![(MANIFEST_NAME.to_string(), manifest_text.clone().into_bytes())];
+    entries.append(&mut file_entries);
+    entries.append(&mut cell_entries);
+    let payload = tar::write_tar(&entries)?;
+
+    write_atomic(&out_dir.join(MANIFEST_NAME), &manifest_text)?;
+    write_atomic_bytes(&out_dir.join(PAYLOAD_NAME), &payload)?;
+    Ok(PackReport {
+        dir: out_dir.to_path_buf(),
+        files: manifest.files.len(),
+        cells: manifest.cells.len(),
+        cells_missing,
+        payload_bytes: payload.len(),
+    })
+}
+
+/// What [`unpack`] did.
+#[derive(Clone, Debug)]
+pub struct UnpackReport {
+    /// Report files in the payload.
+    pub files: usize,
+    /// Cell records in the payload.
+    pub cells: usize,
+    /// Whether checksum verification ran (and passed — failure is an
+    /// error, not a report field).
+    pub verified: bool,
+    /// Where the payload was extracted, when requested.
+    pub extracted: Option<PathBuf>,
+    /// Cell records seeded into a cache directory, when requested.
+    pub seeded: usize,
+}
+
+/// Read the pack at `pack_dir`. `verify` cross-checks the embedded
+/// manifest against the side `manifest.json` byte-for-byte and every
+/// payload entry against its recorded length and checksum. `into`
+/// extracts the payload (path-traversal guarded). `seed_cache` writes
+/// each bundled cell record into that cache directory, validating it as
+/// a servable record first — a subsequent sweep of the packed plan
+/// there simulates nothing.
+pub fn unpack(
+    pack_dir: &Path,
+    into: Option<&Path>,
+    seed_cache: Option<&Path>,
+    verify: bool,
+) -> Result<UnpackReport> {
+    let manifest_text = read_to_string(&pack_dir.join(MANIFEST_NAME))?;
+    let manifest = ArtifactManifest::from_json(
+        &Json::parse(&manifest_text)
+            .with_context(|| format!("parsing {}", pack_dir.join(MANIFEST_NAME).display()))?,
+    )?;
+    let payload_path = pack_dir.join(&manifest.payload);
+    let payload = std::fs::read(&payload_path)
+        .with_context(|| format!("reading {}", payload_path.display()))?;
+    let entries = tar::read_tar(&payload)
+        .with_context(|| format!("reading {}", payload_path.display()))?;
+    let index: BTreeMap<&str, &[u8]> =
+        entries.iter().map(|(name, data)| (name.as_str(), data.as_slice())).collect();
+
+    if verify {
+        let embedded = index
+            .get(MANIFEST_NAME)
+            .context("payload has no embedded manifest.json")?;
+        ensure!(
+            *embedded == manifest_text.as_bytes(),
+            "embedded manifest differs from the side manifest.json — artifact reassembled?"
+        );
+        for record in &manifest.files {
+            check_entry(&index, &format!("files/{}", record.path), record)?;
+        }
+        for record in &manifest.cells {
+            check_entry(&index, &record.path, record)?;
+        }
+    }
+
+    let mut extracted = None;
+    if let Some(into) = into {
+        for (name, data) in &entries {
+            write_atomic_bytes(&into.join(safe_rel_path(name)?), data)?;
+        }
+        extracted = Some(into.to_path_buf());
+    }
+
+    let mut seeded = 0usize;
+    if let Some(cache) = seed_cache {
+        let store = CellStore::open(cache)?;
+        for (name, data) in &entries {
+            let Some(stem) = name.strip_prefix("cells/").and_then(|n| n.strip_suffix(".json"))
+            else {
+                continue;
+            };
+            let key = u64::from_str_radix(stem, 16)
+                .with_context(|| format!("payload cell entry '{name}' has a non-hex key"))?;
+            let text = std::str::from_utf8(data)
+                .with_context(|| format!("payload cell entry '{name}' is not UTF-8"))?;
+            store.seed_record(key, text)?;
+            seeded += 1;
+        }
+    }
+
+    Ok(UnpackReport {
+        files: manifest.files.len(),
+        cells: manifest.cells.len(),
+        verified: verify,
+        extracted,
+        seeded,
+    })
+}
+
+fn check_entry(index: &BTreeMap<&str, &[u8]>, name: &str, record: &FileRecord) -> Result<()> {
+    let data = index
+        .get(name)
+        .with_context(|| format!("payload is missing '{name}' recorded in the manifest"))?;
+    ensure!(
+        data.len() as u64 == record.bytes,
+        "'{name}': payload has {} bytes, manifest records {}",
+        data.len(),
+        record.bytes
+    );
+    let checksum = format!("fnv1a64:{}", fnv1a_64_hex(data));
+    ensure!(
+        checksum == record.checksum,
+        "'{name}': checksum mismatch (payload {checksum}, manifest {})",
+        record.checksum
+    );
+    Ok(())
+}
+
+/// Reject payload entry names that could escape the extraction root.
+fn safe_rel_path(name: &str) -> Result<PathBuf> {
+    ensure!(!name.is_empty() && !name.starts_with('/'), "unsafe payload path '{name}'");
+    let mut out = PathBuf::new();
+    for part in name.split('/') {
+        ensure!(
+            !part.is_empty() && part != "." && part != ".." && !part.contains('\\'),
+            "unsafe payload path '{name}'"
+        );
+        out.push(part);
+    }
+    Ok(out)
+}
+
+/// Collect every file under `dir` as a `/`-separated path relative to
+/// `root`, recursing into subdirectories (multi-machine sweeps nest
+/// per-machine report directories).
+fn walk_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let listing =
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in listing {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_files(root, &path, out)?;
+        } else {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}

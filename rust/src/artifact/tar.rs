@@ -1,0 +1,194 @@
+//! A minimal, deterministic ustar writer/reader for run artifacts.
+//!
+//! The payload tarball must be reproducible — same run, same bytes — so
+//! every header field that would normally leak host state is pinned:
+//! mode `0644`, uid/gid `0`, mtime `0`, no user/group names. Only
+//! regular files are supported (artifacts hold reports and store
+//! records, nothing else), names use `/` separators, and entries are
+//! written in the order given. The output is plain POSIX ustar, so
+//! ordinary `tar -tf`/`tar -xf` can inspect a payload even though the
+//! bundled reader is what `unpack` uses.
+
+use anyhow::{bail, ensure, Result};
+
+/// Tar block size; headers and data padding are multiples of this.
+const BLOCK: usize = 512;
+
+/// Serialize `entries` (name, content) into a ustar archive. Names must
+/// be unique, relative, `/`-separated, and fit the ustar name+prefix
+/// split (suffix ≤ 100 bytes, prefix ≤ 155).
+pub fn write_tar(entries: &[(String, Vec<u8>)]) -> Result<Vec<u8>> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    for (name, data) in entries {
+        ensure!(seen.insert(name.as_str()), "duplicate tar entry '{name}'");
+        out.extend_from_slice(&header(name, data.len())?);
+        out.extend_from_slice(data);
+        let pad = (BLOCK - data.len() % BLOCK) % BLOCK;
+        out.resize(out.len() + pad, 0);
+    }
+    // Archive end: two zero blocks.
+    out.resize(out.len() + 2 * BLOCK, 0);
+    Ok(out)
+}
+
+/// Parse a ustar archive produced by [`write_tar`] (or any plain ustar
+/// with only regular files) back into (name, content) pairs. Header
+/// checksums are always verified — a flipped byte in any header fails
+/// the whole read.
+pub fn read_tar(bytes: &[u8]) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut entries = Vec::new();
+    let mut at = 0usize;
+    loop {
+        ensure!(at + BLOCK <= bytes.len(), "truncated tar: no end-of-archive marker");
+        let block = &bytes[at..at + BLOCK];
+        if block.iter().all(|&b| b == 0) {
+            return Ok(entries);
+        }
+        verify_checksum(block, at)?;
+        let typeflag = block[156];
+        ensure!(
+            typeflag == b'0' || typeflag == 0,
+            "tar entry at {at} is not a regular file (typeflag {typeflag:#x})"
+        );
+        let name = join_name(field_str(&block[0..100]), field_str(&block[345..500]));
+        let size = octal_field(&block[124..136])
+            .ok_or_else(|| anyhow::anyhow!("unreadable size in tar entry '{name}'"))?;
+        at += BLOCK;
+        ensure!(at + size <= bytes.len(), "truncated tar: '{name}' data cut short");
+        entries.push((name, bytes[at..at + size].to_vec()));
+        at += size + (BLOCK - size % BLOCK) % BLOCK;
+    }
+}
+
+/// Build one pinned ustar header block.
+fn header(name: &str, size: usize) -> Result<[u8; BLOCK]> {
+    let (prefix, suffix) = split_name(name)?;
+    let mut h = [0u8; BLOCK];
+    h[..suffix.len()].copy_from_slice(suffix.as_bytes());
+    h[100..108].copy_from_slice(b"0000644\0");
+    h[108..116].copy_from_slice(b"0000000\0");
+    h[116..124].copy_from_slice(b"0000000\0");
+    h[124..136].copy_from_slice(format!("{size:011o}\0").as_bytes());
+    h[136..148].copy_from_slice(b"00000000000\0");
+    h[156] = b'0';
+    h[257..263].copy_from_slice(b"ustar\0");
+    h[263..265].copy_from_slice(b"00");
+    h[345..345 + prefix.len()].copy_from_slice(prefix.as_bytes());
+    // Checksum is computed with its own field read as spaces.
+    h[148..156].copy_from_slice(b"        ");
+    let sum: u32 = h.iter().map(|&b| b as u32).sum();
+    h[148..156].copy_from_slice(format!("{sum:06o}\0 ").as_bytes());
+    Ok(h)
+}
+
+/// Split a long name into ustar (prefix, suffix) at a `/` so the suffix
+/// fits 100 bytes and the prefix 155.
+fn split_name(name: &str) -> Result<(&str, &str)> {
+    ensure!(!name.is_empty() && !name.starts_with('/'), "tar entry name '{name}' must be relative");
+    if name.len() <= 100 {
+        return Ok(("", name));
+    }
+    // Find the earliest split whose suffix fits; earliest also keeps the
+    // prefix shortest, giving long names the best chance to fit.
+    for (i, byte) in name.bytes().enumerate() {
+        if byte == b'/' && name.len() - i - 1 <= 100 && i <= 155 {
+            return Ok((&name[..i], &name[i + 1..]));
+        }
+    }
+    bail!("tar entry name '{name}' does not fit the ustar name fields");
+}
+
+fn join_name(name: &str, prefix: &str) -> String {
+    if prefix.is_empty() {
+        name.to_string()
+    } else {
+        format!("{prefix}/{name}")
+    }
+}
+
+/// A NUL-terminated header text field.
+fn field_str(field: &[u8]) -> &str {
+    let end = field.iter().position(|&b| b == 0).unwrap_or(field.len());
+    std::str::from_utf8(&field[..end]).unwrap_or("")
+}
+
+/// A NUL/space-terminated octal header field.
+fn octal_field(field: &[u8]) -> Option<usize> {
+    let text = field_str(field).trim();
+    usize::from_str_radix(text, 8).ok()
+}
+
+fn verify_checksum(block: &[u8], at: usize) -> Result<()> {
+    let recorded = octal_field(&block[148..156])
+        .ok_or_else(|| anyhow::anyhow!("unreadable checksum in tar header at {at}"))?;
+    let computed: usize = block
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| if (148..156).contains(&i) { b' ' as usize } else { b as usize })
+        .sum();
+    ensure!(
+        recorded == computed,
+        "tar header checksum mismatch at {at}: recorded {recorded:o}, computed {computed:o}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, body: &str) -> (String, Vec<u8>) {
+        (name.to_string(), body.as_bytes().to_vec())
+    }
+
+    #[test]
+    fn round_trips_entries_in_order() {
+        let entries = vec![
+            entry("manifest.json", "{\"a\":1}"),
+            entry("files/run.json", &"x".repeat(1000)),
+            entry("files/empty.txt", ""),
+        ];
+        let bytes = write_tar(&entries).unwrap();
+        assert_eq!(bytes.len() % BLOCK, 0);
+        assert_eq!(read_tar(&bytes).unwrap(), entries);
+    }
+
+    #[test]
+    fn identical_input_gives_identical_bytes() {
+        let entries = vec![entry("files/report.md", "# report\n")];
+        assert_eq!(write_tar(&entries).unwrap(), write_tar(&entries).unwrap());
+    }
+
+    #[test]
+    fn long_names_round_trip_via_the_prefix_field() {
+        let long = format!("{}/{}", "d".repeat(120), "f".repeat(90));
+        assert!(long.len() > 100);
+        let entries = vec![entry(&long, "deep")];
+        let back = read_tar(&write_tar(&entries).unwrap()).unwrap();
+        assert_eq!(back, entries);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_absolute_names() {
+        let dup = vec![entry("a", "1"), entry("a", "2")];
+        assert!(write_tar(&dup).unwrap_err().to_string().contains("duplicate"));
+        let abs = vec![entry("/etc/passwd", "no")];
+        assert!(write_tar(&abs).unwrap_err().to_string().contains("relative"));
+    }
+
+    #[test]
+    fn corrupted_header_fails_the_read() {
+        let mut bytes = write_tar(&[entry("files/run.json", "{}")]).unwrap();
+        bytes[0] ^= 0x01; // flip one name byte; checksum no longer matches
+        let err = read_tar(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_archive_is_rejected() {
+        let bytes = write_tar(&[entry("a", "body")]).unwrap();
+        let cut = &bytes[..bytes.len() - 2 * BLOCK - 1];
+        assert!(read_tar(cut).unwrap_err().to_string().contains("truncated"));
+    }
+}

@@ -1,5 +1,8 @@
 //! Manifest diffing: per-cell W/Q/R and per-level-AI drift between two
 //! `run.json` manifests (ROADMAP: compare machines or code versions).
+//! Also home of the bench-artifact comparison behind `dlroofline bench
+//! diff` ([`diff_bench_docs`]) — the same gate idea applied to
+//! `BENCH_<group>.json` timings, where only *slowdowns* trip the gate.
 //!
 //! Cells are matched by identity — (experiment, kernel, scenario,
 //! cache) — not by content hash, so runs from different machines or
@@ -31,7 +34,10 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{ensure, Context, Result};
+
 use crate::util::human::fmt_pct;
+use crate::util::json::Json;
 
 use super::manifest::{CellRecord, RunManifest};
 
@@ -248,6 +254,199 @@ pub fn render_diff(report: &DiffReport, tol: f64) -> String {
     out
 }
 
+/// One benchmark case compared between two `BENCH_<group>.json`
+/// artifacts.
+#[derive(Clone, Debug)]
+pub struct BenchCaseDrift {
+    /// Bench name within the group.
+    pub name: String,
+    /// Mean seconds on the A (baseline) side.
+    pub a_mean: f64,
+    /// Mean seconds on the B (candidate) side.
+    pub b_mean: f64,
+    /// Signed relative change `(b − a) / a`: positive = B is slower.
+    pub change: f64,
+    /// The tolerance applied to this case (per-case override, else the
+    /// default).
+    pub tol: f64,
+}
+
+impl BenchCaseDrift {
+    /// True when B is slower than A by more than this case's tolerance.
+    pub fn regressed(&self) -> bool {
+        self.change > self.tol
+    }
+}
+
+/// The comparison of two bench artifacts (`dlroofline bench diff`).
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiffReport {
+    /// The bench group both artifacts belong to (must match).
+    pub group: String,
+    /// Matched cases, in name order.
+    pub cases: Vec<BenchCaseDrift>,
+    /// Cases only the baseline has — a disappeared bench fails the gate.
+    pub only_in_a: Vec<String>,
+    /// Cases only the candidate has — informational, never gated.
+    pub only_in_b: Vec<String>,
+    /// At least one side ran in quick mode (`DLROOFLINE_BENCH_QUICK`):
+    /// smoke-sized samples, so means are noisy.
+    pub quick: bool,
+    /// The host fingerprints differ — timings are not like-for-like.
+    pub host_changed: bool,
+}
+
+impl BenchDiffReport {
+    /// True when the gate should fail (exit 3): some case slowed beyond
+    /// its tolerance, or a baseline case disappeared. Improvements and
+    /// host/quick warnings never fail the gate.
+    pub fn regressed(&self) -> bool {
+        !self.only_in_a.is_empty() || self.cases.iter().any(|c| c.regressed())
+    }
+
+    /// The worst relative slowdown across matched cases, clamped at 0 —
+    /// improvements never read as negative badness.
+    pub fn worst_change(&self) -> f64 {
+        self.cases.iter().fold(0.0_f64, |m, c| m.max(c.change))
+    }
+}
+
+/// Compare two benchkit documents (`BENCH_<group>.json`, schema 1).
+/// `default_tol` is the allowed relative slowdown (0.2 = B may be up to
+/// 20% slower); `case_tols` overrides it per bench name and rejects
+/// names that exist in neither document (a typo'd override must not
+/// silently gate nothing).
+pub fn diff_bench_docs(
+    a: &Json,
+    b: &Json,
+    default_tol: f64,
+    case_tols: &BTreeMap<String, f64>,
+) -> Result<BenchDiffReport> {
+    let check = |doc: &Json, side: &str| -> Result<()> {
+        let version = doc.expect("schema_version")?.as_usize()?;
+        ensure!(version == 1, "{side}: bench schema version {version} (this build reads 1)");
+        Ok(())
+    };
+    check(a, "A")?;
+    check(b, "B")?;
+    let group_a = a.expect("group")?.as_str()?;
+    let group_b = b.expect("group")?.as_str()?;
+    ensure!(group_a == group_b, "bench groups differ: '{group_a}' vs '{group_b}'");
+    let benches_a = a.expect("benches")?.as_obj()?;
+    let benches_b = b.expect("benches")?.as_obj()?;
+    for name in case_tols.keys() {
+        ensure!(
+            benches_a.contains_key(name) || benches_b.contains_key(name),
+            "--case-tol names unknown bench '{name}'"
+        );
+    }
+    let quick_of =
+        |doc: &Json| doc.get("quick").map(|q| q.as_bool().unwrap_or(false)).unwrap_or(false);
+    let mut report = BenchDiffReport {
+        group: group_a.to_string(),
+        quick: quick_of(a) || quick_of(b),
+        host_changed: a.get("host") != b.get("host"),
+        ..Default::default()
+    };
+    for name in benches_a.keys() {
+        if !benches_b.contains_key(name) {
+            report.only_in_a.push(name.clone());
+        }
+    }
+    for name in benches_b.keys() {
+        if !benches_a.contains_key(name) {
+            report.only_in_b.push(name.clone());
+        }
+    }
+    for (name, entry_a) in benches_a {
+        let Some(entry_b) = benches_b.get(name) else { continue };
+        let mean = |entry: &Json, side: &str| -> Result<f64> {
+            entry
+                .expect("mean_s")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("{side}: bench '{name}'"))
+        };
+        let a_mean = mean(entry_a, "A")?;
+        let b_mean = mean(entry_b, "B")?;
+        let change = if a_mean > 0.0 {
+            (b_mean - a_mean) / a_mean
+        } else if b_mean > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        };
+        let tol = case_tols.get(name).copied().unwrap_or(default_tol);
+        report.cases.push(BenchCaseDrift { name: name.clone(), a_mean, b_mean, change, tol });
+    }
+    Ok(report)
+}
+
+/// Render the comparison as markdown: warnings first, then every matched
+/// case (slowest first) with its verdict, then the gate summary.
+pub fn render_bench_diff(report: &BenchDiffReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## bench diff — {}\n\n", report.group));
+    let mut warned = false;
+    if report.quick {
+        out.push_str("> at least one side ran in quick mode: smoke-sized samples, noisy means\n");
+        warned = true;
+    }
+    if report.host_changed {
+        out.push_str("> host fingerprints differ: timings are not like-for-like\n");
+        warned = true;
+    }
+    for name in &report.only_in_b {
+        out.push_str(&format!("> new in B (not gated): {name}\n"));
+        warned = true;
+    }
+    for name in &report.only_in_a {
+        out.push_str(&format!("> missing from B (fails the gate): {name}\n"));
+        warned = true;
+    }
+    if warned {
+        out.push('\n');
+    }
+    if !report.cases.is_empty() {
+        let mut cases: Vec<&BenchCaseDrift> = report.cases.iter().collect();
+        cases.sort_by(|x, y| y.change.total_cmp(&x.change));
+        out.push_str("| bench | A mean | B mean | change | tol | verdict |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for c in cases {
+            let verdict = if c.regressed() {
+                "REGRESSED"
+            } else if c.change < -c.tol {
+                "improved"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "| {} | {:.3e} s | {:.3e} s | {:+.1}% | {:.0}% | {} |\n",
+                c.name,
+                c.a_mean,
+                c.b_mean,
+                c.change * 100.0,
+                c.tol * 100.0,
+                verdict
+            ));
+        }
+        out.push('\n');
+    }
+    if report.regressed() {
+        out.push_str(&format!(
+            "{} case(s) regressed beyond tolerance, {} missing from B\n",
+            report.cases.iter().filter(|c| c.regressed()).count(),
+            report.only_in_a.len(),
+        ));
+    } else {
+        out.push_str(&format!(
+            "no regressions ({} case(s) within tolerance, worst change {:+.1}%)\n",
+            report.cases.len(),
+            report.worst_change() * 100.0,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,5 +547,68 @@ mod tests {
                 .any(|m| m.metric == "ai_dram_remote" && m.rel > 0.9)),
             "a 64 MiB remote-traffic regression must register"
         );
+    }
+
+    fn bench_doc(group: &str, quick: bool, means: &[(&str, f64)]) -> Json {
+        let benches: Vec<String> = means
+            .iter()
+            .map(|(name, mean)| format!("\"{name}\":{{\"mean_s\":{mean},\"samples\":3}}"))
+            .collect();
+        let text = format!(
+            "{{\"schema_version\":1,\"group\":\"{group}\",\"quick\":{quick},\
+             \"host\":{{\"os\":\"linux\"}},\"benches\":{{{}}}}}",
+            benches.join(",")
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn bench_diff_gates_slowdowns_only() {
+        let a = bench_doc("grp", false, &[("fast", 1.0), ("slow", 2.0)]);
+        let b = bench_doc("grp", false, &[("fast", 1.05), ("slow", 1.0)]);
+        let report = diff_bench_docs(&a, &b, 0.10, &BTreeMap::new()).unwrap();
+        assert!(!report.regressed(), "5% slower + 50% faster is within a 10% gate");
+        assert!((report.worst_change() - 0.05).abs() < 1e-9);
+
+        let tight = diff_bench_docs(&a, &b, 0.01, &BTreeMap::new()).unwrap();
+        assert!(tight.regressed(), "5% slowdown must trip a 1% gate");
+        let text = render_bench_diff(&tight);
+        assert!(text.contains("REGRESSED"), "{text}");
+        assert!(text.contains("improved"), "{text}");
+    }
+
+    #[test]
+    fn bench_diff_per_case_tolerance_overrides_default() {
+        let a = bench_doc("grp", false, &[("jittery", 1.0), ("stable", 1.0)]);
+        let b = bench_doc("grp", false, &[("jittery", 1.4), ("stable", 1.0)]);
+        let mut tols = BTreeMap::new();
+        tols.insert("jittery".to_string(), 0.5);
+        let report = diff_bench_docs(&a, &b, 0.05, &tols).unwrap();
+        assert!(!report.regressed(), "the per-case 50% tolerance must absorb 40%");
+
+        tols.insert("no_such_bench".to_string(), 0.5);
+        let err = diff_bench_docs(&a, &b, 0.05, &tols).unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_bench"), "{err:#}");
+    }
+
+    #[test]
+    fn bench_diff_missing_case_fails_gate_and_new_case_does_not() {
+        let a = bench_doc("grp", false, &[("kept", 1.0), ("dropped", 1.0)]);
+        let b = bench_doc("grp", true, &[("kept", 1.0), ("added", 1.0)]);
+        let report = diff_bench_docs(&a, &b, 0.2, &BTreeMap::new()).unwrap();
+        assert_eq!(report.only_in_a, vec!["dropped".to_string()]);
+        assert_eq!(report.only_in_b, vec!["added".to_string()]);
+        assert!(report.quick);
+        assert!(report.regressed(), "a disappeared baseline case fails the gate");
+        let text = render_bench_diff(&report);
+        assert!(text.contains("missing from B"), "{text}");
+        assert!(text.contains("quick mode"), "{text}");
+    }
+
+    #[test]
+    fn bench_diff_rejects_mismatched_groups() {
+        let a = bench_doc("grp_a", false, &[("x", 1.0)]);
+        let b = bench_doc("grp_b", false, &[("x", 1.0)]);
+        assert!(diff_bench_docs(&a, &b, 0.2, &BTreeMap::new()).is_err());
     }
 }

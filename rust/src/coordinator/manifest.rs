@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 use crate::harness::experiments::ExperimentParams;
 use crate::roofline::point::LevelBytes;
 use crate::util::fsutil::write_atomic;
-use crate::util::hash::{fnv1a_64_hex, hex64};
+use crate::util::hash::{fnv1a_64, fnv1a_64_hex, hex64};
 use crate::util::json::Json;
 
 use super::plan::{ExecutedCell, PlanStats};
@@ -170,6 +170,32 @@ impl FileRecord {
     }
 }
 
+/// FNV-1a over the parts that identify a plan: machine fingerprint, the
+/// experiment ids, and every planned cell key (hex), all in plan order.
+/// Both [`RunManifest::plan_hash`] and
+/// [`Expansion::plan_hash`](crate::coordinator::plan::Expansion::plan_hash)
+/// reduce to this, so a serve job id can be recomputed from the run
+/// manifest the job produced.
+pub fn plan_hash_parts<I, J>(machine_fingerprint: &str, experiments: I, cell_keys_hex: J) -> u64
+where
+    I: IntoIterator,
+    I::Item: AsRef<str>,
+    J: IntoIterator,
+    J::Item: AsRef<str>,
+{
+    let mut buf = String::from(machine_fingerprint);
+    for id in experiments {
+        buf.push('\n');
+        buf.push_str(id.as_ref());
+    }
+    buf.push_str("\n#");
+    for key in cell_keys_hex {
+        buf.push('\n');
+        buf.push_str(key.as_ref());
+    }
+    fnv1a_64(buf.as_bytes())
+}
+
 /// The versioned description of one run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunManifest {
@@ -225,6 +251,18 @@ impl RunManifest {
     /// Record a written report file.
     pub fn add_file(&mut self, rel_path: &str, content: &str) {
         self.files.push(FileRecord::from_content(rel_path, content));
+    }
+
+    /// The executed plan's content hash (see [`plan_hash_parts`]) —
+    /// recorded as provenance in packed artifacts, and equal to the
+    /// submitting plan's
+    /// [`Expansion::plan_hash`](crate::coordinator::plan::Expansion::plan_hash).
+    pub fn plan_hash(&self) -> u64 {
+        plan_hash_parts(
+            &self.machine_fingerprint,
+            self.experiments.iter(),
+            self.cells.iter().map(|c| c.key.as_str()),
+        )
     }
 
     /// Plan statistics recoverable from the manifest itself.

@@ -10,7 +10,10 @@ pub mod registry;
 pub mod runner;
 pub mod store;
 
-pub use diff::{diff_manifests, render_diff, DiffReport};
+pub use diff::{
+    diff_bench_docs, diff_manifests, render_bench_diff, render_diff, BenchCaseDrift,
+    BenchDiffReport, DiffReport,
+};
 pub use manifest::{RunManifest, SCHEMA_VERSION};
 pub use plan::{job_split, CellFate, JobBudget, PlanOutcome, PlanStats, StoreUsage};
 pub use registry::KernelRegistry;

@@ -170,6 +170,20 @@ impl Expansion {
     pub fn unique_cells(&self) -> &[(u64, spec::Cell)] {
         &self.unique
     }
+
+    /// Content hash identifying this plan: machine fingerprint ×
+    /// experiment ids × every planned cell key, in plan order. The serve
+    /// daemon derives job ids from it, and it agrees with
+    /// [`RunManifest::plan_hash`](crate::coordinator::manifest::RunManifest::plan_hash)
+    /// for the run this plan produces, so packed-artifact provenance and
+    /// job ids name the same thing.
+    pub fn plan_hash(&self, machine_fingerprint: &str) -> u64 {
+        crate::coordinator::manifest::plan_hash_parts(
+            machine_fingerprint,
+            self.specs.iter().map(|s| s.id),
+            self.cells.iter().map(|c| crate::util::hash::hex64(c.key)),
+        )
+    }
 }
 
 /// Expand `ids` into a deduplicated cell plan. Fails on unknown ids;

@@ -46,6 +46,33 @@ pub struct SweepOutput {
     pub plan_cells: Vec<CellPlan>,
 }
 
+impl SweepOutput {
+    /// Every file this sweep wrote — per-experiment reports, plots and
+    /// CSVs in output order, then the sweep-wide `run.json`. The serve
+    /// daemon uses this as the whitelist of fetchable job artifacts.
+    pub fn files(&self) -> Vec<&Path> {
+        let mut out: Vec<&Path> = Vec::new();
+        for run in &self.outputs {
+            if let Some(p) = &run.markdown {
+                out.push(p);
+            }
+            for p in &run.svgs {
+                out.push(p);
+            }
+            for p in &run.csvs {
+                out.push(p);
+            }
+            if let Some(p) = &run.manifest {
+                out.push(p);
+            }
+        }
+        if let Some(p) = &self.manifest {
+            out.push(p);
+        }
+        out
+    }
+}
+
 /// Render the complete textual report for an experiment result.
 pub fn render_report(result: &ExperimentResult) -> String {
     let mut out = String::new();

@@ -118,12 +118,17 @@ struct IndexState {
 pub struct CellStore {
     root: PathBuf,
     index: Mutex<IndexState>,
+    recovered: bool,
 }
 
 impl CellStore {
-    /// Open (creating if necessary) a store at `dir`. An unreadable or
-    /// corrupt `index.json` is replaced rather than reported — losing
-    /// hit counts only weakens `gc` heuristics, never correctness.
+    /// Open (creating if necessary) a store at `dir`. A missing,
+    /// truncated, or corrupt `index.json` (including a schema-version
+    /// mismatch) is **rebuilt by scanning `cells/`** rather than silently
+    /// replaced with an empty index: every valid record gets an index row
+    /// (hit count 0), so `gc` eviction still sees the store's true
+    /// contents. Only the accumulated hit counts are lost — they merely
+    /// weaken `gc` heuristics, never correctness.
     pub fn open(dir: &Path) -> Result<CellStore> {
         std::fs::create_dir_all(dir.join("cells"))
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
@@ -131,21 +136,57 @@ impl CellStore {
         let index = std::fs::read_to_string(&index_path)
             .ok()
             .and_then(|text| Json::parse(&text).ok())
-            .and_then(|doc| Self::index_from_json(&doc))
-            .unwrap_or_else(|| IndexState {
-                created_unix: now_unix(),
-                hits: BTreeMap::new(),
-            });
+            .and_then(|doc| Self::index_from_json(&doc));
+        let recovered = index.is_none();
         let store = CellStore {
             root: dir.to_path_buf(),
-            index: Mutex::new(index),
+            index: Mutex::new(index.unwrap_or_else(|| IndexState {
+                created_unix: now_unix(),
+                hits: BTreeMap::new(),
+            })),
+            recovered,
         };
-        if !index_path.exists() {
-            // Best-effort: a read-only pre-seeded cache without an index
-            // still serves hits; only gc heuristics lose out.
-            let _ = store.save_index();
+        if recovered {
+            // Best-effort persistence: a read-only pre-seeded cache still
+            // serves hits off the rebuilt in-memory index.
+            let _ = store.rebuild_index();
         }
         Ok(store)
+    }
+
+    /// True when `open` found no usable `index.json` and rebuilt the
+    /// index from the `cells/` scan (also true for a brand-new dir).
+    pub fn recovered_index(&self) -> bool {
+        self.recovered
+    }
+
+    /// Re-derive the index from the record files: one row (hit count 0)
+    /// per valid record, `created_unix` backdated to the oldest record's
+    /// mtime so eviction-age heuristics stay sane. Existing in-memory
+    /// rows are kept (rebuild only adds), then the result is persisted
+    /// verbatim — the on-disk index is the thing being repaired, so no
+    /// disk merge.
+    fn rebuild_index(&self) -> Result<()> {
+        let scan = self.scan()?;
+        let mut created = now_unix();
+        {
+            let mut index = self.index.lock().unwrap();
+            for (stem, path, _, valid) in &scan {
+                if !valid {
+                    continue;
+                }
+                index.hits.entry(stem.clone()).or_insert(0);
+                if let Some(mtime) = std::fs::metadata(path)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                {
+                    created = created.min(mtime.as_secs());
+                }
+            }
+            index.created_unix = index.created_unix.min(created);
+        }
+        self.save_index_replacing()
     }
 
     /// Resolve the cache directory from an explicit flag value, falling
@@ -165,6 +206,26 @@ impl CellStore {
 
     fn entry_path(&self, key: u64) -> PathBuf {
         self.root.join("cells").join(format!("{}.json", hex64(key)))
+    }
+
+    /// The on-disk path of `key`'s record file (which may not exist).
+    /// The artifact packer reads record files verbatim through this, so
+    /// packed checksums match the bytes the store would serve.
+    pub fn record_path(&self, key: u64) -> PathBuf {
+        self.entry_path(key)
+    }
+
+    /// Install a record *verbatim* from `text` — how `unpack --seed-cache`
+    /// transplants packed cells into a local store. The text must parse
+    /// as a valid record for `key` (same rules as [`CellStore::lookup`]);
+    /// writing byte-for-byte what was packed keeps the seeded store's
+    /// records checksum-identical to the source host's.
+    pub fn seed_record(&self, key: u64, text: &str) -> Result<()> {
+        let doc = Json::parse(text)
+            .with_context(|| format!("seed record for {} is not JSON", hex64(key)))?;
+        Self::record_from_json(&doc, key)
+            .with_context(|| format!("seed record for {} is not servable", hex64(key)))?;
+        write_atomic_unique(&self.entry_path(key), text)
     }
 
     /// Probe the store for `key`. Never fails: every unusable state maps

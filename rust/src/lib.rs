@@ -42,7 +42,16 @@
 //!   kernel tuning knobs (blocking, loop order, layout, SW prefetch)
 //!   into a variant lattice, drives it through the cached plan executor
 //!   (warm re-tunes simulate nothing) and ranks variants per scenario
-//!   by attainable FLOP/s with a binding-level explanation per winner.
+//!   by attainable FLOP/s with a binding-level explanation per winner;
+//! * a **sweep service** ([`serve`]) — `dlroofline serve` runs the plan
+//!   executor behind a line-delimited JSON TCP protocol, sharding cell
+//!   simulation across workers that coordinate purely through claim
+//!   files in the shared cell store (so several daemons can split one
+//!   sweep), with served results byte-identical to a direct `sweep`;
+//! * **run artifacts** ([`artifact`]) — `dlroofline pack`/`unpack`
+//!   bundle a run directory plus its store records into a checksummed
+//!   deterministic tarball that another host can verify and use to seed
+//!   its own cache.
 //!
 //! See `README.md` for the documentation map, `docs/` for the book
 //! (architecture overview, CLI reference, on-disk formats) and
@@ -54,6 +63,7 @@
 // to errors.
 #![warn(missing_docs)]
 
+pub mod artifact;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
@@ -63,6 +73,7 @@ pub mod kernels;
 pub mod pmu;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testutil;
 pub mod tune;

@@ -200,6 +200,83 @@ fn app() -> AppSpec {
                 ],
                 positional: vec![("name", "artifact name from artifacts/manifest.json")],
             },
+            CmdSpec {
+                name: "serve",
+                help: "run the sweep service daemon (line-delimited JSON over TCP)",
+                opts: vec![
+                    opt("addr", "listen address", Some("127.0.0.1")),
+                    opt("port", "listen port (0 = ephemeral, printed on start)", Some("7878")),
+                    opt(
+                        "cache-dir",
+                        "shared cell cache dir (default: $DLROOFLINE_CACHE)",
+                        None,
+                    ),
+                    opt("spool", "job output directory", Some("reports/serve")),
+                    opt("jobs", "worker threads per job (0 = auto)", Some("0")),
+                    opt(
+                        "sim-jobs",
+                        "intra-cell sim workers (0 = auto from the --jobs budget, 1 = serial)",
+                        Some("0"),
+                    ),
+                    opt(
+                        "claim-ttl",
+                        "seconds before a dead worker's cell claim is re-claimed",
+                        Some("600"),
+                    ),
+                    opt("machine", "machine preset used when a submit names none", Some("xeon_6248")),
+                ],
+                positional: vec![],
+            },
+            CmdSpec {
+                name: "request",
+                help: "send one JSON request line to a running serve daemon",
+                opts: vec![
+                    opt("addr", "daemon address", Some("127.0.0.1:7878")),
+                    opt("timeout", "I/O timeout in seconds", Some("30")),
+                    opt("extract", "print only this top-level response field", None),
+                ],
+                positional: vec![("json", "request object, e.g. '{\"op\":\"ping\"}'")],
+            },
+            CmdSpec {
+                name: "pack",
+                help: "bundle a finished run dir (+ its store records) into a verifiable artifact",
+                opts: vec![
+                    opt("out", "pack output directory (default: <run-dir>.pack)", None),
+                    opt(
+                        "cache-dir",
+                        "cell cache to bundle records from (default: $DLROOFLINE_CACHE)",
+                        None,
+                    ),
+                ],
+                positional: vec![("run_dir", "run directory containing run.json")],
+            },
+            CmdSpec {
+                name: "unpack",
+                help: "verify/extract a packed run artifact; optionally seed a cell cache",
+                opts: vec![
+                    opt("into", "extract the payload into this directory", None),
+                    opt("seed-cache", "seed this cell cache dir with the bundled records", None),
+                    switch("verify", "check every payload entry against the manifest checksums"),
+                ],
+                positional: vec![("pack_dir", "directory holding manifest.json + payload.tar")],
+            },
+            CmdSpec {
+                name: "bench",
+                help: "compare bench artifacts: `bench diff a.json b.json --tol 0.1`",
+                opts: vec![
+                    opt(
+                        "tol",
+                        "default relative slowdown tolerance; exit 3 on regression",
+                        Some("0.2"),
+                    ),
+                    opt("case-tol", "per-case overrides, e.g. 'name=0.5,other=0.1'", None),
+                ],
+                positional: vec![
+                    ("action", "diff"),
+                    ("bench_a", "baseline BENCH_<group>.json"),
+                    ("bench_b", "candidate BENCH_<group>.json"),
+                ],
+            },
         ],
     }
 }
@@ -278,6 +355,11 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
         "characterize" => cmd_characterize(parsed),
         "host-bench" => cmd_host_bench(parsed),
         "run-artifact" => cmd_run_artifact(parsed),
+        "serve" => cmd_serve(parsed),
+        "request" => cmd_request(parsed),
+        "pack" => cmd_pack(parsed),
+        "unpack" => cmd_unpack(parsed),
+        "bench" => cmd_bench(parsed),
         other => anyhow::bail!("unhandled command {other}"),
     }
 }
@@ -885,5 +967,170 @@ fn cmd_run_artifact(parsed: &Parsed) -> Result<()> {
         dlroofline::util::human::fmt_si(stats.flops, "FLOP"),
         fmt_flops(stats.flops_per_sec()),
     );
+    Ok(())
+}
+
+fn cmd_serve(parsed: &Parsed) -> Result<()> {
+    use dlroofline::serve::{ServeOptions, Server, DEFAULT_CLAIM_TTL_SECS};
+    // Unlike sweep, a cache dir is mandatory: it is the daemon's only
+    // coordination channel with its workers and with peer daemons.
+    let dir = CellStore::resolve_dir(parsed.opt("cache-dir")).ok_or_else(|| {
+        anyhow::anyhow!("serve needs a cell cache: pass --cache-dir or set ${CACHE_ENV}")
+    })?;
+    let spool = PathBuf::from(parsed.opt("spool").unwrap_or("reports/serve"));
+    let opts = ServeOptions {
+        jobs: parsed.opt_parse::<usize>("jobs")?.unwrap_or(0),
+        sim_jobs: parsed.opt_parse::<usize>("sim-jobs")?.unwrap_or(0),
+        claim_ttl_secs: parsed.opt_parse::<u64>("claim-ttl")?.unwrap_or(DEFAULT_CLAIM_TTL_SECS),
+        default_machine: parsed.opt("machine").unwrap_or("xeon_6248").to_string(),
+    };
+    let addr = format!(
+        "{}:{}",
+        parsed.opt("addr").unwrap_or("127.0.0.1"),
+        parsed.opt("port").unwrap_or("7878")
+    );
+    let server = Server::bind(&addr, &dir, &spool, opts)?;
+    println!(
+        "serving on {} (cache {}, spool {})",
+        server.local_addr(),
+        dir.display(),
+        spool.display()
+    );
+    server.run()
+}
+
+fn cmd_request(parsed: &Parsed) -> Result<()> {
+    use dlroofline::util::json::Json;
+    let line = parsed.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("missing request JSON, e.g. '{{\"op\":\"ping\"}}'")
+    })?;
+    let addr = parsed.opt("addr").unwrap_or("127.0.0.1:7878");
+    let timeout: f64 = parsed.opt_parse("timeout")?.unwrap_or(30.0);
+    anyhow::ensure!(
+        timeout > 0.0 && timeout.is_finite(),
+        "--timeout must be a positive number of seconds"
+    );
+    let response = dlroofline::serve::protocol::roundtrip(
+        addr,
+        line,
+        std::time::Duration::from_secs_f64(timeout),
+    )?;
+    let doc = Json::parse(&response)?;
+    let ok = doc.get("ok").and_then(|v| v.as_bool().ok()).unwrap_or(false);
+    if !ok {
+        eprintln!("{response}");
+        std::process::exit(1);
+    }
+    match parsed.opt("extract") {
+        Some(field) => {
+            let value = doc.expect(field)?;
+            // Strings print raw so shell scripts can consume them.
+            match value.as_str() {
+                Ok(text) => println!("{text}"),
+                Err(_) => println!("{}", value.to_string_compact()),
+            }
+        }
+        None => println!("{response}"),
+    }
+    Ok(())
+}
+
+fn cmd_pack(parsed: &Parsed) -> Result<()> {
+    let run_dir = PathBuf::from(parsed.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("missing run directory (a directory containing run.json)")
+    })?);
+    let out_dir = match parsed.opt("out") {
+        Some(out) => PathBuf::from(out),
+        None => {
+            let name = run_dir.file_name().and_then(|n| n.to_str()).unwrap_or("run");
+            run_dir.with_file_name(format!("{name}.pack"))
+        }
+    };
+    let store = store_from(parsed)?;
+    if store.is_none() {
+        eprintln!(
+            "note: no cell cache (--cache-dir or ${CACHE_ENV}); packing reports only, no records"
+        );
+    }
+    let report = dlroofline::artifact::pack(&run_dir, &out_dir, store.as_ref())?;
+    println!(
+        "packed {} file(s), {} cell record(s) → {} ({} payload bytes)",
+        report.files,
+        report.cells,
+        report.dir.display(),
+        report.payload_bytes
+    );
+    if report.cells_missing > 0 {
+        eprintln!(
+            "note: {} cell record(s) not found in the cache and not bundled",
+            report.cells_missing
+        );
+    }
+    Ok(())
+}
+
+fn cmd_unpack(parsed: &Parsed) -> Result<()> {
+    let pack_dir = PathBuf::from(parsed.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("missing pack directory (holding manifest.json + payload.tar)")
+    })?);
+    let into = parsed.opt("into").map(PathBuf::from);
+    let seed = parsed.opt("seed-cache").map(PathBuf::from);
+    let report = dlroofline::artifact::unpack(
+        &pack_dir,
+        into.as_deref(),
+        seed.as_deref(),
+        parsed.has("verify"),
+    )?;
+    println!(
+        "{}: {} file(s), {} cell record(s){}",
+        pack_dir.display(),
+        report.files,
+        report.cells,
+        if report.verified { ", checksums verified" } else { "" }
+    );
+    if let Some(dir) = &report.extracted {
+        println!("extracted into {}", dir.display());
+    }
+    if seed.is_some() {
+        println!("seeded {} cell record(s)", report.seeded);
+    }
+    Ok(())
+}
+
+fn cmd_bench(parsed: &Parsed) -> Result<()> {
+    use dlroofline::coordinator::{diff_bench_docs, render_bench_diff};
+    use dlroofline::util::fsutil::read_to_string;
+    use dlroofline::util::json::Json;
+    let [action, path_a, path_b] = parsed.positional.as_slice() else {
+        anyhow::bail!("usage: dlroofline bench diff <a.json> <b.json>");
+    };
+    anyhow::ensure!(action == "diff", "unknown bench action '{action}' (expected diff)");
+    let tol: f64 = parsed.opt_parse("tol")?.unwrap_or(0.2);
+    anyhow::ensure!(tol >= 0.0 && tol.is_finite(), "--tol must be a finite non-negative number");
+    let mut case_tols = std::collections::BTreeMap::new();
+    if let Some(raw) = parsed.opt("case-tol") {
+        for part in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (name, value) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad --case-tol entry '{part}' (expected name=tolerance)")
+            })?;
+            let value: f64 = value.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad tolerance in --case-tol entry '{part}'")
+            })?;
+            anyhow::ensure!(
+                value >= 0.0 && value.is_finite(),
+                "--case-tol '{part}' must be finite and non-negative"
+            );
+            case_tols.insert(name.trim().to_string(), value);
+        }
+    }
+    let a = Json::parse(&read_to_string(&PathBuf::from(path_a))?)
+        .map_err(|e| anyhow::anyhow!("parsing {path_a}: {e:#}"))?;
+    let b = Json::parse(&read_to_string(&PathBuf::from(path_b))?)
+        .map_err(|e| anyhow::anyhow!("parsing {path_b}: {e:#}"))?;
+    let report = diff_bench_docs(&a, &b, tol, &case_tols)?;
+    print!("{}", render_bench_diff(&report));
+    if report.regressed() {
+        std::process::exit(3);
+    }
     Ok(())
 }

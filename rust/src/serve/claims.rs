@@ -1,0 +1,227 @@
+//! Cell claims: first-creator-wins claim files inside the shared cache
+//! directory, the *only* coordination channel between sweep workers.
+//!
+//! A worker that wants to simulate a cell first creates
+//! `<cache-dir>/claims/<key16>.claim` with
+//! [`create_exclusive`](crate::util::fsutil::create_exclusive) — an
+//! atomic unique-tmp stage published by hard link, so any number of
+//! racing workers (threads of one daemon, or whole daemons on different
+//! hosts sharing the directory) elect exactly one winner per cell. The
+//! winner simulates, writes the store record, and releases the claim;
+//! everyone else polls the store until the record lands. A claim whose
+//! embedded timestamp is older than the TTL is presumed abandoned by a
+//! crashed worker: it is removed and re-raced, so a dead worker delays a
+//! cell by at most one TTL, never wedges it.
+//!
+//! The TTL break is deliberately racy in one benign direction: a
+//! *live* worker that takes longer than the TTL can lose its claim and
+//! the cell gets simulated twice. Simulations are deterministic and
+//! record writes atomic, so the duplicate work is wasted wall-clock,
+//! never wrong data.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::fsutil::create_exclusive;
+use crate::util::hash::hex64;
+
+/// Default claim time-to-live. Generous compared to any single cell
+/// simulation; only a crashed worker should ever hit it.
+pub const DEFAULT_CLAIM_TTL_SECS: u64 = 600;
+
+/// How many create/inspect rounds one [`ClaimSet::claim`] call runs
+/// before reporting [`ClaimOutcome::Held`] and letting the caller poll.
+const MAX_CLAIM_RACES: usize = 16;
+
+/// Outcome of one claim attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClaimOutcome {
+    /// This claimant created the claim file and owns the cell: simulate
+    /// it, write the record, then [`ClaimSet::release`].
+    Won,
+    /// Another live claimant holds the cell: poll the store for its
+    /// record instead of simulating.
+    Held,
+}
+
+/// One worker set's handle on the claims directory of a shared store.
+///
+/// All methods take `&self` and the claim race is decided by the
+/// filesystem, so one `ClaimSet` may be shared freely across the worker
+/// threads of a fill — ownership of a cell is established by *winning
+/// the create*, not by the token, which only guards `release`.
+pub struct ClaimSet {
+    dir: PathBuf,
+    token: String,
+    ttl: Duration,
+}
+
+impl ClaimSet {
+    /// A claim handle for the store rooted at `store_root`, with claims
+    /// older than `ttl` treated as abandoned. The token is unique per
+    /// process *and* per `ClaimSet` (pid × counter), so two daemons on
+    /// one host never mistake each other's claims for their own.
+    pub fn new(store_root: &Path, ttl: Duration) -> ClaimSet {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        ClaimSet {
+            dir: store_root.join("claims"),
+            token: format!("{}-{n}", std::process::id()),
+            ttl,
+        }
+    }
+
+    /// This claimant's identity, as written into its claim files.
+    pub fn token(&self) -> &str {
+        &self.token
+    }
+
+    fn path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{}.claim", hex64(key)))
+    }
+
+    /// Try to claim cell `key`. Expired claims (and unreadable ones —
+    /// a claim file is written atomically, so garbage means interference,
+    /// not a torn write) are broken and re-raced; several breakers may
+    /// race the removal, but at most one wins the following create.
+    pub fn claim(&self, key: u64) -> Result<ClaimOutcome> {
+        let path = self.path(key);
+        for _ in 0..MAX_CLAIM_RACES {
+            let body = format!("{} {}", self.token, now_unix());
+            if create_exclusive(&path, &body)? {
+                return Ok(ClaimOutcome::Won);
+            }
+            match read_claim(&path) {
+                ClaimBody::Created(created)
+                    if now_unix().saturating_sub(created) > self.ttl.as_secs() =>
+                {
+                    let _ = std::fs::remove_file(&path);
+                }
+                ClaimBody::Created(_) => return Ok(ClaimOutcome::Held),
+                // A claim file is written atomically, so an unparsable
+                // body is interference, not a torn write: break it.
+                ClaimBody::Garbage => {
+                    let _ = std::fs::remove_file(&path);
+                }
+                // Released between our create and read: re-race.
+                ClaimBody::Gone => {}
+            }
+        }
+        // Pathological interleaving kept stealing the race; report Held
+        // and let the caller's store-poll loop come back around.
+        Ok(ClaimOutcome::Held)
+    }
+
+    /// Release the claim on `key` if this claimant still holds it. A
+    /// claim stolen after TTL expiry (token differs) is left alone.
+    pub fn release(&self, key: u64) {
+        let path = self.path(key);
+        let ours = std::fs::read_to_string(&path)
+            .ok()
+            .map(|body| body.split(' ').next() == Some(self.token.as_str()))
+            .unwrap_or(false);
+        if ours {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// What inspecting a claim file found.
+enum ClaimBody {
+    /// A well-formed claim with its embedded creation timestamp.
+    Created(u64),
+    /// The file exists but its body does not parse.
+    Garbage,
+    /// The file is gone.
+    Gone,
+}
+
+fn read_claim(path: &Path) -> ClaimBody {
+    let Ok(body) = std::fs::read_to_string(path) else {
+        return ClaimBody::Gone;
+    };
+    match body.split(' ').nth(1).and_then(|t| t.trim().parse::<u64>().ok()) {
+        Some(created) => ClaimBody::Created(created),
+        None => ClaimBody::Garbage,
+    }
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn claim_wins_once_and_releases() {
+        let dir = TempDir::new("claims-basic");
+        let claims = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(claims.claim(7).unwrap(), ClaimOutcome::Won);
+        assert_eq!(claims.claim(7).unwrap(), ClaimOutcome::Held, "same set, same token: held");
+        let other = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(other.claim(7).unwrap(), ClaimOutcome::Held);
+        claims.release(7);
+        assert_eq!(other.claim(7).unwrap(), ClaimOutcome::Won, "released claims re-race");
+    }
+
+    #[test]
+    fn foreign_release_is_a_no_op() {
+        let dir = TempDir::new("claims-foreign");
+        let a = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        let b = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(a.claim(1).unwrap(), ClaimOutcome::Won);
+        b.release(1); // not b's claim — must not break a's hold
+        assert_eq!(b.claim(1).unwrap(), ClaimOutcome::Held);
+    }
+
+    #[test]
+    fn expired_claim_is_broken_and_reclaimed() {
+        let dir = TempDir::new("claims-expired");
+        let crashed = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(crashed.claim(42).unwrap(), ClaimOutcome::Won);
+        // Backdate the claim far past any TTL, as if its holder died
+        // yesterday.
+        let path = crashed.path(42);
+        let stale = format!("{} {}", crashed.token(), now_unix().saturating_sub(100_000));
+        std::fs::write(&path, stale).unwrap();
+        let successor = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(successor.claim(42).unwrap(), ClaimOutcome::Won, "expired claim re-raced");
+    }
+
+    #[test]
+    fn garbage_claim_file_does_not_wedge_the_cell() {
+        let dir = TempDir::new("claims-garbage");
+        let claims = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        std::fs::create_dir_all(dir.path().join("claims")).unwrap();
+        std::fs::write(claims.path(9), "not a claim body").unwrap();
+        assert_eq!(claims.claim(9).unwrap(), ClaimOutcome::Won);
+    }
+
+    #[test]
+    fn concurrent_claimants_elect_exactly_one_winner() {
+        let dir = TempDir::new("claims-race");
+        let wins = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let dir = dir.path().to_path_buf();
+                let wins = &wins;
+                scope.spawn(move || {
+                    let claims = ClaimSet::new(&dir, Duration::from_secs(600));
+                    if claims.claim(1234).unwrap() == ClaimOutcome::Won {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(wins.load(Ordering::Relaxed), 1);
+    }
+}

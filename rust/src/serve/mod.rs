@@ -1,0 +1,27 @@
+//! The sweep service: a long-running daemon that executes sweep plans
+//! over the persistent cell store, sharding cell simulation across
+//! workers that coordinate *only* through that store.
+//!
+//! Layers, bottom-up:
+//!
+//! - [`claims`] — first-creator-wins claim files inside the cache
+//!   directory; the election primitive that keeps any number of workers
+//!   (threads or whole daemons) from simulating the same cell twice.
+//! - [`worker`] — [`fill_store_sharded`]: resolve every unique cell of
+//!   a plan into the store under claim coordination, with lock-free
+//!   [`ShardProgress`] for live status.
+//! - [`protocol`] — the line-delimited JSON wire format and the
+//!   one-shot [`protocol::roundtrip`] client.
+//! - [`server`] — the daemon itself: jobs keyed by plan content hash
+//!   (idempotent resubmission), fill-then-warm-sweep execution whose
+//!   output is byte-identical to a direct `sweep`.
+
+pub mod claims;
+pub mod protocol;
+pub mod server;
+pub mod worker;
+
+pub use claims::{ClaimOutcome, ClaimSet, DEFAULT_CLAIM_TTL_SECS};
+pub use protocol::{Request, SubmitRequest, PROTOCOL_VERSION};
+pub use server::{JobPhase, ServeOptions, Server};
+pub use worker::{fill_store_sharded, ShardProgress, ShardStats};

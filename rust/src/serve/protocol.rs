@@ -1,0 +1,219 @@
+//! The serve wire protocol: one JSON object per line, both directions.
+//!
+//! A client connects to the daemon's TCP socket, writes one request
+//! object per line, and reads one response object per line. Requests
+//! carry an `"op"` field naming the operation; responses always carry
+//! `"ok"` — `true` with op-specific fields, or `false` with an
+//! `"error"` message (malformed input included: the connection answers,
+//! it does not drop). Compact single-line emission is guaranteed by
+//! [`Json::to_string_compact`], which escapes embedded newlines, so
+//! even a fetched multi-line file body rides in one response line.
+//!
+//! | op         | request fields                                         | response fields |
+//! |------------|--------------------------------------------------------|-----------------|
+//! | `ping`     | —                                                      | `version`, `generator` |
+//! | `list`     | —                                                      | `jobs` array    |
+//! | `submit`   | `experiments` (required), `machine`, `batch`, `full_size`, `svg` | `job`, `created`, `state`, plan shape + predicted fates |
+//! | `status`   | `job` (required), `cells` (bool)                       | `state`, progress counters, predicted fates, `files` when done |
+//! | `fetch`    | `job`, `file` (both required)                          | `file`, `content` |
+//! | `shutdown` | —                                                      | `stopping: true` |
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Wire protocol version, reported by `ping`.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The fields of a `submit` request: which experiments to run and under
+/// which parameters. Mirrors the `sweep` CLI surface.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SubmitRequest {
+    /// Experiment ids to execute, in run order (must be non-empty).
+    pub experiments: Vec<String>,
+    /// Machine preset name; `None` uses the daemon's default.
+    pub machine: Option<String>,
+    /// Batch override (`null`/absent = each experiment's default).
+    pub batch: Option<usize>,
+    /// Use the paper's full tensor sizes.
+    pub full_size: bool,
+    /// Also render SVG roofline plots.
+    pub svg: bool,
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Liveness and version probe.
+    Ping,
+    /// List the daemon's known jobs.
+    List,
+    /// Submit a plan for execution (idempotent: the job id derives from
+    /// the plan content hash, so re-submitting returns the same job).
+    Submit(SubmitRequest),
+    /// Poll one job's state and progress; `cells` asks for the
+    /// per-unique-cell detail.
+    Status {
+        /// Job id from `submit`.
+        job: String,
+        /// Include per-cell predicted fates and live states.
+        cells: bool,
+    },
+    /// Fetch one report file of a completed job.
+    Fetch {
+        /// Job id from `submit`.
+        job: String,
+        /// File name as listed in the done job's `files`.
+        file: String,
+    },
+    /// Stop the daemon after answering.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line. Every malformed input — bad JSON, a
+    /// missing/unknown `op`, missing or mistyped fields — is a plain
+    /// error the server turns into an `ok:false` response.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let doc = Json::parse(line.trim()).map_err(|e| anyhow!("malformed request: {e:#}"))?;
+        let op = doc.expect("op").and_then(|v| v.as_str()).context("malformed request")?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "list" => Ok(Request::List),
+            "shutdown" => Ok(Request::Shutdown),
+            "submit" => {
+                let experiments = doc
+                    .expect("experiments")?
+                    .as_arr()
+                    .context("submit: 'experiments' must be an array of ids")?
+                    .iter()
+                    .map(|v| Ok(v.as_str()?.to_string()))
+                    .collect::<Result<Vec<String>>>()
+                    .context("submit: 'experiments' must be an array of ids")?;
+                ensure!(!experiments.is_empty(), "submit: 'experiments' must not be empty");
+                let machine = match doc.get("machine") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_str().context("submit: 'machine'")?.to_string()),
+                };
+                let batch = match doc.get("batch") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_usize().context("submit: 'batch'")?),
+                };
+                Ok(Request::Submit(SubmitRequest {
+                    experiments,
+                    machine,
+                    batch,
+                    full_size: bool_field(&doc, "full_size")?,
+                    svg: bool_field(&doc, "svg")?,
+                }))
+            }
+            "status" => Ok(Request::Status {
+                job: string_field(&doc, "job")?,
+                cells: bool_field(&doc, "cells")?,
+            }),
+            "fetch" => Ok(Request::Fetch {
+                job: string_field(&doc, "job")?,
+                file: string_field(&doc, "file")?,
+            }),
+            other => bail!("unknown op '{other}'"),
+        }
+    }
+
+    /// The request as a JSON document — the inverse of
+    /// [`Request::parse_line`] (round-trip pinned by tests).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => op_obj("ping", vec![]),
+            Request::List => op_obj("list", vec![]),
+            Request::Shutdown => op_obj("shutdown", vec![]),
+            Request::Submit(s) => op_obj(
+                "submit",
+                vec![
+                    (
+                        "experiments",
+                        Json::arr(s.experiments.iter().map(|e| Json::str(e.as_str())).collect()),
+                    ),
+                    (
+                        "machine",
+                        s.machine.as_deref().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "batch",
+                        s.batch.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("full_size", Json::Bool(s.full_size)),
+                    ("svg", Json::Bool(s.svg)),
+                ],
+            ),
+            Request::Status { job, cells } => op_obj(
+                "status",
+                vec![("job", Json::str(job.as_str())), ("cells", Json::Bool(*cells))],
+            ),
+            Request::Fetch { job, file } => op_obj(
+                "fetch",
+                vec![("job", Json::str(job.as_str())), ("file", Json::str(file.as_str()))],
+            ),
+        }
+    }
+
+    /// The request as one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+fn op_obj(op: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("op", Json::str(op))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+fn string_field(doc: &Json, key: &str) -> Result<String> {
+    Ok(doc
+        .expect(key)
+        .and_then(|v| v.as_str())
+        .with_context(|| format!("field '{key}'"))?
+        .to_string())
+}
+
+fn bool_field(doc: &Json, key: &str) -> Result<bool> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(false),
+        Some(v) => v.as_bool().with_context(|| format!("field '{key}'")),
+    }
+}
+
+/// A successful response: `ok:true`, the echoed `op`, then op-specific
+/// fields.
+pub fn ok_response(op: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true)), ("op", Json::str(op))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+/// A failure response: `ok:false` plus the error message.
+pub fn error_response(message: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(message))])
+}
+
+/// One-shot client: connect to `addr`, send a single request line, read
+/// the single response line. `timeout` bounds both the write and the
+/// read, so a wedged daemon fails the call instead of hanging it.
+pub fn roundtrip(addr: &str, line: &str, timeout: Duration) -> Result<String> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    writer.write_all(line.trim_end().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut response = String::new();
+    let n = reader.read_line(&mut response).with_context(|| format!("reading from {addr}"))?;
+    ensure!(n > 0, "server at {addr} closed the connection without responding");
+    Ok(response.trim_end().to_string())
+}

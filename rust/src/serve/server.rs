@@ -1,0 +1,526 @@
+//! The serve daemon: a [`TcpListener`] accept loop, a thread per
+//! connection, and a jobs table keyed by plan content hash.
+//!
+//! A `submit` expands the plan, derives the job id from
+//! [`Expansion::plan_hash`](crate::coordinator::plan::Expansion::plan_hash)
+//! (plus the svg rendering flag), predicts per-cell store fates the way
+//! `plan --cache-dir` does, and spawns the job thread. The job thread
+//! runs in two phases:
+//!
+//! 1. **Sharded fill** ([`fill_store_sharded`]): claim-coordinated
+//!    workers resolve every unique cell into the shared store.
+//! 2. **Warm assembly**: a plain
+//!    [`sweep_and_write_budget`](crate::coordinator::runner::sweep_and_write_budget)
+//!    over the now-complete store writes the job's reports and
+//!    `run.json` — all hits, so the output is byte-identical to a
+//!    direct `sweep` of the same plan (warm sweeps are pinned
+//!    byte-identical to cold ones; the store is invisible in results).
+//!
+//! Because workers coordinate *only* through the cache directory, any
+//! number of daemons may share one: their workers interleave claims and
+//! never simulate the same cell twice.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::config::resolve_machine;
+use crate::coordinator::plan::{self, JobBudget};
+use crate::coordinator::runner::sweep_and_write_budget;
+use crate::coordinator::store::{CellStore, Lookup};
+use crate::harness::experiments::ExperimentParams;
+use crate::util::fsutil::read_to_string;
+use crate::util::hash::{fnv1a_64, hex64};
+use crate::util::json::Json;
+
+use super::claims::{ClaimSet, DEFAULT_CLAIM_TTL_SECS};
+use super::protocol::{error_response, ok_response, Request, SubmitRequest, PROTOCOL_VERSION};
+use super::worker::{fill_store_sharded, ShardProgress, ShardStats};
+
+/// Daemon-wide execution options.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Cell-level worker threads per job (0 = auto).
+    pub jobs: usize,
+    /// Intra-cell simulation workers (0 = auto from the `jobs` budget).
+    pub sim_jobs: usize,
+    /// Seconds before a crashed worker's cell claim is re-claimed.
+    pub claim_ttl_secs: u64,
+    /// Machine preset used when a submit names none.
+    pub default_machine: String,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            jobs: 0,
+            sim_jobs: 0,
+            claim_ttl_secs: DEFAULT_CLAIM_TTL_SECS,
+            default_machine: "xeon_6248".to_string(),
+        }
+    }
+}
+
+/// Lifecycle phase of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Accepted, job thread not yet running.
+    Queued,
+    /// Filling the store / assembling reports.
+    Running,
+    /// Reports written; `fetch` is available.
+    Done,
+    /// Execution failed; `status` carries the error.
+    Failed,
+}
+
+impl JobPhase {
+    /// The wire label (`status.state`).
+    pub fn label(self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Failed => "failed",
+        }
+    }
+}
+
+/// Store fates predicted at submit time (the `plan --cache-dir` probe).
+#[derive(Debug, Default)]
+struct PredictedFates {
+    hit: usize,
+    miss: usize,
+    stale: usize,
+    /// Per unique cell, aligned with `JobState::cells`.
+    per_cell: Vec<&'static str>,
+}
+
+/// One unique cell's static identity, for the `status` cells detail.
+#[derive(Debug)]
+struct CellInfo {
+    experiment: String,
+    kernel: String,
+    scenario: String,
+    cache: String,
+    key_hex: String,
+}
+
+/// Everything the daemon tracks about one job.
+struct JobState {
+    id: String,
+    experiments: Vec<String>,
+    params: ExperimentParams,
+    svg: bool,
+    dir: PathBuf,
+    cells_total: usize,
+    unique_total: usize,
+    cells: Vec<CellInfo>,
+    predicted: PredictedFates,
+    phase: Mutex<JobPhase>,
+    error: Mutex<Option<String>>,
+    progress: Mutex<Option<Arc<ShardProgress>>>,
+    fill: Mutex<Option<ShardStats>>,
+    files: Mutex<Vec<String>>,
+}
+
+struct ServerState {
+    cache_dir: PathBuf,
+    spool: PathBuf,
+    opts: ServeOptions,
+    local_addr: SocketAddr,
+    jobs: Mutex<BTreeMap<String, Arc<JobState>>>,
+    shutdown: AtomicBool,
+}
+
+/// A bound, not-yet-running serve daemon.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks an ephemeral
+    /// port — read it back with [`Server::local_addr`]). Fails fast when
+    /// the cache directory cannot be opened: workers and peer daemons
+    /// coordinate through it, so serving without one is meaningless.
+    /// Job outputs land under `spool/<job-id>/`.
+    pub fn bind(addr: &str, cache_dir: &Path, spool: &Path, opts: ServeOptions) -> Result<Server> {
+        CellStore::open(cache_dir)?;
+        std::fs::create_dir_all(spool)
+            .with_context(|| format!("creating spool {}", spool.display()))?;
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            state: Arc::new(ServerState {
+                cache_dir: cache_dir.to_path_buf(),
+                spool: spool.to_path_buf(),
+                opts,
+                local_addr,
+                jobs: Mutex::new(BTreeMap::new()),
+                shutdown: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// The bound socket address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.local_addr
+    }
+
+    /// Serve connections until a `shutdown` request arrives. Jobs still
+    /// running when the daemon stops leave their claims behind; peers
+    /// sharing the cache dir re-claim them after the TTL.
+    pub fn run(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    std::thread::spawn(move || {
+                        let _ = serve_connection(&state, stream);
+                    });
+                }
+                Err(e) => eprintln!("serve: accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One connection's request/response loop. I/O errors just end the
+/// connection; protocol errors are answered in-band as `ok:false`.
+fn serve_connection(state: &Arc<ServerState>, stream: TcpStream) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, stop) = match Request::parse_line(&line) {
+            Ok(req) => handle_request(state, req),
+            Err(e) => (error_response(&format!("{e:#}")), false),
+        };
+        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop {
+            state.shutdown.store(true, Ordering::Release);
+            // Wake the accept loop so it observes the flag.
+            let _ = TcpStream::connect(state.local_addr);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch one parsed request; the bool asks the caller to stop the
+/// daemon after responding.
+fn handle_request(state: &Arc<ServerState>, req: Request) -> (Json, bool) {
+    match req {
+        Request::Ping => (
+            ok_response(
+                "ping",
+                vec![
+                    ("version", Json::num(PROTOCOL_VERSION as f64)),
+                    ("generator", Json::str(format!("dlroofline {}", crate::VERSION))),
+                ],
+            ),
+            false,
+        ),
+        Request::List => (list_json(state), false),
+        Request::Submit(submit) => {
+            let response = submit_job(state, submit)
+                .unwrap_or_else(|e| error_response(&format!("{e:#}")));
+            (response, false)
+        }
+        Request::Status { job, cells } => {
+            (with_job(state, &job, |j| Ok(status_json(j, cells))), false)
+        }
+        Request::Fetch { job, file } => (with_job(state, &job, |j| fetch_json(j, &file)), false),
+        Request::Shutdown => {
+            (ok_response("shutdown", vec![("stopping", Json::Bool(true))]), true)
+        }
+    }
+}
+
+fn with_job(
+    state: &ServerState,
+    id: &str,
+    body: impl FnOnce(&JobState) -> Result<Json>,
+) -> Json {
+    let job = state.jobs.lock().unwrap().get(id).cloned();
+    match job {
+        Some(job) => body(&job).unwrap_or_else(|e| error_response(&format!("{e:#}"))),
+        None => error_response(&format!("unknown job '{id}'")),
+    }
+}
+
+fn list_json(state: &ServerState) -> Json {
+    let jobs = state.jobs.lock().unwrap();
+    let rows = jobs
+        .values()
+        .map(|job| {
+            Json::obj(vec![
+                ("job", Json::str(job.id.as_str())),
+                ("state", Json::str(job.phase.lock().unwrap().label())),
+                (
+                    "experiments",
+                    Json::arr(job.experiments.iter().map(|e| Json::str(e.as_str())).collect()),
+                ),
+            ])
+        })
+        .collect();
+    ok_response("list", vec![("jobs", Json::arr(rows))])
+}
+
+/// Expand, hash, and register a submitted plan. Idempotent: the job id
+/// derives from the plan content hash, so re-submitting an identical
+/// plan returns the existing job instead of re-running it.
+fn submit_job(state: &Arc<ServerState>, req: SubmitRequest) -> Result<Json> {
+    let machine_name =
+        req.machine.clone().unwrap_or_else(|| state.opts.default_machine.clone());
+    let machine = resolve_machine(&machine_name)?;
+    let params =
+        ExperimentParams { machine, full_size: req.full_size, batch: req.batch };
+    let ids: Vec<&str> = req.experiments.iter().map(|s| s.as_str()).collect();
+    let expansion = plan::expand(&ids, &params)?;
+    let plan_hash = expansion.plan_hash(&params.machine.fingerprint());
+    let material = format!("{}|svg={}", hex64(plan_hash), req.svg);
+    let job_id = format!("job-{}", hex64(fnv1a_64(material.as_bytes())));
+
+    if let Some(existing) = state.jobs.lock().unwrap().get(&job_id) {
+        return Ok(submit_response(existing, false));
+    }
+
+    // Predict per-cell store fates the way `plan --cache-dir` does —
+    // probe without serving, with the executor's identity guard.
+    let store = CellStore::open(&state.cache_dir)?;
+    let mut predicted = PredictedFates::default();
+    let idents: Vec<_> = expansion.cells.iter().filter(|c| !c.reused).collect();
+    for ((key, _), plan_cell) in expansion.unique_cells().iter().zip(&idents) {
+        let fate = match store.lookup(*key) {
+            Lookup::Hit(m)
+                if m.kernel == plan_cell.kernel
+                    && m.scenario == plan_cell.scenario
+                    && m.cache_state.label() == plan_cell.cache =>
+            {
+                predicted.hit += 1;
+                "hit"
+            }
+            Lookup::Hit(_) | Lookup::Stale(_) => {
+                predicted.stale += 1;
+                "stale"
+            }
+            Lookup::Miss => {
+                predicted.miss += 1;
+                "miss"
+            }
+        };
+        predicted.per_cell.push(fate);
+    }
+    let cells = idents
+        .iter()
+        .map(|c| CellInfo {
+            experiment: c.experiment.clone(),
+            kernel: c.kernel.clone(),
+            scenario: c.scenario.clone(),
+            cache: c.cache.clone(),
+            key_hex: hex64(c.key),
+        })
+        .collect();
+
+    let job = Arc::new(JobState {
+        id: job_id.clone(),
+        experiments: req.experiments.clone(),
+        params,
+        svg: req.svg,
+        dir: state.spool.join(&job_id),
+        cells_total: expansion.cells.len(),
+        unique_total: expansion.unique_cells().len(),
+        cells,
+        predicted,
+        phase: Mutex::new(JobPhase::Queued),
+        error: Mutex::new(None),
+        progress: Mutex::new(None),
+        fill: Mutex::new(None),
+        files: Mutex::new(Vec::new()),
+    });
+    {
+        let mut jobs = state.jobs.lock().unwrap();
+        // Two submits racing outside the lock: the first insert wins and
+        // the loser is handed the winner's job.
+        if let Some(existing) = jobs.get(&job_id) {
+            return Ok(submit_response(existing, false));
+        }
+        jobs.insert(job_id.clone(), Arc::clone(&job));
+    }
+    let thread_state = Arc::clone(state);
+    let thread_job = Arc::clone(&job);
+    std::thread::spawn(move || run_job(&thread_state, &thread_job));
+    Ok(submit_response(&job, true))
+}
+
+fn submit_response(job: &JobState, created: bool) -> Json {
+    ok_response(
+        "submit",
+        vec![
+            ("job", Json::str(job.id.as_str())),
+            ("created", Json::Bool(created)),
+            ("state", Json::str(job.phase.lock().unwrap().label())),
+            ("cells_total", Json::num(job.cells_total as f64)),
+            ("unique", Json::num(job.unique_total as f64)),
+            ("predicted", predicted_json(&job.predicted)),
+        ],
+    )
+}
+
+fn predicted_json(predicted: &PredictedFates) -> Json {
+    Json::obj(vec![
+        ("hit", Json::num(predicted.hit as f64)),
+        ("miss", Json::num(predicted.miss as f64)),
+        ("stale", Json::num(predicted.stale as f64)),
+    ])
+}
+
+fn run_job(state: &ServerState, job: &JobState) {
+    *job.phase.lock().unwrap() = JobPhase::Running;
+    match execute_job(state, job) {
+        Ok(()) => *job.phase.lock().unwrap() = JobPhase::Done,
+        Err(e) => {
+            *job.error.lock().unwrap() = Some(format!("{e:#}"));
+            *job.phase.lock().unwrap() = JobPhase::Failed;
+        }
+    }
+}
+
+/// Fill-then-assemble (see the module docs for why this split keeps the
+/// served bytes identical to a direct sweep).
+fn execute_job(state: &ServerState, job: &JobState) -> Result<()> {
+    let store = CellStore::open(&state.cache_dir)?;
+    let ids: Vec<&str> = job.experiments.iter().map(|s| s.as_str()).collect();
+    let expansion = plan::expand(&ids, &job.params)?;
+    let progress = Arc::new(ShardProgress::new(expansion.unique_cells().len()));
+    *job.progress.lock().unwrap() = Some(Arc::clone(&progress));
+    let claims =
+        ClaimSet::new(store.root(), Duration::from_secs(state.opts.claim_ttl_secs));
+    let budget = JobBudget { jobs: state.opts.jobs, sim_jobs: state.opts.sim_jobs };
+    let stats = fill_store_sharded(&store, &expansion, &job.params, budget, &claims, &progress)?;
+    *job.fill.lock().unwrap() = Some(stats);
+    let (_, sweep) =
+        sweep_and_write_budget(&ids, &job.params, &job.dir, job.svg, budget, Some(&store))?;
+    let names: Vec<String> = sweep
+        .files()
+        .into_iter()
+        .map(|path| {
+            path.strip_prefix(&job.dir).unwrap_or(path).to_string_lossy().to_string()
+        })
+        .collect();
+    *job.files.lock().unwrap() = names;
+    Ok(())
+}
+
+fn status_json(job: &JobState, with_cells: bool) -> Json {
+    let phase = *job.phase.lock().unwrap();
+    let fill = *job.fill.lock().unwrap();
+    let (done, simulated, hits) = match fill {
+        // The fill is over: its final stats are the stable answer.
+        Some(stats) => (stats.total, stats.simulated, stats.hits),
+        None => match &*job.progress.lock().unwrap() {
+            Some(progress) => progress.snapshot(),
+            None => (0, 0, 0),
+        },
+    };
+    let mut fields = vec![
+        ("job", Json::str(job.id.as_str())),
+        ("state", Json::str(phase.label())),
+        (
+            "experiments",
+            Json::arr(job.experiments.iter().map(|e| Json::str(e.as_str())).collect()),
+        ),
+        ("machine_fingerprint", Json::str(job.params.machine.fingerprint())),
+        ("cells_total", Json::num(job.cells_total as f64)),
+        ("total", Json::num(job.unique_total as f64)),
+        ("done", Json::num(done as f64)),
+        ("simulated", Json::num(simulated as f64)),
+        ("hits", Json::num(hits as f64)),
+        ("predicted", predicted_json(&job.predicted)),
+    ];
+    if let Some(error) = &*job.error.lock().unwrap() {
+        fields.push(("error", Json::str(error.as_str())));
+    }
+    if phase == JobPhase::Done {
+        fields.push((
+            "files",
+            Json::arr(
+                job.files.lock().unwrap().iter().map(|f| Json::str(f.as_str())).collect(),
+            ),
+        ));
+    }
+    if with_cells {
+        let live: Vec<u8> = match &*job.progress.lock().unwrap() {
+            Some(progress) => {
+                progress.states.iter().map(|s| s.load(Ordering::Acquire)).collect()
+            }
+            None => vec![0; job.cells.len()],
+        };
+        let rows = job
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                Json::obj(vec![
+                    ("experiment", Json::str(c.experiment.as_str())),
+                    ("kernel", Json::str(c.kernel.as_str())),
+                    ("scenario", Json::str(c.scenario.as_str())),
+                    ("cache", Json::str(c.cache.as_str())),
+                    ("key", Json::str(c.key_hex.as_str())),
+                    ("predicted", Json::str(job.predicted.per_cell[i])),
+                    (
+                        "state",
+                        Json::str(ShardProgress::state_label(
+                            live.get(i).copied().unwrap_or(0),
+                        )),
+                    ),
+                ])
+            })
+            .collect();
+        fields.push(("cells", Json::arr(rows)));
+    }
+    ok_response("status", fields)
+}
+
+/// Serve one report file of a done job. The file name must match the
+/// job's recorded output list exactly — an allowlist, so traversal
+/// attempts (`../`, absolute paths) never name a fetchable file.
+fn fetch_json(job: &JobState, file: &str) -> Result<Json> {
+    ensure!(
+        *job.phase.lock().unwrap() == JobPhase::Done,
+        "job {} is not done (fetch needs state=done)",
+        job.id
+    );
+    ensure!(
+        job.files.lock().unwrap().iter().any(|f| f == file),
+        "job {} has no file '{file}' (see status.files)",
+        job.id
+    );
+    let content = read_to_string(&job.dir.join(file))?;
+    Ok(ok_response(
+        "fetch",
+        vec![
+            ("job", Json::str(job.id.as_str())),
+            ("file", Json::str(file)),
+            ("content", Json::str(content)),
+        ],
+    ))
+}

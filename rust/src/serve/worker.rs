@@ -1,0 +1,345 @@
+//! Store-coordinated sharded execution: fill the persistent cell store
+//! with every unique cell of a plan, claiming cells through
+//! [`ClaimSet`] so any number of workers — threads here, or whole
+//! daemons sharing the cache directory — simulate each cell exactly
+//! once.
+//!
+//! The fill deliberately produces **no report output**. Byte-identity
+//! with a direct `sweep` is achieved by construction: after
+//! [`fill_store_sharded`] returns, every unique cell has a valid store
+//! record, so a plain warm
+//! [`sweep_and_write_budget`](crate::coordinator::runner::sweep_and_write_budget)
+//! over the same store serves 100% hits — and a warm sweep is already
+//! pinned byte-identical to a cold one (the store is invisible in
+//! results). Sharding therefore never touches assembly order, manifest
+//! content, or report bytes.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::plan::{default_jobs, job_split, Expansion, JobBudget};
+use crate::coordinator::store::{CellStore, Lookup};
+use crate::harness::experiments::ExperimentParams;
+
+use super::claims::{ClaimOutcome, ClaimSet};
+
+/// Cell not yet resolved (initial state).
+pub const CELL_PENDING: u8 = 0;
+/// Cell claimed by a peer; this worker set is polling the store for it.
+pub const CELL_CLAIMED: u8 = 1;
+/// Cell served from the shared store (a prior run's record, or a peer's
+/// completion landing mid-fill).
+pub const CELL_HIT: u8 = 2;
+/// Cell simulated by this worker set.
+pub const CELL_SIMULATED: u8 = 3;
+
+/// How long a worker sleeps between store polls while every remaining
+/// cell is held by a peer.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Live progress of one sharded fill, indexed like
+/// [`Expansion::unique_cells`] — shared with the daemon's status
+/// endpoint, which reads it lock-free while workers run.
+pub struct ShardProgress {
+    /// One `CELL_*` state per unique cell, in plan order.
+    pub states: Vec<AtomicU8>,
+    /// Cells resolved so far (hit or simulated).
+    pub done: AtomicUsize,
+    /// Cells this worker set simulated.
+    pub simulated: AtomicUsize,
+    /// Cells served from the store.
+    pub hits: AtomicUsize,
+}
+
+impl ShardProgress {
+    /// Fresh all-pending progress for a plan with `cells` unique cells.
+    pub fn new(cells: usize) -> ShardProgress {
+        ShardProgress {
+            states: (0..cells).map(|_| AtomicU8::new(CELL_PENDING)).collect(),
+            done: AtomicUsize::new(0),
+            simulated: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// `(done, simulated, hits)` right now.
+    pub fn snapshot(&self) -> (usize, usize, usize) {
+        (
+            self.done.load(Ordering::Acquire),
+            self.simulated.load(Ordering::Acquire),
+            self.hits.load(Ordering::Acquire),
+        )
+    }
+
+    /// Human label for a `CELL_*` state byte.
+    pub fn state_label(state: u8) -> &'static str {
+        match state {
+            CELL_CLAIMED => "claimed",
+            CELL_HIT => "hit",
+            CELL_SIMULATED => "simulated",
+            _ => "pending",
+        }
+    }
+
+    /// Atomically move cell `idx` from pending/claimed into a resolved
+    /// state, updating the counters. Returns false when another worker
+    /// resolved it first (the counters are then already theirs).
+    fn resolve(&self, idx: usize, state: u8) -> bool {
+        loop {
+            let current = self.states[idx].load(Ordering::Acquire);
+            if current == CELL_HIT || current == CELL_SIMULATED {
+                return false;
+            }
+            if self.states[idx]
+                .compare_exchange(current, state, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.done.fetch_add(1, Ordering::AcqRel);
+                match state {
+                    CELL_SIMULATED => self.simulated.fetch_add(1, Ordering::AcqRel),
+                    _ => self.hits.fetch_add(1, Ordering::AcqRel),
+                };
+                return true;
+            }
+        }
+    }
+}
+
+/// What one sharded fill did, from this worker set's perspective.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Unique cells in the plan.
+    pub total: usize,
+    /// Cells this worker set simulated (and wrote to the store).
+    pub simulated: usize,
+    /// Cells served from the store — prior records or peers' work.
+    pub hits: usize,
+}
+
+/// Resolve every unique cell of `expansion` into `store`, sharding the
+/// work across `budget.jobs` claim-coordinated worker threads (0 =
+/// auto). On return every unique cell has a valid record in the store —
+/// either simulated here, already present, or written by a peer worker
+/// set we waited on.
+///
+/// Unlike the executor's storeless path, a store **write failure is
+/// fatal** here: peers poll the store for claimed cells, so a record
+/// that never lands would wedge them until claim-TTL expiry.
+pub fn fill_store_sharded(
+    store: &CellStore,
+    expansion: &Expansion,
+    params: &ExperimentParams,
+    budget: JobBudget,
+    claims: &ClaimSet,
+    progress: &ShardProgress,
+) -> Result<ShardStats> {
+    let unique = expansion.unique_cells();
+    ensure!(
+        progress.states.len() == unique.len(),
+        "progress sized for {} cells, plan has {}",
+        progress.states.len(),
+        unique.len()
+    );
+    // Pair each unique cell with its planned display identity (the i-th
+    // non-reused plan cell) for the served-record identity check.
+    let idents: Vec<_> = expansion.cells.iter().filter(|c| !c.reused).collect();
+    let total = unique.len();
+    if total == 0 {
+        return Ok(ShardStats::default());
+    }
+    let jobs = if budget.jobs == 0 { default_jobs() } else { budget.jobs };
+    let (workers, sim_jobs) = job_split(jobs, budget.sim_jobs, total);
+    let abort = AtomicBool::new(false);
+    let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let outcome = fill_worker_loop(
+                    store, unique, &idents, params, sim_jobs, claims, progress, &abort,
+                );
+                if let Err(e) = outcome {
+                    let mut slot = first_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    abort.store(true, Ordering::Release);
+                }
+            });
+        }
+    });
+    if let Some(e) = first_error.lock().unwrap().take() {
+        return Err(e);
+    }
+    let (done, simulated, hits) = progress.snapshot();
+    debug_assert_eq!(done, total);
+    Ok(ShardStats { total, simulated, hits })
+}
+
+/// One worker's loop: repeatedly scan the unresolved cells, serving each
+/// from the store when its record is valid, else racing for its claim —
+/// winners simulate and publish, losers poll. Exits when every cell is
+/// resolved or `abort` is raised.
+#[allow(clippy::too_many_arguments)] // internal: the fill's full shared state
+fn fill_worker_loop(
+    store: &CellStore,
+    unique: &[(u64, crate::harness::spec::Cell)],
+    idents: &[&crate::coordinator::plan::CellPlan],
+    params: &ExperimentParams,
+    sim_jobs: usize,
+    claims: &ClaimSet,
+    progress: &ShardProgress,
+    abort: &AtomicBool,
+) -> Result<()> {
+    loop {
+        let mut unresolved = 0usize;
+        let mut progressed = false;
+        for (idx, (key, cell)) in unique.iter().enumerate() {
+            if abort.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            let state = progress.states[idx].load(Ordering::Acquire);
+            if state == CELL_HIT || state == CELL_SIMULATED {
+                continue;
+            }
+            if served_from_store(store, *key, idents[idx]) {
+                progress.resolve(idx, CELL_HIT);
+                progressed = true;
+                continue;
+            }
+            match claims.claim(*key)? {
+                ClaimOutcome::Won => {
+                    // Double-check after winning: the previous holder may
+                    // have published and released between our store probe
+                    // and the claim race (it releases only after its
+                    // record write, so winning the claim makes any peer
+                    // record visible here).
+                    if served_from_store(store, *key, idents[idx]) {
+                        claims.release(*key);
+                        progress.resolve(idx, CELL_HIT);
+                    } else {
+                        match cell.simulate_jobs(params, sim_jobs) {
+                            Ok(m) => {
+                                // Resolve before publishing, so a sibling
+                                // thread observing the fresh record can't
+                                // double-count this cell as its own hit.
+                                progress.resolve(idx, CELL_SIMULATED);
+                                let wrote = store.insert(*key, &m);
+                                claims.release(*key);
+                                wrote?;
+                            }
+                            Err(e) => {
+                                claims.release(*key);
+                                return Err(e);
+                            }
+                        }
+                    }
+                    progressed = true;
+                }
+                ClaimOutcome::Held => {
+                    let _ = progress.states[idx].compare_exchange(
+                        CELL_PENDING,
+                        CELL_CLAIMED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                    unresolved += 1;
+                }
+            }
+        }
+        if unresolved == 0 && progress.done.load(Ordering::Acquire) >= unique.len() {
+            return Ok(());
+        }
+        if !progressed {
+            // Everything left is held by peers: poll for their records.
+            std::thread::sleep(POLL);
+        }
+    }
+}
+
+/// True when the store holds a servable record for `key` whose identity
+/// matches the plan — the same guard the executor applies, so a hash
+/// collision or foreign file is (re)simulated, never served.
+fn served_from_store(store: &CellStore, key: u64, plan: &crate::coordinator::plan::CellPlan) -> bool {
+    match store.lookup(key) {
+        Lookup::Hit(m) => {
+            m.kernel == plan.kernel
+                && m.scenario == plan.scenario
+                && m.cache_state.label() == plan.cache
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan;
+    use crate::testutil::TempDir;
+
+    fn quick() -> ExperimentParams {
+        ExperimentParams { batch: Some(1), ..Default::default() }
+    }
+
+    #[test]
+    fn fill_simulates_each_unique_cell_once() {
+        let dir = TempDir::new("fill-once");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        let expansion = plan::expand(&["f6"], &params).unwrap();
+        let total = expansion.unique_cells().len();
+        assert!(total > 0);
+        let claims = ClaimSet::new(store.root(), Duration::from_secs(600));
+        let progress = ShardProgress::new(total);
+        let stats = fill_store_sharded(
+            &store,
+            &expansion,
+            &params,
+            JobBudget { jobs: 2, sim_jobs: 1 },
+            &claims,
+            &progress,
+        )
+        .unwrap();
+        assert_eq!(stats, ShardStats { total, simulated: total, hits: 0 });
+        for (key, _) in expansion.unique_cells() {
+            assert!(matches!(store.lookup(*key), Lookup::Hit(_)));
+        }
+
+        // A second fill over the warm store simulates nothing.
+        let progress = ShardProgress::new(total);
+        let stats = fill_store_sharded(
+            &store,
+            &expansion,
+            &params,
+            JobBudget { jobs: 2, sim_jobs: 1 },
+            &claims,
+            &progress,
+        )
+        .unwrap();
+        assert_eq!(stats, ShardStats { total, simulated: 0, hits: total });
+    }
+
+    #[test]
+    fn zero_cell_plan_fills_trivially() {
+        let dir = TempDir::new("fill-empty");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        // f1 is the roofline-only figure: no cells.
+        let expansion = plan::expand(&["f1"], &params).unwrap();
+        assert!(expansion.unique_cells().is_empty());
+        let claims = ClaimSet::new(store.root(), Duration::from_secs(600));
+        let progress = ShardProgress::new(0);
+        let stats = fill_store_sharded(
+            &store,
+            &expansion,
+            &params,
+            JobBudget::cells(1),
+            &claims,
+            &progress,
+        )
+        .unwrap();
+        assert_eq!(stats, ShardStats::default());
+    }
+}

@@ -24,13 +24,50 @@ pub fn write_atomic(path: &Path, content: &str) -> Result<()> {
 /// clobbering each other's staging file. The last rename wins, and every
 /// observable state of `path` is some writer's complete content.
 pub fn write_atomic_unique(path: &Path, content: &str) -> Result<()> {
-    static NEXT: AtomicU64 = AtomicU64::new(0);
-    let n = NEXT.fetch_add(1, Ordering::Relaxed);
-    let tmp = path.with_extension(format!("tmp{}-{n}~", std::process::id()));
-    write_via_tmp(path, content, &tmp)
+    write_via_tmp(path, content.as_bytes(), &unique_tmp(path, "tmp"))
 }
 
-fn write_via_tmp(path: &Path, content: &str, tmp: &Path) -> Result<()> {
+/// Byte-oriented [`write_atomic`]: same temp-file + rename protocol for
+/// content that is not UTF-8 text (the artifact tarball).
+pub fn write_atomic_bytes(path: &Path, content: &[u8]) -> Result<()> {
+    write_via_tmp(path, content, &path.with_extension("tmp~"))
+}
+
+/// A staging-file name unique per process and per call, next to `path`.
+fn unique_tmp(path: &Path, prefix: &str) -> std::path::PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    path.with_extension(format!("{prefix}{}-{n}~", std::process::id()))
+}
+
+/// Atomically create `path` with `content`, failing *soft* when it
+/// already exists: the content is staged through a unique temp file
+/// (same naming scheme as [`write_atomic_unique`]) and published with a
+/// hard link, which — unlike rename — refuses to replace an existing
+/// target. Returns `Ok(true)` when this call created the file and
+/// `Ok(false)` when another creator already holds it; any number of
+/// racing creators therefore elect exactly one winner. This is the
+/// claim-file primitive of the serve subsystem's worker sharding
+/// ([`crate::serve::claims`]).
+pub fn create_exclusive(path: &Path, content: &str) -> Result<bool> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let tmp = unique_tmp(path, "lnk");
+    std::fs::write(&tmp, content).with_context(|| format!("writing {}", tmp.display()))?;
+    let outcome = match std::fs::hard_link(&tmp, path) {
+        Ok(()) => Ok(true),
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => {
+            Err(anyhow::Error::new(e).context(format!("claiming {}", path.display())))
+        }
+    };
+    let _ = std::fs::remove_file(&tmp);
+    outcome
+}
+
+fn write_via_tmp(path: &Path, content: &[u8], tmp: &Path) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;

@@ -240,6 +240,52 @@ fn concurrent_store_sharing_executions_stay_consistent() {
 }
 
 #[test]
+fn missing_or_corrupt_index_is_rebuilt_from_the_cell_files() {
+    let cache = TempDir::new("cache-index-rebuild");
+    let params = quick();
+    let store = CellStore::open(cache.path()).unwrap();
+    let out_a = TempDir::new("out-index-a");
+    sweep_and_write_cached(&["f6"], &params, out_a.path(), false, 1, Some(&store)).unwrap();
+    let index_path = cache.path().join("index.json");
+    assert!(index_path.exists());
+
+    // Delete the index outright: reopening rebuilds it by scanning
+    // cells/, persists it, and a warm sweep still hits everything.
+    std::fs::remove_file(&index_path).unwrap();
+    let store = CellStore::open(cache.path()).unwrap();
+    assert!(store.recovered_index(), "a missing index must be recovered");
+    assert!(index_path.exists(), "the rebuilt index must be persisted");
+    let out_b = TempDir::new("out-index-b");
+    let (_, warm) =
+        sweep_and_write_cached(&["f6"], &params, out_b.path(), false, 1, Some(&store)).unwrap();
+    let usage = warm.store.as_ref().unwrap();
+    assert_eq!((usage.hits, usage.simulated), (2, 0), "{usage:?}");
+    assert_eq!(snapshot(out_a.path()), snapshot(out_b.path()));
+
+    // Truncate it mid-document: same recovery, and the rebuilt index
+    // covers every valid record (stats sees both cells).
+    let body = std::fs::read_to_string(&index_path).unwrap();
+    std::fs::write(&index_path, &body[..body.len() / 2]).unwrap();
+    let store = CellStore::open(cache.path()).unwrap();
+    assert!(store.recovered_index(), "a truncated index must be recovered");
+    assert_eq!(store.stats().unwrap().entries, 2);
+
+    // Garbage bytes (valid file, not JSON at all): still recovered, and
+    // the store serves hits as if nothing happened.
+    std::fs::write(&index_path, "!! not json !!").unwrap();
+    let store = CellStore::open(cache.path()).unwrap();
+    assert!(store.recovered_index(), "a corrupt index must be recovered");
+    let out_c = TempDir::new("out-index-c");
+    let (_, again) =
+        sweep_and_write_cached(&["f6"], &params, out_c.path(), false, 1, Some(&store)).unwrap();
+    assert_eq!(again.store.as_ref().unwrap().hits, 2);
+    assert_eq!(snapshot(out_a.path()), snapshot(out_c.path()));
+
+    // An intact index is NOT flagged as recovered.
+    assert!(!CellStore::open(cache.path()).unwrap().recovered_index());
+}
+
+#[test]
 fn cache_is_invisible_versus_uncached_sweep() {
     // A cached sweep's outputs are byte-identical to an uncached one —
     // including when everything is served from disk.

@@ -1,0 +1,311 @@
+//! Integration tests for the sweep service (ISSUE 7 tentpole): wire
+//! protocol round-trips, a real-socket daemon session whose served
+//! reports are byte-identical to a direct `sweep`, warm resubmission
+//! across daemon restarts, and two claim-coordinated worker sets
+//! sharing one cache directory without duplicate simulation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use dlroofline::coordinator::plan::{self, JobBudget};
+use dlroofline::coordinator::runner::sweep_and_write_budget;
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::serve::protocol::roundtrip;
+use dlroofline::serve::{
+    fill_store_sharded, ClaimSet, Request, ServeOptions, Server, ShardProgress, ShardStats,
+    SubmitRequest, PROTOCOL_VERSION,
+};
+use dlroofline::testutil::TempDir;
+use dlroofline::util::json::Json;
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+/// Bind an ephemeral-port daemon over `cache` and run it on a thread.
+fn start_server(cache: &Path, spool: &Path) -> (String, std::thread::JoinHandle<()>) {
+    let opts = ServeOptions { jobs: 2, ..Default::default() };
+    let server = Server::bind("127.0.0.1:0", cache, spool, opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+/// One request over a fresh connection, response parsed.
+fn request(addr: &str, req: &Request) -> Json {
+    let line = roundtrip(addr, &req.to_line(), TIMEOUT).unwrap();
+    Json::parse(&line).unwrap()
+}
+
+fn field_str(doc: &Json, key: &str) -> String {
+    doc.expect(key).unwrap().as_str().unwrap().to_string()
+}
+
+fn field_bool(doc: &Json, key: &str) -> bool {
+    doc.expect(key).unwrap().as_bool().unwrap()
+}
+
+fn field_usize(doc: &Json, key: &str) -> usize {
+    doc.expect(key).unwrap().as_usize().unwrap()
+}
+
+/// Poll `status` until the job finishes; returns the final status doc.
+fn wait_done(addr: &str, job: &str) -> Json {
+    for _ in 0..2400 {
+        let status = request(addr, &Request::Status { job: job.to_string(), cells: false });
+        match field_str(&status, "state").as_str() {
+            "done" => return status,
+            "failed" => panic!("job failed: {}", status.to_string_compact()),
+            _ => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+    panic!("job {job} did not finish within the poll budget");
+}
+
+/// Every regular file under `dir` (recursive), relative path → bytes.
+fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn every_request_kind_round_trips_through_the_wire_format() {
+    let requests = vec![
+        Request::Ping,
+        Request::List,
+        Request::Shutdown,
+        Request::Submit(SubmitRequest {
+            experiments: vec!["f3".into(), "f6".into()],
+            machine: Some("xeon_6248".into()),
+            batch: Some(4),
+            full_size: true,
+            svg: true,
+        }),
+        Request::Submit(SubmitRequest {
+            experiments: vec!["f1".into()],
+            ..Default::default()
+        }),
+        Request::Status { job: "job-abc".into(), cells: true },
+        Request::Status { job: "job-abc".into(), cells: false },
+        Request::Fetch { job: "job-abc".into(), file: "run.json".into() },
+    ];
+    for req in requests {
+        let line = req.to_line();
+        assert!(!line.contains('\n'), "wire lines must be single-line: {line}");
+        assert_eq!(Request::parse_line(&line).unwrap(), req, "round-trip of {line}");
+    }
+}
+
+#[test]
+fn malformed_requests_parse_to_errors_not_panics() {
+    for (line, needle) in [
+        ("", "malformed"),
+        ("not json", "malformed"),
+        ("[1,2]", "malformed"),
+        ("{}", "malformed"),
+        ("{\"op\":7}", "malformed"),
+        ("{\"op\":\"warp\"}", "unknown op"),
+        ("{\"op\":\"submit\"}", "experiments"),
+        ("{\"op\":\"submit\",\"experiments\":[]}", "empty"),
+        ("{\"op\":\"submit\",\"experiments\":\"f1\"}", "experiments"),
+        ("{\"op\":\"submit\",\"experiments\":[1]}", "experiments"),
+        ("{\"op\":\"submit\",\"experiments\":[\"f1\"],\"batch\":\"x\"}", "batch"),
+        ("{\"op\":\"status\"}", "job"),
+        ("{\"op\":\"status\",\"job\":7}", "job"),
+        ("{\"op\":\"fetch\",\"job\":\"j\"}", "file"),
+    ] {
+        let err = format!("{:#}", Request::parse_line(line).unwrap_err());
+        assert!(
+            err.to_lowercase().contains(needle),
+            "expected {needle:?} in the error for {line:?}, got: {err}"
+        );
+    }
+}
+
+#[test]
+fn served_sweep_is_byte_identical_to_a_direct_sweep() {
+    let cache = TempDir::new("serve-cache");
+    let spool = TempDir::new("serve-spool");
+    let (addr, handle) = start_server(cache.path(), spool.path());
+
+    let pong = request(&addr, &Request::Ping);
+    assert!(field_bool(&pong, "ok"));
+    assert_eq!(field_usize(&pong, "version") as u64, PROTOCOL_VERSION);
+
+    // Unknown jobs and malformed lines answer in-band, never drop.
+    let missing = request(&addr, &Request::Status { job: "job-nope".into(), cells: false });
+    assert!(!field_bool(&missing, "ok"));
+    assert!(field_str(&missing, "error").contains("unknown job"));
+    let garbled = Json::parse(&roundtrip(&addr, "][ nonsense", TIMEOUT).unwrap()).unwrap();
+    assert!(!field_bool(&garbled, "ok"));
+
+    // Submit f6 cold: both unique cells are predicted misses.
+    let submit =
+        SubmitRequest { experiments: vec!["f6".into()], batch: Some(1), ..Default::default() };
+    let accepted = request(&addr, &Request::Submit(submit.clone()));
+    assert!(field_bool(&accepted, "ok"), "{}", accepted.to_string_compact());
+    assert!(field_bool(&accepted, "created"));
+    assert_eq!(field_usize(&accepted, "unique"), 2);
+    let predicted = accepted.expect("predicted").unwrap();
+    assert_eq!(field_usize(predicted, "miss"), 2);
+    let job = field_str(&accepted, "job");
+
+    let done = wait_done(&addr, &job);
+    assert_eq!(field_usize(&done, "simulated"), 2, "cold job must simulate its cells");
+    assert_eq!(field_usize(&done, "hits"), 0);
+    let files: Vec<String> = done
+        .expect("files")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|f| f.as_str().unwrap().to_string())
+        .collect();
+    assert!(files.iter().any(|f| f == "run.json"), "{files:?}");
+
+    // Per-cell detail: identities, predicted fates and live states.
+    let detail = request(&addr, &Request::Status { job: job.clone(), cells: true });
+    let cells = detail.expect("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 2);
+    for cell in cells {
+        assert_eq!(field_str(cell, "predicted"), "miss");
+        assert_eq!(field_str(cell, "state"), "simulated");
+        assert_eq!(field_str(cell, "experiment"), "f6");
+    }
+
+    // Every served file is byte-identical to a direct storeless
+    // `sweep --jobs 1` of the same plan.
+    let direct = TempDir::new("serve-direct");
+    sweep_and_write_budget(&["f6"], &quick(), direct.path(), false, JobBudget::cells(1), None)
+        .unwrap();
+    for file in &files {
+        let fetched = request(&addr, &Request::Fetch { job: job.clone(), file: file.clone() });
+        assert!(field_bool(&fetched, "ok"), "{}", fetched.to_string_compact());
+        let served = field_str(&fetched, "content");
+        let direct_text = std::fs::read_to_string(direct.path().join(file)).unwrap();
+        assert_eq!(served, direct_text, "'{file}' served over the socket differs");
+    }
+
+    // Fetch is whitelist-only: traversal names are unknown files.
+    let evil =
+        request(&addr, &Request::Fetch { job: job.clone(), file: "../../etc/passwd".into() });
+    assert!(!field_bool(&evil, "ok"));
+
+    // Idempotent resubmission: same plan → same job, not re-created.
+    let again = request(&addr, &Request::Submit(submit.clone()));
+    assert!(!field_bool(&again, "created"));
+    assert_eq!(field_str(&again, "job"), job);
+    let list = request(&addr, &Request::List);
+    assert_eq!(list.expect("jobs").unwrap().as_arr().unwrap().len(), 1);
+
+    let bye = request(&addr, &Request::Shutdown);
+    assert!(field_bool(&bye, "ok"));
+    handle.join().unwrap();
+
+    // A second daemon sharing the cache dir: resubmission is warm —
+    // everything predicted hit, zero simulated, same job id, same bytes.
+    let spool2 = TempDir::new("serve-spool2");
+    let (addr2, handle2) = start_server(cache.path(), spool2.path());
+    let warm = request(&addr2, &Request::Submit(submit));
+    assert!(field_bool(&warm, "created"), "a restarted daemon starts with no jobs");
+    assert_eq!(field_usize(warm.expect("predicted").unwrap(), "hit"), 2);
+    let job2 = field_str(&warm, "job");
+    assert_eq!(job2, job, "plan-hash job ids must be stable across daemons");
+    let done2 = wait_done(&addr2, &job2);
+    assert_eq!(field_usize(&done2, "simulated"), 0, "warm job must simulate nothing");
+    assert_eq!(field_usize(&done2, "hits"), 2);
+    let fetched = request(&addr2, &Request::Fetch { job: job2, file: "run.json".into() });
+    assert_eq!(
+        field_str(&fetched, "content"),
+        std::fs::read_to_string(direct.path().join("run.json")).unwrap(),
+        "warm served run.json drifted"
+    );
+    request(&addr2, &Request::Shutdown);
+    handle2.join().unwrap();
+}
+
+#[test]
+fn two_worker_sets_share_one_cache_dir_without_duplicate_simulation() {
+    let cache = TempDir::new("serve-shard-two");
+    let params = quick();
+    let expansion = plan::expand(&["f3", "f6"], &params).unwrap();
+    let unique = expansion.unique_cells().len();
+    assert!(unique >= 5);
+
+    // Two independent worker sets — separate store handles, claim sets
+    // and progress, as two daemons sharing one cache dir would run.
+    let stats: Vec<ShardStats> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let params = &params;
+                let expansion = &expansion;
+                let cache = cache.path();
+                scope.spawn(move || {
+                    let store = CellStore::open(cache).unwrap();
+                    let claims = ClaimSet::new(store.root(), Duration::from_secs(600));
+                    let progress = ShardProgress::new(expansion.unique_cells().len());
+                    fill_store_sharded(
+                        &store,
+                        expansion,
+                        params,
+                        JobBudget { jobs: 2, sim_jobs: 1 },
+                        &claims,
+                        &progress,
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for s in &stats {
+        assert_eq!(s.total, unique);
+        assert_eq!(s.simulated + s.hits, unique, "{s:?}");
+    }
+    let simulated: usize = stats.iter().map(|s| s.simulated).sum();
+    assert_eq!(simulated, unique, "cells must be simulated exactly once across sets: {stats:?}");
+
+    // The claim-coordinated fill left a store that a plain warm sweep
+    // serves with zero simulations — byte-identical to a direct
+    // storeless `--jobs 1` run of the same plan.
+    let direct = TempDir::new("shard-direct");
+    sweep_and_write_budget(
+        &["f3", "f6"],
+        &params,
+        direct.path(),
+        false,
+        JobBudget::cells(1),
+        None,
+    )
+    .unwrap();
+    let warm = TempDir::new("shard-warm");
+    let store = CellStore::open(cache.path()).unwrap();
+    let (_, sweep) = sweep_and_write_budget(
+        &["f3", "f6"],
+        &params,
+        warm.path(),
+        false,
+        JobBudget::cells(1),
+        Some(&store),
+    )
+    .unwrap();
+    let usage = sweep.store.as_ref().unwrap();
+    assert_eq!(usage.simulated, 0, "{usage:?}");
+    assert_eq!(snapshot(direct.path()), snapshot(warm.path()));
+}
