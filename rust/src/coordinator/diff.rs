@@ -103,7 +103,22 @@ fn identity(c: &CellRecord) -> String {
     format!("{}/{}/{}/{}", c.experiment, c.kernel, c.scenario, c.cache)
 }
 
+/// Relative drift `|a − b| / max(|a|, |b|)`, hardened so it never
+/// returns NaN: NaN would propagate through the division and then
+/// silently vanish in [`CellDrift::max_rel`]'s `f64::max` (which keeps
+/// the non-NaN operand), letting a corrupt manifest pass any gate. A
+/// one-sided NaN or a finite-vs-infinite mismatch reads as maximal
+/// drift; two identically non-finite sides read as no drift.
 fn rel_drift(a: f64, b: f64) -> f64 {
+    if a.is_nan() && b.is_nan() {
+        return 0.0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return f64::INFINITY;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return if a == b { 0.0 } else { f64::INFINITY };
+    }
     let scale = a.abs().max(b.abs());
     if scale == 0.0 {
         0.0
@@ -368,7 +383,11 @@ pub fn diff_bench_docs(
         };
         let a_mean = mean(entry_a, "A")?;
         let b_mean = mean(entry_b, "B")?;
-        let change = if a_mean > 0.0 {
+        // A NaN mean (hand-edited or foreign artifact) must fail the
+        // gate, not fall through the comparisons below as "no change".
+        let change = if a_mean.is_nan() || b_mean.is_nan() {
+            f64::INFINITY
+        } else if a_mean > 0.0 {
             (b_mean - a_mean) / a_mean
         } else if b_mean > 0.0 {
             f64::INFINITY
@@ -519,6 +538,58 @@ mod tests {
         assert_eq!(rel_drift(1.0, 0.0), 1.0);
         assert_eq!(rel_drift(1.0, 2.0), rel_drift(2.0, 1.0));
         assert!((rel_drift(99.0, 100.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_drift_never_returns_nan() {
+        // Zero baseline and both-zero.
+        assert_eq!(rel_drift(0.0, 5.0), 1.0);
+        assert_eq!(rel_drift(5.0, 0.0), 1.0);
+        assert_eq!(rel_drift(0.0, 0.0), 0.0);
+        assert_eq!(rel_drift(0.0, -3.0), 1.0);
+        // One-sided NaN reads as maximal drift (f64::max would have
+        // silently dropped a NaN rel).
+        assert_eq!(rel_drift(f64::NAN, 1.0), f64::INFINITY);
+        assert_eq!(rel_drift(1.0, f64::NAN), f64::INFINITY);
+        assert_eq!(rel_drift(f64::NAN, 0.0), f64::INFINITY);
+        // Two identically broken sides carry no drift *between* them.
+        assert_eq!(rel_drift(f64::NAN, f64::NAN), 0.0);
+        assert_eq!(rel_drift(f64::INFINITY, f64::INFINITY), 0.0);
+        // A finite-vs-infinite mismatch is maximal drift, not NaN.
+        assert_eq!(rel_drift(f64::INFINITY, 1.0), f64::INFINITY);
+        assert_eq!(rel_drift(1.0, f64::NEG_INFINITY), f64::INFINITY);
+        assert_eq!(rel_drift(f64::INFINITY, f64::NEG_INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn nan_runtime_fails_the_diff_gate() {
+        let a = manifest(1);
+        let mut b = manifest(1);
+        b.cells[0].runtime_seconds = f64::NAN;
+        let report = diff_manifests(&a, &b);
+        assert_eq!(report.max_rel(), f64::INFINITY);
+        assert!(report.exceeds(f64::MAX), "a NaN metric must gate at any tolerance");
+    }
+
+    #[test]
+    fn bench_diff_nan_mean_fails_gate() {
+        let a = bench_doc("grp", false, &[("x", 1.0)]);
+        let mut b = bench_doc("grp", false, &[("x", 1.0)]);
+        // Our writer never emits NaN (it serializes as null), but a
+        // foreign or hand-edited artifact can carry one.
+        if let Json::Obj(doc) = &mut b {
+            if let Some(Json::Obj(benches)) = doc.get_mut("benches") {
+                if let Some(Json::Obj(entry)) = benches.get_mut("x") {
+                    entry.insert("mean_s".into(), Json::Num(f64::NAN));
+                }
+            }
+        }
+        let report = diff_bench_docs(&a, &b, 0.2, &BTreeMap::new()).unwrap();
+        assert_eq!(report.cases[0].change, f64::INFINITY);
+        assert!(report.regressed(), "a NaN mean must fail the gate");
+        // Both sides NaN is still a gate failure: the metric is unusable.
+        let report = diff_bench_docs(&b, &b, 0.2, &BTreeMap::new()).unwrap();
+        assert!(report.regressed());
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Replayable corpus files.
+//!
+//! A corpus file records one failing case in its *concrete* form — the
+//! exact geometry, trace, kernel spec, or document that diverged — plus
+//! the seed that produced it and the failure message. Replaying
+//! (`dlroofline fuzz replay <file>`) deserializes the case and re-runs
+//! the same check the fuzz loop used; it does not re-generate from the
+//! seed, so corpus files keep reproducing even after the generators
+//! evolve.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fuzz::gen::FuzzCase;
+use crate::util::hash::hex64;
+use crate::util::json::Json;
+
+/// Corpus file schema version.
+pub const CORPUS_SCHEMA_VERSION: u64 = 1;
+
+/// One failing case, as written to / read from the corpus directory.
+#[derive(Clone, Debug)]
+pub struct CorpusFile {
+    /// The per-case seed that generated the (pre-shrink) failure.
+    pub seed: u64,
+    /// The minimized failing case, in concrete form.
+    pub case: FuzzCase,
+    /// The divergence message observed when the case was written.
+    pub failure: String,
+}
+
+impl CorpusFile {
+    /// Serialize to the corpus document form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(CORPUS_SCHEMA_VERSION as f64)),
+            ("kind", Json::str(self.case.kind())),
+            // u64 seeds don't fit f64 exactly; store as a decimal string.
+            ("seed", Json::str(self.seed.to_string())),
+            ("case", self.case.to_json()),
+            ("failure", Json::str(self.failure.as_str())),
+        ])
+    }
+
+    /// Parse a corpus document.
+    pub fn from_json(v: &Json) -> Result<CorpusFile> {
+        let version = v.expect("schema_version")?.as_f64()?;
+        if version != CORPUS_SCHEMA_VERSION as f64 {
+            bail!("unsupported corpus schema version {version}");
+        }
+        let kind = v.expect("kind")?.as_str()?;
+        let seed: u64 = v
+            .expect("seed")?
+            .as_str()?
+            .parse()
+            .context("corpus 'seed' must be a decimal u64 string")?;
+        Ok(CorpusFile {
+            seed,
+            case: FuzzCase::from_json(kind, v.expect("case")?)?,
+            failure: v.expect("failure")?.as_str()?.to_string(),
+        })
+    }
+
+    /// File name this case is stored under: `fuzz-<kind>-<seed hex>.json`.
+    pub fn file_name(&self) -> String {
+        format!("fuzz-{}-{}.json", self.case.kind(), hex64(self.seed))
+    }
+
+    /// Write into `dir` (created if missing); returns the file path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating corpus dir {}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing corpus file {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load a corpus file from disk.
+    pub fn load(path: &Path) -> Result<CorpusFile> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading corpus file {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("parsing corpus file {}", path.display()))?;
+        Self::from_json(&doc)
+            .with_context(|| format!("decoding corpus file {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn corpus_files_roundtrip_through_disk() {
+        let dir = TempDir::new("fuzz-corpus");
+        let mut rng = Prng::new(3);
+        for _ in 0..8 {
+            let case = FuzzCase::generate(rng.next_u64());
+            let file = CorpusFile {
+                seed: rng.next_u64(),
+                case: case.clone(),
+                failure: "stats diverged: l1 hits 3 vs 4".into(),
+            };
+            let path = file.write(dir.path()).unwrap();
+            assert!(path.file_name().unwrap().to_str().unwrap().starts_with("fuzz-"));
+            let back = CorpusFile::load(&path).unwrap();
+            assert_eq!(back.case, case);
+            assert_eq!(back.seed, file.seed);
+            assert_eq!(back.failure, file.failure);
+        }
+    }
+
+    #[test]
+    fn rejects_future_schema_and_bad_seed() {
+        let file = CorpusFile {
+            seed: u64::MAX, // deliberately above 2^53: must survive exactly
+            case: FuzzCase::generate(1),
+            failure: "x".into(),
+        };
+        let doc = file.to_json();
+        let back = CorpusFile::from_json(&doc).unwrap();
+        assert_eq!(back.seed, u64::MAX);
+
+        let mut obj = match doc {
+            Json::Obj(map) => map,
+            _ => unreachable!(),
+        };
+        obj.insert("schema_version".into(), Json::num(99.0));
+        assert!(CorpusFile::from_json(&Json::Obj(obj)).is_err());
+    }
+}

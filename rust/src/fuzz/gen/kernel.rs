@@ -1,0 +1,398 @@
+//! Generator for the measurement-level differential target: small
+//! kernel specs × randomized scenarios beyond the six presets.
+//!
+//! A [`KernelCase`] pins the whole measurement pipeline — allocation,
+//! overhead calibration, cache protocol, phased runtime estimate — not
+//! just raw traffic, by demanding byte-identical serialized
+//! [`KernelMeasurement`](crate::harness::measure::KernelMeasurement)s
+//! from all three engines. Shapes are kept deliberately small (tens to
+//! hundreds of KiB of footprint) so a fuzz session can afford hundreds
+//! of full pipeline runs.
+
+use anyhow::{bail, Result};
+
+use crate::harness::cache_state::CacheState;
+use crate::harness::scenario::{PlacementSpec, ScenarioSpec, ThreadSpec};
+use crate::kernels::gelu::{EltwiseShape, GeluNchw};
+use crate::kernels::inner_product::InnerProduct;
+use crate::kernels::layernorm::LayerNorm;
+use crate::kernels::pooling::{AvgPoolNchw, PoolShape};
+use crate::kernels::reduction::SumReduction;
+use crate::kernels::KernelModel;
+use crate::sim::numa::MemPolicy;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::u64_field;
+
+/// The generated machine has 2 sockets; every node index must stay
+/// below this (scenario validation rejects out-of-range nodes).
+const NODES: usize = 2;
+/// Thread cap — well under one socket's 20 cores, so Bind/Unbound
+/// placements always validate, while still exercising multi-thread
+/// partitioning and both NUMA nodes under SpreadAll.
+const MAX_THREADS: usize = 8;
+
+/// A kernel spec drawn from the cheap model families. Conv families are
+/// left to the exhaustive preset grid in `tests/sim_parity.rs` — one
+/// conv measurement costs more than an entire fuzz session budget-wise.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelFamily {
+    /// `SumReduction` over `n` floats.
+    Reduction {
+        /// Element count.
+        n: usize,
+    },
+    /// `InnerProduct` (M×K · K×N).
+    InnerProduct {
+        /// Rows of A.
+        m: usize,
+        /// Shared dimension.
+        k: usize,
+        /// Columns of B.
+        n: usize,
+    },
+    /// `GeluNchw` over an arbitrary small activation tensor.
+    Gelu {
+        /// Batch.
+        n: usize,
+        /// Channels.
+        c: usize,
+        /// Height.
+        h: usize,
+        /// Width.
+        w: usize,
+    },
+    /// `LayerNorm` over `rows` × `hidden`.
+    LayerNorm {
+        /// Row count.
+        rows: usize,
+        /// Hidden dimension.
+        hidden: usize,
+    },
+    /// `AvgPoolNchw` over a small input plane.
+    AvgPool {
+        /// Channels.
+        c: usize,
+        /// Input height.
+        ih: usize,
+        /// Input width.
+        iw: usize,
+        /// Window size.
+        kernel: usize,
+        /// Window stride.
+        stride: usize,
+    },
+}
+
+impl KernelFamily {
+    /// Instantiate the kernel model.
+    pub fn build(&self) -> Box<dyn KernelModel> {
+        match *self {
+            KernelFamily::Reduction { n } => Box::new(SumReduction::new(n)),
+            KernelFamily::InnerProduct { m, k, n } => Box::new(InnerProduct::new(m, k, n)),
+            KernelFamily::Gelu { n, c, h, w } => {
+                Box::new(GeluNchw::new(EltwiseShape { n, c, h, w }))
+            }
+            KernelFamily::LayerNorm { rows, hidden } => Box::new(LayerNorm::new(rows, hidden)),
+            KernelFamily::AvgPool { c, ih, iw, kernel, stride } => Box::new(AvgPoolNchw::new(
+                PoolShape { n: 1, c, ih, iw, kernel, stride },
+            )),
+        }
+    }
+
+    fn generate(rng: &mut Prng) -> KernelFamily {
+        match rng.range(0, 5) {
+            0 => KernelFamily::Reduction { n: rng.range(1024, 65537) },
+            1 => KernelFamily::InnerProduct {
+                m: rng.range(8, 97),
+                k: rng.range(8, 97),
+                n: rng.range(8, 97),
+            },
+            2 => KernelFamily::Gelu {
+                n: 1,
+                c: rng.range(4, 33),
+                h: rng.range(4, 33),
+                w: rng.range(4, 33),
+            },
+            3 => KernelFamily::LayerNorm { rows: rng.range(8, 129), hidden: rng.range(32, 513) },
+            _ => {
+                let kernel = rng.range(2, 4);
+                KernelFamily::AvgPool {
+                    c: rng.range(2, 17),
+                    ih: rng.range(kernel + 4, 41),
+                    iw: rng.range(kernel + 4, 41),
+                    kernel,
+                    stride: rng.range(1, 3),
+                }
+            }
+        }
+    }
+
+    /// Clamp every dimension back into a valid, affordable shape.
+    pub fn sanitize(&mut self) {
+        match self {
+            KernelFamily::Reduction { n } => *n = (*n).clamp(1, 1 << 20),
+            KernelFamily::InnerProduct { m, k, n } => {
+                *m = (*m).clamp(1, 256);
+                *k = (*k).clamp(1, 256);
+                *n = (*n).clamp(1, 256);
+            }
+            KernelFamily::Gelu { n, c, h, w } => {
+                *n = (*n).clamp(1, 4);
+                *c = (*c).clamp(1, 64);
+                *h = (*h).clamp(1, 64);
+                *w = (*w).clamp(1, 64);
+            }
+            KernelFamily::LayerNorm { rows, hidden } => {
+                *rows = (*rows).clamp(1, 512);
+                *hidden = (*hidden).clamp(1, 1024);
+            }
+            KernelFamily::AvgPool { c, ih, iw, kernel, stride } => {
+                *kernel = (*kernel).clamp(1, 7);
+                *stride = (*stride).clamp(1, 4);
+                *c = (*c).clamp(1, 32);
+                *ih = (*ih).clamp(*kernel, 64);
+                *iw = (*iw).clamp(*kernel, 64);
+            }
+        }
+    }
+
+    /// Corpus form.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            KernelFamily::Reduction { n } => Json::obj(vec![
+                ("family", Json::str("reduction")),
+                ("n", Json::num(n as f64)),
+            ]),
+            KernelFamily::InnerProduct { m, k, n } => Json::obj(vec![
+                ("family", Json::str("inner_product")),
+                ("m", Json::num(m as f64)),
+                ("k", Json::num(k as f64)),
+                ("n", Json::num(n as f64)),
+            ]),
+            KernelFamily::Gelu { n, c, h, w } => Json::obj(vec![
+                ("family", Json::str("gelu")),
+                ("n", Json::num(n as f64)),
+                ("c", Json::num(c as f64)),
+                ("h", Json::num(h as f64)),
+                ("w", Json::num(w as f64)),
+            ]),
+            KernelFamily::LayerNorm { rows, hidden } => Json::obj(vec![
+                ("family", Json::str("layernorm")),
+                ("rows", Json::num(rows as f64)),
+                ("hidden", Json::num(hidden as f64)),
+            ]),
+            KernelFamily::AvgPool { c, ih, iw, kernel, stride } => Json::obj(vec![
+                ("family", Json::str("avgpool")),
+                ("c", Json::num(c as f64)),
+                ("ih", Json::num(ih as f64)),
+                ("iw", Json::num(iw as f64)),
+                ("kernel", Json::num(kernel as f64)),
+                ("stride", Json::num(stride as f64)),
+            ]),
+        }
+    }
+
+    /// Restore from the corpus form (sanitized on load).
+    pub fn from_json(v: &Json) -> Result<KernelFamily> {
+        let dim = |key: &str| -> Result<usize> { Ok(u64_field(v, key)? as usize) };
+        let mut family = match v.expect("family")?.as_str()? {
+            "reduction" => KernelFamily::Reduction { n: dim("n")? },
+            "inner_product" => {
+                KernelFamily::InnerProduct { m: dim("m")?, k: dim("k")?, n: dim("n")? }
+            }
+            "gelu" => KernelFamily::Gelu { n: dim("n")?, c: dim("c")?, h: dim("h")?, w: dim("w")? },
+            "layernorm" => KernelFamily::LayerNorm { rows: dim("rows")?, hidden: dim("hidden")? },
+            "avgpool" => KernelFamily::AvgPool {
+                c: dim("c")?,
+                ih: dim("ih")?,
+                iw: dim("iw")?,
+                kernel: dim("kernel")?,
+                stride: dim("stride")?,
+            },
+            other => bail!("unknown kernel family '{other}'"),
+        };
+        family.sanitize();
+        Ok(family)
+    }
+}
+
+/// A randomized scenario: the fuzzer explores the full threads ×
+/// placement × mem-policy cube, not just the six shipped presets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioCase {
+    /// Thread count (≤ [`MAX_THREADS`]).
+    pub threads: usize,
+    /// Placement spec.
+    pub placement: PlacementSpec,
+    /// Memory policy.
+    pub mem: MemPolicy,
+    /// Cache protocol.
+    pub cache: CacheState,
+}
+
+impl ScenarioCase {
+    /// Build the harness scenario spec.
+    pub fn spec(&self) -> ScenarioSpec {
+        ScenarioSpec::custom("fuzz", ThreadSpec::Fixed(self.threads), self.placement, self.mem)
+    }
+
+    fn generate(rng: &mut Prng) -> ScenarioCase {
+        let placement = match rng.range(0, 4) {
+            0 => PlacementSpec::Bind(rng.range(0, NODES)),
+            1 => PlacementSpec::SpreadAll,
+            2 => PlacementSpec::Unbound(rng.range(0, NODES)),
+            _ => PlacementSpec::Bind(0),
+        };
+        let mem = match rng.range(0, 3) {
+            0 => MemPolicy::BindNode(rng.range(0, NODES)),
+            1 => MemPolicy::Interleave,
+            _ => MemPolicy::FirstTouch,
+        };
+        let cache = if rng.chance(0.3) { CacheState::Warm } else { CacheState::Cold };
+        ScenarioCase { threads: rng.range(1, MAX_THREADS + 1), placement, mem, cache }
+    }
+
+    /// Clamp thread count and node indices into the generated machine.
+    pub fn sanitize(&mut self) {
+        self.threads = self.threads.clamp(1, MAX_THREADS);
+        match &mut self.placement {
+            PlacementSpec::Bind(n) | PlacementSpec::Unbound(n) => *n = (*n).min(NODES - 1),
+            PlacementSpec::SpreadAll => {}
+        }
+        if let MemPolicy::BindNode(n) = &mut self.mem {
+            *n = (*n).min(NODES - 1);
+        }
+    }
+
+    /// Corpus form.
+    pub fn to_json(&self) -> Json {
+        let (placement, node) = match self.placement {
+            PlacementSpec::Bind(n) => ("bind", n),
+            PlacementSpec::SpreadAll => ("spread_all", 0),
+            PlacementSpec::Unbound(n) => ("unbound", n),
+        };
+        let (mem, mem_node) = match self.mem {
+            MemPolicy::BindNode(n) => ("bind_node", n),
+            MemPolicy::Interleave => ("interleave", 0),
+            MemPolicy::FirstTouch => ("first_touch", 0),
+        };
+        Json::obj(vec![
+            ("threads", Json::num(self.threads as f64)),
+            ("placement", Json::str(placement)),
+            ("placement_node", Json::num(node as f64)),
+            ("mem", Json::str(mem)),
+            ("mem_node", Json::num(mem_node as f64)),
+            ("cache", Json::str(self.cache.label())),
+        ])
+    }
+
+    /// Restore from the corpus form (sanitized on load).
+    pub fn from_json(v: &Json) -> Result<ScenarioCase> {
+        let node = u64_field(v, "placement_node")? as usize;
+        let placement = match v.expect("placement")?.as_str()? {
+            "bind" => PlacementSpec::Bind(node),
+            "spread_all" => PlacementSpec::SpreadAll,
+            "unbound" => PlacementSpec::Unbound(node),
+            other => bail!("unknown placement '{other}'"),
+        };
+        let mem_node = u64_field(v, "mem_node")? as usize;
+        let mem = match v.expect("mem")?.as_str()? {
+            "bind_node" => MemPolicy::BindNode(mem_node),
+            "interleave" => MemPolicy::Interleave,
+            "first_touch" => MemPolicy::FirstTouch,
+            other => bail!("unknown mem policy '{other}'"),
+        };
+        let cache = match v.expect("cache")?.as_str()? {
+            "cold" => CacheState::Cold,
+            "warm" => CacheState::Warm,
+            other => bail!("unknown cache protocol '{other}'"),
+        };
+        let mut case =
+            ScenarioCase { threads: u64_field(v, "threads")? as usize, placement, mem, cache };
+        case.sanitize();
+        Ok(case)
+    }
+}
+
+/// One complete measurement-differential case.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelCase {
+    /// Kernel spec.
+    pub family: KernelFamily,
+    /// Scenario to measure it under.
+    pub scenario: ScenarioCase,
+}
+
+impl KernelCase {
+    /// Draw a complete case.
+    pub fn generate(rng: &mut Prng) -> KernelCase {
+        KernelCase { family: KernelFamily::generate(rng), scenario: ScenarioCase::generate(rng) }
+    }
+
+    /// Re-clamp both halves (used after shrinking mutations).
+    pub fn sanitize(&mut self) {
+        self.family.sanitize();
+        self.scenario.sanitize();
+    }
+
+    /// Corpus form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", self.family.to_json()),
+            ("scenario", self.scenario.to_json()),
+        ])
+    }
+
+    /// Restore from the corpus form.
+    pub fn from_json(v: &Json) -> Result<KernelCase> {
+        Ok(KernelCase {
+            family: KernelFamily::from_json(v.expect("kernel")?)?,
+            scenario: ScenarioCase::from_json(v.expect("scenario")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::machine::MachineConfig;
+
+    #[test]
+    fn generated_scenarios_always_validate() {
+        let config = MachineConfig::xeon_6248();
+        let mut rng = Prng::new(11);
+        for _ in 0..128 {
+            let case = KernelCase::generate(&mut rng);
+            case.scenario.spec().validate(&config).unwrap();
+            let back = KernelCase::from_json(&case.to_json()).unwrap();
+            assert_eq!(back, case);
+        }
+    }
+
+    #[test]
+    fn sanitize_repairs_out_of_range_scenarios() {
+        let mut case = ScenarioCase {
+            threads: 999,
+            placement: PlacementSpec::Unbound(7),
+            mem: MemPolicy::BindNode(7),
+            cache: CacheState::Cold,
+        };
+        case.sanitize();
+        assert_eq!(case.threads, MAX_THREADS);
+        assert_eq!(case.placement, PlacementSpec::Unbound(1));
+        assert_eq!(case.mem, MemPolicy::BindNode(1));
+        case.spec().validate(&MachineConfig::xeon_6248()).unwrap();
+    }
+
+    #[test]
+    fn degenerate_family_dims_stay_buildable() {
+        let mut f = KernelFamily::AvgPool { c: 0, ih: 0, iw: 0, kernel: 0, stride: 0 };
+        f.sanitize();
+        let _ = f.build(); // PoolShape::oh()/ow() must not underflow
+        let mut g = KernelFamily::Reduction { n: 0 };
+        g.sanitize();
+        let _ = g.build();
+    }
+}

@@ -1,0 +1,328 @@
+//! Seeded case generators for the differential fuzzer.
+//!
+//! Every generator draws from a [`Prng`](crate::util::prng::Prng) seeded
+//! with the case seed, so a case is a pure function of its seed: the
+//! same `--seed` always produces the same case stream, and a failing
+//! case can be regenerated (or replayed from its serialized form in the
+//! corpus — see [`crate::fuzz::corpus`]).
+//!
+//! Three case kinds cover the crate's correctness surfaces:
+//!
+//! - [`TraceCase`] (`gen/trace.rs`): arbitrary access traces × cache
+//!   geometries (including degenerate 1-way / single-set / tiny-LLC
+//!   shapes) × placements × page→node maps, run through all three
+//!   simulator engines and compared bit-for-bit.
+//! - [`KernelCase`] (`gen/kernel.rs`): kernel specs × randomized
+//!   [`ScenarioSpec`](crate::harness::scenario::ScenarioSpec)s beyond
+//!   the six presets × cache protocols, compared at the measurement
+//!   level (serialized [`KernelMeasurement`](crate::harness::measure::KernelMeasurement)s
+//!   must be byte-identical) plus cell-store round-trip oracles.
+//! - [`RoundtripCase`] (this module): serialization surfaces — run
+//!   manifests, the deterministic ustar packer, and the serve wire
+//!   protocol — must all round-trip exactly.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::manifest::{CellRecord, FileRecord, RunManifest};
+use crate::roofline::point::LevelBytes;
+use crate::serve::protocol::{Request, SubmitRequest};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+pub mod kernel;
+pub mod trace;
+
+pub use kernel::KernelCase;
+pub use trace::TraceCase;
+
+/// One generated fuzz case of any kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FuzzCase {
+    /// Raw trace differential across the three engines.
+    Trace(TraceCase),
+    /// Measurement-level differential plus store round-trip.
+    Kernel(KernelCase),
+    /// Serialization surface round-trip.
+    Roundtrip(RoundtripCase),
+}
+
+impl FuzzCase {
+    /// Case kind label, as recorded in corpus files.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FuzzCase::Trace(_) => "trace",
+            FuzzCase::Kernel(_) => "kernel",
+            FuzzCase::Roundtrip(_) => "roundtrip",
+        }
+    }
+
+    /// Generate one case from a per-case seed. Kind weights favour the
+    /// trace differential (the widest input space); kernel cases are
+    /// rarer because each one runs the full measurement pipeline five
+    /// times.
+    pub fn generate(case_seed: u64) -> FuzzCase {
+        let mut rng = Prng::new(case_seed);
+        let draw = rng.f64();
+        if draw < 0.45 {
+            FuzzCase::Trace(TraceCase::generate(&mut rng))
+        } else if draw < 0.70 {
+            FuzzCase::Kernel(KernelCase::generate(&mut rng))
+        } else {
+            FuzzCase::Roundtrip(RoundtripCase::generate(&mut rng))
+        }
+    }
+
+    /// Serialize the concrete case (not just its seed) so corpus files
+    /// stay replayable even if the generators later change.
+    pub fn to_json(&self) -> Json {
+        match self {
+            FuzzCase::Trace(c) => c.to_json(),
+            FuzzCase::Kernel(c) => c.to_json(),
+            FuzzCase::Roundtrip(c) => c.to_json(),
+        }
+    }
+
+    /// Restore a case from its corpus form, given the recorded kind.
+    pub fn from_json(kind: &str, v: &Json) -> Result<FuzzCase> {
+        match kind {
+            "trace" => Ok(FuzzCase::Trace(TraceCase::from_json(v)?)),
+            "kernel" => Ok(FuzzCase::Kernel(KernelCase::from_json(v)?)),
+            "roundtrip" => Ok(FuzzCase::Roundtrip(RoundtripCase::from_json(v)?)),
+            other => bail!("unknown fuzz case kind '{other}'"),
+        }
+    }
+}
+
+/// A serialization-surface round-trip case. Each variant pins one
+/// "parse ∘ emit = identity" contract the rest of the system depends on
+/// (cache records, artifacts, and the serve protocol all assume it).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoundtripCase {
+    /// `write_tar` → `read_tar` must return the exact entries, and
+    /// repacking the read entries must be byte-identical.
+    Tar {
+        /// Entries as (name, hex-encoded body).
+        entries: Vec<(String, String)>,
+    },
+    /// `Request::parse_line` ∘ `Request::to_line` must be the identity.
+    Protocol {
+        /// One request wire line.
+        line: String,
+    },
+    /// `RunManifest::from_json` ∘ `to_json` must be the identity, for
+    /// v1 and v2 documents alike.
+    Manifest {
+        /// The manifest document text.
+        doc: String,
+    },
+}
+
+impl RoundtripCase {
+    /// Generate one round-trip case.
+    pub fn generate(rng: &mut Prng) -> RoundtripCase {
+        match rng.range(0, 3) {
+            0 => RoundtripCase::Tar { entries: gen_tar_entries(rng) },
+            1 => RoundtripCase::Protocol { line: gen_request(rng).to_line() },
+            _ => RoundtripCase::Manifest { doc: gen_manifest(rng).to_string_pretty() },
+        }
+    }
+
+    /// Serialize for the corpus.
+    pub fn to_json(&self) -> Json {
+        match self {
+            RoundtripCase::Tar { entries } => Json::obj(vec![
+                ("surface", Json::str("tar")),
+                (
+                    "entries",
+                    Json::arr(
+                        entries
+                            .iter()
+                            .map(|(name, hex)| {
+                                Json::obj(vec![
+                                    ("name", Json::str(name.as_str())),
+                                    ("body_hex", Json::str(hex.as_str())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            RoundtripCase::Protocol { line } => Json::obj(vec![
+                ("surface", Json::str("protocol")),
+                ("line", Json::str(line.as_str())),
+            ]),
+            RoundtripCase::Manifest { doc } => Json::obj(vec![
+                ("surface", Json::str("manifest")),
+                ("doc", Json::str(doc.as_str())),
+            ]),
+        }
+    }
+
+    /// Restore from the corpus form.
+    pub fn from_json(v: &Json) -> Result<RoundtripCase> {
+        let surface = v.expect("surface")?.as_str()?;
+        match surface {
+            "tar" => Ok(RoundtripCase::Tar {
+                entries: v
+                    .expect("entries")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            e.expect("name")?.as_str()?.to_string(),
+                            e.expect("body_hex")?.as_str()?.to_string(),
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "protocol" => Ok(RoundtripCase::Protocol {
+                line: v.expect("line")?.as_str()?.to_string(),
+            }),
+            "manifest" => Ok(RoundtripCase::Manifest {
+                doc: v.expect("doc")?.as_str()?.to_string(),
+            }),
+            other => bail!("unknown roundtrip surface '{other}'"),
+        }
+    }
+}
+
+/// A lowercase alphanumeric identifier, 3–10 chars.
+pub fn word(rng: &mut Prng) -> String {
+    const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+    let len = rng.range(3, 11);
+    (0..len).map(|_| CHARS[rng.range(0, CHARS.len())] as char).collect()
+}
+
+/// Hex-encode a byte body for corpus storage.
+pub fn hex_bytes(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len() * 2);
+    for b in data {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Decode a corpus hex body.
+pub fn bytes_from_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("odd-length hex body");
+    }
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).context("bad hex byte"))
+        .collect()
+}
+
+/// Parse a JSON number field as an exact non-negative integer.
+pub(crate) fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    let x = v.expect(key)?.as_f64()?;
+    if !(x >= 0.0 && x.fract() == 0.0 && x < 9.0e15) {
+        bail!("field '{key}' must be a non-negative integer, got {x}");
+    }
+    Ok(x as u64)
+}
+
+fn gen_tar_entries(rng: &mut Prng) -> Vec<(String, String)> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut entries = Vec::new();
+    for _ in 0..rng.range(1, 7) {
+        let segments = rng.range(1, 4);
+        let name = (0..segments).map(|_| word(rng)).collect::<Vec<_>>().join("/");
+        if !seen.insert(name.clone()) {
+            continue; // duplicate names are rejected by write_tar by design
+        }
+        // Bias bodies toward tar block boundaries (0, 512, 1024) where
+        // padding bugs would live.
+        let len = match rng.range(0, 5) {
+            0 => 0,
+            1 => 512,
+            2 => 1024,
+            _ => rng.range(1, 600),
+        };
+        let mut body = Vec::with_capacity(len);
+        while body.len() < len {
+            body.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        body.truncate(len);
+        entries.push((name, hex_bytes(&body)));
+    }
+    entries
+}
+
+fn gen_request(rng: &mut Prng) -> Request {
+    match rng.range(0, 6) {
+        0 => Request::Ping,
+        1 => Request::List,
+        2 => Request::Shutdown,
+        3 => {
+            let experiments = (0..rng.range(1, 4)).map(|_| word(rng)).collect();
+            Request::Submit(SubmitRequest {
+                experiments,
+                machine: if rng.chance(0.5) { Some(word(rng)) } else { None },
+                batch: if rng.chance(0.5) { Some(rng.range(1, 64)) } else { None },
+                full_size: rng.chance(0.5),
+                svg: rng.chance(0.5),
+            })
+        }
+        4 => Request::Status { job: word(rng), cells: rng.chance(0.5) },
+        _ => Request::Fetch { job: word(rng), file: word(rng) },
+    }
+}
+
+/// A finite positive float whose text form exercises the shortest
+/// round-trip emitter (mantissa-heavy values, not round numbers).
+fn gen_float(rng: &mut Prng) -> f64 {
+    let scale = [1e-6, 1e-3, 1.0, 1e3, 1e9][rng.range(0, 5)];
+    rng.f64() * scale
+}
+
+fn gen_manifest(rng: &mut Prng) -> RunManifest {
+    let schema_version = if rng.chance(0.3) { 1 } else { 2 };
+    let cells = (0..rng.range(0, 4))
+        .map(|_| CellRecord {
+            experiment: word(rng),
+            kernel: word(rng),
+            scenario: word(rng),
+            cache: if rng.chance(0.5) { "cold".into() } else { "warm".into() },
+            key: format!("{:016x}", rng.next_u64()),
+            reused: rng.chance(0.5),
+            threads: rng.range(1, 41),
+            work_flops: rng.below(1 << 50),
+            traffic_bytes: rng.below(1 << 50),
+            runtime_seconds: gen_float(rng),
+            levels: if schema_version == 2 {
+                Some(LevelBytes {
+                    l1: gen_float(rng),
+                    l2: gen_float(rng),
+                    llc: gen_float(rng),
+                    dram_local: gen_float(rng),
+                    dram_remote: gen_float(rng),
+                })
+            } else {
+                None
+            },
+        })
+        .collect();
+    let files = (0..rng.range(0, 3))
+        .map(|_| FileRecord {
+            path: format!("{}.md", word(rng)),
+            bytes: rng.below(1 << 30),
+            checksum: format!("fnv1a64:{:016x}", rng.next_u64()),
+        })
+        .collect();
+    RunManifest {
+        schema_version,
+        generator: format!("dlroofline {}", word(rng)),
+        machine: Json::obj(vec![
+            ("name", Json::str(word(rng))),
+            ("sockets", Json::num(rng.range(1, 3) as f64)),
+        ]),
+        machine_fingerprint: format!("{:016x}", rng.next_u64()),
+        full_size: rng.chance(0.5),
+        batch: if rng.chance(0.5) { Some(rng.range(1, 129)) } else { None },
+        experiments: (0..rng.range(1, 4)).map(|_| word(rng)).collect(),
+        specials: rng.range(0, 3),
+        cells_skipped: rng.range(0, 3),
+        cells,
+        files,
+    }
+}

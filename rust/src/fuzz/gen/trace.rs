@@ -1,0 +1,521 @@
+//! Generator for the trace-differential target: arbitrary access
+//! traces, cache geometries (including degenerate shapes the presets
+//! never build), NUMA placements, and page→node maps.
+//!
+//! A [`TraceCase`] is fully self-describing — everything needed to
+//! rebuild the [`MemorySystem`](crate::sim::hierarchy::MemorySystem)
+//! and replay the exact access stream lives in the case, so corpus
+//! files survive generator changes. All numeric fields are kept below
+//! 2^53 so they serialize exactly through the f64-backed JSON layer.
+
+use anyhow::{bail, Result};
+
+use crate::sim::cache::CacheConfig;
+use crate::sim::hierarchy::HierarchyConfig;
+use crate::sim::prefetch::PrefetchConfig;
+use crate::sim::trace::{AccessKind, AccessRun, Trace};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::u64_field;
+
+/// Associativity choices drawn by the generator (1 = direct-mapped).
+const WAY_CHOICES: [usize; 5] = [1, 2, 4, 8, 16];
+/// Access-size choices: sub-word, word, vector, line, multi-line.
+const SIZE_CHOICES: [u32; 5] = [1, 4, 8, 64, 256];
+/// Strides worth hitting often: line-aligned, off-by-one-line (split
+/// probes), page-sized (defeats the prefetcher), and backwards.
+const STRIDE_CHOICES: [i64; 9] = [0, 1, 4, 63, 64, 65, -64, 4096, -4096];
+
+/// Upper bound (exclusive) for generated base addresses. Far below the
+/// simulator's 2^38-byte address-space cap and the 2^53 JSON-exactness
+/// cap, with room for `count * stride` on top.
+const BASE_SPAN: u64 = 1 << 32;
+
+/// A cache geometry expressed as sets × ways per level, so the
+/// generator can build shapes the presets never do: direct-mapped L1s,
+/// single-set levels, an LLC smaller than L1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GeometryCase {
+    /// L1 set count.
+    pub l1_sets: usize,
+    /// L1 associativity.
+    pub l1_ways: usize,
+    /// L2 set count.
+    pub l2_sets: usize,
+    /// L2 associativity.
+    pub l2_ways: usize,
+    /// Shared-LLC set count.
+    pub llc_sets: usize,
+    /// Shared-LLC associativity.
+    pub llc_ways: usize,
+    /// Hardware prefetcher on?
+    pub prefetch: bool,
+}
+
+impl GeometryCase {
+    /// Build the simulator config. `CacheConfig::new` asserts
+    /// `sets * ways * 64 == size`, so sizes are derived from the shape.
+    pub fn hierarchy(&self) -> HierarchyConfig {
+        let cache = |sets: usize, ways: usize| CacheConfig::new((sets * ways * 64) as u64, ways);
+        HierarchyConfig {
+            l1: cache(self.l1_sets, self.l1_ways),
+            l2: cache(self.l2_sets, self.l2_ways),
+            llc: cache(self.llc_sets, self.llc_ways),
+            prefetch: if self.prefetch {
+                PrefetchConfig::default()
+            } else {
+                PrefetchConfig::disabled()
+            },
+        }
+    }
+
+    /// Draw a geometry. Degenerate shapes (1-way, single-set, tiny LLC)
+    /// are first-class draws, not rare corners: conflict-miss and
+    /// eviction-order bugs live there.
+    pub fn generate(rng: &mut Prng) -> GeometryCase {
+        let sets = |rng: &mut Prng, max_pow: usize| {
+            if rng.chance(0.25) {
+                1 // single-set level
+            } else {
+                1usize << rng.range(0, max_pow + 1)
+            }
+        };
+        let ways = |rng: &mut Prng| *rng.pick(&WAY_CHOICES);
+        let mut g = GeometryCase {
+            l1_sets: sets(rng, 6),
+            l1_ways: ways(rng),
+            l2_sets: sets(rng, 8),
+            l2_ways: ways(rng),
+            llc_sets: sets(rng, 9),
+            llc_ways: ways(rng),
+            prefetch: rng.chance(0.6),
+        };
+        if rng.chance(0.2) {
+            // Tiny LLC: smaller than the private levels above it, so
+            // inclusive-fill bookkeeping is stressed hard.
+            g.llc_sets = 1;
+            g.llc_ways = *rng.pick(&[1usize, 2]);
+        }
+        g
+    }
+
+    /// Serialize for the corpus.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("l1_sets", Json::num(self.l1_sets as f64)),
+            ("l1_ways", Json::num(self.l1_ways as f64)),
+            ("l2_sets", Json::num(self.l2_sets as f64)),
+            ("l2_ways", Json::num(self.l2_ways as f64)),
+            ("llc_sets", Json::num(self.llc_sets as f64)),
+            ("llc_ways", Json::num(self.llc_ways as f64)),
+            ("prefetch", Json::Bool(self.prefetch)),
+        ])
+    }
+
+    /// Restore from the corpus form, bounding the shape so a
+    /// hand-edited corpus file cannot allocate an absurd simulator.
+    pub fn from_json(v: &Json) -> Result<GeometryCase> {
+        let dim = |key: &str| -> Result<usize> {
+            let x = u64_field(v, key)?;
+            if !(1..=65536).contains(&x) {
+                bail!("geometry field '{key}' out of range: {x}");
+            }
+            Ok(x as usize)
+        };
+        Ok(GeometryCase {
+            l1_sets: dim("l1_sets")?,
+            l1_ways: dim("l1_ways")?,
+            l2_sets: dim("l2_sets")?,
+            l2_ways: dim("l2_ways")?,
+            llc_sets: dim("llc_sets")?,
+            llc_ways: dim("llc_ways")?,
+            prefetch: v.expect("prefetch")?.as_bool()?,
+        })
+    }
+}
+
+/// A pure, order-independent page→node map. The two-phase engine may
+/// resolve nodes in a different interleaving than the reference, so the
+/// map must be a function of `(addr, toucher)` alone — these mirror the
+/// first-touch/interleave/bind policies without the stateful `PageMap`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeMap {
+    /// Everything on node 0.
+    Zero,
+    /// Node = page number mod nodes (interleave-like).
+    PageMod,
+    /// Node = (page ^ toucher) mod nodes (placement-sensitive).
+    PageXorToucher,
+    /// Node = a high address bit (two large bound regions).
+    HighBit,
+}
+
+impl NodeMap {
+    /// Resolve the owning node for a line address touched by `toucher`.
+    pub fn node_of(&self, nodes: usize, addr: u64, toucher: usize) -> usize {
+        if nodes <= 1 {
+            return 0;
+        }
+        let page = (addr >> 12) as usize;
+        match self {
+            NodeMap::Zero => 0,
+            NodeMap::PageMod => page % nodes,
+            NodeMap::PageXorToucher => (page ^ toucher) % nodes,
+            NodeMap::HighBit => ((addr >> 28) as usize) % nodes,
+        }
+    }
+
+    /// Corpus label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodeMap::Zero => "zero",
+            NodeMap::PageMod => "page_mod",
+            NodeMap::PageXorToucher => "page_xor_toucher",
+            NodeMap::HighBit => "high_bit",
+        }
+    }
+
+    /// Parse a corpus label.
+    pub fn parse(s: &str) -> Result<NodeMap> {
+        Ok(match s {
+            "zero" => NodeMap::Zero,
+            "page_mod" => NodeMap::PageMod,
+            "page_xor_toucher" => NodeMap::PageXorToucher,
+            "high_bit" => NodeMap::HighBit,
+            other => bail!("unknown node map '{other}'"),
+        })
+    }
+}
+
+/// One access run of a generated trace (mirrors
+/// [`AccessRun`](crate::sim::trace::AccessRun), plus corpus
+/// serialization and sanitization).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunCase {
+    /// First probe address.
+    pub base: u64,
+    /// Signed per-probe stride in bytes.
+    pub stride: i64,
+    /// Probe count (≥ 1).
+    pub count: u64,
+    /// Bytes per probe.
+    pub size: u32,
+    /// Access kind.
+    pub kind: AccessKind,
+}
+
+impl RunCase {
+    /// Clamp every field into the simulator's documented contract:
+    /// positive count, bounded stride/size, and no address-space wrap
+    /// for descending runs.
+    pub fn sanitize(&mut self) {
+        self.count = self.count.clamp(1, 4096);
+        self.size = self.size.clamp(1, 512);
+        self.stride = self.stride.clamp(-65536, 65536);
+        self.base %= BASE_SPAN;
+        if self.stride < 0 {
+            let reach = self.stride.unsigned_abs() * (self.count - 1);
+            if self.base < reach {
+                self.base = reach;
+            }
+        }
+    }
+
+    /// Convert to a simulator access run.
+    pub fn to_run(&self) -> AccessRun {
+        AccessRun { base: self.base, stride: self.stride, count: self.count, size: self.size, kind: self.kind }
+    }
+
+    fn kind_label(kind: AccessKind) -> &'static str {
+        match kind {
+            AccessKind::Load => "load",
+            AccessKind::Store => "store",
+            AccessKind::StoreNT => "store_nt",
+            AccessKind::PrefetchSW => "prefetch_sw",
+        }
+    }
+
+    fn parse_kind(s: &str) -> Result<AccessKind> {
+        Ok(match s {
+            "load" => AccessKind::Load,
+            "store" => AccessKind::Store,
+            "store_nt" => AccessKind::StoreNT,
+            "prefetch_sw" => AccessKind::PrefetchSW,
+            other => bail!("unknown access kind '{other}'"),
+        })
+    }
+
+    /// Serialize for the corpus.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", Json::num(self.base as f64)),
+            ("stride", Json::num(self.stride as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("size", Json::num(self.size as f64)),
+            ("kind", Json::str(Self::kind_label(self.kind))),
+        ])
+    }
+
+    /// Restore from the corpus form (re-sanitized on load).
+    pub fn from_json(v: &Json) -> Result<RunCase> {
+        let stride = v.expect("stride")?.as_f64()?;
+        if stride.fract() != 0.0 || stride.abs() > 9.0e15 {
+            bail!("stride must be an integer, got {stride}");
+        }
+        let mut run = RunCase {
+            base: u64_field(v, "base")?,
+            stride: stride as i64,
+            count: u64_field(v, "count")?,
+            size: u64_field(v, "size")?.min(u32::MAX as u64) as u32,
+            kind: Self::parse_kind(v.expect("kind")?.as_str()?)?,
+        };
+        run.sanitize();
+        Ok(run)
+    }
+
+    fn generate(rng: &mut Prng, bases: &mut Vec<u64>) -> RunCase {
+        // Reuse an earlier base ~40% of the time (plus a small line-ish
+        // delta) so runs and threads alias the same lines — shared-line
+        // coherence is where the engines could disagree.
+        let base = if !bases.is_empty() && rng.chance(0.4) {
+            let prior = bases[rng.range(0, bases.len())];
+            let delta = [0i64, 8, 64, -64, 4096][rng.range(0, 5)];
+            prior.wrapping_add_signed(delta) % BASE_SPAN
+        } else if rng.chance(0.5) {
+            rng.below(BASE_SPAN) & !4095 // page-aligned
+        } else {
+            rng.below(BASE_SPAN)
+        };
+        let stride = if rng.chance(0.8) {
+            *rng.pick(&STRIDE_CHOICES)
+        } else {
+            rng.below(131073) as i64 - 65536
+        };
+        let kind = match rng.range(0, 10) {
+            0..=5 => AccessKind::Load,
+            6..=7 => AccessKind::Store,
+            8 => AccessKind::StoreNT,
+            _ => AccessKind::PrefetchSW,
+        };
+        let mut run = RunCase {
+            base,
+            stride,
+            count: 1 + rng.below(2048),
+            size: *rng.pick(&SIZE_CHOICES),
+            kind,
+        };
+        run.sanitize();
+        bases.push(run.base);
+        run
+    }
+}
+
+/// One complete trace-differential case.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceCase {
+    /// Cache geometry for all three engines.
+    pub geometry: GeometryCase,
+    /// NUMA node count (1 or 2).
+    pub nodes: usize,
+    /// Home node per thread (`thread_nodes[t] < nodes`); one thread per
+    /// trace, like the harness.
+    pub thread_nodes: Vec<usize>,
+    /// Pure page→node map shared by all engines.
+    pub node_map: NodeMap,
+    /// How many times the trace set is replayed against the same
+    /// (unflushed) memory system — round 2 is the warm-state check.
+    pub rounds: usize,
+    /// Per-thread access runs (`runs[t]` is thread `t`'s trace).
+    pub runs: Vec<Vec<RunCase>>,
+}
+
+impl TraceCase {
+    /// Draw a complete case.
+    pub fn generate(rng: &mut Prng) -> TraceCase {
+        let nodes = if rng.chance(0.7) { 2 } else { 1 };
+        let threads = rng.range(1, 5);
+        let thread_nodes = (0..threads).map(|_| rng.range(0, nodes)).collect();
+        let node_map = *rng.pick(&[
+            NodeMap::Zero,
+            NodeMap::PageMod,
+            NodeMap::PageXorToucher,
+            NodeMap::HighBit,
+        ]);
+        let rounds = if rng.chance(0.3) { 2 } else { 1 };
+        let mut bases = Vec::new();
+        let runs = (0..threads)
+            .map(|_| (0..rng.range(1, 7)).map(|_| RunCase::generate(rng, &mut bases)).collect())
+            .collect();
+        TraceCase { geometry: GeometryCase::generate(rng), nodes, thread_nodes, node_map, rounds, runs }
+    }
+
+    /// Build the simulator traces (one per thread).
+    pub fn traces(&self) -> Vec<Trace> {
+        self.runs
+            .iter()
+            .map(|runs| {
+                let mut t = Trace::new();
+                for r in runs {
+                    t.push(r.to_run());
+                }
+                t
+            })
+            .collect()
+    }
+
+    /// Thread count.
+    pub fn threads(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Re-clamp every run and structural field into the simulator
+    /// contract (used after shrinking mutations and corpus loads).
+    pub fn sanitize(&mut self) {
+        if self.runs.is_empty() {
+            self.runs.push(vec![RunCase { base: 0, stride: 64, count: 1, size: 64, kind: AccessKind::Load }]);
+        }
+        for runs in &mut self.runs {
+            if runs.is_empty() {
+                runs.push(RunCase { base: 0, stride: 64, count: 1, size: 64, kind: AccessKind::Load });
+            }
+            for r in runs.iter_mut() {
+                r.sanitize();
+            }
+        }
+        self.nodes = self.nodes.clamp(1, 2);
+        self.rounds = self.rounds.clamp(1, 2);
+        self.thread_nodes.resize(self.runs.len(), 0);
+        for n in &mut self.thread_nodes {
+            *n = (*n).min(self.nodes - 1);
+        }
+    }
+
+    /// Serialize for the corpus.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("geometry", self.geometry.to_json()),
+            ("nodes", Json::num(self.nodes as f64)),
+            (
+                "thread_nodes",
+                Json::arr(self.thread_nodes.iter().map(|n| Json::num(*n as f64)).collect()),
+            ),
+            ("node_map", Json::str(self.node_map.label())),
+            ("rounds", Json::num(self.rounds as f64)),
+            (
+                "threads",
+                Json::arr(
+                    self.runs
+                        .iter()
+                        .map(|runs| Json::arr(runs.iter().map(|r| r.to_json()).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore from the corpus form (sanitized on load).
+    pub fn from_json(v: &Json) -> Result<TraceCase> {
+        let runs = v
+            .expect("threads")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_arr()?.iter().map(RunCase::from_json).collect::<Result<Vec<_>>>())
+            .collect::<Result<Vec<_>>>()?;
+        let mut case = TraceCase {
+            geometry: GeometryCase::from_json(v.expect("geometry")?)?,
+            nodes: u64_field(v, "nodes")? as usize,
+            thread_nodes: v
+                .expect("thread_nodes")?
+                .as_arr()?
+                .iter()
+                .map(|n| Ok(n.as_f64()? as usize))
+                .collect::<Result<Vec<_>>>()?,
+            node_map: NodeMap::parse(v.expect("node_map")?.as_str()?)?,
+            rounds: u64_field(v, "rounds")? as usize,
+            runs,
+        };
+        if case.threads() > 64 {
+            bail!("trace case has too many threads: {}", case.threads());
+        }
+        case.sanitize();
+        Ok(case)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_cases_roundtrip_and_respect_bounds() {
+        let mut rng = Prng::new(7);
+        for _ in 0..64 {
+            let case = TraceCase::generate(&mut rng);
+            assert!((1..=4).contains(&case.threads()));
+            assert!(case.thread_nodes.iter().all(|n| *n < case.nodes));
+            for runs in &case.runs {
+                for r in runs {
+                    assert!(r.count >= 1);
+                    // Descending runs must not wrap below address zero.
+                    if r.stride < 0 {
+                        assert!(r.base >= r.stride.unsigned_abs() * (r.count - 1));
+                    }
+                }
+            }
+            let back = TraceCase::from_json(&case.to_json()).unwrap();
+            assert_eq!(back, case);
+        }
+    }
+
+    #[test]
+    fn node_map_is_pure_and_in_range() {
+        let maps = [NodeMap::Zero, NodeMap::PageMod, NodeMap::PageXorToucher, NodeMap::HighBit];
+        for map in maps {
+            for addr in [0u64, 4096, 1 << 28, (1 << 32) - 64] {
+                for toucher in 0..4 {
+                    let a = map.node_of(2, addr, toucher);
+                    assert!(a < 2);
+                    assert_eq!(a, map.node_of(2, addr, toucher));
+                    assert_eq!(map.node_of(1, addr, toucher), 0);
+                }
+            }
+            assert_eq!(NodeMap::parse(map.label()).unwrap(), map);
+        }
+    }
+
+    #[test]
+    fn sanitize_repairs_hostile_corpus_values() {
+        let mut case = TraceCase {
+            geometry: GeometryCase {
+                l1_sets: 1,
+                l1_ways: 1,
+                l2_sets: 1,
+                l2_ways: 1,
+                llc_sets: 1,
+                llc_ways: 1,
+                prefetch: false,
+            },
+            nodes: 9,
+            thread_nodes: vec![5],
+            node_map: NodeMap::PageMod,
+            rounds: 0,
+            runs: vec![vec![RunCase {
+                base: u64::MAX,
+                stride: -1_000_000,
+                count: 0,
+                size: 0,
+                kind: AccessKind::Store,
+            }]],
+        };
+        case.sanitize();
+        assert_eq!(case.nodes, 2);
+        assert_eq!(case.thread_nodes, vec![1]);
+        assert_eq!(case.rounds, 1);
+        let r = case.runs[0][0];
+        assert_eq!(r.count, 1);
+        assert!(r.size >= 1);
+        assert!(r.stride >= -65536);
+        assert!(r.base < BASE_SPAN + 65536 * 4096);
+    }
+}

@@ -68,6 +68,30 @@ impl KernelMeasurement {
         crate::roofline::point::LevelBytes::from_traffic(&self.traffic)
     }
 
+    /// Compare against `other` at the serialization level — the
+    /// bit-identical contract the three sim engines are held to.
+    /// Returns `None` when equal, otherwise a short description: the
+    /// first differing traffic counter if traffic diverged, else the
+    /// first differing line of the serialized documents (which also
+    /// catches FP-counter and runtime-estimate drift, since every
+    /// derived field is emitted).
+    pub fn divergence(&self, other: &KernelMeasurement) -> Option<String> {
+        if let Some(d) = self.traffic.divergence(&other.traffic) {
+            return Some(format!("traffic: {d}"));
+        }
+        let a = self.to_json().to_string_pretty();
+        let b = other.to_json().to_string_pretty();
+        if a == b {
+            return None;
+        }
+        match a.lines().zip(b.lines()).find(|(x, y)| x != y) {
+            Some((x, y)) => {
+                Some(format!("serialized measurement differs: {} vs {}", x.trim(), y.trim()))
+            }
+            None => Some("serialized measurements differ in length".to_string()),
+        }
+    }
+
     /// Utilisation of peak at `peak_flops`.
     pub fn utilization(&self, peak_flops: f64) -> f64 {
         (self.measured.work_flops as f64 / self.runtime.seconds) / peak_flops

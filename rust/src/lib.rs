@@ -51,7 +51,12 @@
 //! * **run artifacts** ([`artifact`]) — `dlroofline pack`/`unpack`
 //!   bundle a run directory plus its store records into a checksummed
 //!   deterministic tarball that another host can verify and use to seed
-//!   its own cache.
+//!   its own cache;
+//! * a **differential fuzzer** ([`fuzz`]) — `dlroofline fuzz` feeds
+//!   seeded arbitrary traces, degenerate cache geometries, kernel specs
+//!   and scenarios through all three sim engines and the serialization
+//!   surfaces, shrinking any divergence to a replayable corpus file
+//!   (`dlroofline fuzz replay`).
 //!
 //! See `README.md` for the documentation map, `docs/` for the book
 //! (architecture overview, CLI reference, on-disk formats) and
@@ -67,6 +72,7 @@ pub mod artifact;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
+pub mod fuzz;
 pub mod harness;
 pub mod hostbench;
 pub mod kernels;

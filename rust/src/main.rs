@@ -261,6 +261,20 @@ fn app() -> AppSpec {
                 positional: vec![("pack_dir", "directory holding manifest.json + payload.tar")],
             },
             CmdSpec {
+                name: "fuzz",
+                help: "differential fuzzer: `fuzz --seed 1 --cases 500` | `fuzz replay <case.json>`",
+                opts: vec![
+                    opt("seed", "session seed (per-case seeds derive from it)", Some("1")),
+                    opt("cases", "cases to execute", Some("500")),
+                    opt("minutes", "wall-clock budget in minutes (0 = none)", Some("0")),
+                    opt("corpus", "directory failing cases are written to", Some("fuzz-corpus")),
+                ],
+                positional: vec![
+                    ("action", "omit to fuzz, or `replay`"),
+                    ("case", "corpus file for `replay`"),
+                ],
+            },
+            CmdSpec {
                 name: "bench",
                 help: "compare bench artifacts: `bench diff a.json b.json --tol 0.1`",
                 opts: vec![
@@ -359,6 +373,7 @@ fn dispatch(parsed: &Parsed) -> Result<()> {
         "request" => cmd_request(parsed),
         "pack" => cmd_pack(parsed),
         "unpack" => cmd_unpack(parsed),
+        "fuzz" => cmd_fuzz(parsed),
         "bench" => cmd_bench(parsed),
         other => anyhow::bail!("unhandled command {other}"),
     }
@@ -1095,6 +1110,69 @@ fn cmd_unpack(parsed: &Parsed) -> Result<()> {
         println!("seeded {} cell record(s)", report.seeded);
     }
     Ok(())
+}
+
+fn cmd_fuzz(parsed: &Parsed) -> Result<()> {
+    use dlroofline::fuzz::{replay, run_fuzz, FuzzConfig};
+    use dlroofline::util::hash::hex64;
+    match parsed.positional.as_slice() {
+        [] => {
+            let minutes: f64 = parsed.opt_parse("minutes")?.unwrap_or(0.0);
+            anyhow::ensure!(
+                minutes >= 0.0 && minutes.is_finite(),
+                "--minutes must be a finite non-negative number"
+            );
+            let config = FuzzConfig {
+                seed: parsed.opt_parse::<u64>("seed")?.unwrap_or(1),
+                cases: parsed.opt_parse::<usize>("cases")?.unwrap_or(500),
+                minutes,
+                corpus_dir: PathBuf::from(parsed.opt("corpus").unwrap_or("fuzz-corpus")),
+            };
+            let outcome = run_fuzz(&config, &mut |msg| eprintln!("{msg}"))?;
+            println!(
+                "fuzz: seed {} | {} case(s) ({} trace, {} kernel, {} round-trip){} | digest {}",
+                config.seed,
+                outcome.executed,
+                outcome.trace_cases,
+                outcome.kernel_cases,
+                outcome.roundtrip_cases,
+                if outcome.truncated { " [wall-clock budget hit]" } else { "" },
+                hex64(outcome.digest),
+            );
+            match outcome.failure {
+                Some(f) => anyhow::bail!(
+                    "case #{} ({} seed {}) diverged: {}\n\
+                     minimized in {} step(s); replay with: dlroofline fuzz replay {}",
+                    f.index,
+                    f.kind,
+                    f.case_seed,
+                    f.failure,
+                    f.shrink_steps,
+                    f.corpus_path.display()
+                ),
+                None => {
+                    println!("0 divergences");
+                    Ok(())
+                }
+            }
+        }
+        [action, case] if action == "replay" => {
+            let (file, verdict) = replay(&PathBuf::from(case))?;
+            println!("replaying {} case (seed {})", file.case.kind(), file.seed);
+            println!("recorded failure: {}", file.failure);
+            match verdict {
+                Some(msg) => anyhow::bail!("still diverges: {msg}"),
+                None => {
+                    println!("fixed: the recorded divergence no longer reproduces");
+                    Ok(())
+                }
+            }
+        }
+        _ => anyhow::bail!(
+            "usage: dlroofline fuzz [--seed S --cases N [--minutes M]] | \
+             dlroofline fuzz replay <case.json>"
+        ),
+    }
 }
 
 fn cmd_bench(parsed: &Parsed) -> Result<()> {

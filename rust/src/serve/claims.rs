@@ -57,6 +57,11 @@ pub struct ClaimSet {
     dir: PathBuf,
     token: String,
     ttl: Duration,
+    /// Unix-seconds source for claim stamps and expiry checks. The wall
+    /// clock in production ([`ClaimSet::new`]); injected in tests
+    /// ([`ClaimSet::with_clock`]) so TTL expiry is exercised without
+    /// sleeping or backdating files.
+    clock: Box<dyn Fn() -> u64 + Send + Sync>,
 }
 
 impl ClaimSet {
@@ -65,12 +70,25 @@ impl ClaimSet {
     /// process *and* per `ClaimSet` (pid × counter), so two daemons on
     /// one host never mistake each other's claims for their own.
     pub fn new(store_root: &Path, ttl: Duration) -> ClaimSet {
+        Self::with_clock(store_root, ttl, Box::new(now_unix))
+    }
+
+    /// As [`ClaimSet::new`] with an injected clock returning Unix
+    /// seconds. Claim files embed wall-clock timestamps read by *other*
+    /// processes, so production code must pass the real clock; tests
+    /// drive expiry deterministically through a fake one.
+    pub fn with_clock(
+        store_root: &Path,
+        ttl: Duration,
+        clock: Box<dyn Fn() -> u64 + Send + Sync>,
+    ) -> ClaimSet {
         static NEXT: AtomicU64 = AtomicU64::new(0);
         let n = NEXT.fetch_add(1, Ordering::Relaxed);
         ClaimSet {
             dir: store_root.join("claims"),
             token: format!("{}-{n}", std::process::id()),
             ttl,
+            clock,
         }
     }
 
@@ -90,13 +108,13 @@ impl ClaimSet {
     pub fn claim(&self, key: u64) -> Result<ClaimOutcome> {
         let path = self.path(key);
         for _ in 0..MAX_CLAIM_RACES {
-            let body = format!("{} {}", self.token, now_unix());
+            let body = format!("{} {}", self.token, (self.clock)());
             if create_exclusive(&path, &body)? {
                 return Ok(ClaimOutcome::Won);
             }
             match read_claim(&path) {
                 ClaimBody::Created(created)
-                    if now_unix().saturating_sub(created) > self.ttl.as_secs() =>
+                    if (self.clock)().saturating_sub(created) > self.ttl.as_secs() =>
                 {
                     let _ = std::fs::remove_file(&path);
                 }
@@ -204,6 +222,82 @@ mod tests {
         std::fs::create_dir_all(dir.path().join("claims")).unwrap();
         std::fs::write(claims.path(9), "not a claim body").unwrap();
         assert_eq!(claims.claim(9).unwrap(), ClaimOutcome::Won);
+    }
+
+    /// A shared fake clock plus a `ClaimSet` factory reading it — no
+    /// sleeps, no backdated files: tests move time by storing a new
+    /// value.
+    fn fake_clock() -> (std::sync::Arc<AtomicU64>, impl Fn(&Path, u64) -> ClaimSet) {
+        let now = std::sync::Arc::new(AtomicU64::new(1_000_000));
+        let handle = now.clone();
+        let make = move |root: &Path, ttl_secs: u64| {
+            let now = handle.clone();
+            ClaimSet::with_clock(
+                root,
+                Duration::from_secs(ttl_secs),
+                Box::new(move || now.load(Ordering::Relaxed)),
+            )
+        };
+        (now, make)
+    }
+
+    #[test]
+    fn ttl_expiry_boundary_is_strict() {
+        let dir = TempDir::new("claims-boundary");
+        let (now, make) = fake_clock();
+        let holder = make(dir.path(), 60);
+        let contender = make(dir.path(), 60);
+        assert_eq!(holder.claim(5).unwrap(), ClaimOutcome::Won);
+
+        // Exactly at the TTL the claim is still live: expiry needs
+        // age STRICTLY greater than the TTL, so a worker that finishes
+        // right on the deadline is not pre-empted.
+        now.fetch_add(60, Ordering::Relaxed);
+        assert_eq!(contender.claim(5).unwrap(), ClaimOutcome::Held, "age == TTL is not expired");
+
+        // One second past the TTL it is abandoned and re-raced.
+        now.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(contender.claim(5).unwrap(), ClaimOutcome::Won, "age == TTL + 1 is expired");
+    }
+
+    #[test]
+    fn garbage_claim_is_broken_under_injected_clock() {
+        // The garbage-breaking path must not depend on the wall clock:
+        // an unparsable body is interference whatever the time is.
+        let dir = TempDir::new("claims-garbage-clock");
+        let (_now, make) = fake_clock();
+        let claims = make(dir.path(), 60);
+        std::fs::create_dir_all(dir.path().join("claims")).unwrap();
+        std::fs::write(claims.path(9), "token-without-timestamp").unwrap();
+        assert_eq!(claims.claim(9).unwrap(), ClaimOutcome::Won);
+    }
+
+    #[test]
+    fn expired_claim_elects_exactly_one_successor() {
+        // After a holder's claim expires, the break-and-re-race elects
+        // exactly one new winner; everyone after it — including the
+        // original (crashed) holder's handle — is held by the fresh
+        // claim until IT expires in turn.
+        let dir = TempDir::new("claims-expiry-once");
+        let (now, make) = fake_clock();
+        let crashed = make(dir.path(), 60);
+        assert_eq!(crashed.claim(77).unwrap(), ClaimOutcome::Won);
+        now.fetch_add(61, Ordering::Relaxed);
+
+        let successor = make(dir.path(), 60);
+        assert_eq!(successor.claim(77).unwrap(), ClaimOutcome::Won, "first contender breaks + wins");
+        for contender in [&make(dir.path(), 60), &crashed] {
+            assert_eq!(
+                contender.claim(77).unwrap(),
+                ClaimOutcome::Held,
+                "the fresh claim holds everyone else"
+            );
+        }
+
+        // The successor's claim ages out like any other.
+        now.fetch_add(61, Ordering::Relaxed);
+        let third = make(dir.path(), 60);
+        assert_eq!(third.claim(77).unwrap(), ClaimOutcome::Won);
     }
 
     #[test]

@@ -191,6 +191,45 @@ impl TrafficStats {
             (self.nt_store_lines.min(writes)) as f64 / writes as f64
         }
     }
+
+    /// Field-by-field comparison against `other`: `None` when the two
+    /// stat sets are identical, otherwise a compact list of the
+    /// counters that differ. The differential fuzzer and parity tests
+    /// use this to turn a failed engine comparison into an actionable
+    /// message instead of two full Debug dumps.
+    pub fn divergence(&self, other: &TrafficStats) -> Option<String> {
+        let mut diffs = Vec::new();
+        let mut level = |name: &str, a: &CacheStats, b: &CacheStats| {
+            if a != b {
+                diffs.push(format!("{name} {a:?} vs {b:?}"));
+            }
+        };
+        level("l1", &self.l1, &other.l1);
+        level("l2", &self.l2, &other.l2);
+        level("llc", &self.llc, &other.llc);
+        let mut count = |name: &str, a: u64, b: u64| {
+            if a != b {
+                diffs.push(format!("{name} {a} vs {b}"));
+            }
+        };
+        count("llc_demand_miss_lines", self.llc_demand_miss_lines, other.llc_demand_miss_lines);
+        count("hw_prefetch_lines", self.hw_prefetch_lines, other.hw_prefetch_lines);
+        count("sw_prefetch_lines", self.sw_prefetch_lines, other.sw_prefetch_lines);
+        count("local_lines", self.local_lines, other.local_lines);
+        count("remote_lines", self.remote_lines, other.remote_lines);
+        count("local_wb_lines", self.local_wb_lines, other.local_wb_lines);
+        count("remote_wb_lines", self.remote_wb_lines, other.remote_wb_lines);
+        count("nt_store_lines", self.nt_store_lines, other.nt_store_lines);
+        count("probes", self.probes, other.probes);
+        if self.imc != other.imc {
+            diffs.push(format!("imc {:?} vs {:?}", self.imc, other.imc));
+        }
+        if diffs.is_empty() {
+            None
+        } else {
+            Some(diffs.join("; "))
+        }
+    }
 }
 
 /// Per-thread private state: L1, L2, and the core's prefetcher.

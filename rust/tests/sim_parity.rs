@@ -37,12 +37,13 @@ use dlroofline::harness::measure::{
     measure_kernel, measure_kernel_parallel, measure_kernel_reference,
 };
 use dlroofline::harness::{CacheState, ScenarioSpec};
-use dlroofline::kernels::conv_direct::ConvDirectBlocked;
+use dlroofline::coordinator::KernelRegistry;
+use dlroofline::kernels::conv_direct::{ConvDirectBlocked, ConvDirectNchw};
 use dlroofline::kernels::conv_winograd::ConvWinograd;
 use dlroofline::kernels::gelu::{EltwiseShape, GeluBlocked, GeluNchw};
 use dlroofline::kernels::inner_product::InnerProduct;
 use dlroofline::kernels::layernorm::LayerNorm;
-use dlroofline::kernels::pooling::{AvgPoolNchw, PoolShape};
+use dlroofline::kernels::pooling::{AvgPoolBlocked, AvgPoolNchw, PoolShape};
 use dlroofline::kernels::reduction::SumReduction;
 use dlroofline::kernels::{ConvShape, KernelModel};
 use dlroofline::sim::cache::CacheConfig;
@@ -53,9 +54,10 @@ use dlroofline::sim::prefetch::PrefetchConfig;
 use dlroofline::sim::trace::{AccessKind, AccessRun, Trace};
 use dlroofline::testutil::TempDir;
 
-/// One small instance per kernel family. Inner product and Winograd
-/// carry SW-prefetch runs; the rest cover load/store mixes, blocked
-/// layouts and reductions.
+/// One small instance per kernel family — every family the registry
+/// knows ([`zoo_covers_every_registered_family`] pins the coverage).
+/// Inner product and Winograd carry SW-prefetch runs; the rest cover
+/// load/store mixes, blocked layouts and reductions.
 fn kernel_zoo() -> Vec<Box<dyn KernelModel>> {
     vec![
         Box::new(SumReduction::new(1 << 18)),
@@ -64,9 +66,24 @@ fn kernel_zoo() -> Vec<Box<dyn KernelModel>> {
         Box::new(GeluBlocked::new(EltwiseShape::favourable(2))),
         Box::new(LayerNorm::new(256, 768)),
         Box::new(AvgPoolNchw::new(PoolShape::paper_pool(1))),
+        Box::new(AvgPoolBlocked::new(PoolShape::paper_pool(1))),
+        Box::new(ConvDirectNchw::new(ConvShape::paper_conv(1))),
         Box::new(ConvDirectBlocked::new(ConvShape::paper_conv(1))),
         Box::new(ConvWinograd::new(ConvShape::paper_conv(1))),
     ]
+}
+
+#[test]
+fn zoo_covers_every_registered_family() {
+    // The parity suite must grow with the registry: a newly registered
+    // kernel family that is not in the zoo fails here, not silently.
+    let zoo: Vec<String> = kernel_zoo().iter().map(|k| k.name().to_string()).collect();
+    for name in KernelRegistry::with_builtins().names() {
+        assert!(
+            zoo.iter().any(|z| z == name),
+            "registered family '{name}' missing from the parity zoo (have: {zoo:?})"
+        );
+    }
 }
 
 /// Assert two measurements are the same to the bit, with a readable
@@ -141,13 +158,10 @@ fn batched_path_matches_reference_across_kernels_and_presets() {
 fn batched_path_matches_reference_warm_protocol() {
     // Warm protocols replay the kernel trace over warmed caches — the
     // hit-heavy regime where the batched L1 filter actually filters.
+    // Every family runs (the same zoo as the cold sweep) so a family
+    // whose trace only replays under warmth can't dodge the pin.
     let config = MachineConfig::xeon_6248();
-    let kernels: Vec<Box<dyn KernelModel>> = vec![
-        Box::new(InnerProduct::new(64, 512, 256)),
-        Box::new(GeluNchw::new(EltwiseShape::favourable(2))),
-        Box::new(SumReduction::new(1 << 18)),
-    ];
-    for kernel in kernels {
+    for kernel in kernel_zoo() {
         for scenario in [ScenarioSpec::single_thread(), ScenarioSpec::two_socket()] {
             let mut a = Machine::new(config.clone());
             let batched = measure_kernel(&mut a, kernel.as_ref(), &scenario, CacheState::Warm)
