@@ -19,6 +19,17 @@
 //! pipeline is the ISSUE-5 target ratio (≥ 1.5× at 8 workers on a
 //! multi-core host); the single-thread stream documents the engine's
 //! overhead floor (phase A clamps to one worker there).
+//!
+//! The `*_sharded{1,2,8}` series time the set-sharded engine
+//! (`MemorySystem::run_sharded`, §Perf step 8) at N workers × N set
+//! shards. `threads20_8MiB_each_sharded8` against the serial pipeline
+//! is the ISSUE-9 target ratio (≥ 3× at 8 workers on a multi-core
+//! host); `twosocket_llc_heavy*` is the phase-B-bound shape the engine
+//! exists for — private-level-defeating strides on two NUMA nodes, so
+//! nearly every probe survives into the shared-level replay. Each
+//! sharded series also records its `*_phase_a` / `*_phase_b` wall-time
+//! split (time-only entries from `last_phase_split`), pinning *where*
+//! the time goes, not just the total.
 
 use dlroofline::benchkit::{Bencher, Throughput};
 use dlroofline::sim::hierarchy::{HierarchyConfig, MemorySystem};
@@ -42,6 +53,27 @@ fn twenty_thread_traces() -> Vec<Trace> {
         .map(|i| {
             let mut t = Trace::new();
             t.push(AccessRun::contiguous((i as u64) << 26, 8 << 20, AccessKind::Load));
+            t
+        })
+        .collect()
+}
+
+/// Eight threads, four per NUMA node, each walking a page-strided
+/// 256 MiB window: every probe misses the private levels and the
+/// prefetcher never engages, so nearly the whole stream survives into
+/// the shared-level replay — phase B dominates wall-time, which is the
+/// regime set sharding targets.
+fn twosocket_llc_heavy_traces() -> Vec<Trace> {
+    (0..8)
+        .map(|i| {
+            let mut t = Trace::new();
+            t.push(AccessRun {
+                base: (i as u64) << 28,
+                stride: 4096,
+                count: 1 << 16,
+                size: 4,
+                kind: AccessKind::Load,
+            });
             t
         })
         .collect()
@@ -129,6 +161,41 @@ fn main() {
                 ms.run_parallel(&traces, &Placement::bound(20, 0), |_a, _t| 0, workers)
                     .probes
             });
+        }
+        // The ISSUE-9 A/B series: set-sharded phase B at N workers ×
+        // N shards, with the wall-time split of the last run recorded
+        // alongside the end-to-end number.
+        for n in [1usize, 2, 8] {
+            let name = format!("threads20_8MiB_each_sharded{n}");
+            b.bench(&name, Throughput::Elements(probes), || {
+                ms.flush_all();
+                ms.run_sharded(&traces, &Placement::bound(20, 0), |_a, _t| 0, n, n).probes
+            });
+            let split = ms.last_phase_split();
+            b.record(&format!("{name}_phase_a"), Throughput::None, &[split.phase_a_seconds]);
+            b.record(&format!("{name}_phase_b"), Throughput::None, &[split.phase_b_seconds]);
+        }
+    }
+
+    // Two-socket, shared-level-bound streams (phase B dominates).
+    {
+        let traces = twosocket_llc_heavy_traces();
+        let probes: f64 = traces.iter().map(|t| t.line_probes() as f64).sum();
+        let node_of = |addr: u64, _t: usize| ((addr >> 28) & 1) as usize;
+        let mut ms = MemorySystem::new(cfg, 2, traces.len());
+        b.bench("twosocket_llc_heavy", Throughput::Elements(probes), || {
+            ms.flush_all();
+            ms.run_with(&traces, &Placement::spread(8, 2), node_of).probes
+        });
+        for n in [1usize, 2, 8] {
+            let name = format!("twosocket_llc_heavy_sharded{n}");
+            b.bench(&name, Throughput::Elements(probes), || {
+                ms.flush_all();
+                ms.run_sharded(&traces, &Placement::spread(8, 2), node_of, n, n).probes
+            });
+            let split = ms.last_phase_split();
+            b.record(&format!("{name}_phase_a"), Throughput::None, &[split.phase_a_seconds]);
+            b.record(&format!("{name}_phase_b"), Throughput::None, &[split.phase_b_seconds]);
         }
     }
 

@@ -49,6 +49,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::harness::experiments::{ExperimentParams, ExperimentResult};
 use crate::harness::measure::KernelMeasurement;
 use crate::harness::spec::{self, ExperimentSpec, SpecKind};
+use crate::sim::machine::Machine;
 
 use super::store::{CellStore, Lookup};
 
@@ -61,7 +62,7 @@ pub fn default_jobs() -> usize {
 }
 
 /// Worker budget for one plan execution: cell-level workers plus the
-/// intra-cell phase-A workers of the two-phase simulation engine.
+/// intra-cell workers of the set-sharded simulation engine.
 ///
 /// The two dimensions share one machine: [`job_split`] guarantees
 /// `cell workers × sim workers` never exceeds the `jobs` budget, so
@@ -72,11 +73,12 @@ pub struct JobBudget {
     /// Cell-level worker threads (`0` = auto ⇒ [`default_jobs`]).
     pub jobs: usize,
     /// Intra-cell simulation workers per cell
-    /// ([`crate::harness::measure_kernel_parallel`]): `1` pins the
-    /// serial batched pipeline, `N ≥ 2` allows up to `N` phase-A
-    /// workers per cell, `0` = auto (each cell worker's share of the
-    /// `jobs` budget — big cells get intra-cell workers exactly when
-    /// the cell queue is shallow).
+    /// ([`crate::harness::measure_kernel_sharded`]): `1` pins the
+    /// serial batched pipeline, `N ≥ 2` selects the set-sharded engine
+    /// with up to `N` phase-A workers and `N` phase-B set shards per
+    /// cell, `0` = auto (each cell worker's share of the `jobs` budget
+    /// — big cells get intra-cell workers exactly when the cell queue
+    /// is shallow).
     pub sim_jobs: usize,
 }
 
@@ -559,9 +561,16 @@ fn execute_impl(
 }
 
 /// Simulate each unique cell exactly once, in parallel, splitting the
-/// budget between cell workers and intra-cell two-phase workers
+/// budget between cell workers and intra-cell sharded-engine workers
 /// ([`job_split`] — derived from the *actual* queue depth, so a mostly
 /// cache-served sweep still hands its few misses intra-cell workers).
+///
+/// Every worker (and the serial path) builds **one** [`Machine`] and
+/// reuses it across all the cells it claims
+/// ([`spec::Cell::simulate_jobs_on`] resets it per measurement): the
+/// simulator's cache arrays, survivor-stream pools and phase-A scratch
+/// buffers are recycled instead of reallocated per cell — the
+/// allocation churn that showed up on warm tune-lattice sweeps.
 fn simulate_unique(
     unique: &[(u64, spec::Cell)],
     params: &ExperimentParams,
@@ -573,8 +582,9 @@ fn simulate_unique(
     }
     let (workers, sim_jobs) = job_split(budget.jobs, budget.sim_jobs, unique.len());
     if workers == 1 {
+        let mut machine = Machine::new(params.machine.clone());
         for (key, cell) in unique {
-            memo.insert(*key, cell.simulate_jobs(params, sim_jobs)?);
+            memo.insert(*key, cell.simulate_jobs_on(&mut machine, params, sim_jobs)?);
         }
         return Ok(memo);
     }
@@ -584,13 +594,16 @@ fn simulate_unique(
         (0..unique.len()).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                if idx >= unique.len() {
-                    break;
+            scope.spawn(|| {
+                let mut machine = Machine::new(params.machine.clone());
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= unique.len() {
+                        break;
+                    }
+                    let outcome = unique[idx].1.simulate_jobs_on(&mut machine, params, sim_jobs);
+                    *slots[idx].lock().unwrap() = Some(outcome);
                 }
-                let outcome = unique[idx].1.simulate_jobs(params, sim_jobs);
-                *slots[idx].lock().unwrap() = Some(outcome);
             });
         }
     });
@@ -741,6 +754,38 @@ mod tests {
             assert_eq!((cell_workers, sim_workers), want, "split({jobs},{sim_jobs},{cells})");
             assert!(cell_workers * sim_workers <= jobs.max(1), "oversubscribed");
         }
+    }
+
+    #[test]
+    fn job_split_cell_sim_shard_budget() {
+        // The sim share of a split is spent twice over inside each
+        // cell: `sim_workers` phase-A workers AND `sim_workers` phase-B
+        // set shards (the sharded engine runs workers = shards = N).
+        // Shards are views of one LLC, not threads, so only the
+        // cell × sim product counts against the core budget — the
+        // shard count rides along for free.
+        for (jobs, sim_jobs, cells) in [
+            (16usize, 0usize, 2usize),
+            (16, 8, 2),
+            (12, 0, 3),
+            (8, 0, 1),
+            (64, 0, 4),
+            (7, 0, 2), // non-divisible budget: floor division, never round up
+        ] {
+            let (cell_workers, sim_workers) = job_split(jobs, sim_jobs, cells);
+            let shards = sim_workers; // simulate_jobs_on: workers = shards = sim share
+            assert!(cell_workers * sim_workers <= jobs.max(1), "thread oversubscription");
+            assert_eq!(shards, sim_workers, "shard count must track the sim share");
+            // A sim share of 1 must pin the serial engine (no sharding),
+            // so budgets too tight to parallelise stay bit-for-bit on
+            // the reference pipeline by construction.
+            if jobs / cell_workers == 1 {
+                assert_eq!(sim_workers, 1, "tight budget must select the serial engine");
+            }
+        }
+        // Spot-check the canonical CLI shape: `--jobs 16 --sim-jobs 0`
+        // over a 2-cell queue yields 2 cells × 8 workers × 8 shards.
+        assert_eq!(job_split(16, 0, 2), (2, 8));
     }
 
     #[test]

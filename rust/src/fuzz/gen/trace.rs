@@ -207,8 +207,12 @@ pub struct RunCase {
 
 impl RunCase {
     /// Clamp every field into the simulator's documented contract:
-    /// positive count, bounded stride/size, and no address-space wrap
-    /// for descending runs.
+    /// positive count, bounded stride/size, and the
+    /// [`AccessRun::no_wrap`] address contract. Ascending runs satisfy
+    /// it structurally after the clamps (`base < 2^32`, `|stride| ≤
+    /// 2^16`, `count ≤ 2^12` ⇒ last address `< 2^33 ≪ i64::MAX`);
+    /// descending runs additionally get `base` lifted to the run's
+    /// reach so the last address stays ≥ 0.
     pub fn sanitize(&mut self) {
         self.count = self.count.clamp(1, 4096);
         self.size = self.size.clamp(1, 512);
@@ -517,5 +521,28 @@ mod tests {
         assert!(r.size >= 1);
         assert!(r.stride >= -65536);
         assert!(r.base < BASE_SPAN + 65536 * 4096);
+    }
+
+    #[test]
+    fn sanitized_runs_satisfy_the_no_wrap_contract() {
+        // Worst-case hostile inputs across the clamp boundaries: after
+        // sanitize, every run must pass the `AccessRun::no_wrap` check
+        // that `Trace::push` debug-asserts (a sanitized case that trips
+        // the assert would make the fuzzer abort instead of fuzz).
+        let hostile = [
+            (u64::MAX, i64::MIN, u64::MAX, 0u32),
+            (u64::MAX, i64::MAX, u64::MAX, u32::MAX),
+            (0, -65536, 4096, 64),          // max descending reach from zero
+            (BASE_SPAN - 1, 65536, 4096, 64), // max ascending reach
+            (0, 0, 0, 0),
+        ];
+        for (base, stride, count, size) in hostile {
+            let mut r = RunCase { base, stride, count, size, kind: AccessKind::Load };
+            r.sanitize();
+            assert!(
+                r.to_run().no_wrap(),
+                "sanitized run violates the no-wrap contract: {r:?}"
+            );
+        }
     }
 }

@@ -1,8 +1,9 @@
 //! Deterministic differential property fuzzer (`dlroofline fuzz`).
 //!
-//! The three simulation engines — scalar reference, batched SoA,
-//! two-phase parallel — are pinned bit-identical by example-based
-//! parity tests (`tests/sim_parity.rs`). This module hardens that
+//! The four simulation engines — scalar reference, batched SoA,
+//! two-phase parallel, set-sharded parallel — are pinned bit-identical
+//! by example-based parity tests (`tests/sim_parity.rs`). This module
+//! hardens that
 //! contract with *randomized* differential testing: seeded generators
 //! ([`gen`]) draw arbitrary access traces, cache geometries (including
 //! degenerate shapes the presets never build), kernel specs, scenarios
@@ -37,7 +38,8 @@ use crate::coordinator::store::{CellStore, Lookup};
 use crate::fuzz::corpus::CorpusFile;
 use crate::fuzz::gen::{bytes_from_hex, FuzzCase, KernelCase, RoundtripCase, TraceCase};
 use crate::harness::measure::{
-    measure_kernel, measure_kernel_parallel, measure_kernel_reference, KernelMeasurement,
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference, measure_kernel_sharded,
+    KernelMeasurement,
 };
 use crate::serve::protocol::Request;
 use crate::sim::hierarchy::{MemorySystem, TrafficStats};
@@ -52,12 +54,19 @@ use crate::util::prng::Prng;
 /// (serial, minimal parallelism, more workers than generated threads).
 pub const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
 
+/// Set-shard counts the sharded engine is exercised at, crossed with
+/// [`WORKER_COUNTS`]: the serial-degenerate count, the minimal split,
+/// and a prime that never divides the generated set counts evenly (so
+/// the last shard group is a different size than the rest).
+pub const SHARD_COUNTS: [usize; 3] = [1, 2, 7];
+
 /// Shrink budget (check evaluations) for cheap case kinds. Trace
 /// checks cost milliseconds and shrink candidates get cheaper as the
 /// case shrinks, so the minimizer can afford a generous probe count.
 const SHRINK_BUDGET: usize = 2000;
 /// Shrink budget for kernel cases — each check runs the measurement
-/// pipeline five times, so the minimizer gets far fewer probes.
+/// pipeline fourteen times (reference, batched, 3 two-phase, 9
+/// sharded), so the minimizer gets far fewer probes.
 const SHRINK_BUDGET_KERNEL: usize = 60;
 
 /// A fuzz session's parameters.
@@ -279,6 +288,18 @@ fn check_trace(case: &TraceCase) -> Option<String> {
             return Some(msg);
         }
     }
+    for workers in WORKER_COUNTS {
+        for shards in SHARD_COUNTS {
+            let sharded = rounds_for(&mut |ms, node_of| {
+                ms.run_sharded(&traces, &placement, node_of, workers, shards)
+            });
+            if let Some(msg) =
+                compare(&format!("sharded[workers={workers},shards={shards}]"), &sharded)
+            {
+                return Some(msg);
+            }
+        }
+    }
     None
 }
 
@@ -326,6 +347,25 @@ fn check_kernel(case: &KernelCase) -> Option<String> {
                 }
             }
             Err(e) => return Some(format!("two-phase[workers={workers}] errored: {e:#}")),
+        }
+    }
+    for workers in WORKER_COUNTS {
+        for shards in SHARD_COUNTS {
+            match measure_kernel_sharded(&mut machine, kernel.as_ref(), &spec, cache, workers, shards)
+            {
+                Ok(m) => {
+                    if let Some(d) = reference.divergence(&m) {
+                        return Some(format!(
+                            "sharded[workers={workers},shards={shards}] vs reference: {d}"
+                        ));
+                    }
+                }
+                Err(e) => {
+                    return Some(format!(
+                        "sharded[workers={workers},shards={shards}] errored: {e:#}"
+                    ))
+                }
+            }
         }
     }
     measurement_roundtrip(&reference)

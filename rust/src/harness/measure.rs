@@ -282,7 +282,7 @@ fn traffic_from_json(v: &Json) -> Result<TrafficStats> {
 }
 
 /// Which simulator engine drives a measurement pipeline's runs. All
-/// three produce bit-identical [`TrafficStats`] (pinned by
+/// four produce bit-identical [`TrafficStats`] (pinned by
 /// `rust/tests/sim_parity.rs`); they differ only in wall-clock.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum SimEngine {
@@ -296,16 +296,22 @@ enum SimEngine {
     /// ([`crate::sim::MemorySystem::run_parallel`], §Perf step 7) with
     /// this many phase-A workers.
     TwoPhase(usize),
+    /// The set-sharded engine
+    /// ([`crate::sim::MemorySystem::run_sharded`], §Perf step 8):
+    /// phase A on `workers` threads, phase B replayed concurrently
+    /// across `shards` LLC set-range shards.
+    ShardedReplay { workers: usize, shards: usize },
 }
 
 /// Drive one simulated run for the measurement pipeline.
 ///
 /// The production paths go through
 /// [`crate::sim::MemorySystem::run_with`] or — with intra-cell workers
-/// — [`crate::sim::MemorySystem::run_parallel`], monomorphized over a
+/// — [`crate::sim::MemorySystem::run_parallel`] /
+/// [`crate::sim::MemorySystem::run_sharded`], monomorphized over a
 /// resolver that memoizes page→node answers in `pages` (§Perf steps
-/// 6–7; the two-phase engine only resolves nodes in its serial replay
-/// phase, so the memo never sees concurrent probes). The reference
+/// 6–8; both parallel engines resolve nodes only in a sequential
+/// stage, so the memo never sees concurrent probes). The reference
 /// path goes through [`crate::sim::MemorySystem::run_reference`] with
 /// the bare `dyn` resolver, exactly as the pre-batching pipeline did.
 fn run_sim(
@@ -330,6 +336,13 @@ fn run_sim(
             placement,
             |addr, toucher| pages.node_of(addr, toucher, |a, t| space.node_of(a, t)),
             workers,
+        ),
+        SimEngine::ShardedReplay { workers, shards } => machine.memory.run_sharded(
+            traces,
+            placement,
+            |addr, toucher| pages.node_of(addr, toucher, |a, t| space.node_of(a, t)),
+            workers,
+            shards,
         ),
     }
 }
@@ -371,6 +384,34 @@ pub fn measure_kernel_parallel(
         scenario,
         cache_state,
         SimEngine::TwoPhase(workers.max(1)),
+    )
+}
+
+/// As [`measure_kernel`], but driving every simulated run through the
+/// set-sharded engine ([`crate::sim::MemorySystem::run_sharded`]):
+/// phase A parallel over `workers` threads, phase B partitioned into
+/// `shards` LLC set-range shards replayed concurrently (on up to
+/// `workers` threads) with a sequential `node_of` resolution pass.
+/// This is the engine the plan executor selects when spare sim workers
+/// exist — it removes the serial-phase-B Amdahl floor the two-phase
+/// engine hits on LLC-heavy cells.
+///
+/// Bit-identical to [`measure_kernel`] for every `(workers, shards)` —
+/// pinned by `rust/tests/sim_parity.rs` and the differential fuzzer.
+pub fn measure_kernel_sharded(
+    machine: &mut Machine,
+    kernel: &dyn KernelModel,
+    scenario: &ScenarioSpec,
+    cache_state: CacheState,
+    workers: usize,
+    shards: usize,
+) -> anyhow::Result<KernelMeasurement> {
+    measure_kernel_impl(
+        machine,
+        kernel,
+        scenario,
+        cache_state,
+        SimEngine::ShardedReplay { workers: workers.max(1), shards: shards.max(1) },
     )
 }
 
@@ -727,6 +768,30 @@ mod tests {
                 let got =
                     measure_kernel_parallel(&mut m, &k, &scenario, cache, workers).unwrap();
                 assert_bit_identical(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_engine_measurement_matches_serial() {
+        // The set-sharded engine drives the whole pipeline (overhead
+        // run, warm-ups, measured run): its measurement must serialise
+        // to the same bytes as the serial batched pipeline's, for every
+        // worker × shard combination.
+        let mut m = machine();
+        let k = GeluNchw::new(EltwiseShape::favourable(2));
+        for (scenario, cache) in [
+            (ScenarioSpec::two_socket(), CacheState::Cold),
+            (ScenarioSpec::single_thread(), CacheState::Warm),
+        ] {
+            let want = measure_kernel(&mut m, &k, &scenario, cache).unwrap();
+            for workers in [1usize, 2, 8] {
+                for shards in [1usize, 2, 7] {
+                    let got =
+                        measure_kernel_sharded(&mut m, &k, &scenario, cache, workers, shards)
+                            .unwrap();
+                    assert_bit_identical(&got, &want);
+                }
             }
         }
     }

@@ -11,7 +11,8 @@ pub mod spec;
 
 pub use cache_state::CacheState;
 pub use measure::{
-    measure_kernel, measure_kernel_parallel, measure_kernel_reference, KernelMeasurement,
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference, measure_kernel_sharded,
+    KernelMeasurement,
 };
 pub use scenario::{PlacementSpec, ScenarioSpec, ThreadSpec};
 pub use spec::{Cell, ExperimentSpec, GridSpec, KernelSpec, SpecKind};

@@ -58,7 +58,7 @@ use super::experiments::{
     ExperimentParams, ExperimentResult, FigureGroup,
 };
 use super::measure::{
-    measure_kernel, measure_kernel_parallel, measure_kernel_reference, KernelMeasurement,
+    measure_kernel, measure_kernel_reference, measure_kernel_sharded, KernelMeasurement,
 };
 use super::scenario::ScenarioSpec;
 
@@ -310,27 +310,45 @@ impl Cell {
     }
 
     /// As [`Self::simulate`], with up to `sim_jobs` intra-cell workers
-    /// driving the two-phase parallel engine
-    /// ([`crate::harness::measure::measure_kernel_parallel`]);
+    /// driving the set-sharded engine
+    /// ([`crate::harness::measure::measure_kernel_sharded`], with
+    /// `sim_jobs` phase-A workers *and* `sim_jobs` phase-B set shards);
     /// `sim_jobs ≤ 1` keeps the serial batched pipeline. The
-    /// measurement is bit-identical for every worker count — the plan
-    /// executor hands big cells intra-cell workers whenever the cell
-    /// queue is shallower than the `--jobs` budget.
+    /// measurement is bit-identical for every worker/shard count — the
+    /// plan executor hands big cells intra-cell workers whenever the
+    /// cell queue is shallower than the `--jobs` budget.
     pub fn simulate_jobs(
         &self,
         params: &ExperimentParams,
         sim_jobs: usize,
     ) -> Result<KernelMeasurement> {
-        if sim_jobs <= 1 {
-            return self.simulate(params);
-        }
         let mut machine = Machine::new(params.machine.clone());
+        self.simulate_jobs_on(&mut machine, params, sim_jobs)
+    }
+
+    /// As [`Self::simulate_jobs`], on a caller-provided machine instead
+    /// of a fresh one. The measurement pipeline resets the machine
+    /// first, so a pooled machine produces bit-identical results while
+    /// letting the plan executor reuse one simulator instance — caches,
+    /// survivor-stream pools and scratch buffers — per worker across
+    /// every cell it claims. `params.machine` must match the machine's
+    /// config (the executor builds the machine from it).
+    pub fn simulate_jobs_on(
+        &self,
+        machine: &mut Machine,
+        params: &ExperimentParams,
+        sim_jobs: usize,
+    ) -> Result<KernelMeasurement> {
         let kernel = self.kernel.build(params);
-        measure_kernel_parallel(
-            &mut machine,
+        if sim_jobs <= 1 {
+            return measure_kernel(machine, kernel.as_ref(), &self.scenario, self.cache);
+        }
+        measure_kernel_sharded(
+            machine,
             kernel.as_ref(),
             &self.scenario,
             self.cache,
+            sim_jobs,
             sim_jobs,
         )
     }

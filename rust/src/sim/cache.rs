@@ -58,6 +58,18 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Fold `other`'s counters into `self`. Every field is an additive
+    /// event count, so per-shard deltas from the set-sharded replay
+    /// (§Perf step 8) merge to exactly the serial totals as long as the
+    /// caller folds shards in a fixed order.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.writebacks += other.writebacks;
+        self.prefetch_fills += other.prefetch_fills;
+    }
+
     /// Total demand accesses (hits + misses).
     pub fn accesses(&self) -> u64 {
         self.hits + self.misses
@@ -393,6 +405,189 @@ impl Cache {
         self.meta[slot] = (self.clock << 1) | write as u64;
         dirty_victim
     }
+
+    /// Partition the tag store into `shards` contiguous set-range views
+    /// for the set-sharded replay engine (§Perf step 8). Every line maps
+    /// to exactly one set, a fill's victim comes from the same set as
+    /// the fill, and LRU comparisons never cross sets — so disjoint set
+    /// ranges are fully independent state and can be driven from
+    /// concurrent workers without synchronisation.
+    ///
+    /// `shards` is clamped to `[1, sets]`; each view starts from the
+    /// parent clock and counts its own [`CacheStats`] delta. After the
+    /// replay, fold every view's outcome back with
+    /// [`Self::absorb_shard`] in shard order. Shard LRU stamps are not
+    /// the serial engine's absolute stamps (each shard ticks only for
+    /// ops it applies), but the *relative* stamp order within any set
+    /// equals the serial order — and only relative intra-set order is
+    /// observable through the probe API.
+    pub fn set_shards(&mut self, shards: usize) -> Vec<SetShard<'_>> {
+        let sets = self.set_mod.d as usize;
+        let shards = shards.clamp(1, sets);
+        let ways = self.config.ways;
+        let mut out = Vec::with_capacity(shards);
+        let (mut tags, mut meta) = (self.tags.as_mut_slice(), self.meta.as_mut_slice());
+        let mut start = 0usize;
+        for i in 0..shards {
+            let end = sets * (i + 1) / shards;
+            let (t, rest_t) = tags.split_at_mut((end - start) * ways);
+            let (m, rest_m) = meta.split_at_mut((end - start) * ways);
+            tags = rest_t;
+            meta = rest_m;
+            out.push(SetShard {
+                ways,
+                set_mod: self.set_mod,
+                first_set: start,
+                end_set: end,
+                tags: t,
+                meta: m,
+                clock: self.clock,
+                stats: CacheStats::default(),
+            });
+            start = end;
+        }
+        out
+    }
+
+    /// Fold one shard view's outcome back after a sharded replay: merge
+    /// its stats delta and advance the clock so every future stamp
+    /// exceeds every stamp the shard wrote. Call once per shard, in
+    /// shard order, with the `(stats, clock)` pair the view reported.
+    pub fn absorb_shard(&mut self, stats: &CacheStats, clock: u64) {
+        self.stats.merge(stats);
+        self.clock = self.clock.max(clock);
+    }
+}
+
+/// A mutable view of one contiguous set range of a [`Cache`], produced
+/// by [`Cache::set_shards`]. Probe semantics (hit/miss outcomes, LRU
+/// victims, dirty bits, counters) are identical to the parent cache's
+/// scalar methods for every line the view [`owns`](Self::owns);
+/// probing a line outside the range is a caller bug (debug-asserted).
+#[derive(Debug)]
+pub struct SetShard<'a> {
+    ways: usize,
+    set_mod: FastMod,
+    first_set: usize,
+    end_set: usize,
+    tags: &'a mut [u64],
+    meta: &'a mut [u64],
+    clock: u64,
+    /// Counter delta accumulated by this shard — fold back with
+    /// [`Cache::absorb_shard`].
+    pub stats: CacheStats,
+}
+
+impl SetShard<'_> {
+    /// Whether `line_addr` maps into this shard's set range. The replay
+    /// workers use this as the partition predicate: every worker walks
+    /// the full op stream and applies exactly the ops it owns.
+    #[inline(always)]
+    pub fn owns(&self, line_addr: u64) -> bool {
+        debug_assert!(
+            line_addr <= u32::MAX as u64,
+            "line address {line_addr:#x} exceeds the simulated 256 GiB space"
+        );
+        let set = self.set_mod.rem(line_addr as u32) as usize;
+        set >= self.first_set && set < self.end_set
+    }
+
+    /// This shard's LRU clock (seeded from the parent; report it to
+    /// [`Cache::absorb_shard`] after the replay).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    #[inline(always)]
+    fn slot_base(&self, line_addr: u64) -> usize {
+        let set = self.set_mod.rem(line_addr as u32) as usize;
+        debug_assert!(
+            set >= self.first_set && set < self.end_set,
+            "line {line_addr:#x} (set {set}) outside shard sets [{}, {})",
+            self.first_set,
+            self.end_set
+        );
+        (set - self.first_set) * self.ways
+    }
+
+    /// [`Cache::access`] restricted to this shard's sets.
+    #[inline]
+    pub fn access(&mut self, line_addr: u64, write: bool) -> Probe {
+        self.clock += 1;
+        let start = self.slot_base(line_addr);
+        if let Some(w) = find_way(&self.tags[start..start + self.ways], line_addr) {
+            let m = &mut self.meta[start + w];
+            *m = (self.clock << 1) | ((*m | write as u64) & 1);
+            self.stats.hits += 1;
+            return Probe::Hit;
+        }
+        self.stats.misses += 1;
+        let victim = lru_way(&self.meta[start..start + self.ways]);
+        let dirty_victim = self.install(start + victim, line_addr, write);
+        Probe::Miss { dirty_victim }
+    }
+
+    /// [`Cache::fill_prefetch_probed`] restricted to this shard's sets.
+    pub fn fill_prefetch_probed(&mut self, line_addr: u64) -> (bool, Option<u64>) {
+        self.clock += 1;
+        let start = self.slot_base(line_addr);
+        if find_way(&self.tags[start..start + self.ways], line_addr).is_some() {
+            return (true, None);
+        }
+        self.stats.prefetch_fills += 1;
+        let victim = lru_way(&self.meta[start..start + self.ways]);
+        (false, self.install(start + victim, line_addr, false))
+    }
+
+    /// [`Cache::fill_prefetch`] restricted to this shard's sets.
+    pub fn fill_prefetch(&mut self, line_addr: u64) -> Option<u64> {
+        self.fill_prefetch_probed(line_addr).1
+    }
+
+    /// [`Cache::writeback`] restricted to this shard's sets.
+    pub fn writeback(&mut self, line_addr: u64) -> Option<u64> {
+        self.clock += 1;
+        let start = self.slot_base(line_addr);
+        if let Some(w) = find_way(&self.tags[start..start + self.ways], line_addr) {
+            self.meta[start + w] = (self.clock << 1) | 1;
+            return None;
+        }
+        let victim = lru_way(&self.meta[start..start + self.ways]);
+        self.install(start + victim, line_addr, true)
+    }
+
+    /// [`Cache::contains`] restricted to this shard's sets.
+    pub fn contains(&self, line_addr: u64) -> bool {
+        let start = self.slot_base(line_addr);
+        find_way(&self.tags[start..start + self.ways], line_addr).is_some()
+    }
+
+    /// [`Cache::invalidate`] restricted to this shard's sets.
+    pub fn invalidate(&mut self, line_addr: u64) -> bool {
+        let start = self.slot_base(line_addr);
+        if let Some(w) = find_way(&self.tags[start..start + self.ways], line_addr) {
+            let was_dirty = self.meta[start + w] & 1 == 1;
+            self.tags[start + w] = INVALID;
+            self.meta[start + w] = 0;
+            return was_dirty;
+        }
+        false
+    }
+
+    fn install(&mut self, slot: usize, line_addr: u64, write: bool) -> Option<u64> {
+        let mut dirty_victim = None;
+        let old = self.tags[slot];
+        if old != INVALID {
+            self.stats.evictions += 1;
+            if self.meta[slot] & 1 == 1 {
+                self.stats.writebacks += 1;
+                dirty_victim = Some(old);
+            }
+        }
+        self.tags[slot] = line_addr;
+        self.meta[slot] = (self.clock << 1) | write as u64;
+        dirty_victim
+    }
 }
 
 #[cfg(test)]
@@ -568,6 +763,121 @@ mod tests {
         assert_batch_equivalent(CacheConfig::new(4 * 64, 4), &probes);
         // Degenerate 1-set × 1-way cache.
         assert_batch_equivalent(CacheConfig::new(64, 1), &probes);
+    }
+
+    /// Drive a mixed op sequence through a serial cache and through a
+    /// sharded twin (each op applied by the owning shard), then compare
+    /// final tags, dirty bits, relative LRU order per set, and merged
+    /// stats. Absolute LRU stamps legitimately differ between the two,
+    /// so `meta` is compared as within-set stamp *ranking*.
+    fn assert_shard_equivalent(config: CacheConfig, shards: usize, ops: &[(u64, u8)]) {
+        let apply_serial = |c: &mut Cache, line: u64, kind: u8| match kind {
+            0 => {
+                c.access(line, false);
+            }
+            1 => {
+                c.access(line, true);
+            }
+            2 => {
+                c.fill_prefetch_probed(line);
+            }
+            3 => {
+                c.writeback(line);
+            }
+            _ => {
+                c.invalidate(line);
+            }
+        };
+        let mut serial = Cache::new(config);
+        for &(line, kind) in ops {
+            apply_serial(&mut serial, line, kind);
+        }
+
+        let mut sharded = Cache::new(config);
+        let views = sharded.set_shards(shards);
+        let mut outcomes = Vec::new();
+        for mut v in views {
+            for &(line, kind) in ops {
+                if !v.owns(line) {
+                    continue;
+                }
+                match kind {
+                    0 => {
+                        v.access(line, false);
+                    }
+                    1 => {
+                        v.access(line, true);
+                    }
+                    2 => {
+                        v.fill_prefetch_probed(line);
+                    }
+                    3 => {
+                        v.writeback(line);
+                    }
+                    _ => {
+                        v.invalidate(line);
+                    }
+                }
+            }
+            outcomes.push((v.stats, v.clock()));
+        }
+        for (stats, clock) in &outcomes {
+            sharded.absorb_shard(stats, *clock);
+        }
+
+        assert_eq!(sharded.stats, serial.stats, "merged stats diverged ({config:?})");
+        assert_eq!(sharded.tags, serial.tags, "tag store diverged ({config:?})");
+        // Dirty bits must match exactly; stamps only as per-set ranking.
+        let ways = config.ways;
+        for set in 0..config.sets() {
+            let s = set * ways..(set + 1) * ways;
+            let dirty = |m: &[u64]| m[s.clone()].iter().map(|x| x & 1).collect::<Vec<_>>();
+            assert_eq!(dirty(&sharded.meta), dirty(&serial.meta), "dirty bits diverged set {set}");
+            let rank = |m: &[u64]| {
+                let mut order: Vec<usize> = (0..ways).collect();
+                order.sort_by_key(|&w| m[set * ways + w] >> 1);
+                order
+            };
+            assert_eq!(rank(&sharded.meta), rank(&serial.meta), "LRU order diverged set {set}");
+        }
+        // The absorbed clock admits fresh stamps above every shard stamp.
+        assert!(sharded.clock >= serial.meta.iter().map(|m| m >> 1).max().unwrap_or(0));
+    }
+
+    #[test]
+    fn set_shards_match_serial_probes() {
+        let ops: Vec<(u64, u8)> = (0..256u64)
+            .map(|i| (i.wrapping_mul(11) % 37, (i % 5) as u8))
+            .collect();
+        for shards in [1usize, 2, 3, 7, 64] {
+            assert_shard_equivalent(CacheConfig::new(8 * 1024, 8), shards, &ops);
+            assert_shard_equivalent(CacheConfig::new(512, 2), shards, &ops);
+        }
+        // Single-set cache: sharding degenerates to one view.
+        assert_shard_equivalent(CacheConfig::new(4 * 64, 4), 8, &ops);
+    }
+
+    #[test]
+    fn set_shards_clamp_and_cover_all_sets() {
+        let mut c = Cache::new(CacheConfig::new(512, 2)); // 4 sets
+        assert_eq!(c.set_shards(8).len(), 4, "clamped to the set count");
+        assert_eq!(c.set_shards(3).len(), 3);
+        let views = c.set_shards(3);
+        // Every line lands in exactly one shard.
+        for line in 0..64u64 {
+            assert_eq!(views.iter().filter(|v| v.owns(line)).count(), 1);
+        }
+    }
+
+    #[test]
+    fn stats_merge_is_additive() {
+        let a = CacheStats { hits: 1, misses: 2, evictions: 3, writebacks: 4, prefetch_fills: 5 };
+        let mut b = CacheStats { hits: 10, misses: 20, evictions: 30, writebacks: 40, prefetch_fills: 50 };
+        b.merge(&a);
+        assert_eq!(
+            b,
+            CacheStats { hits: 11, misses: 22, evictions: 33, writebacks: 44, prefetch_fills: 55 }
+        );
     }
 
     #[test]

@@ -26,14 +26,28 @@
 //! through the LLC and the IMCs serially, in the exact round-robin
 //! chunk order of the serial pipeline — shared-level traffic is
 //! bit-identical by construction, for every worker count.
+//!
+//! [`MemorySystem::run_sharded`] goes one step further (§Perf step 8):
+//! LLC state is independent across set indices, so phase B itself is
+//! partitioned into contiguous set-range shards replayed concurrently —
+//! every shard worker walks *all* survivor streams in the global
+//! round-robin order, applies only the ops whose set it owns, and
+//! records the DRAM transfers it produced as *deferred resolution
+//! events* keyed by the op's global sequence number. A short sequential
+//! pass then merges the per-shard event lists by key and resolves
+//! `node_of` in exactly the serial call order, so first-touch page
+//! pinning — the one replay input that is *not* set-local — is
+//! bit-identical too, for every worker and shard count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
-use super::cache::{BatchMiss, Cache, CacheConfig, CacheStats, PrefetchFill, Probe};
+use super::cache::{BatchMiss, Cache, CacheConfig, CacheStats, PrefetchFill, Probe, SetShard};
 use super::imc::{ImcBank, ImcCounters};
 use super::numa::Placement;
 use super::prefetch::{PrefetchConfig, Prefetcher};
+use super::timing::PhaseSplit;
 use super::trace::{AccessKind, AccessRun, Trace};
 use super::LINE;
 
@@ -256,6 +270,13 @@ pub struct MemorySystem {
     miss_buf: Vec<BatchMiss>,
     /// Reusable prefetch-fill outcome buffer.
     pf_fills: Vec<PrefetchFill>,
+    /// Pooled phase-A survivor streams, reused run over run so warm
+    /// sweep loops don't reallocate per measurement.
+    stream_pool: Vec<SurvivorStream>,
+    /// Pooled phase-A scratch buffer sets, one pulled per worker.
+    scratch_pool: Vec<PhaseScratch>,
+    /// Wall-time split of the most recent two-phase/sharded run.
+    last_split: PhaseSplit,
 }
 
 /// How many line probes each thread advances before yielding to the next
@@ -337,20 +358,46 @@ impl SurvivorStream {
         let start = if round == 0 { 0 } else { self.chunk_ends[round - 1] };
         Some(&self.ops[start..end])
     }
+
+    /// Empty the stream for reuse, retaining capacity (the stream pool
+    /// on [`MemorySystem`] recycles these across runs).
+    fn clear(&mut self) {
+        self.ops.clear();
+        self.chunk_ends.clear();
+        self.probes = 0;
+    }
 }
 
-/// Phase A of [`MemorySystem::run_parallel`]: walk one thread's trace
-/// through its private L1/L2/prefetcher exactly as the serial pipeline
-/// would — same chunk budget, same batched L1 filter, same bypass
-/// flushes — emitting the survivor stream instead of probing the shared
-/// levels. Pure function of `(ctx, trace)`: safe to run concurrently
-/// with other threads' private phases.
-fn private_phase(ctx: &mut ThreadCtx, trace: &Trace) -> SurvivorStream {
-    let mut stream = SurvivorStream::default();
-    let mut demand: Vec<(u64, bool)> = Vec::with_capacity(CHUNK as usize);
-    let mut misses: Vec<BatchMiss> = Vec::with_capacity(CHUNK as usize);
-    let mut targets: Vec<u64> = Vec::with_capacity(8);
-    let mut fills: Vec<PrefetchFill> = Vec::with_capacity(8);
+/// Reusable phase-A scratch buffers — the demand batch, L1-miss
+/// survivors, prefetch targets and prefetch-fill outcomes one private
+/// phase needs. Pooled on [`MemorySystem`] (one set per concurrent
+/// phase-A worker) so warm tune-lattice sweeps don't reallocate these
+/// per measurement.
+#[derive(Debug, Default)]
+struct PhaseScratch {
+    demand: Vec<(u64, bool)>,
+    misses: Vec<BatchMiss>,
+    targets: Vec<u64>,
+    fills: Vec<PrefetchFill>,
+}
+
+/// Phase A of [`MemorySystem::run_parallel`] /
+/// [`MemorySystem::run_sharded`]: walk one thread's trace through its
+/// private L1/L2/prefetcher exactly as the serial pipeline would — same
+/// chunk budget, same batched L1 filter, same bypass flushes — emitting
+/// the survivor stream instead of probing the shared levels. Pure
+/// function of `(ctx, trace)`: safe to run concurrently with other
+/// threads' private phases. `stream` must be cleared; `scratch` is
+/// working space only (no state crosses calls through it).
+fn private_phase(
+    ctx: &mut ThreadCtx,
+    trace: &Trace,
+    stream: &mut SurvivorStream,
+    scratch: &mut PhaseScratch,
+) {
+    debug_assert!(stream.ops.is_empty() && stream.chunk_ends.is_empty() && stream.probes == 0);
+    let PhaseScratch { demand, misses, targets, fills } = scratch;
+    demand.clear();
     let mut cursor = Cursor::new(trace);
     while !cursor.done {
         let mut budget = CHUNK;
@@ -366,22 +413,14 @@ fn private_phase(ctx: &mut ThreadCtx, trace: &Trace) -> SurvivorStream {
                     demand.push((line, kind == AccessKind::Store));
                 }
                 AccessKind::StoreNT | AccessKind::PrefetchSW => {
-                    drain_private(
-                        ctx,
-                        &mut demand,
-                        &mut misses,
-                        &mut targets,
-                        &mut fills,
-                        &mut stream,
-                    );
-                    bypass_private(ctx, line, kind, &mut stream);
+                    drain_private(ctx, demand, misses, targets, fills, stream);
+                    bypass_private(ctx, line, kind, stream);
                 }
             }
         }
-        drain_private(ctx, &mut demand, &mut misses, &mut targets, &mut fills, &mut stream);
+        drain_private(ctx, demand, misses, targets, fills, stream);
         stream.end_chunk();
     }
-    stream
 }
 
 /// Resolve a pending demand batch against the private levels: one
@@ -470,6 +509,187 @@ fn bypass_private(ctx: &mut ThreadCtx, line: u64, kind: AccessKind, stream: &mut
     }
 }
 
+/// What a deferred DRAM transfer does once its `node_of` resolution
+/// runs (§Perf step 8). The IMC/locality side effects are exactly the
+/// three shared-level recording blocks of [`MemorySystem::replay_shared`].
+#[derive(Clone, Copy, Debug)]
+enum ResolveClass {
+    /// Demand/prefetch read: `record_read` + request-path locality.
+    Read,
+    /// Victim writeback: `record_write` + writeback locality.
+    WbWrite,
+    /// NT-store write: `record_write` + request-path locality (the
+    /// store *is* the request, unlike an eviction).
+    NtWrite,
+}
+
+/// One DRAM transfer a shard worker produced whose owning node is still
+/// unresolved. `key = 2 * global_op_seq + sub_event` orders events
+/// across shards exactly as the serial replay calls `node_of`: every
+/// worker counts the same global op sequence (it walks all streams),
+/// and an op resolves at most two transfers, in a fixed sub-order.
+#[derive(Clone, Copy, Debug)]
+struct PendingResolve {
+    key: u64,
+    /// Line whose page owns the traffic (op line or evicted victim).
+    line: u64,
+    thread_node: u32,
+    class: ResolveClass,
+}
+
+/// Everything one set-shard worker reports back: per-node LLC view
+/// outcomes, the order-independent line counters it accumulated, and
+/// its deferred resolution events (sorted by `key` by construction).
+struct ShardOutcome {
+    /// Per node, in node order: the shard view's stats delta and final
+    /// LRU clock — folded back with [`Cache::absorb_shard`].
+    llc: Vec<(CacheStats, u64)>,
+    demand_miss_lines: u64,
+    hw_prefetch_lines: u64,
+    sw_prefetch_lines: u64,
+    nt_store_lines: u64,
+    events: Vec<PendingResolve>,
+}
+
+/// Replay every survivor stream against one shard's set-range views
+/// (`views[node]` is this shard's slice of node `node`'s LLC). The
+/// walk visits *all* ops in the exact global round-robin chunk order,
+/// incrementing the global sequence counter for every op, but applies
+/// only the ops whose set the shard owns — a fill's victim comes from
+/// the op's own set, so every state effect stays in-shard. DRAM
+/// transfers become [`PendingResolve`] events instead of immediate
+/// `node_of` calls; the sub-event keys mirror the serial resolution
+/// order of [`MemorySystem::replay_shared`] op for op.
+fn replay_shard_group(
+    views: &mut [SetShard<'_>],
+    streams: &[SurvivorStream],
+    placement: &Placement,
+) -> ShardOutcome {
+    let mut out = ShardOutcome {
+        llc: Vec::new(),
+        demand_miss_lines: 0,
+        hw_prefetch_lines: 0,
+        sw_prefetch_lines: 0,
+        nt_store_lines: 0,
+        events: Vec::new(),
+    };
+    let mut seq = 0u64;
+    let mut round = 0usize;
+    loop {
+        let mut any = false;
+        for (tid, stream) in streams.iter().enumerate() {
+            let Some(ops) = stream.chunk(round) else { continue };
+            any = true;
+            let thread_node = placement.thread_nodes[tid];
+            for &packed in ops {
+                let key = seq * 2;
+                seq += 1;
+                let line = packed >> OP_KIND_BITS;
+                if !views[0].owns(line) {
+                    continue;
+                }
+                let tn = thread_node as u32;
+                let view = &mut views[thread_node];
+                match packed & OP_KIND_MASK {
+                    op::WRITEBACK => {
+                        if let Some(v3) = view.writeback(line) {
+                            out.events.push(PendingResolve {
+                                key,
+                                line: v3,
+                                thread_node: tn,
+                                class: ResolveClass::WbWrite,
+                            });
+                        }
+                    }
+                    op::DEMAND => match view.access(line, false) {
+                        Probe::Hit => {}
+                        Probe::Miss { dirty_victim } => {
+                            // Serial order: victim writeback resolves
+                            // before the miss read.
+                            if let Some(v3) = dirty_victim {
+                                out.events.push(PendingResolve {
+                                    key,
+                                    line: v3,
+                                    thread_node: tn,
+                                    class: ResolveClass::WbWrite,
+                                });
+                            }
+                            out.demand_miss_lines += 1;
+                            out.events.push(PendingResolve {
+                                key: key + 1,
+                                line,
+                                thread_node: tn,
+                                class: ResolveClass::Read,
+                            });
+                        }
+                    },
+                    op::HW_PREFETCH => {
+                        let (was_in_llc, llc_victim) = view.fill_prefetch_probed(line);
+                        if !was_in_llc {
+                            // Serial order: the prefetch read resolves
+                            // before its victim writeback.
+                            out.hw_prefetch_lines += 1;
+                            out.events.push(PendingResolve {
+                                key,
+                                line,
+                                thread_node: tn,
+                                class: ResolveClass::Read,
+                            });
+                            if let Some(v) = llc_victim {
+                                out.events.push(PendingResolve {
+                                    key: key + 1,
+                                    line: v,
+                                    thread_node: tn,
+                                    class: ResolveClass::WbWrite,
+                                });
+                            }
+                        }
+                    }
+                    op::NT_STORE => {
+                        // Serial resolves before invalidating; node_of
+                        // never reads cache state, so deferring keeps
+                        // the same resolution, in the same order.
+                        out.events.push(PendingResolve {
+                            key,
+                            line,
+                            thread_node: tn,
+                            class: ResolveClass::NtWrite,
+                        });
+                        view.invalidate(line);
+                        out.nt_store_lines += 1;
+                    }
+                    op::SW_PREFETCH => {
+                        if !view.contains(line) {
+                            out.sw_prefetch_lines += 1;
+                            out.events.push(PendingResolve {
+                                key,
+                                line,
+                                thread_node: tn,
+                                class: ResolveClass::Read,
+                            });
+                            if let Some(victim) = view.fill_prefetch(line) {
+                                out.events.push(PendingResolve {
+                                    key: key + 1,
+                                    line: victim,
+                                    thread_node: tn,
+                                    class: ResolveClass::WbWrite,
+                                });
+                            }
+                        }
+                    }
+                    other => unreachable!("corrupt survivor op kind {other}"),
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        round += 1;
+    }
+    out.llc = views.iter().map(|v| (v.stats, v.clock())).collect();
+    out
+}
+
 impl MemorySystem {
     /// Memory system for `nodes` NUMA nodes and up to `max_threads`
     /// hardware threads.
@@ -491,7 +711,18 @@ impl MemorySystem {
             demand_buf: Vec::with_capacity(CHUNK as usize),
             miss_buf: Vec::with_capacity(CHUNK as usize),
             pf_fills: Vec::with_capacity(8),
+            stream_pool: Vec::new(),
+            scratch_pool: Vec::new(),
+            last_split: PhaseSplit::default(),
         }
+    }
+
+    /// Wall-time split (phase A vs phase B) of the most recent
+    /// [`MemorySystem::run_parallel`] / [`MemorySystem::run_sharded`]
+    /// call. Host telemetry for the perf harness only — it never enters
+    /// [`TrafficStats`] or any serialized measurement.
+    pub fn last_phase_split(&self) -> PhaseSplit {
+        self.last_split
     }
 
     /// The hierarchy geometry.
@@ -756,37 +987,9 @@ impl MemorySystem {
         };
 
         // Phase A: private levels, concurrently.
-        let n = traces.len();
-        let workers = workers.clamp(1, n.max(1));
-        let streams: Vec<SurvivorStream> = if workers <= 1 {
-            self.threads[..n]
-                .iter_mut()
-                .zip(traces)
-                .map(|(ctx, trace)| private_phase(ctx, trace))
-                .collect()
-        } else {
-            let ctxs: Vec<Mutex<&mut ThreadCtx>> =
-                self.threads[..n].iter_mut().map(Mutex::new).collect();
-            let slots: Vec<Mutex<Option<SurvivorStream>>> =
-                (0..n).map(|_| Mutex::new(None)).collect();
-            let next = AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        let mut ctx = ctxs[i].lock().unwrap();
-                        *slots[i].lock().unwrap() = Some(private_phase(&mut **ctx, &traces[i]));
-                    });
-                }
-            });
-            slots
-                .into_iter()
-                .map(|s| s.into_inner().unwrap().expect("phase A covered every thread"))
-                .collect()
-        };
+        let phase_a_start = Instant::now();
+        let streams = self.private_streams(traces, workers);
+        let phase_a_seconds = phase_a_start.elapsed().as_secs_f64();
         for s in &streams {
             stats.probes += s.probes;
         }
@@ -794,6 +997,7 @@ impl MemorySystem {
         // Phase B: serial replay through the shared levels, round-robin
         // over each thread's k-th chunk exactly as the serial pipeline's
         // outer loop gives every live thread one turn per round.
+        let phase_b_start = Instant::now();
         let mut round = 0usize;
         loop {
             let mut any = false;
@@ -810,9 +1014,263 @@ impl MemorySystem {
             }
             round += 1;
         }
+        self.last_split = PhaseSplit {
+            phase_a_seconds,
+            phase_b_seconds: phase_b_start.elapsed().as_secs_f64(),
+        };
 
+        self.stream_pool.extend(streams);
         self.finish(&before, &mut stats);
         stats
+    }
+
+    /// The set-sharded engine (§Perf step 8): identical observable
+    /// semantics to [`MemorySystem::run_with`], with *both* phases
+    /// parallel.
+    ///
+    /// Phase A is [`MemorySystem::run_parallel`]'s concurrent private
+    /// simulation, verbatim. Phase B is split in two:
+    ///
+    /// 1. **B1 — sharded replay.** Each node's LLC is partitioned into
+    ///    `shards` contiguous set ranges ([`Cache::set_shards`]); up to
+    ///    `workers` scoped threads replay the survivor streams, one
+    ///    shard group (that set range of *every* node's LLC) per
+    ///    worker. A worker walks all streams in the exact global
+    ///    round-robin chunk order but applies only ops landing in its
+    ///    sets — LLC state never crosses a set boundary, so shard
+    ///    outcomes are independent. DRAM transfers are recorded as
+    ///    deferred events keyed by global op sequence, not resolved.
+    /// 2. **B2 — sequential resolution.** The per-shard event lists are
+    ///    key-merged and `node_of` runs once per transfer, in exactly
+    ///    the serial call order — first-touch page pinning (the one
+    ///    stateful, non-set-local input) is bit-identical. IMC and
+    ///    locality counters accumulate here; LLC view stats fold back
+    ///    in fixed shard order.
+    ///
+    /// Consequence: bit-identical [`TrafficStats`] to the other three
+    /// engines for every `(workers, shards)` — pinned by
+    /// `rust/tests/sim_parity.rs` and the differential fuzzer. `shards`
+    /// is clamped to the LLC set count; `shards <= 1` degenerates to
+    /// the serial phase B.
+    pub fn run_sharded<F>(
+        &mut self,
+        traces: &[Trace],
+        placement: &Placement,
+        mut node_of: F,
+        workers: usize,
+        shards: usize,
+    ) -> TrafficStats
+    where
+        F: FnMut(u64, usize) -> usize,
+    {
+        let before = self.snapshot(traces, placement);
+        let mut stats = TrafficStats {
+            imc: vec![ImcCounters::default(); self.nodes],
+            ..Default::default()
+        };
+
+        let phase_a_start = Instant::now();
+        let streams = self.private_streams(traces, workers);
+        let phase_a_seconds = phase_a_start.elapsed().as_secs_f64();
+        for s in &streams {
+            stats.probes += s.probes;
+        }
+
+        let phase_b_start = Instant::now();
+        let shards = shards.clamp(1, self.llcs[0].sets());
+        if shards <= 1 {
+            // Single-set LLCs (and explicit shards=1) degenerate to the
+            // serial replay — same code path as `run_parallel` phase B.
+            let mut round = 0usize;
+            loop {
+                let mut any = false;
+                for (tid, stream) in streams.iter().enumerate() {
+                    let Some(ops) = stream.chunk(round) else { continue };
+                    any = true;
+                    let thread_node = placement.thread_nodes[tid];
+                    for &packed in ops {
+                        self.replay_shared(thread_node, packed, &mut node_of, &mut stats);
+                    }
+                }
+                if !any {
+                    break;
+                }
+                round += 1;
+            }
+        } else {
+            self.replay_sharded(&streams, placement, &mut node_of, workers, shards, &mut stats);
+        }
+        self.last_split = PhaseSplit {
+            phase_a_seconds,
+            phase_b_seconds: phase_b_start.elapsed().as_secs_f64(),
+        };
+
+        self.stream_pool.extend(streams);
+        self.finish(&before, &mut stats);
+        stats
+    }
+
+    /// Phase A shared by [`MemorySystem::run_parallel`] and
+    /// [`MemorySystem::run_sharded`]: simulate every thread's private
+    /// levels on up to `workers` scoped threads, returning one survivor
+    /// stream per trace. Streams and scratch buffers come from the
+    /// pools on `self` (callers return the streams via
+    /// `self.stream_pool.extend(..)` once phase B is done).
+    fn private_streams(&mut self, traces: &[Trace], workers: usize) -> Vec<SurvivorStream> {
+        let n = traces.len();
+        let workers = workers.clamp(1, n.max(1));
+        let mut streams: Vec<SurvivorStream> = (0..n)
+            .map(|_| {
+                let mut s = self.stream_pool.pop().unwrap_or_default();
+                s.clear();
+                s
+            })
+            .collect();
+        if workers <= 1 {
+            let mut scratch = self.scratch_pool.pop().unwrap_or_default();
+            for ((ctx, trace), stream) in
+                self.threads[..n].iter_mut().zip(traces).zip(&mut streams)
+            {
+                private_phase(ctx, trace, stream, &mut scratch);
+            }
+            self.scratch_pool.push(scratch);
+        } else {
+            let mut scratches: Vec<PhaseScratch> = (0..workers)
+                .map(|_| self.scratch_pool.pop().unwrap_or_default())
+                .collect();
+            let ctxs: Vec<Mutex<&mut ThreadCtx>> =
+                self.threads[..n].iter_mut().map(Mutex::new).collect();
+            let slots: Vec<Mutex<&mut SurvivorStream>> =
+                streams.iter_mut().map(Mutex::new).collect();
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for scratch in &mut scratches {
+                    let (next, ctxs, slots) = (&next, &ctxs, &slots);
+                    scope.spawn(move || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let mut ctx = ctxs[i].lock().unwrap();
+                        let mut stream = slots[i].lock().unwrap();
+                        private_phase(&mut **ctx, &traces[i], &mut **stream, scratch);
+                    });
+                }
+            });
+            drop(slots);
+            self.scratch_pool.extend(scratches);
+        }
+        streams
+    }
+
+    /// Phase B1 + B2 of [`MemorySystem::run_sharded`] for `shards >= 2`:
+    /// run the shard groups (concurrently when `workers >= 2`), then
+    /// fold outcomes and resolve the deferred events sequentially.
+    fn replay_sharded<F: FnMut(u64, usize) -> usize>(
+        &mut self,
+        streams: &[SurvivorStream],
+        placement: &Placement,
+        node_of: &mut F,
+        workers: usize,
+        shards: usize,
+        stats: &mut TrafficStats,
+    ) {
+        // B1: split every node's LLC into the same set ranges and
+        // regroup by shard index: groups[s] holds shard s's view of
+        // every node's LLC, in node order.
+        let outcomes: Vec<ShardOutcome> = {
+            let mut groups: Vec<Vec<SetShard<'_>>> =
+                (0..shards).map(|_| Vec::with_capacity(self.nodes)).collect();
+            for llc in self.llcs.iter_mut() {
+                for (s, view) in llc.set_shards(shards).into_iter().enumerate() {
+                    groups[s].push(view);
+                }
+            }
+            let workers = workers.clamp(1, shards);
+            if workers <= 1 {
+                // One worker: replay the shards in-thread, in order —
+                // same outcomes, no spawn overhead.
+                groups
+                    .iter_mut()
+                    .map(|group| replay_shard_group(group, streams, placement))
+                    .collect()
+            } else {
+                let cells: Vec<Mutex<Option<Vec<SetShard<'_>>>>> =
+                    groups.into_iter().map(|g| Mutex::new(Some(g))).collect();
+                let slots: Vec<Mutex<Option<ShardOutcome>>> =
+                    (0..shards).map(|_| Mutex::new(None)).collect();
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        let (next, cells, slots) = (&next, &cells, &slots);
+                        scope.spawn(move || loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= cells.len() {
+                                break;
+                            }
+                            let mut group =
+                                cells[i].lock().unwrap().take().expect("each shard claimed once");
+                            let outcome = replay_shard_group(&mut group, streams, placement);
+                            *slots[i].lock().unwrap() = Some(outcome);
+                        });
+                    }
+                });
+                slots
+                    .into_iter()
+                    .map(|s| s.into_inner().unwrap().expect("phase B covered every shard"))
+                    .collect()
+            }
+        };
+
+        // Fold the order-independent outcomes in fixed shard order.
+        for outcome in &outcomes {
+            for (node, (shard_stats, clock)) in outcome.llc.iter().enumerate() {
+                self.llcs[node].absorb_shard(shard_stats, *clock);
+            }
+            stats.llc_demand_miss_lines += outcome.demand_miss_lines;
+            stats.hw_prefetch_lines += outcome.hw_prefetch_lines;
+            stats.sw_prefetch_lines += outcome.sw_prefetch_lines;
+            stats.nt_store_lines += outcome.nt_store_lines;
+        }
+
+        // B2: key-merge the per-shard event lists (each is sorted by
+        // construction; keys are globally unique) and resolve `node_of`
+        // in exactly the serial global order, accumulating per-node IMC
+        // deltas that absorb in one deterministic pass.
+        let mut imc_delta = vec![ImcCounters::default(); self.nodes];
+        let mut cursors = vec![0usize; outcomes.len()];
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (i, outcome) in outcomes.iter().enumerate() {
+                if let Some(ev) = outcome.events.get(cursors[i]) {
+                    if best.map_or(true, |(_, k)| ev.key < k) {
+                        best = Some((i, ev.key));
+                    }
+                }
+            }
+            let Some((i, _)) = best else { break };
+            let ev = outcomes[i].events[cursors[i]];
+            cursors[i] += 1;
+            let thread_node = ev.thread_node as usize;
+            match ev.class {
+                ResolveClass::Read => {
+                    let mem_node = node_of(ev.line * LINE, thread_node);
+                    imc_delta[mem_node].read_lines += 1;
+                    count_locality(stats, thread_node, mem_node, 1);
+                }
+                ResolveClass::WbWrite => {
+                    let wb_node = node_of(ev.line * LINE, thread_node);
+                    imc_delta[wb_node].write_lines += 1;
+                    count_wb_locality(stats, thread_node, wb_node, 1);
+                }
+                ResolveClass::NtWrite => {
+                    let mem_node = node_of(ev.line * LINE, thread_node);
+                    imc_delta[mem_node].write_lines += 1;
+                    count_locality(stats, thread_node, mem_node, 1);
+                }
+            }
+        }
+        self.imc.absorb(&imc_delta);
     }
 
     /// Phase B: apply one survivor op to the shared LLC/IMC levels —
@@ -1601,5 +2059,162 @@ mod tests {
         let mut b = tiny_system(1);
         let via_generic = b.run_with(&[t], &Placement::bound(1, 0), node0);
         assert_eq!(via_dyn, via_generic);
+    }
+
+    #[test]
+    fn sharded_matches_serial_on_mixed_kinds() {
+        // The mixed-kind two-thread fixture of
+        // `two_phase_matches_serial_on_mixed_kinds`, replayed through
+        // the set-sharded engine at every worker × shard combination —
+        // including shards beyond the worker count and shards above the
+        // LLC set count (clamped).
+        let cfg = HierarchyConfig {
+            l1: CacheConfig::new(512, 2),
+            l2: CacheConfig::new(2048, 4),
+            llc: CacheConfig::new(8192, 8),
+            prefetch: PrefetchConfig::default(),
+        };
+        let mk = |base: u64| {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(base, 6144, AccessKind::Load));
+            t.push(AccessRun::contiguous(base + 1024, 2048, AccessKind::StoreNT));
+            t.push(AccessRun::contiguous(base, 2048, AccessKind::PrefetchSW));
+            t.push(AccessRun::contiguous(base + 4096, 4096, AccessKind::Store));
+            t.push(AccessRun::contiguous(base, 4096, AccessKind::Load));
+            t
+        };
+        let traces = [mk(0), mk(1 << 20)];
+        let placement = Placement::spread(2, 2);
+        let node_of = |addr: u64, _t: usize| usize::from(addr >= (1 << 20));
+
+        let mut serial = MemorySystem::new(cfg, 2, 2);
+        let want = serial.run_with(&traces, &placement, node_of);
+        assert!(want.nt_store_lines > 0 && want.sw_prefetch_lines > 0);
+        for workers in [1usize, 2, 8] {
+            for shards in [1usize, 2, 7, 16, 64] {
+                let mut sharded = MemorySystem::new(cfg, 2, 2);
+                let got = sharded.run_sharded(&traces, &placement, node_of, workers, shards);
+                assert_eq!(
+                    got.divergence(&want),
+                    None,
+                    "workers={workers} shards={shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_warm_rerun_matches_serial() {
+        // Retained LLC state across rounds: shard views inherit the
+        // previous round's tags/dirty bits and the absorbed clock keeps
+        // every new stamp above every old one, so warm outcomes match
+        // the serial engine exactly.
+        let mk = || {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(0, 6144, AccessKind::Load));
+            t.push(AccessRun::contiguous(1 << 20, 6144, AccessKind::Store));
+            t
+        };
+        let placement = Placement::bound(2, 0);
+        let mut serial = tiny_system(2);
+        let mut sharded = tiny_system(2);
+        for round in 0..3 {
+            let want = serial.run_with(&[mk(), mk()], &placement, node0);
+            let got = sharded.run_sharded(&[mk(), mk()], &placement, node0, 2, 7);
+            assert_eq!(got.divergence(&want), None, "round {round}");
+        }
+    }
+
+    #[test]
+    fn sharded_first_touch_pinning_matches_serial() {
+        // A stateful first-touch resolver: the node a page pins to
+        // depends on which thread's transfer resolves it first, i.e. on
+        // the exact global node_of call order — the part of phase B
+        // that stays sequential. Two threads on different nodes touch
+        // overlapping pages; any order divergence flips pins and shows
+        // up in the per-node IMC counters.
+        let mk = |base: u64| {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(base, 12288, AccessKind::Load));
+            t.push(AccessRun::contiguous(base + 2048, 8192, AccessKind::Store));
+            t
+        };
+        let traces = [mk(0), mk(4096)];
+        let placement = Placement::spread(2, 2);
+        let first_touch = || {
+            let mut pins: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+            move |addr: u64, toucher: usize| *pins.entry(addr >> 12).or_insert(toucher)
+        };
+
+        let mut serial = tiny_system(2);
+        let want = serial.run_with(&traces, &placement, first_touch());
+        assert!(
+            want.imc[0] != ImcCounters::default() && want.imc[1] != ImcCounters::default(),
+            "fixture must exercise both nodes"
+        );
+        for workers in [1usize, 2, 8] {
+            for shards in [2usize, 7, 16] {
+                let mut sharded = tiny_system(2);
+                let got = sharded.run_sharded(&traces, &placement, first_touch(), workers, shards);
+                assert_eq!(
+                    got.divergence(&want),
+                    None,
+                    "workers={workers} shards={shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_degenerates_on_single_set_llc() {
+        // One-set LLC: shards clamp to 1 and the engine takes the
+        // serial replay path — still bit-identical.
+        let cfg = HierarchyConfig {
+            l1: CacheConfig::new(512, 2),
+            l2: CacheConfig::new(2048, 4),
+            llc: CacheConfig::new(512, 8), // 512 B / (8 ways × 64 B) = 1 set
+            prefetch: PrefetchConfig::disabled(),
+        };
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 8192, AccessKind::Load));
+        t.push(AccessRun::contiguous(0, 4096, AccessKind::Store));
+        let mut serial = MemorySystem::new(cfg, 2, 1);
+        let want = serial.run_with(&[t.clone()], &Placement::bound(1, 0), node0);
+        let mut sharded = MemorySystem::new(cfg, 2, 1);
+        let got = sharded.run_sharded(&[t], &Placement::bound(1, 0), node0, 8, 8);
+        assert_eq!(got.divergence(&want), None);
+    }
+
+    #[test]
+    fn phase_split_reports_both_phases() {
+        let mut ms = tiny_system(2);
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(0, 16384, AccessKind::Load));
+        let _ = ms.run_sharded(&[t.clone(), t], &Placement::bound(2, 0), node0, 2, 4);
+        let split = ms.last_phase_split();
+        assert!(split.phase_a_seconds >= 0.0 && split.phase_b_seconds >= 0.0);
+        assert!((0.0..=1.0).contains(&split.phase_b_fraction()));
+    }
+
+    #[test]
+    fn pooled_buffers_do_not_leak_state_across_runs() {
+        // Back-to-back runs on one MemorySystem reuse the pooled
+        // survivor streams and scratch buffers; a fresh system must
+        // still agree exactly.
+        let mk = || {
+            let mut t = Trace::new();
+            t.push(AccessRun::contiguous(0, 6144, AccessKind::Load));
+            t.push(AccessRun::contiguous(1 << 20, 4096, AccessKind::Store));
+            t
+        };
+        let placement = Placement::bound(2, 0);
+        let mut pooled = tiny_system(2);
+        let _ = pooled.run_parallel(&[mk(), mk()], &placement, node0, 2);
+        pooled.flush_all();
+        let warm_pool = pooled.run_sharded(&[mk(), mk()], &placement, node0, 2, 4);
+
+        let mut fresh = tiny_system(2);
+        let cold = fresh.run_sharded(&[mk(), mk()], &placement, node0, 2, 4);
+        assert_eq!(warm_pool.divergence(&cold), None);
     }
 }

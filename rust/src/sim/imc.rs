@@ -24,6 +24,14 @@ pub struct ImcCounters {
 }
 
 impl ImcCounters {
+    /// Fold `other` into `self`. Both fields are additive CAS counts,
+    /// so per-shard / per-pass deltas merge to exactly the serial
+    /// totals regardless of how the work was partitioned.
+    pub fn merge(&mut self, other: &ImcCounters) {
+        self.read_lines += other.read_lines;
+        self.write_lines += other.write_lines;
+    }
+
     /// Read traffic in bytes.
     pub fn read_bytes(&self) -> u64 {
         self.read_lines * LINE
@@ -102,6 +110,17 @@ impl ImcBank {
         sum
     }
 
+    /// Fold one per-node delta block into the bank, node by node — the
+    /// deterministic merge step of the set-sharded replay's sequential
+    /// node-resolution pass (§Perf step 8). `deltas.len()` must not
+    /// exceed the node count.
+    pub fn absorb(&mut self, deltas: &[ImcCounters]) {
+        assert!(deltas.len() <= self.counters.len(), "delta block wider than the bank");
+        for (c, d) in self.counters.iter_mut().zip(deltas) {
+            c.merge(d);
+        }
+    }
+
     /// Zero every node's counters.
     pub fn reset(&mut self) {
         for c in &mut self.counters {
@@ -147,5 +166,23 @@ mod tests {
         let c = ImcCounters { read_lines: 2, write_lines: 3 };
         assert_eq!(c.read_bytes(), 128);
         assert_eq!(c.write_bytes(), 192);
+    }
+
+    #[test]
+    fn absorb_matches_direct_records() {
+        let mut direct = ImcBank::new(2);
+        direct.record_read(0, 7);
+        direct.record_write(1, 3);
+        direct.record_read(1, 2);
+
+        let mut merged = ImcBank::new(2);
+        let delta = [
+            ImcCounters { read_lines: 7, write_lines: 0 },
+            ImcCounters { read_lines: 2, write_lines: 3 },
+        ];
+        merged.absorb(&delta);
+        assert_eq!(merged.node(0), direct.node(0));
+        assert_eq!(merged.node(1), direct.node(1));
+        assert_eq!(merged.total(), direct.total());
     }
 }

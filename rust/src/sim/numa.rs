@@ -155,10 +155,17 @@ const NODE_CACHE_SLOTS: usize = 2048;
 /// direct-mapped memo so repeated lines of one page cost a single array
 /// probe (§Perf step 6).
 ///
-/// Scope one `NodeCache` to one address-space lifetime: drop (or
-/// recreate) it whenever regions are re-allocated — e.g. one per
-/// [`crate::harness::measure_kernel`] call, whose measurement pipeline
-/// allocates once up front.
+/// Scope one `NodeCache` to one address-space lifetime: drop it,
+/// [`clear`](Self::clear) it, or recreate it whenever regions are
+/// re-allocated — e.g. one per [`crate::harness::measure_kernel`] call,
+/// whose measurement pipeline allocates once up front.
+///
+/// The memo is deliberately single-threaded. The set-sharded replay
+/// engine ([`crate::sim::MemorySystem::run_sharded`], §Perf step 8)
+/// keeps all `node_of` resolution in its *sequential* event-resolution
+/// pass precisely so this memo — and first-touch pinning behind it —
+/// sees the same probe sequence as the serial engines, in the same
+/// order, with no synchronisation.
 #[derive(Clone, Debug)]
 pub struct NodeCache {
     /// Direct-mapped entries `(page + 1, node)`; key 0 = empty slot.
@@ -169,6 +176,13 @@ impl NodeCache {
     /// An empty memo.
     pub fn new() -> NodeCache {
         NodeCache { entries: vec![(0, 0); NODE_CACHE_SLOTS] }
+    }
+
+    /// Forget every memoized resolution (capacity retained). Call when
+    /// the address space behind the resolver is re-allocated and the
+    /// memo object is being reused rather than dropped.
+    pub fn clear(&mut self) {
+        self.entries.fill((0, 0));
     }
 
     /// Resolve the node owning `addr`, consulting the memo first and
@@ -401,6 +415,22 @@ mod tests {
         assert_eq!(cache.node_of(far, 0, |_a, _t| 1), 1);
         // Page 0 was evicted by the collision; the resolver answers again.
         assert_eq!(cache.node_of(0, 0, |_a, _t| 0), 0);
+    }
+
+    #[test]
+    fn node_cache_clear_forgets_resolutions() {
+        let mut cache = NodeCache::new();
+        let mut calls = 0usize;
+        let mut resolve = |_a: u64, _t: usize| {
+            calls += 1;
+            1
+        };
+        cache.node_of(0, 0, &mut resolve);
+        cache.node_of(64, 0, &mut resolve);
+        assert_eq!(calls, 1);
+        cache.clear();
+        cache.node_of(0, 0, &mut resolve);
+        assert_eq!(calls, 2, "cleared memo must re-resolve");
     }
 
     #[test]

@@ -43,6 +43,48 @@ impl Bound {
     }
 }
 
+/// Wall-clock split of one parallel-engine run: phase A (concurrent
+/// private-cache simulation) vs. phase B (shared LLC/IMC replay,
+/// including the set-sharded engine's sequential node-resolution pass).
+///
+/// This is host telemetry, not simulation output — it never enters a
+/// [`TrafficStats`], a measurement, or a manifest, so recording it
+/// cannot perturb bit-identity. The bench harness reports it per series
+/// so the remaining serial fraction of the hot path is tracked release
+/// over release (§Perf step 8).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseSplit {
+    /// Seconds spent in phase A.
+    pub phase_a_seconds: f64,
+    /// Seconds spent in phase B.
+    pub phase_b_seconds: f64,
+}
+
+impl PhaseSplit {
+    /// Sum of both phases.
+    pub fn total_seconds(&self) -> f64 {
+        self.phase_a_seconds + self.phase_b_seconds
+    }
+
+    /// Phase B's share of the total (0 when nothing was timed) — the
+    /// Amdahl serial fraction the set-sharded engine attacks.
+    pub fn phase_b_fraction(&self) -> f64 {
+        let total = self.total_seconds();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.phase_b_seconds / total
+        }
+    }
+
+    /// Accumulate another run's split (per-measurement aggregation over
+    /// init/warmup/measured runs).
+    pub fn merge(&mut self, other: &PhaseSplit) {
+        self.phase_a_seconds += other.phase_a_seconds;
+        self.phase_b_seconds += other.phase_b_seconds;
+    }
+}
+
 /// A runtime estimate with its decomposition.
 #[derive(Clone, Copy, Debug)]
 pub struct RuntimeEstimate {
@@ -277,6 +319,17 @@ mod tests {
             assert!(est.seconds * pi >= w * 0.999, "t={threads}: W bound violated");
             assert!(est.seconds * beta >= q * 0.999, "t={threads}: Q bound violated");
         }
+    }
+
+    #[test]
+    fn phase_split_fraction_and_merge() {
+        let mut s = PhaseSplit::default();
+        assert_eq!(s.phase_b_fraction(), 0.0);
+        s.merge(&PhaseSplit { phase_a_seconds: 3.0, phase_b_seconds: 1.0 });
+        assert!((s.total_seconds() - 4.0).abs() < 1e-12);
+        assert!((s.phase_b_fraction() - 0.25).abs() < 1e-12);
+        s.merge(&PhaseSplit { phase_a_seconds: 0.0, phase_b_seconds: 4.0 });
+        assert!((s.phase_b_fraction() - 0.625).abs() < 1e-12);
     }
 
     #[test]

@@ -58,6 +58,29 @@ impl AccessRun {
         self.count * self.size as u64
     }
 
+    /// Does every access address of this run stay inside `[0, i64::MAX]`?
+    ///
+    /// This is the **no-wrap contract** that [`lines`](Self::lines) and
+    /// `line_intervals` rely on: both compute addresses as
+    /// `base as i64 + stride * i as i64`, which is only correct when no
+    /// intermediate address leaves the non-negative `i64` range —
+    /// otherwise the `as u64` round-trip silently wraps and probes a
+    /// bogus line. Addresses along a run are linear in `i`, so checking
+    /// the two endpoints (`i = 0` and `i = count - 1`) in wide `i128`
+    /// arithmetic bounds every access in between. Kernel models satisfy
+    /// this trivially (the simulator's address space is ≤ 2^38 bytes);
+    /// [`Trace::push`] debug-asserts it, and the fuzz trace generator
+    /// clamps its hostile runs to it.
+    pub fn no_wrap(&self) -> bool {
+        if self.count == 0 {
+            return true;
+        }
+        let first = self.base as i128;
+        let last = first + self.stride as i128 * (self.count as i128 - 1);
+        let ok = |a: i128| (0..=i64::MAX as i128).contains(&a);
+        ok(first) && ok(last)
+    }
+
     /// Iterate the *distinct cache lines* the run touches, in access
     /// order, merging consecutive repeats (the common case for unit-stride
     /// element accesses within one line).
@@ -73,8 +96,9 @@ impl AccessRun {
     /// endpoint lines — no per-probe work. Larger strides skip lines;
     /// those walk the accesses once, collapsing ±1-line steps, and emit
     /// one interval per gap (never more entries than distinct lines).
-    /// Addresses must not wrap the 64-bit space — the same contract the
-    /// simulator's ≤ 2^38-byte address space already imposes.
+    /// Addresses must satisfy the [`no_wrap`](Self::no_wrap) contract —
+    /// the same one the simulator's ≤ 2^38-byte address space already
+    /// imposes, and which [`Trace::push`] debug-asserts.
     fn line_intervals(&self, out: &mut Vec<(u64, u64)>) {
         if self.count == 0 {
             return;
@@ -149,7 +173,16 @@ impl Trace {
     }
 
     /// Append a run (empty runs are dropped).
+    ///
+    /// Debug builds enforce the [`AccessRun::no_wrap`] address contract
+    /// here — at construction, where the offending kernel model is on
+    /// the stack — rather than deep inside the line iterators where a
+    /// wrapped probe would surface as an inscrutable cache divergence.
     pub fn push(&mut self, run: AccessRun) {
+        debug_assert!(
+            run.no_wrap(),
+            "AccessRun address arithmetic would wrap i64: {run:?}"
+        );
         if run.count > 0 {
             self.runs.push(run);
         }
@@ -254,6 +287,34 @@ mod tests {
         let mut t = Trace::new();
         t.push(AccessRun { base: 0, stride: 0, count: 0, size: 4, kind: AccessKind::Load });
         assert!(t.runs.is_empty());
+    }
+
+    #[test]
+    fn no_wrap_contract_checks_both_endpoints() {
+        let ok = |base, stride, count| {
+            AccessRun { base, stride, count, size: 4, kind: AccessKind::Load }.no_wrap()
+        };
+        // In-range runs, including the exact i64::MAX endpoints.
+        assert!(ok(0, 0, 1));
+        assert!(ok(1 << 38, -64, 1 << 10));
+        assert!(ok(i64::MAX as u64, -1, 100));
+        assert!(ok(0, 1, 1 + i64::MAX as u64)); // last = i64::MAX exactly
+        assert!(ok(u64::MAX, 123, 0)); // empty runs touch nothing
+        // First endpoint out of range: base re-interprets as negative.
+        assert!(!ok(u64::MAX, 0, 1));
+        assert!(!ok(1 + i64::MAX as u64, -64, 2));
+        // Last endpoint out of range: forward overflow past i64::MAX...
+        assert!(!ok(i64::MAX as u64, 1, 2));
+        // ...and backward underflow below zero.
+        assert!(!ok(64, -64, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "would wrap i64")]
+    #[cfg(debug_assertions)]
+    fn push_rejects_wrapping_run_in_debug() {
+        let mut t = Trace::new();
+        t.push(AccessRun { base: 0, stride: -64, count: 2, size: 4, kind: AccessKind::Load });
     }
 
     #[test]

@@ -1,21 +1,25 @@
-//! Differential parity suite (ISSUE 4 + ISSUE 5 tentpoles): the
-//! batched, SoA, monomorphized simulator hot path **and** the two-phase
-//! parallel engine must be *bit-identical* to the retained scalar
-//! reference path.
+//! Differential parity suite (ISSUE 4 + ISSUE 5 + ISSUE 9 tentpoles):
+//! the batched, SoA, monomorphized simulator hot path, the two-phase
+//! parallel engine, **and** the set-sharded parallel engine must all be
+//! *bit-identical* to the retained scalar reference path.
 //!
 //! Four layers of pinning:
 //!
 //! 1. **Measurement parity** — [`measure_kernel`] vs
 //!    [`measure_kernel_reference`] vs [`measure_kernel_parallel`] at
-//!    worker counts {1, 2, 8}, across every kernel family × the six
-//!    [`ScenarioSpec`] presets (and warm-cache protocols): identical
-//!    `TrafficStats`, per-level `CacheStats`, IMC counters, W/Q/R — the
-//!    whole measurement serialises to the same bytes.
-//! 2. **Edge geometry** — direct-mapped (1-way) and single-set caches,
-//!    batches that straddle the internal `CHUNK` boundary mid-run, and
-//!    NT-store / SW-prefetch kinds interleaved inside one batch, driven
-//!    at the `MemorySystem::run_with` / `run_reference` /
-//!    `run_parallel` level (again at worker counts {1, 2, 8}).
+//!    worker counts {1, 2, 8} vs [`measure_kernel_sharded`] at worker
+//!    counts {1, 2, 8} × shard counts {1, 2, 7}, across every kernel
+//!    family × the six [`ScenarioSpec`] presets (and warm-cache
+//!    protocols): identical `TrafficStats`, per-level `CacheStats`,
+//!    IMC counters, W/Q/R — the whole measurement serialises to the
+//!    same bytes.
+//! 2. **Edge geometry** — direct-mapped (1-way) and single-set caches
+//!    (including a single-set *LLC*, where set sharding degenerates to
+//!    one serial shard), batches that straddle the internal `CHUNK`
+//!    boundary mid-run, and NT-store / SW-prefetch kinds interleaved
+//!    inside one batch, driven at the `MemorySystem::run_with` /
+//!    `run_reference` / `run_parallel` / `run_sharded` level (again at
+//!    worker counts {1, 2, 8}, shard counts {1, 2, 7}).
 //! 3. **Store compatibility** — a warm `--cache-dir` sweep over records
 //!    produced by the *reference* path (what the pre-batching binary
 //!    would have written) — or by a mix of the reference and two-phase
@@ -34,7 +38,7 @@ use dlroofline::coordinator::runner::{
 use dlroofline::coordinator::store::CellStore;
 use dlroofline::harness::experiments::ExperimentParams;
 use dlroofline::harness::measure::{
-    measure_kernel, measure_kernel_parallel, measure_kernel_reference,
+    measure_kernel, measure_kernel_parallel, measure_kernel_reference, measure_kernel_sharded,
 };
 use dlroofline::harness::{CacheState, ScenarioSpec};
 use dlroofline::coordinator::KernelRegistry;
@@ -113,6 +117,12 @@ fn assert_parity(
 /// threads (exercises the clamp).
 const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
 
+/// Set-shard counts every sharded assertion runs at, crossed with
+/// [`WORKER_COUNTS`]: the serial-degenerate count, the minimal split,
+/// and a prime that divides no power-of-two set count evenly (the last
+/// shard group ends up a different size than the rest).
+const SHARD_COUNTS: [usize; 3] = [1, 2, 7];
+
 #[test]
 fn batched_path_matches_reference_across_kernels_and_presets() {
     let config = MachineConfig::xeon_6248();
@@ -149,6 +159,31 @@ fn batched_path_matches_reference_across_kernels_and_presets() {
                     &batched,
                     &format!("{} × {} × cold × {workers}w", kernel.name(), scenario.name),
                 );
+            }
+            // Fourth column: the set-sharded engine, at every worker ×
+            // shard count, against the same pinned batched run.
+            for workers in WORKER_COUNTS {
+                for shards in SHARD_COUNTS {
+                    let mut d = Machine::new(config.clone());
+                    let sharded = measure_kernel_sharded(
+                        &mut d,
+                        kernel.as_ref(),
+                        scenario,
+                        CacheState::Cold,
+                        workers,
+                        shards,
+                    )
+                    .expect("sharded measurement");
+                    assert_parity(
+                        &sharded,
+                        &batched,
+                        &format!(
+                            "{} × {} × cold × {workers}w{shards}s",
+                            kernel.name(),
+                            scenario.name
+                        ),
+                    );
+                }
             }
         }
     }
@@ -191,6 +226,29 @@ fn batched_path_matches_reference_warm_protocol() {
                     &format!("{} × {} × warm × {workers}w", kernel.name(), scenario.name),
                 );
             }
+            for workers in WORKER_COUNTS {
+                for shards in SHARD_COUNTS {
+                    let mut d = Machine::new(config.clone());
+                    let sharded = measure_kernel_sharded(
+                        &mut d,
+                        kernel.as_ref(),
+                        &scenario,
+                        CacheState::Warm,
+                        workers,
+                        shards,
+                    )
+                    .expect("sharded measurement");
+                    assert_parity(
+                        &sharded,
+                        &batched,
+                        &format!(
+                            "{} × {} × warm × {workers}w{shards}s",
+                            kernel.name(),
+                            scenario.name
+                        ),
+                    );
+                }
+            }
         }
     }
 }
@@ -209,9 +267,10 @@ fn edge_config(l1_ways: usize, prefetch: bool) -> HierarchyConfig {
     }
 }
 
-/// Run the same traces through the reference, batched and two-phase
-/// paths on twin systems and assert identical deltas (twice, to cover
-/// warmed state; the two-phase engine at every worker count).
+/// Run the same traces through the reference, batched, two-phase and
+/// set-sharded paths on twin systems and assert identical deltas
+/// (twice, to cover warmed state; the two-phase engine at every worker
+/// count, the sharded engine at every worker × shard count).
 fn assert_run_parity(cfg: HierarchyConfig, traces: &[Trace], placement: &Placement) {
     let threads = traces.len();
     let mut reference = MemorySystem::new(cfg, 2, threads);
@@ -237,6 +296,18 @@ fn assert_run_parity(cfg: HierarchyConfig, traces: &[Trace], placement: &Placeme
         for (round, want) in wants.iter().enumerate() {
             let got = twophase.run_parallel(traces, placement, node_of, workers);
             assert_eq!(&got, want, "two-phase({workers}) round {round} diverged ({cfg:?})");
+        }
+    }
+    for workers in WORKER_COUNTS {
+        for shards in SHARD_COUNTS {
+            let mut sharded = MemorySystem::new(cfg, 2, threads);
+            for (round, want) in wants.iter().enumerate() {
+                let got = sharded.run_sharded(traces, placement, node_of, workers, shards);
+                assert_eq!(
+                    &got, want,
+                    "sharded({workers}w,{shards}s) round {round} diverged ({cfg:?})"
+                );
+            }
         }
     }
 }
@@ -286,6 +357,28 @@ fn parity_bypass_kinds_interleaved_inside_one_batch() {
     }
 }
 
+#[test]
+fn parity_single_set_llc_degenerates_sharding() {
+    // A single-set LLC leaves nothing to shard: every requested shard
+    // count clamps to 1 and the sharded engine must fall back to the
+    // serial shared-level replay — still bit-identical, with all ways
+    // of the one set contending across both threads.
+    let cfg = HierarchyConfig {
+        l1: CacheConfig::new(8 * 2 * 64, 2),
+        l2: CacheConfig::new(4 * 64, 4),
+        llc: CacheConfig::new(8 * 64, 8), // 1 set × 8 ways
+        prefetch: PrefetchConfig::default(),
+    };
+    let mk = |base: u64| {
+        let mut t = Trace::new();
+        t.push(AccessRun::contiguous(base, 2048 * 64, AccessKind::Load));
+        t.push(AccessRun { base, stride: 512, count: 300, size: 4, kind: AccessKind::Store });
+        t
+    };
+    let traces = [mk(0), mk(1 << 21)];
+    assert_run_parity(cfg, &traces, &Placement::spread(2, 2));
+}
+
 // ------------------------------------------------- store compatibility
 
 /// Every regular file under `dir` (recursive), relative path → bytes.
@@ -312,8 +405,10 @@ fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
 fn sweep_output_byte_identical_across_sim_jobs() {
     // The satellite determinism pin: `--sim-jobs 1/2/8` (and the plain
     // serial engine) must write byte-identical reports and run.json.
-    // f4 is a 20-thread one-socket grid — the cell shape the two-phase
-    // engine exists for; f6 adds warm-protocol cells.
+    // `--sim-jobs N ≥ 2` now routes cells to the set-sharded engine
+    // (N workers × N shards); f4 is a 20-thread one-socket grid — the
+    // cell shape the parallel engines exist for; f6 adds warm-protocol
+    // cells.
     let params = ExperimentParams { batch: Some(1), ..Default::default() };
     let ids = ["f4", "f6"];
 
@@ -341,9 +436,10 @@ fn sweep_output_byte_identical_across_sim_jobs() {
 #[test]
 fn warm_sweep_over_mixed_engine_records_is_byte_identical() {
     // A cache directory accumulated by BOTH engines — some records
-    // written by the reference walk, some by the two-phase engine —
-    // must serve a warm sweep completely and byte-identically: the
-    // engines' records are indistinguishable on disk.
+    // written by the reference walk, some by the set-sharded engine
+    // (`simulate_jobs` with jobs ≥ 2) — must serve a warm sweep
+    // completely and byte-identically: the engines' records are
+    // indistinguishable on disk.
     let params = ExperimentParams { batch: Some(1), ..Default::default() };
     let ids = ["f4", "f6"];
 
