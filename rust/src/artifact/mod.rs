@@ -26,7 +26,10 @@ use anyhow::{ensure, Context, Result};
 
 use crate::coordinator::manifest::{FileRecord, RunManifest};
 use crate::coordinator::store::CellStore;
-use crate::util::fsutil::{read_to_string, write_atomic, write_atomic_bytes};
+use crate::util::fsutil::{
+    read_to_string_io_with, read_to_string_with, write_atomic_bytes_with, write_atomic_with,
+    FaultInjector,
+};
 use crate::util::hash::fnv1a_64_hex;
 use crate::util::json::Json;
 
@@ -157,6 +160,21 @@ pub struct PackReport {
 /// and files that `run.json` itself records are cross-checked first —
 /// a run directory modified after the run fails the pack.
 pub fn pack(run_dir: &Path, out_dir: &Path, store: Option<&CellStore>) -> Result<PackReport> {
+    pack_with(run_dir, out_dir, store, None)
+}
+
+/// [`pack`], honoring an optional fault injector on every file read and
+/// write (the fuzzer's graceful-degradation oracle drives this; the
+/// production path passes `None`, which costs nothing). Faulted report
+/// reads and pack writes fail the pack cleanly; a faulted *store-record*
+/// read degrades to `cells_missing` — exactly how a pruned cache
+/// behaves.
+pub fn pack_with(
+    run_dir: &Path,
+    out_dir: &Path,
+    store: Option<&CellStore>,
+    faults: Option<&FaultInjector>,
+) -> Result<PackReport> {
     let run_manifest = RunManifest::load(&run_dir.join("run.json"))
         .with_context(|| format!("loading run manifest from {}", run_dir.display()))?;
 
@@ -167,7 +185,7 @@ pub fn pack(run_dir: &Path, out_dir: &Path, store: Option<&CellStore>) -> Result
     let mut files = Vec::new();
     let mut file_entries = Vec::new();
     for rel in &rel_paths {
-        let content = read_to_string(&run_dir.join(rel))?;
+        let content = read_to_string_with(&run_dir.join(rel), faults)?;
         let record = FileRecord::from_content(rel, &content);
         if let Some(recorded) = run_manifest.files.iter().find(|f| &f.path == rel) {
             ensure!(
@@ -192,7 +210,7 @@ pub fn pack(run_dir: &Path, out_dir: &Path, store: Option<&CellStore>) -> Result
                 .with_context(|| format!("run.json cell key '{}' is not hex", cell.key))?;
             // Byte-verbatim, not re-serialized: the receiving host must
             // see the exact record this run's sweeps would serve.
-            match std::fs::read_to_string(store.record_path(key)) {
+            match read_to_string_io_with(&store.record_path(key), faults) {
                 Ok(text) => {
                     let name = format!("cells/{}.json", cell.key);
                     cells.push(FileRecord::from_content(&name, &text));
@@ -220,8 +238,8 @@ pub fn pack(run_dir: &Path, out_dir: &Path, store: Option<&CellStore>) -> Result
     entries.append(&mut cell_entries);
     let payload = tar::write_tar(&entries)?;
 
-    write_atomic(&out_dir.join(MANIFEST_NAME), &manifest_text)?;
-    write_atomic_bytes(&out_dir.join(PAYLOAD_NAME), &payload)?;
+    write_atomic_with(&out_dir.join(MANIFEST_NAME), &manifest_text, faults)?;
+    write_atomic_bytes_with(&out_dir.join(PAYLOAD_NAME), &payload, faults)?;
     Ok(PackReport {
         dir: out_dir.to_path_buf(),
         files: manifest.files.len(),
@@ -260,7 +278,21 @@ pub fn unpack(
     seed_cache: Option<&Path>,
     verify: bool,
 ) -> Result<UnpackReport> {
-    let manifest_text = read_to_string(&pack_dir.join(MANIFEST_NAME))?;
+    unpack_with(pack_dir, into, seed_cache, verify, None)
+}
+
+/// [`unpack`], honoring an optional fault injector on the side-manifest
+/// read and every extraction write. Faults surface as clean errors —
+/// verification and the path-traversal guard run exactly as without
+/// them.
+pub fn unpack_with(
+    pack_dir: &Path,
+    into: Option<&Path>,
+    seed_cache: Option<&Path>,
+    verify: bool,
+    faults: Option<&FaultInjector>,
+) -> Result<UnpackReport> {
+    let manifest_text = read_to_string_with(&pack_dir.join(MANIFEST_NAME), faults)?;
     let manifest = ArtifactManifest::from_json(
         &Json::parse(&manifest_text)
             .with_context(|| format!("parsing {}", pack_dir.join(MANIFEST_NAME).display()))?,
@@ -292,7 +324,7 @@ pub fn unpack(
     let mut extracted = None;
     if let Some(into) = into {
         for (name, data) in &entries {
-            write_atomic_bytes(&into.join(safe_rel_path(name)?), data)?;
+            write_atomic_bytes_with(&into.join(safe_rel_path(name)?), data, faults)?;
         }
         extracted = Some(into.to_path_buf());
     }

@@ -48,12 +48,14 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::harness::measure::KernelMeasurement;
-use crate::util::fsutil::write_atomic_unique;
+use crate::util::fsutil::{
+    read_to_string_io_with, write_atomic_unique, write_atomic_unique_with, FaultInjector,
+};
 use crate::util::hash::hex64;
 use crate::util::json::Json;
 
@@ -102,6 +104,10 @@ pub struct GcReport {
     pub evicted: usize,
     /// Valid records kept.
     pub kept: usize,
+    /// Valid records exempted from eviction because a claim file under
+    /// `claims/` named them — a serve fill worker published them moments
+    /// ago and its peers may still be polling for them.
+    pub protected: usize,
 }
 
 /// Per-key hit counts plus index metadata, guarded for thread safety.
@@ -119,6 +125,7 @@ pub struct CellStore {
     root: PathBuf,
     index: Mutex<IndexState>,
     recovered: bool,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl CellStore {
@@ -130,6 +137,19 @@ impl CellStore {
     /// contents. Only the accumulated hit counts are lost — they merely
     /// weaken `gc` heuristics, never correctness.
     pub fn open(dir: &Path) -> Result<CellStore> {
+        Self::open_with_faults(dir, None)
+    }
+
+    /// As [`CellStore::open`], with a fault injector applied to record
+    /// reads and writes (the correctness surface; the advisory hit-count
+    /// index stays unfaulted — it is best-effort by design). Production
+    /// callers pass `None` through [`CellStore::open`]; the `faults`
+    /// fuzz kind and chaos tests use this to prove that a faulted store
+    /// only ever degrades to re-simulation, never to wrong results.
+    pub fn open_with_faults(
+        dir: &Path,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> Result<CellStore> {
         std::fs::create_dir_all(dir.join("cells"))
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
         let index_path = dir.join("index.json");
@@ -145,6 +165,7 @@ impl CellStore {
                 hits: BTreeMap::new(),
             })),
             recovered,
+            faults,
         };
         if recovered {
             // Best-effort persistence: a read-only pre-seeded cache still
@@ -225,7 +246,7 @@ impl CellStore {
             .with_context(|| format!("seed record for {} is not JSON", hex64(key)))?;
         Self::record_from_json(&doc, key)
             .with_context(|| format!("seed record for {} is not servable", hex64(key)))?;
-        write_atomic_unique(&self.entry_path(key), text)
+        write_atomic_unique_with(&self.entry_path(key), text, self.faults.as_deref())
     }
 
     /// Probe the store for `key`. Never fails: every unusable state maps
@@ -233,7 +254,7 @@ impl CellStore {
     /// fall back to simulation.
     pub fn lookup(&self, key: u64) -> Lookup {
         let path = self.entry_path(key);
-        let text = match std::fs::read_to_string(&path) {
+        let text = match read_to_string_io_with(&path, self.faults.as_deref()) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Lookup::Miss,
             Err(e) => return Lookup::Stale(format!("unreadable: {e}")),
@@ -270,7 +291,11 @@ impl CellStore {
             ("key", Json::str(hex64(key))),
             ("measurement", measurement.to_json()),
         ]);
-        write_atomic_unique(&self.entry_path(key), &doc.to_string_pretty())
+        write_atomic_unique_with(
+            &self.entry_path(key),
+            &doc.to_string_pretty(),
+            self.faults.as_deref(),
+        )
     }
 
     /// Record one served hit for each key (in memory; call
@@ -402,38 +427,67 @@ impl CellStore {
         Ok(removed)
     }
 
+    /// Keys currently named by claim files under `claims/` — cells an
+    /// active serve fill is publishing or polling for. Missing dir (no
+    /// daemon ever shared this cache) means no claims.
+    fn claimed_keys(&self) -> std::collections::BTreeSet<String> {
+        let mut out = std::collections::BTreeSet::new();
+        let Ok(entries) = std::fs::read_dir(self.root.join("claims")) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".claim") {
+                out.insert(stem.to_string());
+            }
+        }
+        out
+    }
+
     /// Prune the store: stale records always go; then, if more than
     /// `max_entries` valid records remain, evict the least-hit ones
     /// (ties broken by key order, so a gc pass is deterministic for a
-    /// given index).
+    /// given index). Records named by a live claim file are never
+    /// evicted — a gc racing an active serve fill must not snatch a
+    /// freshly published record out from under the workers polling the
+    /// store for it.
     pub fn gc(&self, max_entries: usize) -> Result<GcReport> {
         let scan = self.scan()?;
+        let claimed = self.claimed_keys();
         let mut report = GcReport::default();
+        let mut protected: Vec<String> = Vec::new();
         let mut valid: Vec<(String, PathBuf)> = Vec::new();
         for (key, path, _, ok) in scan {
-            if ok {
-                valid.push((key, path));
-            } else {
+            if !ok {
                 std::fs::remove_file(&path)
                     .with_context(|| format!("removing stale {}", path.display()))?;
                 report.removed_stale += 1;
+            } else if claimed.contains(&key) {
+                protected.push(key);
+            } else {
+                valid.push((key, path));
             }
         }
+        report.protected = protected.len();
         let mut index = self.index.lock().unwrap();
         // Fewest hits first; the scan's key order breaks ties.
         valid.sort_by_key(|(key, _)| index.hits.get(key).copied().unwrap_or(0));
-        let excess = valid.len().saturating_sub(max_entries);
+        let target = max_entries.saturating_sub(protected.len());
+        let excess = valid.len().saturating_sub(target);
         for (key, path) in valid.drain(..excess) {
             std::fs::remove_file(&path)
                 .with_context(|| format!("evicting {}", path.display()))?;
             index.hits.remove(&key);
             report.evicted += 1;
         }
-        report.kept = valid.len();
+        report.kept = valid.len() + protected.len();
         // Drop index rows for records that no longer exist (stale ones
         // removed above, or entries deleted out-of-band).
-        let live: std::collections::BTreeSet<String> =
-            valid.into_iter().map(|(k, _)| k).collect();
+        let live: std::collections::BTreeSet<String> = valid
+            .into_iter()
+            .map(|(k, _)| k)
+            .chain(protected)
+            .collect();
         index.hits.retain(|k, _| live.contains(k));
         drop(index);
         self.save_index_replacing()?;
@@ -655,6 +709,69 @@ mod tests {
             Json::parse(&text).unwrap_or_else(|e| panic!("torn record {stem}: {e}"));
         }
         assert!(store.entry_path(key).exists());
+    }
+
+    #[test]
+    fn gc_never_evicts_a_claimed_record() {
+        // A claim file names a cell an active serve fill just published;
+        // gc must not snatch it out from under the workers polling for
+        // it, no matter how tight the cap.
+        let dir = TempDir::new("store-gc-claims");
+        let store = CellStore::open(dir.path()).unwrap();
+        let params = quick();
+        let cells = spec::find("f6").unwrap().cells();
+        let keys: Vec<u64> = cells.iter().map(|c| c.key(&params)).collect();
+        for (cell, &key) in cells.iter().zip(&keys) {
+            store.insert(key, &cell.simulate(&params).unwrap()).unwrap();
+        }
+        let claims = crate::serve::claims::ClaimSet::new(
+            store.root(),
+            std::time::Duration::from_secs(600),
+        );
+        assert_eq!(
+            claims.claim(keys[0]).unwrap(),
+            crate::serve::claims::ClaimOutcome::Won
+        );
+
+        let report = store.gc(0).unwrap();
+        assert_eq!(report.protected, 1);
+        assert_eq!(report.evicted, keys.len() - 1);
+        assert!(
+            matches!(store.lookup(keys[0]), Lookup::Hit(_)),
+            "claimed record must survive gc"
+        );
+
+        // Once the claim is released the record is fair game again.
+        claims.release(keys[0]);
+        let report = store.gc(0).unwrap();
+        assert_eq!(report.protected, 0);
+        assert_eq!(report.evicted, 1);
+        assert!(matches!(store.lookup(keys[0]), Lookup::Miss));
+    }
+
+    #[test]
+    fn faulted_store_degrades_to_stale_or_miss_never_garbage() {
+        use crate::util::fsutil::{FaultInjector, FaultPlan, WritePlan};
+
+        // A store whose first record write is torn: the lookup must see
+        // the damage (stale), and the retry must heal it bit-identically.
+        let dir = TempDir::new("store-faulted");
+        let inj = std::sync::Arc::new(FaultInjector::new(FaultPlan {
+            write: Some(WritePlan::Torn { at: 0 }),
+            read: None,
+        }));
+        let store = CellStore::open_with_faults(dir.path(), Some(inj.clone())).unwrap();
+        let (key, meas) = one_cell();
+        store.insert(key, &meas).unwrap(); // torn — publishes a prefix
+        assert!(matches!(store.lookup(key), Lookup::Stale(_)));
+        assert_eq!(inj.injected(), 1);
+        store.insert(key, &meas).unwrap(); // plan exhausted — clean write
+        match store.lookup(key) {
+            Lookup::Hit(back) => {
+                assert_eq!(back.to_json().to_string_pretty(), meas.to_json().to_string_pretty());
+            }
+            other => panic!("expected healed hit, got {other:?}"),
+        }
     }
 
     #[test]

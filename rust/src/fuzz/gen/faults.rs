@@ -1,0 +1,102 @@
+//! Generator for fault-injection cases: a seeded fault schedule plus a
+//! small filesystem workload to run under it.
+//!
+//! The case itself is tiny — the interesting object is the
+//! [`FaultPlan`](crate::util::fsutil::FaultPlan) derived from
+//! `plan_seed`, which the oracle in `fuzz/mod.rs` replays against the
+//! atomic-write helpers, the cell store, and the claim set. The oracle
+//! is *graceful degradation*, not equality of two engines: under any
+//! schedule, every operation must either fail with a clean error or
+//! leave behind state indistinguishable from a slower fault-free run
+//! (torn records parse as stale and re-simulate; torn claims are broken
+//! as garbage; served results stay byte-identical).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::{u64_field, word};
+
+/// One fault-injection case: which schedule to inject and which small
+/// workload to run under it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultsCase {
+    /// Seed for [`FaultPlan::generate`](crate::util::fsutil::FaultPlan::generate).
+    pub plan_seed: u64,
+    /// Store keys to insert/lookup under the schedule.
+    pub keys: Vec<u64>,
+    /// (name, body) files to write/read-back under the schedule.
+    pub files: Vec<(String, String)>,
+}
+
+impl FaultsCase {
+    /// Generate one case.
+    pub fn generate(rng: &mut Prng) -> FaultsCase {
+        let plan_seed = rng.next_u64();
+        let keys = (0..rng.range(1, 5)).map(|_| rng.next_u64()).collect();
+        let files = (0..rng.range(1, 5))
+            .map(|_| {
+                let words = rng.range(1, 5);
+                let body = (0..words).map(|_| word(rng)).collect::<Vec<_>>().join(" ");
+                (word(rng), body)
+            })
+            .collect();
+        FaultsCase { plan_seed, keys, files }
+    }
+
+    /// Serialize for the corpus. Keys ride as 16-digit hex strings —
+    /// JSON numbers cannot carry a full u64 exactly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan_seed", Json::num(self.plan_seed as f64)),
+            ("plan_seed_hex", Json::str(format!("{:016x}", self.plan_seed))),
+            (
+                "keys",
+                Json::arr(
+                    self.keys.iter().map(|k| Json::str(format!("{k:016x}"))).collect(),
+                ),
+            ),
+            (
+                "files",
+                Json::arr(
+                    self.files
+                        .iter()
+                        .map(|(name, body)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name.as_str())),
+                                ("body", Json::str(body.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore from the corpus form.
+    pub fn from_json(v: &Json) -> Result<FaultsCase> {
+        let plan_seed = match v.get("plan_seed_hex") {
+            Some(hex) => u64::from_str_radix(hex.as_str()?, 16)?,
+            None => u64_field(v, "plan_seed")?,
+        };
+        let keys = v
+            .expect("keys")?
+            .as_arr()?
+            .iter()
+            .map(|k| Ok(u64::from_str_radix(k.as_str()?, 16)?))
+            .collect::<Result<Vec<u64>>>()?;
+        let files = v
+            .expect("files")?
+            .as_arr()?
+            .iter()
+            .map(|f| {
+                Ok((
+                    f.expect("name")?.as_str()?.to_string(),
+                    f.expect("body")?.as_str()?.to_string(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultsCase { plan_seed, keys, files })
+    }
+}

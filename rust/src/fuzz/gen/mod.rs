@@ -6,7 +6,7 @@
 //! case can be regenerated (or replayed from its serialized form in the
 //! corpus — see [`crate::fuzz::corpus`]).
 //!
-//! Three case kinds cover the crate's correctness surfaces:
+//! Four case kinds cover the crate's correctness surfaces:
 //!
 //! - [`TraceCase`] (`gen/trace.rs`): arbitrary access traces × cache
 //!   geometries (including degenerate 1-way / single-set / tiny-LLC
@@ -20,6 +20,10 @@
 //! - [`RoundtripCase`] (this module): serialization surfaces — run
 //!   manifests, the deterministic ustar packer, and the serve wire
 //!   protocol — must all round-trip exactly.
+//! - [`FaultsCase`] (`gen/faults.rs`): seeded fault schedules replayed
+//!   against the atomic-write helpers, the cell store, and the claim
+//!   set; the oracle is graceful degradation (clean error or state
+//!   indistinguishable from a fault-free run), not engine equality.
 
 use anyhow::{bail, Context, Result};
 
@@ -29,9 +33,11 @@ use crate::serve::protocol::{Request, SubmitRequest};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 
+pub mod faults;
 pub mod kernel;
 pub mod trace;
 
+pub use faults::FaultsCase;
 pub use kernel::KernelCase;
 pub use trace::TraceCase;
 
@@ -44,6 +50,8 @@ pub enum FuzzCase {
     Kernel(KernelCase),
     /// Serialization surface round-trip.
     Roundtrip(RoundtripCase),
+    /// Fault schedule replayed against the crash-safety surfaces.
+    Faults(FaultsCase),
 }
 
 impl FuzzCase {
@@ -53,6 +61,7 @@ impl FuzzCase {
             FuzzCase::Trace(_) => "trace",
             FuzzCase::Kernel(_) => "kernel",
             FuzzCase::Roundtrip(_) => "roundtrip",
+            FuzzCase::Faults(_) => "faults",
         }
     }
 
@@ -63,12 +72,29 @@ impl FuzzCase {
     pub fn generate(case_seed: u64) -> FuzzCase {
         let mut rng = Prng::new(case_seed);
         let draw = rng.f64();
-        if draw < 0.45 {
+        if draw < 0.40 {
             FuzzCase::Trace(TraceCase::generate(&mut rng))
-        } else if draw < 0.70 {
+        } else if draw < 0.63 {
             FuzzCase::Kernel(KernelCase::generate(&mut rng))
-        } else {
+        } else if draw < 0.88 {
             FuzzCase::Roundtrip(RoundtripCase::generate(&mut rng))
+        } else {
+            FuzzCase::Faults(FaultsCase::generate(&mut rng))
+        }
+    }
+
+    /// Generate one case of a fixed kind (the `fuzz --only` filter).
+    /// Draws from the same per-case rng as [`FuzzCase::generate`] minus
+    /// the kind draw, so a kind's case stream is still a pure function
+    /// of the seed stream.
+    pub fn generate_only(kind: &str, case_seed: u64) -> Result<FuzzCase> {
+        let mut rng = Prng::new(case_seed);
+        match kind {
+            "trace" => Ok(FuzzCase::Trace(TraceCase::generate(&mut rng))),
+            "kernel" => Ok(FuzzCase::Kernel(KernelCase::generate(&mut rng))),
+            "roundtrip" => Ok(FuzzCase::Roundtrip(RoundtripCase::generate(&mut rng))),
+            "faults" => Ok(FuzzCase::Faults(FaultsCase::generate(&mut rng))),
+            other => bail!("unknown fuzz case kind '{other}' (trace|kernel|roundtrip|faults)"),
         }
     }
 
@@ -79,6 +105,7 @@ impl FuzzCase {
             FuzzCase::Trace(c) => c.to_json(),
             FuzzCase::Kernel(c) => c.to_json(),
             FuzzCase::Roundtrip(c) => c.to_json(),
+            FuzzCase::Faults(c) => c.to_json(),
         }
     }
 
@@ -88,6 +115,7 @@ impl FuzzCase {
             "trace" => Ok(FuzzCase::Trace(TraceCase::from_json(v)?)),
             "kernel" => Ok(FuzzCase::Kernel(KernelCase::from_json(v)?)),
             "roundtrip" => Ok(FuzzCase::Roundtrip(RoundtripCase::from_json(v)?)),
+            "faults" => Ok(FuzzCase::Faults(FaultsCase::from_json(v)?)),
             other => bail!("unknown fuzz case kind '{other}'"),
         }
     }

@@ -11,7 +11,12 @@
 //! case through all engines and demand identical [`TrafficStats`],
 //! FP counters, and serialized measurements, plus exact round-trips for
 //! every serialization surface (manifest v1/v2, cell-store records,
-//! ustar artifacts, serve protocol lines).
+//! ustar artifacts, serve protocol lines). A fourth kind replays seeded
+//! fault schedules ([`gen::FaultsCase`]) against the crash-safety
+//! surfaces — atomic writes, the cell store, claim publishing — with
+//! *graceful degradation* as the oracle: every faulted operation must
+//! either fail with a clean error or leave state indistinguishable from
+//! a slower fault-free run.
 //!
 //! Everything is deterministic: `fuzz --seed S --cases N` derives one
 //! per-case seed stream from `S` (xoshiro256**, `util/prng.rs` — no
@@ -36,16 +41,18 @@ use crate::artifact::tar::{read_tar, write_tar};
 use crate::coordinator::manifest::RunManifest;
 use crate::coordinator::store::{CellStore, Lookup};
 use crate::fuzz::corpus::CorpusFile;
-use crate::fuzz::gen::{bytes_from_hex, FuzzCase, KernelCase, RoundtripCase, TraceCase};
+use crate::fuzz::gen::{bytes_from_hex, FaultsCase, FuzzCase, KernelCase, RoundtripCase, TraceCase};
 use crate::harness::measure::{
     measure_kernel, measure_kernel_parallel, measure_kernel_reference, measure_kernel_sharded,
     KernelMeasurement,
 };
+use crate::serve::claims::{ClaimOutcome, ClaimSet};
 use crate::serve::protocol::Request;
 use crate::sim::hierarchy::{MemorySystem, TrafficStats};
 use crate::sim::machine::{Machine, MachineConfig};
 use crate::sim::numa::Placement;
 use crate::testutil::TempDir;
+use crate::util::fsutil::{read_to_string_io_with, write_atomic_unique_with, FaultInjector};
 use crate::util::hash::fnv1a_64;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
@@ -81,6 +88,9 @@ pub struct FuzzConfig {
     pub minutes: f64,
     /// Directory failing cases are written to.
     pub corpus_dir: PathBuf,
+    /// Restrict the session to one case kind
+    /// (`trace|kernel|roundtrip|faults`); `None` draws the weighted mix.
+    pub only: Option<String>,
 }
 
 /// One failing (shrunk, corpus-written) case.
@@ -111,6 +121,8 @@ pub struct FuzzOutcome {
     pub kernel_cases: usize,
     /// Serialization round-trip cases among them.
     pub roundtrip_cases: usize,
+    /// Fault-injection cases among them.
+    pub faults_cases: usize,
     /// Order-sensitive FNV-1a digest over every executed case and its
     /// verdict — two runs with the same seed and case count must print
     /// the same digest (CI's determinism check compares exactly this).
@@ -135,6 +147,11 @@ pub fn run_fuzz_with(
     progress: &mut dyn FnMut(String),
 ) -> Result<FuzzOutcome> {
     let start = Instant::now();
+    if let Some(kind) = config.only.as_deref() {
+        if !matches!(kind, "trace" | "kernel" | "roundtrip" | "faults") {
+            bail!("unknown fuzz case kind '{kind}' (trace|kernel|roundtrip|faults)");
+        }
+    }
     let budget =
         (config.minutes > 0.0).then(|| Duration::from_secs_f64(config.minutes * 60.0));
     let mut session = Prng::new(config.seed);
@@ -152,11 +169,15 @@ pub fn run_fuzz_with(
                 break;
             }
         }
-        let case = FuzzCase::generate(case_seed);
+        let case = match config.only.as_deref() {
+            Some(kind) => FuzzCase::generate_only(kind, case_seed)?,
+            None => FuzzCase::generate(case_seed),
+        };
         match &case {
             FuzzCase::Trace(_) => outcome.trace_cases += 1,
             FuzzCase::Kernel(_) => outcome.kernel_cases += 1,
             FuzzCase::Roundtrip(_) => outcome.roundtrip_cases += 1,
+            FuzzCase::Faults(_) => outcome.faults_cases += 1,
         }
         let verdict = check(&case);
         outcome.executed += 1;
@@ -223,6 +244,7 @@ pub fn check_case(case: &FuzzCase) -> Option<String> {
         FuzzCase::Trace(c) => check_trace(c),
         FuzzCase::Kernel(c) => check_kernel(c),
         FuzzCase::Roundtrip(c) => check_roundtrip(c),
+        FuzzCase::Faults(c) => check_faults(c),
     }
 }
 
@@ -452,6 +474,94 @@ fn check_manifest(doc: &str) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------
+// Fault injection / graceful degradation
+// --------------------------------------------------------------------
+
+/// The one real measurement the faults oracle stores under injected
+/// faults — simulated once per process and cloned per case, so a
+/// 200-case faults session costs one simulation, not 200.
+fn shared_measurement() -> KernelMeasurement {
+    static CELL: std::sync::Mutex<Option<KernelMeasurement>> = std::sync::Mutex::new(None);
+    let mut slot = CELL.lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_none() {
+        let params = crate::harness::experiments::ExperimentParams {
+            batch: Some(1),
+            ..Default::default()
+        };
+        let cells = crate::harness::spec::find("f6").expect("f6 experiment exists").cells();
+        *slot = Some(cells[0].simulate(&params).expect("f6 cell simulates"));
+    }
+    slot.clone().expect("just filled")
+}
+
+/// The graceful-degradation oracle: replay the case's seeded fault
+/// schedule against each crash-safety surface.
+fn check_faults(case: &FaultsCase) -> Option<String> {
+    faults_oracle(case).err().map(|e| format!("fault degradation: {e:#}"))
+}
+
+fn faults_oracle(case: &FaultsCase) -> Result<()> {
+    let dir = TempDir::new("fuzz-faults");
+
+    // Surface 1: atomic writes + reads. A faulted write either errors
+    // (leaving nothing under the final name) or tears to a clean prefix;
+    // a faulted read errors or truncates. So any successful read-back
+    // must be a prefix of the written body — never garbage, never a
+    // half-renamed tmp visible under the final name.
+    let inj = FaultInjector::seeded(case.plan_seed);
+    for (i, (name, body)) in case.files.iter().enumerate() {
+        let path = dir.path().join(format!("{i:02}-{name}.txt"));
+        let wrote = write_atomic_unique_with(&path, body, Some(&inj));
+        match read_to_string_io_with(&path, Some(&inj)) {
+            Ok(back) => {
+                if !body.starts_with(&back) {
+                    bail!("file '{name}': read back {back:?}, not a prefix of {body:?}");
+                }
+            }
+            Err(e) => {
+                if wrote.is_ok() && e.kind() == std::io::ErrorKind::NotFound {
+                    bail!("file '{name}': write claimed success but the file is missing");
+                }
+            }
+        }
+    }
+
+    // Surface 2: the cell store degrades to re-simulation, never to
+    // garbage. Under any schedule a lookup is Hit (byte-identical to the
+    // fault-free record), Miss, or Stale — the latter two fall back to
+    // simulation, which is slower but correct.
+    let meas = shared_measurement();
+    let baseline = meas.to_json().to_string_pretty();
+    let store = CellStore::open_with_faults(
+        &dir.path().join("cache"),
+        Some(std::sync::Arc::new(FaultInjector::seeded(case.plan_seed))),
+    )?;
+    for (i, key) in case.keys.iter().enumerate() {
+        let _ = store.insert(*key, &meas); // a faulted insert may fail cleanly
+        match store.lookup(*key) {
+            Lookup::Hit(back) => {
+                if back.to_json().to_string_pretty() != baseline {
+                    bail!("key #{i}: store hit differs from the fault-free measurement");
+                }
+            }
+            Lookup::Miss | Lookup::Stale(_) => {}
+        }
+    }
+
+    // Surface 3: claim publishing degrades to simulate-anyway, and a
+    // torn claim body is garbage a later claimant breaks. Either way,
+    // claiming never errors out of the fill loop.
+    let claims = ClaimSet::new(&dir.path().join("cache"), Duration::from_secs(600))
+        .with_faults(std::sync::Arc::new(FaultInjector::seeded(case.plan_seed)));
+    for key in &case.keys {
+        if let ClaimOutcome::Won = claims.claim(*key)? {
+            claims.release(*key);
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -496,6 +606,7 @@ mod tests {
             cases: 15,
             minutes: 0.0,
             corpus_dir: dir.path().to_path_buf(),
+            only: None,
         };
         // Restrict to cheap kinds for the determinism probe: replace the
         // real checks with a pass-through so no kernel pipeline runs.
@@ -505,7 +616,7 @@ mod tests {
         assert_eq!(a.digest, b.digest);
         assert_eq!(a.executed, 15);
         assert_eq!(
-            a.trace_cases + a.kernel_cases + a.roundtrip_cases,
+            a.trace_cases + a.kernel_cases + a.roundtrip_cases + a.faults_cases,
             a.executed
         );
         assert!(a.failure.is_none());
@@ -523,6 +634,7 @@ mod tests {
             cases: 50,
             minutes: 0.0,
             corpus_dir: dir.path().to_path_buf(),
+            only: None,
         };
         // A synthetic engine bug: every trace case "diverges" (so the
         // failure is reached deterministically regardless of seed).
@@ -555,6 +667,38 @@ mod tests {
     }
 
     #[test]
+    fn faults_oracle_passes_on_generated_cases() {
+        let mut rng = Prng::new(0xFA17);
+        for _ in 0..25 {
+            let case = gen::FaultsCase::generate(&mut rng);
+            assert_eq!(check_faults(&case), None, "case: {case:?}");
+        }
+    }
+
+    #[test]
+    fn only_filter_restricts_the_stream_to_one_kind() {
+        let dir = TempDir::new("fuzz-only");
+        let config = FuzzConfig {
+            seed: 5,
+            cases: 12,
+            minutes: 0.0,
+            corpus_dir: dir.path().to_path_buf(),
+            only: Some("faults".to_string()),
+        };
+        let mut pass = |_: &FuzzCase| None;
+        let a = run_fuzz_with(&config, &mut pass, &mut quiet()).unwrap();
+        assert_eq!(a.faults_cases, 12);
+        assert_eq!(a.executed, 12);
+
+        // Two runs of the restricted stream agree, like the full mix.
+        let b = run_fuzz_with(&config, &mut pass, &mut quiet()).unwrap();
+        assert_eq!(a.digest, b.digest);
+
+        let bad = FuzzConfig { only: Some("bogus".to_string()), ..config };
+        assert!(run_fuzz_with(&bad, &mut pass, &mut quiet()).is_err());
+    }
+
+    #[test]
     fn minutes_budget_truncates_without_changing_the_stream() {
         let dir = TempDir::new("fuzz-budget");
         let config = FuzzConfig {
@@ -562,6 +706,7 @@ mod tests {
             cases: 1000,
             minutes: 1e-9, // expires immediately
             corpus_dir: dir.path().to_path_buf(),
+            only: None,
         };
         let outcome = run_fuzz_with(&config, &mut |_| None, &mut quiet()).unwrap();
         assert!(outcome.truncated);

@@ -9,7 +9,7 @@
 //! failure disappear. A bounded check-evaluation budget keeps shrinking
 //! of expensive kernel cases affordable.
 
-use crate::fuzz::gen::{FuzzCase, KernelCase, KernelFamily, RoundtripCase, TraceCase};
+use crate::fuzz::gen::{FaultsCase, FuzzCase, KernelCase, KernelFamily, RoundtripCase, TraceCase};
 use crate::fuzz::gen::trace::NodeMap;
 use crate::harness::cache_state::CacheState;
 use crate::harness::scenario::PlacementSpec;
@@ -71,6 +71,7 @@ pub fn candidates(case: &FuzzCase) -> Vec<FuzzCase> {
         FuzzCase::Roundtrip(c) => {
             roundtrip_candidates(c).into_iter().map(FuzzCase::Roundtrip).collect()
         }
+        FuzzCase::Faults(c) => faults_candidates(c).into_iter().map(FuzzCase::Faults).collect(),
     }
 }
 
@@ -290,6 +291,39 @@ fn roundtrip_candidates(case: &RoundtripCase) -> Vec<RoundtripCase> {
                 m.files.clear();
                 out.push(RoundtripCase::Manifest { doc: m.to_string_pretty() });
             }
+        }
+    }
+    out
+}
+
+fn faults_candidates(case: &FaultsCase) -> Vec<FaultsCase> {
+    // The plan seed is atomic (it *is* the fault schedule); shrink the
+    // workload around it: fewer keys, fewer files, shorter bodies.
+    let mut out = Vec::new();
+    if case.keys.len() > 1 {
+        for i in 0..case.keys.len() {
+            let mut c = case.clone();
+            c.keys.remove(i);
+            out.push(c);
+        }
+    }
+    if case.files.len() > 1 {
+        for i in 0..case.files.len() {
+            let mut c = case.clone();
+            c.files.remove(i);
+            out.push(c);
+        }
+    }
+    for i in 0..case.files.len() {
+        let body = &case.files[i].1;
+        if !body.is_empty() {
+            let mut c = case.clone();
+            let mut half = body.len() / 2;
+            while !body.is_char_boundary(half) {
+                half -= 1;
+            }
+            c.files[i].1 = body[..half].to_string();
+            out.push(c);
         }
     }
     out

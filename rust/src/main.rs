@@ -224,6 +224,17 @@ fn app() -> AppSpec {
                         Some("600"),
                     ),
                     opt("machine", "machine preset used when a submit names none", Some("xeon_6248")),
+                    opt(
+                        "conn-timeout",
+                        "per-connection read/write timeout in seconds (0 = none)",
+                        Some("30"),
+                    ),
+                    opt("max-conns", "concurrent connection cap (excess answered busy)", Some("64")),
+                    opt(
+                        "drain",
+                        "seconds shutdown waits for running jobs before abandoning them",
+                        Some("10"),
+                    ),
                 ],
                 positional: vec![],
             },
@@ -233,6 +244,11 @@ fn app() -> AppSpec {
                 opts: vec![
                     opt("addr", "daemon address", Some("127.0.0.1:7878")),
                     opt("timeout", "I/O timeout in seconds", Some("30")),
+                    opt(
+                        "retry",
+                        "extra attempts on connection-level failures (daemon restarting)",
+                        Some("0"),
+                    ),
                     opt("extract", "print only this top-level response field", None),
                 ],
                 positional: vec![("json", "request object, e.g. '{\"op\":\"ping\"}'")],
@@ -268,6 +284,11 @@ fn app() -> AppSpec {
                     opt("cases", "cases to execute", Some("500")),
                     opt("minutes", "wall-clock budget in minutes (0 = none)", Some("0")),
                     opt("corpus", "directory failing cases are written to", Some("fuzz-corpus")),
+                    opt(
+                        "only",
+                        "restrict to one case kind: trace | kernel | roundtrip | faults",
+                        None,
+                    ),
                 ],
                 positional: vec![
                     ("action", "omit to fuzz, or `replay`"),
@@ -759,11 +780,12 @@ fn cmd_cache(parsed: &Parsed) -> Result<()> {
             let max = parsed.opt_parse::<usize>("max-entries")?.unwrap_or(1024);
             let r = store.gc(max)?;
             println!(
-                "gc {}: removed {} stale, evicted {}, kept {}",
+                "gc {}: removed {} stale, evicted {}, kept {} ({} claim-protected)",
                 dir.display(),
                 r.removed_stale,
                 r.evicted,
-                r.kept
+                r.kept,
+                r.protected
             );
         }
         other => anyhow::bail!("unknown cache action '{other}' (expected stats | clear | gc)"),
@@ -993,11 +1015,18 @@ fn cmd_serve(parsed: &Parsed) -> Result<()> {
         anyhow::anyhow!("serve needs a cell cache: pass --cache-dir or set ${CACHE_ENV}")
     })?;
     let spool = PathBuf::from(parsed.opt("spool").unwrap_or("reports/serve"));
+    let defaults = ServeOptions::default();
     let opts = ServeOptions {
         jobs: parsed.opt_parse::<usize>("jobs")?.unwrap_or(0),
         sim_jobs: parsed.opt_parse::<usize>("sim-jobs")?.unwrap_or(0),
         claim_ttl_secs: parsed.opt_parse::<u64>("claim-ttl")?.unwrap_or(DEFAULT_CLAIM_TTL_SECS),
         default_machine: parsed.opt("machine").unwrap_or("xeon_6248").to_string(),
+        conn_timeout_secs: parsed
+            .opt_parse::<u64>("conn-timeout")?
+            .unwrap_or(defaults.conn_timeout_secs),
+        max_conns: parsed.opt_parse::<usize>("max-conns")?.unwrap_or(defaults.max_conns),
+        max_line_bytes: defaults.max_line_bytes,
+        drain_secs: parsed.opt_parse::<u64>("drain")?.unwrap_or(defaults.drain_secs),
     };
     let addr = format!(
         "{}:{}",
@@ -1005,6 +1034,13 @@ fn cmd_serve(parsed: &Parsed) -> Result<()> {
         parsed.opt("port").unwrap_or("7878")
     );
     let server = Server::bind(&addr, &dir, &spool, opts)?;
+    let recovery = server.recovery();
+    if recovery != Default::default() {
+        println!(
+            "recovered spool: {} job(s) re-listed, {} resumed, {} skipped",
+            recovery.relisted, recovery.resumed, recovery.skipped
+        );
+    }
     println!(
         "serving on {} (cache {}, spool {})",
         server.local_addr(),
@@ -1025,10 +1061,16 @@ fn cmd_request(parsed: &Parsed) -> Result<()> {
         timeout > 0.0 && timeout.is_finite(),
         "--timeout must be a positive number of seconds"
     );
-    let response = dlroofline::serve::protocol::roundtrip(
+    let retries: u32 = parsed.opt_parse("retry")?.unwrap_or(0);
+    // Jitter derives from the request itself, so a scripted client's
+    // retry timing is replayable while distinct requests de-synchronize.
+    let jitter_seed = dlroofline::util::hash::fnv1a_64(line.as_bytes());
+    let response = dlroofline::serve::protocol::roundtrip_retry(
         addr,
         line,
         std::time::Duration::from_secs_f64(timeout),
+        retries,
+        jitter_seed,
     )?;
     let doc = Json::parse(&response)?;
     let ok = doc.get("ok").and_then(|v| v.as_bool().ok()).unwrap_or(false);
@@ -1127,15 +1169,17 @@ fn cmd_fuzz(parsed: &Parsed) -> Result<()> {
                 cases: parsed.opt_parse::<usize>("cases")?.unwrap_or(500),
                 minutes,
                 corpus_dir: PathBuf::from(parsed.opt("corpus").unwrap_or("fuzz-corpus")),
+                only: parsed.opt("only").map(str::to_string),
             };
             let outcome = run_fuzz(&config, &mut |msg| eprintln!("{msg}"))?;
             println!(
-                "fuzz: seed {} | {} case(s) ({} trace, {} kernel, {} round-trip){} | digest {}",
+                "fuzz: seed {} | {} case(s) ({} trace, {} kernel, {} round-trip, {} faults){} | digest {}",
                 config.seed,
                 outcome.executed,
                 outcome.trace_cases,
                 outcome.kernel_cases,
                 outcome.roundtrip_cases,
+                outcome.faults_cases,
                 if outcome.truncated { " [wall-clock budget hit]" } else { "" },
                 hex64(outcome.digest),
             );

@@ -21,11 +21,12 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::util::fsutil::create_exclusive;
+use crate::util::fsutil::{create_exclusive_with, FaultInjector};
 use crate::util::hash::hex64;
 
 /// Default claim time-to-live. Generous compared to any single cell
@@ -62,6 +63,12 @@ pub struct ClaimSet {
     /// ([`ClaimSet::with_clock`]) so TTL expiry is exercised without
     /// sleeping or backdating files.
     clock: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Optional fault injector applied to claim publishes (`None` in
+    /// production — see [`ClaimSet::with_faults`]).
+    faults: Option<Arc<FaultInjector>>,
+    /// Claim publishes that failed with an I/O error and degraded to
+    /// [`ClaimOutcome::Won`] (simulate-anyway).
+    publish_errors: AtomicU64,
 }
 
 impl ClaimSet {
@@ -89,7 +96,25 @@ impl ClaimSet {
             token: format!("{}-{n}", std::process::id()),
             ttl,
             clock,
+            faults: None,
+            publish_errors: AtomicU64::new(0),
         }
+    }
+
+    /// Attach a fault injector to claim publishes. Claims are an
+    /// exactly-once *optimization*, never a correctness gate: a publish
+    /// that fails degrades to [`ClaimOutcome::Won`] (simulate anyway —
+    /// record writes are atomic, duplicate simulations are deterministic,
+    /// so the worst case is wasted wall clock), counted in
+    /// [`ClaimSet::publish_errors`].
+    pub fn with_faults(mut self, faults: Arc<FaultInjector>) -> ClaimSet {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// How many claim publishes failed and degraded to simulate-anyway.
+    pub fn publish_errors(&self) -> u64 {
+        self.publish_errors.load(Ordering::Relaxed)
     }
 
     /// This claimant's identity, as written into its claim files.
@@ -109,8 +134,17 @@ impl ClaimSet {
         let path = self.path(key);
         for _ in 0..MAX_CLAIM_RACES {
             let body = format!("{} {}", self.token, (self.clock)());
-            if create_exclusive(&path, &body)? {
-                return Ok(ClaimOutcome::Won);
+            match create_exclusive_with(&path, &body, self.faults.as_deref()) {
+                Ok(true) => return Ok(ClaimOutcome::Won),
+                Ok(false) => {}
+                // A publish that errors degrades to simulate-anyway: the
+                // claim was never a correctness gate, and failing the
+                // whole fill over a coordination hiccup would be worse
+                // than one duplicated (deterministic) simulation.
+                Err(_) => {
+                    self.publish_errors.fetch_add(1, Ordering::Relaxed);
+                    return Ok(ClaimOutcome::Won);
+                }
             }
             match read_claim(&path) {
                 ClaimBody::Created(created)
@@ -298,6 +332,46 @@ mod tests {
         now.fetch_add(61, Ordering::Relaxed);
         let third = make(dir.path(), 60);
         assert_eq!(third.claim(77).unwrap(), ClaimOutcome::Won);
+    }
+
+    #[test]
+    fn failed_claim_publish_degrades_to_simulate_anyway() {
+        use crate::util::fsutil::{FaultInjector, FaultPlan, WritePlan};
+
+        let dir = TempDir::new("claims-faulted");
+        let inj = Arc::new(FaultInjector::new(FaultPlan {
+            write: Some(WritePlan::FailOnce { at: 0 }),
+            read: None,
+        }));
+        let claims =
+            ClaimSet::new(dir.path(), Duration::from_secs(600)).with_faults(inj);
+        // The publish fails, but the claimant still proceeds (Won) —
+        // claims coordinate, they never gate correctness.
+        assert_eq!(claims.claim(3).unwrap(), ClaimOutcome::Won);
+        assert_eq!(claims.publish_errors(), 1);
+        assert!(!claims.path(3).exists(), "failed publish must leave no claim file");
+        // The plan is exhausted; the next claim publishes normally.
+        assert_eq!(claims.claim(4).unwrap(), ClaimOutcome::Won);
+        assert_eq!(claims.publish_errors(), 1);
+        assert!(claims.path(4).exists());
+    }
+
+    #[test]
+    fn torn_claim_publish_is_broken_as_garbage_by_peers() {
+        use crate::util::fsutil::{FaultInjector, FaultPlan, WritePlan};
+
+        let dir = TempDir::new("claims-torn");
+        let inj = Arc::new(FaultInjector::new(FaultPlan {
+            write: Some(WritePlan::Torn { at: 0 }),
+            read: None,
+        }));
+        let torn = ClaimSet::new(dir.path(), Duration::from_secs(600)).with_faults(inj);
+        // The torn publish "wins" but leaves a body without a parsable
+        // timestamp; a peer treats that as garbage and re-races it
+        // rather than waiting on a claim nobody can expire.
+        assert_eq!(torn.claim(8).unwrap(), ClaimOutcome::Won);
+        let peer = ClaimSet::new(dir.path(), Duration::from_secs(600));
+        assert_eq!(peer.claim(8).unwrap(), ClaimOutcome::Won, "garbage claim must re-race");
     }
 
     #[test]

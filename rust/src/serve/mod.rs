@@ -11,10 +11,12 @@
 //!   a plan into the store under claim coordination, with lock-free
 //!   [`ShardProgress`] for live status.
 //! - [`protocol`] — the line-delimited JSON wire format and the
-//!   one-shot [`protocol::roundtrip`] client.
+//!   one-shot [`protocol::roundtrip`] client (plus
+//!   [`protocol::roundtrip_retry`] for the daemon-restart window).
 //! - [`server`] — the daemon itself: jobs keyed by plan content hash
 //!   (idempotent resubmission), fill-then-warm-sweep execution whose
-//!   output is byte-identical to a direct `sweep`.
+//!   output is byte-identical to a direct `sweep`, per-job journals
+//!   under the spool, and restart recovery from them.
 
 pub mod claims;
 pub mod protocol;
@@ -23,5 +25,5 @@ pub mod worker;
 
 pub use claims::{ClaimOutcome, ClaimSet, DEFAULT_CLAIM_TTL_SECS};
 pub use protocol::{Request, SubmitRequest, PROTOCOL_VERSION};
-pub use server::{JobPhase, ServeOptions, Server};
+pub use server::{JobPhase, RecoveryReport, ServeOptions, Server, StopHandle};
 pub use worker::{fill_store_sharded, ShardProgress, ShardStats};

@@ -25,6 +25,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::util::json::Json;
+use crate::util::prng::Prng;
 
 /// Wire protocol version, reported by `ping`.
 pub const PROTOCOL_VERSION: u64 = 1;
@@ -216,4 +217,50 @@ pub fn roundtrip(addr: &str, line: &str, timeout: Duration) -> Result<String> {
     let n = reader.read_line(&mut response).with_context(|| format!("reading from {addr}"))?;
     ensure!(n > 0, "server at {addr} closed the connection without responding");
     Ok(response.trim_end().to_string())
+}
+
+/// As [`roundtrip`], retrying connection-level failures (refused, reset,
+/// aborted — the daemon-restart window) up to `retries` extra attempts
+/// with exponential backoff and seeded jitter. The jitter stream derives
+/// from `jitter_seed`, so a scripted client's retry timing is replayable;
+/// seeding from a hash of the request de-synchronizes herds of identical
+/// clients without sacrificing determinism. Non-connection errors (a
+/// daemon that answered garbage, a timeout mid-read) fail immediately —
+/// retrying those could double-submit side effects the caller can't see.
+pub fn roundtrip_retry(
+    addr: &str,
+    line: &str,
+    timeout: Duration,
+    retries: u32,
+    jitter_seed: u64,
+) -> Result<String> {
+    let mut rng = Prng::new(jitter_seed);
+    let mut attempt = 0u32;
+    loop {
+        match roundtrip(addr, line, timeout) {
+            Ok(response) => return Ok(response),
+            Err(e) => {
+                let connect_level = e
+                    .root_cause()
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::ConnectionRefused
+                                | std::io::ErrorKind::ConnectionReset
+                                | std::io::ErrorKind::ConnectionAborted
+                        )
+                    })
+                    .unwrap_or(false);
+                if !connect_level || attempt >= retries {
+                    return Err(e);
+                }
+                attempt += 1;
+                // 50ms, 100ms, 200ms, ... capped at ~3.2s, plus up to
+                // 100% jitter so a fleet of retrying clients spreads out.
+                let base = 50u64 << (attempt - 1).min(6);
+                std::thread::sleep(Duration::from_millis(base + rng.below(base)));
+            }
+        }
+    }
 }

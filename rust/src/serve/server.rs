@@ -19,29 +19,76 @@
 //! Because workers coordinate *only* through the cache directory, any
 //! number of daemons may share one: their workers interleave claims and
 //! never simulate the same cell twice.
+//!
+//! ## Failure model
+//!
+//! The daemon is hardened against the failures long-running sweeps
+//! actually meet (see `docs/serve.md` § failure model & recovery):
+//!
+//! - **Slow or hostile clients**: per-connection read/write timeouts
+//!   and a request line-length cap; past the cap the connection is
+//!   answered in-band (`ok:false`) and closed, since framing is lost.
+//! - **Overload**: at most [`ServeOptions::max_conns`] concurrent
+//!   connections; excess connections receive `{ok:false,error:"busy"}`.
+//! - **Panicking jobs**: the job thread runs `execute_job` under
+//!   `catch_unwind`, so a panic marks the job `failed` with the panic
+//!   message in `status.error`. Every job/server mutex is taken through
+//!   a poison-recovering lock, so one panicked thread can never wedge
+//!   `status`/`list` for every future client.
+//! - **Crash + restart**: every job's submit record and phase
+//!   transitions are journaled to `spool/<job-id>/job.json` (atomic,
+//!   schema-versioned). On startup the spool is scanned: completed jobs
+//!   are re-listed with their files fetchable, interrupted ones are
+//!   resubmitted through the normal path — the warm store plus
+//!   TTL-expired claim breaking means a resumed job re-simulates only
+//!   cells that never reached the store.
+//! - **Shutdown**: the accept loop uses a nonblocking listener polled
+//!   against the shutdown flag (no self-connect wake), then drains
+//!   running jobs for up to [`ServeOptions::drain_secs`] before
+//!   explicitly abandoning them (their journals resume them next start).
 
+use std::any::Any;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::config::resolve_machine;
-use crate::coordinator::plan::{self, JobBudget};
+use crate::coordinator::plan::{self, Expansion, JobBudget};
 use crate::coordinator::runner::sweep_and_write_budget;
 use crate::coordinator::store::{CellStore, Lookup};
 use crate::harness::experiments::ExperimentParams;
-use crate::util::fsutil::read_to_string;
+use crate::util::fsutil::{read_to_string, write_atomic_unique};
 use crate::util::hash::{fnv1a_64, hex64};
 use crate::util::json::Json;
 
 use super::claims::{ClaimSet, DEFAULT_CLAIM_TTL_SECS};
 use super::protocol::{error_response, ok_response, Request, SubmitRequest, PROTOCOL_VERSION};
 use super::worker::{fill_store_sharded, ShardProgress, ShardStats};
+
+/// Schema version of the `spool/<job-id>/job.json` journal. Journals
+/// with a different version are skipped (with a warning) at recovery.
+pub const JOB_JOURNAL_SCHEMA_VERSION: u64 = 1;
+
+/// The journal's file name inside a job's spool directory. Never listed
+/// in a job's `files`, so it is not fetchable and cannot collide with
+/// report outputs.
+const JOURNAL_NAME: &str = "job.json";
+
+/// Accept-loop poll interval: how often an idle listener re-checks the
+/// shutdown flag, and the drain loop's poll step.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Consecutive accept errors tolerated before the daemon gives up (each
+/// retried with exponential backoff). Transient storms — fd exhaustion,
+/// aborted handshakes — ride through; a permanently broken listener
+/// stops the daemon instead of spinning it.
+const MAX_ACCEPT_ERRORS: u32 = 32;
 
 /// Daemon-wide execution options.
 #[derive(Clone, Debug)]
@@ -54,6 +101,21 @@ pub struct ServeOptions {
     pub claim_ttl_secs: u64,
     /// Machine preset used when a submit names none.
     pub default_machine: String,
+    /// Per-connection read/write timeout in seconds (0 = no timeout).
+    /// A client that connects and then stalls holds its thread for at
+    /// most this long.
+    pub conn_timeout_secs: u64,
+    /// Concurrent connection cap; connections beyond it are answered
+    /// `{ok:false,error:"busy"}` and closed.
+    pub max_conns: usize,
+    /// Request line-length cap in bytes. A line exceeding it is answered
+    /// in-band (`ok:false`) and the connection closed — framing is lost
+    /// past the cap.
+    pub max_line_bytes: usize,
+    /// Seconds the shutdown path waits for running jobs before
+    /// explicitly abandoning them (their journals resume them on the
+    /// next start).
+    pub drain_secs: u64,
 }
 
 impl Default for ServeOptions {
@@ -63,6 +125,10 @@ impl Default for ServeOptions {
             sim_jobs: 0,
             claim_ttl_secs: DEFAULT_CLAIM_TTL_SECS,
             default_machine: "xeon_6248".to_string(),
+            conn_timeout_secs: 30,
+            max_conns: 64,
+            max_line_bytes: 1 << 20,
+            drain_secs: 10,
         }
     }
 }
@@ -89,6 +155,39 @@ impl JobPhase {
             JobPhase::Done => "done",
             JobPhase::Failed => "failed",
         }
+    }
+}
+
+/// What the startup spool scan recovered (see [`Server::recovery`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Done/failed jobs re-listed from their journals, files fetchable.
+    pub relisted: usize,
+    /// Interrupted (queued/running) jobs resubmitted through the normal
+    /// path; the warm store means they re-simulate only never-stored
+    /// cells.
+    pub resumed: usize,
+    /// Spool entries skipped: unreadable journals, unknown schema, or
+    /// an id that no longer matches its plan. Left on disk untouched.
+    pub skipped: usize,
+}
+
+/// Lock a mutex, recovering from poisoning: a panicked holder marked
+/// its job `failed` (or is about to via `catch_unwind`), and every
+/// value behind these locks stays coherent under that protocol — so
+/// introspection must keep answering instead of cascading the panic to
+/// every future `status`/`list` client.
+fn lock_clean<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Decrements a gauge on drop — keeps connection/job counters honest
+/// even when the owning thread unwinds.
+struct GaugeGuard<'a>(&'a AtomicUsize);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -123,6 +222,9 @@ struct JobState {
     unique_total: usize,
     cells: Vec<CellInfo>,
     predicted: PredictedFates,
+    /// The submit record, journaled verbatim so a restarted daemon can
+    /// resubmit the job through the normal path.
+    submit: SubmitRequest,
     phase: Mutex<JobPhase>,
     error: Mutex<Option<String>>,
     progress: Mutex<Option<Arc<ShardProgress>>>,
@@ -137,12 +239,29 @@ struct ServerState {
     local_addr: SocketAddr,
     jobs: Mutex<BTreeMap<String, Arc<JobState>>>,
     shutdown: AtomicBool,
+    /// Live connection threads (gauge; compared against `max_conns`).
+    conns: AtomicUsize,
+    /// Live job threads (gauge; the shutdown drain polls it to zero).
+    active_jobs: AtomicUsize,
 }
 
 /// A bound, not-yet-running serve daemon.
 pub struct Server {
     listener: TcpListener,
     state: Arc<ServerState>,
+    recovery: RecoveryReport,
+}
+
+/// A handle that can stop a running [`Server`] from another thread —
+/// the in-process equivalent of the wire `shutdown` op (the accept loop
+/// polls the same flag).
+pub struct StopHandle(Arc<ServerState>);
+
+impl StopHandle {
+    /// Ask the server's accept loop to stop at its next poll.
+    pub fn stop(&self) {
+        self.0.shutdown.store(true, Ordering::Release);
+    }
 }
 
 impl Server {
@@ -150,24 +269,27 @@ impl Server {
     /// port — read it back with [`Server::local_addr`]). Fails fast when
     /// the cache directory cannot be opened: workers and peer daemons
     /// coordinate through it, so serving without one is meaningless.
-    /// Job outputs land under `spool/<job-id>/`.
+    /// Job outputs land under `spool/<job-id>/`. The spool is scanned
+    /// for journals of a previous daemon's jobs — completed ones are
+    /// re-listed, interrupted ones resubmitted ([`Server::recovery`]).
     pub fn bind(addr: &str, cache_dir: &Path, spool: &Path, opts: ServeOptions) -> Result<Server> {
         CellStore::open(cache_dir)?;
         std::fs::create_dir_all(spool)
             .with_context(|| format!("creating spool {}", spool.display()))?;
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local_addr = listener.local_addr()?;
-        Ok(Server {
-            listener,
-            state: Arc::new(ServerState {
-                cache_dir: cache_dir.to_path_buf(),
-                spool: spool.to_path_buf(),
-                opts,
-                local_addr,
-                jobs: Mutex::new(BTreeMap::new()),
-                shutdown: AtomicBool::new(false),
-            }),
-        })
+        let state = Arc::new(ServerState {
+            cache_dir: cache_dir.to_path_buf(),
+            spool: spool.to_path_buf(),
+            opts,
+            local_addr,
+            jobs: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            active_jobs: AtomicUsize::new(0),
+        });
+        let recovery = recover_spool(&state);
+        Ok(Server { listener, state, recovery })
     }
 
     /// The bound socket address (resolves port 0).
@@ -175,35 +297,178 @@ impl Server {
         self.state.local_addr
     }
 
-    /// Serve connections until a `shutdown` request arrives. Jobs still
-    /// running when the daemon stops leave their claims behind; peers
-    /// sharing the cache dir re-claim them after the TTL.
+    /// What the startup spool scan recovered.
+    pub fn recovery(&self) -> RecoveryReport {
+        self.recovery
+    }
+
+    /// A handle that stops this server from another thread.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle(Arc::clone(&self.state))
+    }
+
+    /// Serve connections until a `shutdown` request (or a
+    /// [`StopHandle`]) stops the loop, then drain running jobs. The
+    /// listener is nonblocking and polled against the shutdown flag, so
+    /// an *idle* daemon also stops promptly — no wake connection needed.
     pub fn run(&self) -> Result<()> {
-        for stream in self.listener.incoming() {
-            if self.state.shutdown.load(Ordering::Acquire) {
-                break;
-            }
-            match stream {
-                Ok(stream) => {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        let mut accept_errors: u32 = 0;
+        while !self.state.shutdown.load(Ordering::Acquire) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    accept_errors = 0;
+                    let already = self.state.conns.fetch_add(1, Ordering::SeqCst);
+                    let busy = already >= self.state.opts.max_conns;
                     let state = Arc::clone(&self.state);
                     std::thread::spawn(move || {
-                        let _ = serve_connection(&state, stream);
+                        let _gauge = GaugeGuard(&state.conns);
+                        let _ = if busy {
+                            reject_busy(&state, stream)
+                        } else {
+                            serve_connection(&state, stream)
+                        };
                     });
                 }
-                Err(e) => eprintln!("serve: accept failed: {e}"),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    accept_errors += 1;
+                    eprintln!("serve: accept failed ({accept_errors}/{MAX_ACCEPT_ERRORS}): {e}");
+                    if accept_errors >= MAX_ACCEPT_ERRORS {
+                        self.drain_jobs();
+                        return Err(anyhow::Error::new(e)
+                            .context("accept kept failing; stopping the daemon"));
+                    }
+                    std::thread::sleep(accept_backoff(accept_errors));
+                }
             }
         }
+        self.drain_jobs();
         Ok(())
+    }
+
+    /// Wait up to `drain_secs` for running job threads, then abandon
+    /// the rest explicitly — their journals record them `running`, so a
+    /// restart on the same spool resubmits them against the warm store.
+    fn drain_jobs(&self) {
+        let deadline = Instant::now() + Duration::from_secs(self.state.opts.drain_secs);
+        loop {
+            let active = self.state.active_jobs.load(Ordering::SeqCst);
+            if active == 0 {
+                return;
+            }
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "serve: shutdown abandoning {active} running job(s); \
+                     their journals resume them on the next start"
+                );
+                return;
+            }
+            std::thread::sleep(ACCEPT_POLL);
+        }
     }
 }
 
-/// One connection's request/response loop. I/O errors just end the
-/// connection; protocol errors are answered in-band as `ok:false`.
-fn serve_connection(state: &Arc<ServerState>, stream: TcpStream) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+/// Exponential accept-error backoff: 20ms, 40ms, ... capped at 500ms.
+fn accept_backoff(errors: u32) -> Duration {
+    Duration::from_millis((10u64 << errors.min(6)).min(500))
+}
+
+/// Answer an over-limit connection in-band and close it.
+fn reject_busy(state: &ServerState, stream: TcpStream) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    if state.opts.conn_timeout_secs > 0 {
+        let timeout = Some(Duration::from_secs(state.opts.conn_timeout_secs));
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+    }
+    // Drain the request the peer is mid-send on before answering:
+    // closing a socket with unread bytes RSTs the connection, which
+    // could discard the in-band error from the peer's receive buffer.
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let _ = read_capped_line(&mut reader, state.opts.max_line_bytes);
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
+    writer.write_all(error_response("busy").to_string_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// One bounded line read.
+enum CappedLine {
+    /// A complete line (without its newline).
+    Line(String),
+    /// The line exceeded the cap before its newline arrived.
+    TooLong,
+    /// The peer closed the connection cleanly.
+    Eof,
+}
+
+/// Read one `\n`-terminated line, giving up once `cap` bytes accumulate
+/// without a newline — an unframed flood must cost bounded memory.
+fn read_capped_line(reader: &mut BufReader<TcpStream>, cap: usize) -> std::io::Result<CappedLine> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                CappedLine::Eof
+            } else {
+                CappedLine::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            buf.extend_from_slice(&chunk[..pos]);
+            reader.consume(pos + 1);
+            if buf.len() > cap {
+                return Ok(CappedLine::TooLong);
+            }
+            return Ok(CappedLine::Line(String::from_utf8_lossy(&buf).into_owned()));
+        }
+        let len = chunk.len();
+        buf.extend_from_slice(chunk);
+        reader.consume(len);
+        if buf.len() > cap {
+            return Ok(CappedLine::TooLong);
+        }
+    }
+}
+
+/// One connection's request/response loop. I/O errors (including
+/// timeouts) just end the connection; protocol errors are answered
+/// in-band as `ok:false`.
+fn serve_connection(state: &Arc<ServerState>, stream: TcpStream) -> Result<()> {
+    // The listener is nonblocking; accepted sockets must not inherit
+    // that (platform-dependent) — this loop wants blocking reads bounded
+    // by the read timeout.
+    stream.set_nonblocking(false)?;
+    if state.opts.conn_timeout_secs > 0 {
+        let timeout = Duration::from_secs(state.opts.conn_timeout_secs);
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+    }
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let line = match read_capped_line(&mut reader, state.opts.max_line_bytes)? {
+            CappedLine::Eof => break,
+            CappedLine::TooLong => {
+                // Framing is lost past the cap: answer and close.
+                let response = error_response(&format!(
+                    "request line exceeds {} bytes",
+                    state.opts.max_line_bytes
+                ));
+                writer.write_all(response.to_string_compact().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                break;
+            }
+            CappedLine::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -215,9 +480,9 @@ fn serve_connection(state: &Arc<ServerState>, stream: TcpStream) -> Result<()> {
         writer.write_all(b"\n")?;
         writer.flush()?;
         if stop {
+            // The nonblocking accept loop observes the flag at its next
+            // poll tick — no wake connection needed.
             state.shutdown.store(true, Ordering::Release);
-            // Wake the accept loop so it observes the flag.
-            let _ = TcpStream::connect(state.local_addr);
             break;
         }
     }
@@ -259,7 +524,7 @@ fn with_job(
     id: &str,
     body: impl FnOnce(&JobState) -> Result<Json>,
 ) -> Json {
-    let job = state.jobs.lock().unwrap().get(id).cloned();
+    let job = lock_clean(&state.jobs).get(id).cloned();
     match job {
         Some(job) => body(&job).unwrap_or_else(|e| error_response(&format!("{e:#}"))),
         None => error_response(&format!("unknown job '{id}'")),
@@ -267,13 +532,13 @@ fn with_job(
 }
 
 fn list_json(state: &ServerState) -> Json {
-    let jobs = state.jobs.lock().unwrap();
+    let jobs = lock_clean(&state.jobs);
     let rows = jobs
         .values()
         .map(|job| {
             Json::obj(vec![
                 ("job", Json::str(job.id.as_str())),
-                ("state", Json::str(job.phase.lock().unwrap().label())),
+                ("state", Json::str(lock_clean(&job.phase).label())),
                 (
                     "experiments",
                     Json::arr(job.experiments.iter().map(|e| Json::str(e.as_str())).collect()),
@@ -284,25 +549,35 @@ fn list_json(state: &ServerState) -> Json {
     ok_response("list", vec![("jobs", Json::arr(rows))])
 }
 
-/// Expand, hash, and register a submitted plan. Idempotent: the job id
-/// derives from the plan content hash, so re-submitting an identical
-/// plan returns the existing job instead of re-running it.
-fn submit_job(state: &Arc<ServerState>, req: SubmitRequest) -> Result<Json> {
+/// A submit's derived plan: everything between parsing the request and
+/// constructing the job.
+struct PlanContext {
+    params: ExperimentParams,
+    expansion: Expansion,
+    job_id: String,
+}
+
+/// Expand a submit into its plan and content-derived job id.
+fn expand_submit(state: &ServerState, req: &SubmitRequest) -> Result<PlanContext> {
     let machine_name =
         req.machine.clone().unwrap_or_else(|| state.opts.default_machine.clone());
     let machine = resolve_machine(&machine_name)?;
-    let params =
-        ExperimentParams { machine, full_size: req.full_size, batch: req.batch };
+    let params = ExperimentParams { machine, full_size: req.full_size, batch: req.batch };
     let ids: Vec<&str> = req.experiments.iter().map(|s| s.as_str()).collect();
     let expansion = plan::expand(&ids, &params)?;
     let plan_hash = expansion.plan_hash(&params.machine.fingerprint());
     let material = format!("{}|svg={}", hex64(plan_hash), req.svg);
     let job_id = format!("job-{}", hex64(fnv1a_64(material.as_bytes())));
+    Ok(PlanContext { params, expansion, job_id })
+}
 
-    if let Some(existing) = state.jobs.lock().unwrap().get(&job_id) {
-        return Ok(submit_response(existing, false));
-    }
-
+/// Probe the store and construct the job's state (not yet registered).
+fn prepare_job(
+    state: &ServerState,
+    req: &SubmitRequest,
+    ctx: PlanContext,
+) -> Result<Arc<JobState>> {
+    let PlanContext { params, expansion, job_id } = ctx;
     // Predict per-cell store fates the way `plan --cache-dir` does —
     // probe without serving, with the executor's identity guard.
     let store = CellStore::open(&state.cache_dir)?;
@@ -340,7 +615,7 @@ fn submit_job(state: &Arc<ServerState>, req: SubmitRequest) -> Result<Json> {
         })
         .collect();
 
-    let job = Arc::new(JobState {
+    Ok(Arc::new(JobState {
         id: job_id.clone(),
         experiments: req.experiments.clone(),
         params,
@@ -350,25 +625,48 @@ fn submit_job(state: &Arc<ServerState>, req: SubmitRequest) -> Result<Json> {
         unique_total: expansion.unique_cells().len(),
         cells,
         predicted,
+        submit: req.clone(),
         phase: Mutex::new(JobPhase::Queued),
         error: Mutex::new(None),
         progress: Mutex::new(None),
         fill: Mutex::new(None),
         files: Mutex::new(Vec::new()),
-    });
+    }))
+}
+
+/// Expand, hash, and register a submitted plan. Idempotent: the job id
+/// derives from the plan content hash, so re-submitting an identical
+/// plan returns the existing job instead of re-running it.
+fn submit_job(state: &Arc<ServerState>, req: SubmitRequest) -> Result<Json> {
+    let ctx = expand_submit(state, &req)?;
+    if let Some(existing) = lock_clean(&state.jobs).get(&ctx.job_id) {
+        return Ok(submit_response(existing, false));
+    }
+    let job = prepare_job(state, &req, ctx)?;
     {
-        let mut jobs = state.jobs.lock().unwrap();
+        let mut jobs = lock_clean(&state.jobs);
         // Two submits racing outside the lock: the first insert wins and
         // the loser is handed the winner's job.
-        if let Some(existing) = jobs.get(&job_id) {
+        if let Some(existing) = jobs.get(&job.id) {
             return Ok(submit_response(existing, false));
         }
-        jobs.insert(job_id.clone(), Arc::clone(&job));
+        jobs.insert(job.id.clone(), Arc::clone(&job));
     }
-    let thread_state = Arc::clone(state);
-    let thread_job = Arc::clone(&job);
-    std::thread::spawn(move || run_job(&thread_state, &thread_job));
+    write_journal(&job);
+    spawn_job(state, &job);
     Ok(submit_response(&job, true))
+}
+
+/// Start the job thread, tracked by the `active_jobs` gauge so the
+/// shutdown drain can wait for it.
+fn spawn_job(state: &Arc<ServerState>, job: &Arc<JobState>) {
+    state.active_jobs.fetch_add(1, Ordering::SeqCst);
+    let thread_state = Arc::clone(state);
+    let thread_job = Arc::clone(job);
+    std::thread::spawn(move || {
+        let _gauge = GaugeGuard(&thread_state.active_jobs);
+        run_job(&thread_state, &thread_job);
+    });
 }
 
 fn submit_response(job: &JobState, created: bool) -> Json {
@@ -377,7 +675,7 @@ fn submit_response(job: &JobState, created: bool) -> Json {
         vec![
             ("job", Json::str(job.id.as_str())),
             ("created", Json::Bool(created)),
-            ("state", Json::str(job.phase.lock().unwrap().label())),
+            ("state", Json::str(lock_clean(&job.phase).label())),
             ("cells_total", Json::num(job.cells_total as f64)),
             ("unique", Json::num(job.unique_total as f64)),
             ("predicted", predicted_json(&job.predicted)),
@@ -393,14 +691,182 @@ fn predicted_json(predicted: &PredictedFates) -> Json {
     ])
 }
 
+// --------------------------------------------------------------------
+// Job journal + restart recovery
+// --------------------------------------------------------------------
+
+/// The job's journal document: its submit record plus current phase.
+fn journal_json(job: &JobState) -> Json {
+    let error = lock_clean(&job.error)
+        .as_deref()
+        .map(Json::str)
+        .unwrap_or(Json::Null);
+    let files =
+        Json::arr(lock_clean(&job.files).iter().map(|f| Json::str(f.as_str())).collect());
+    Json::obj(vec![
+        ("schema_version", Json::num(JOB_JOURNAL_SCHEMA_VERSION as f64)),
+        ("job", Json::str(job.id.as_str())),
+        ("request", Request::Submit(job.submit.clone()).to_json()),
+        ("phase", Json::str(lock_clean(&job.phase).label())),
+        ("error", error),
+        ("files", files),
+    ])
+}
+
+/// Persist the job's journal (atomic). Best-effort: a journal write
+/// failure costs restart recovery for this job, never the job itself.
+fn write_journal(job: &JobState) {
+    let path = job.dir.join(JOURNAL_NAME);
+    if let Err(e) = write_atomic_unique(&path, &journal_json(job).to_string_pretty()) {
+        eprintln!("serve: journal write failed for {}: {e:#}", job.id);
+    }
+}
+
+/// Move the job to `phase` (recording `error` if any) and journal the
+/// transition.
+fn set_phase(job: &JobState, phase: JobPhase, error: Option<String>) {
+    *lock_clean(&job.phase) = phase;
+    if error.is_some() {
+        *lock_clean(&job.error) = error;
+    }
+    write_journal(job);
+}
+
+/// Map the job thread's `catch_unwind` result to a terminal phase.
+fn job_outcome(result: std::thread::Result<Result<()>>) -> (JobPhase, Option<String>) {
+    match result {
+        Ok(Ok(())) => (JobPhase::Done, None),
+        Ok(Err(e)) => (JobPhase::Failed, Some(format!("{e:#}"))),
+        Err(payload) => (
+            JobPhase::Failed,
+            Some(format!("job thread panicked: {}", panic_text(payload.as_ref()))),
+        ),
+    }
+}
+
+fn panic_text(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 fn run_job(state: &ServerState, job: &JobState) {
-    *job.phase.lock().unwrap() = JobPhase::Running;
-    match execute_job(state, job) {
-        Ok(()) => *job.phase.lock().unwrap() = JobPhase::Done,
-        Err(e) => {
-            *job.error.lock().unwrap() = Some(format!("{e:#}"));
-            *job.phase.lock().unwrap() = JobPhase::Failed;
+    set_phase(job, JobPhase::Running, None);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_job(state, job)
+    }));
+    let (phase, error) = job_outcome(result);
+    set_phase(job, phase, error);
+}
+
+/// What recovering one spool entry did.
+enum Recovered {
+    Relisted,
+    Resumed,
+}
+
+/// Scan the spool for journals left by a previous daemon and recover
+/// them: done jobs with all files present are re-listed (fetchable
+/// without re-running); failed jobs are re-listed with their error;
+/// interrupted or output-less jobs are resubmitted through the normal
+/// path. Unreadable or inconsistent journals are skipped with a warning
+/// and left on disk.
+fn recover_spool(state: &Arc<ServerState>) -> RecoveryReport {
+    let mut report = RecoveryReport::default();
+    let Ok(entries) = std::fs::read_dir(&state.spool) else {
+        return report;
+    };
+    let mut dirs: Vec<PathBuf> =
+        entries.filter_map(|e| e.ok()).map(|e| e.path()).filter(|p| p.is_dir()).collect();
+    dirs.sort();
+    for dir in dirs {
+        let journal = dir.join(JOURNAL_NAME);
+        if !journal.exists() {
+            continue; // pre-journal spool dir (or foreign) — leave it
         }
+        match recover_one(state, &dir, &journal) {
+            Ok(Recovered::Relisted) => report.relisted += 1,
+            Ok(Recovered::Resumed) => report.resumed += 1,
+            Err(e) => {
+                report.skipped += 1;
+                eprintln!("serve: skipping spool entry {}: {e:#}", dir.display());
+            }
+        }
+    }
+    report
+}
+
+fn recover_one(state: &Arc<ServerState>, dir: &Path, journal: &Path) -> Result<Recovered> {
+    let text = read_to_string(journal)?;
+    let doc = Json::parse(&text).context("journal is not JSON")?;
+    let version = doc.expect("schema_version")?.as_usize()? as u64;
+    ensure!(
+        version == JOB_JOURNAL_SCHEMA_VERSION,
+        "journal schema version {version} (this build reads {JOB_JOURNAL_SCHEMA_VERSION})"
+    );
+    let journal_id = doc.expect("job")?.as_str()?.to_string();
+    let request_line = doc.expect("request")?.to_string_compact();
+    let req = match Request::parse_line(&request_line)? {
+        Request::Submit(req) => req,
+        other => bail!("journal 'request' is not a submit (got {other:?})"),
+    };
+    let phase = doc.expect("phase")?.as_str()?.to_string();
+
+    // The id must still derive from the plan — a renamed spool dir or a
+    // hand-edited journal must not masquerade as another job.
+    let ctx = expand_submit(state, &req)?;
+    ensure!(
+        ctx.job_id == journal_id,
+        "journal id {journal_id} does not match its plan (expected {})",
+        ctx.job_id
+    );
+
+    match phase.as_str() {
+        "done" => {
+            let files: Vec<String> = doc
+                .expect("files")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?;
+            let complete = !files.is_empty() && files.iter().all(|f| dir.join(f).is_file());
+            if complete {
+                let job = prepare_job(state, &req, ctx)?;
+                *lock_clean(&job.files) = files;
+                *lock_clean(&job.phase) = JobPhase::Done;
+                lock_clean(&state.jobs).insert(job.id.clone(), job);
+                Ok(Recovered::Relisted)
+            } else {
+                // Outputs lost with the crash: re-run. The warm store
+                // makes this an assembly pass, not a re-simulation.
+                submit_job(state, req)?;
+                Ok(Recovered::Resumed)
+            }
+        }
+        "failed" => {
+            let job = prepare_job(state, &req, ctx)?;
+            let error = doc
+                .get("error")
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string)
+                .unwrap_or_else(|| "failed before restart".to_string());
+            *lock_clean(&job.error) = Some(error);
+            *lock_clean(&job.phase) = JobPhase::Failed;
+            lock_clean(&state.jobs).insert(job.id.clone(), job);
+            Ok(Recovered::Relisted)
+        }
+        "queued" | "running" => {
+            // Interrupted mid-flight: resubmit through the normal path.
+            // Cells that reached the store before the crash are hits;
+            // stale claims expire by TTL, so nothing is wedged.
+            submit_job(state, req)?;
+            Ok(Recovered::Resumed)
+        }
+        other => bail!("journal phase '{other}' unknown"),
     }
 }
 
@@ -411,12 +877,12 @@ fn execute_job(state: &ServerState, job: &JobState) -> Result<()> {
     let ids: Vec<&str> = job.experiments.iter().map(|s| s.as_str()).collect();
     let expansion = plan::expand(&ids, &job.params)?;
     let progress = Arc::new(ShardProgress::new(expansion.unique_cells().len()));
-    *job.progress.lock().unwrap() = Some(Arc::clone(&progress));
+    *lock_clean(&job.progress) = Some(Arc::clone(&progress));
     let claims =
         ClaimSet::new(store.root(), Duration::from_secs(state.opts.claim_ttl_secs));
     let budget = JobBudget { jobs: state.opts.jobs, sim_jobs: state.opts.sim_jobs };
     let stats = fill_store_sharded(&store, &expansion, &job.params, budget, &claims, &progress)?;
-    *job.fill.lock().unwrap() = Some(stats);
+    *lock_clean(&job.fill) = Some(stats);
     let (_, sweep) =
         sweep_and_write_budget(&ids, &job.params, &job.dir, job.svg, budget, Some(&store))?;
     let names: Vec<String> = sweep
@@ -426,17 +892,17 @@ fn execute_job(state: &ServerState, job: &JobState) -> Result<()> {
             path.strip_prefix(&job.dir).unwrap_or(path).to_string_lossy().to_string()
         })
         .collect();
-    *job.files.lock().unwrap() = names;
+    *lock_clean(&job.files) = names;
     Ok(())
 }
 
 fn status_json(job: &JobState, with_cells: bool) -> Json {
-    let phase = *job.phase.lock().unwrap();
-    let fill = *job.fill.lock().unwrap();
+    let phase = *lock_clean(&job.phase);
+    let fill = *lock_clean(&job.fill);
     let (done, simulated, hits) = match fill {
         // The fill is over: its final stats are the stable answer.
         Some(stats) => (stats.total, stats.simulated, stats.hits),
-        None => match &*job.progress.lock().unwrap() {
+        None => match &*lock_clean(&job.progress) {
             Some(progress) => progress.snapshot(),
             None => (0, 0, 0),
         },
@@ -456,19 +922,19 @@ fn status_json(job: &JobState, with_cells: bool) -> Json {
         ("hits", Json::num(hits as f64)),
         ("predicted", predicted_json(&job.predicted)),
     ];
-    if let Some(error) = &*job.error.lock().unwrap() {
+    if let Some(error) = &*lock_clean(&job.error) {
         fields.push(("error", Json::str(error.as_str())));
     }
     if phase == JobPhase::Done {
         fields.push((
             "files",
             Json::arr(
-                job.files.lock().unwrap().iter().map(|f| Json::str(f.as_str())).collect(),
+                lock_clean(&job.files).iter().map(|f| Json::str(f.as_str())).collect(),
             ),
         ));
     }
     if with_cells {
-        let live: Vec<u8> = match &*job.progress.lock().unwrap() {
+        let live: Vec<u8> = match &*lock_clean(&job.progress) {
             Some(progress) => {
                 progress.states.iter().map(|s| s.load(Ordering::Acquire)).collect()
             }
@@ -505,12 +971,12 @@ fn status_json(job: &JobState, with_cells: bool) -> Json {
 /// attempts (`../`, absolute paths) never name a fetchable file.
 fn fetch_json(job: &JobState, file: &str) -> Result<Json> {
     ensure!(
-        *job.phase.lock().unwrap() == JobPhase::Done,
+        *lock_clean(&job.phase) == JobPhase::Done,
         "job {} is not done (fetch needs state=done)",
         job.id
     );
     ensure!(
-        job.files.lock().unwrap().iter().any(|f| f == file),
+        lock_clean(&job.files).iter().any(|f| f == file),
         "job {} has no file '{file}' (see status.files)",
         job.id
     );
@@ -523,4 +989,82 @@ fn fetch_json(job: &JobState, file: &str) -> Result<Json> {
             ("content", Json::str(content)),
         ],
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_job() -> JobState {
+        JobState {
+            id: "job-test".to_string(),
+            experiments: vec!["f6".to_string()],
+            params: ExperimentParams::default(),
+            svg: false,
+            dir: std::env::temp_dir().join("dlroofline-server-unit"),
+            cells_total: 0,
+            unique_total: 0,
+            cells: Vec::new(),
+            predicted: PredictedFates::default(),
+            submit: SubmitRequest {
+                experiments: vec!["f6".to_string()],
+                ..Default::default()
+            },
+            phase: Mutex::new(JobPhase::Queued),
+            error: Mutex::new(None),
+            progress: Mutex::new(None),
+            fill: Mutex::new(None),
+            files: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[test]
+    fn job_outcome_maps_success_failure_and_panic() {
+        assert_eq!(job_outcome(Ok(Ok(()))), (JobPhase::Done, None));
+
+        let (phase, error) = job_outcome(Ok(Err(anyhow::anyhow!("boom"))));
+        assert_eq!(phase, JobPhase::Failed);
+        assert!(error.unwrap().contains("boom"));
+
+        let payload: Box<dyn Any + Send> = Box::new("kaboom".to_string());
+        let (phase, error) = job_outcome(Err(payload));
+        assert_eq!(phase, JobPhase::Failed);
+        let error = error.unwrap();
+        assert!(error.contains("panicked") && error.contains("kaboom"), "{error}");
+
+        let payload: Box<dyn Any + Send> = Box::new("static panic");
+        let (_, error) = job_outcome(Err(payload));
+        assert!(error.unwrap().contains("static panic"));
+    }
+
+    #[test]
+    fn poisoned_job_mutexes_do_not_wedge_introspection() {
+        // The satellite hazard: a panic while holding a JobState lock
+        // used to poison it, turning every later `status`/`list` into a
+        // cascade of panics. `lock_clean` must keep answering.
+        let job = Arc::new(test_job());
+        std::thread::scope(|scope| {
+            let j = &job;
+            assert!(scope.spawn(move || { let _g = j.phase.lock().unwrap(); panic!("p") }).join().is_err());
+            assert!(scope.spawn(move || { let _g = j.error.lock().unwrap(); panic!("p") }).join().is_err());
+            assert!(scope.spawn(move || { let _g = j.files.lock().unwrap(); panic!("p") }).join().is_err());
+        });
+        assert!(job.phase.is_poisoned(), "test must actually poison the lock");
+
+        let doc = status_json(&job, true);
+        assert_eq!(doc.get("ok").and_then(|v| v.as_bool().ok()), Some(true));
+        assert_eq!(doc.get("state").and_then(|v| v.as_str().ok()), Some("queued"));
+
+        // Writes through the recovered lock still work.
+        *lock_clean(&job.phase) = JobPhase::Failed;
+        assert_eq!(*lock_clean(&job.phase), JobPhase::Failed);
+    }
+
+    #[test]
+    fn accept_backoff_is_bounded() {
+        assert!(accept_backoff(1) >= Duration::from_millis(20));
+        for errors in 0..64 {
+            assert!(accept_backoff(errors) <= Duration::from_millis(500));
+        }
+    }
 }

@@ -1,10 +1,21 @@
 //! Filesystem helpers: report directories, atomic-ish writes, path
-//! discovery for `artifacts/`.
+//! discovery for `artifacts/`, and deterministic fault injection.
+//!
+//! The `_with` variants of every write/read helper take an optional
+//! [`FaultInjector`] — a seeded, replayable schedule of injected I/O
+//! failures (fail-once, fail-after-N, torn writes, ENOSPC-style full
+//! disk, truncated reads). Passing `None` short-circuits to the plain
+//! helper, so the production hot path pays nothing; the `faults` fuzz
+//! kind and the chaos tests pass a shared injector through the cell
+//! store, the claim set, and the artifact packer to prove graceful
+//! degradation under failure.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+
+use crate::util::prng::Prng;
 
 /// Write `content` to `path`, creating parent directories. Writes through
 /// a temp file + rename so concurrent readers never observe a torn file.
@@ -15,7 +26,7 @@ use anyhow::{Context, Result};
 /// happen there. Writers that may race (the cell cache under
 /// `--jobs N` or several processes) use [`write_atomic_unique`].
 pub fn write_atomic(path: &Path, content: &str) -> Result<()> {
-    write_via_tmp(path, content, &path.with_extension("tmp~"))
+    write_via_tmp(path, content.as_bytes(), &path.with_extension("tmp~"))
 }
 
 /// As [`write_atomic`], but with a temp name unique per process *and*
@@ -80,6 +91,281 @@ fn write_via_tmp(path: &Path, content: &[u8], tmp: &Path) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------
+// Deterministic fault injection
+// --------------------------------------------------------------------
+
+/// One scheduled write-side fault. The injector counts write ops from
+/// zero in the order it sees them, across whatever layers share it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WritePlan {
+    /// The `at`-th write fails with an injected error; all others succeed.
+    FailOnce { at: u64 },
+    /// Every write from the `n`-th on fails — a disk filling up.
+    FailAfter { n: u64 },
+    /// The `at`-th write is torn: the destination receives a clean
+    /// prefix of the content instead of all of it (a lost tail on power
+    /// cut — the worst state the tmp+rename protocol can leak).
+    Torn { at: u64 },
+    /// Every write fails — ENOSPC from the first byte.
+    DiskFull,
+}
+
+/// One scheduled read-side fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPlan {
+    /// The `at`-th read fails with an injected I/O error.
+    FailOnce { at: u64 },
+    /// The `at`-th read returns a clean prefix of the file — a reader
+    /// racing a crashed writer's partially flushed page.
+    Truncate { at: u64 },
+}
+
+/// A deterministic fault schedule: at most one write-side and one
+/// read-side plan. [`FaultPlan::generate`] draws a plan from a seed
+/// through the same xoshiro stream the fuzzer uses, so an entire fault
+/// scenario replays from a single `u64`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Schedule applied to write-side ops (atomic writes, claim
+    /// publishes); `None` leaves writes untouched.
+    pub write: Option<WritePlan>,
+    /// Schedule applied to read-side ops; `None` leaves reads untouched.
+    pub read: Option<ReadPlan>,
+}
+
+impl FaultPlan {
+    /// Draw a plan from `seed`. Each side is benign for a slice of the
+    /// seed space, so fault cases also cover the no-op paths.
+    pub fn generate(seed: u64) -> FaultPlan {
+        let mut rng = Prng::new(seed);
+        let write = match rng.below(5) {
+            0 => None,
+            1 => Some(WritePlan::FailOnce { at: rng.below(6) }),
+            2 => Some(WritePlan::FailAfter { n: rng.below(6) }),
+            3 => Some(WritePlan::Torn { at: rng.below(6) }),
+            _ => Some(WritePlan::DiskFull),
+        };
+        let read = match rng.below(3) {
+            0 => None,
+            1 => Some(ReadPlan::FailOnce { at: rng.below(8) }),
+            _ => Some(ReadPlan::Truncate { at: rng.below(8) }),
+        };
+        FaultPlan { write, read }
+    }
+}
+
+/// The injector's decision for one write op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Perform the write normally.
+    None,
+    /// Fail the write; nothing may be published.
+    Error,
+    /// Publish a clean prefix of the content.
+    Torn,
+}
+
+/// The injector's decision for one read op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    /// Perform the read normally.
+    None,
+    /// Fail the read with an injected I/O error.
+    Error,
+    /// Return a clean prefix of the file.
+    Truncate,
+}
+
+/// A seeded, thread-safe fault source for the `_with` helpers. The
+/// default everywhere is *no injector* — `None` threaded through
+/// [`CellStore`](crate::coordinator::store::CellStore),
+/// [`ClaimSet`](crate::serve::claims::ClaimSet), and the artifact
+/// packer — so the hot path pays one dead `Option` branch. The `faults`
+/// fuzz kind and the chaos tests hand one shared injector to every
+/// layer and assert graceful degradation: under any plan a sweep either
+/// fails with a clean error or completes byte-identical to the
+/// fault-free run.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    writes: AtomicU64,
+    reads: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    /// An injector running `plan` with fresh op counters.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            writes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// [`FaultPlan::generate`] + [`FaultInjector::new`] in one step.
+    pub fn seeded(seed: u64) -> FaultInjector {
+        FaultInjector::new(FaultPlan::generate(seed))
+    }
+
+    /// The schedule this injector runs.
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Faults actually fired so far. A plan whose trigger op never runs
+    /// injects nothing — short workloads can be fault-free under a
+    /// hostile plan, and the oracle must hold either way.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Decide the next write op's fate and advance the write counter.
+    pub fn on_write(&self) -> WriteFault {
+        let op = self.writes.fetch_add(1, Ordering::Relaxed);
+        let fault = match self.plan.write {
+            Some(WritePlan::FailOnce { at }) if op == at => WriteFault::Error,
+            Some(WritePlan::FailAfter { n }) if op >= n => WriteFault::Error,
+            Some(WritePlan::Torn { at }) if op == at => WriteFault::Torn,
+            Some(WritePlan::DiskFull) => WriteFault::Error,
+            _ => WriteFault::None,
+        };
+        if fault != WriteFault::None {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+
+    /// Decide the next read op's fate and advance the read counter.
+    pub fn on_read(&self) -> ReadFault {
+        let op = self.reads.fetch_add(1, Ordering::Relaxed);
+        let fault = match self.plan.read {
+            Some(ReadPlan::FailOnce { at }) if op == at => ReadFault::Error,
+            Some(ReadPlan::Truncate { at }) if op == at => ReadFault::Truncate,
+            _ => ReadFault::None,
+        };
+        if fault != ReadFault::None {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fault
+    }
+}
+
+fn write_fault(faults: Option<&FaultInjector>) -> WriteFault {
+    faults.map_or(WriteFault::None, FaultInjector::on_write)
+}
+
+fn read_fault(faults: Option<&FaultInjector>) -> ReadFault {
+    faults.map_or(ReadFault::None, FaultInjector::on_read)
+}
+
+/// Largest clean char boundary at or below half of `text` — where a
+/// torn write or a truncated read cuts.
+fn tear_point(text: &str) -> usize {
+    let mut cut = text.len() / 2;
+    while !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    cut
+}
+
+/// As [`write_atomic`], honoring an optional fault injector.
+pub fn write_atomic_with(
+    path: &Path,
+    content: &str,
+    faults: Option<&FaultInjector>,
+) -> Result<()> {
+    match write_fault(faults) {
+        WriteFault::None => write_atomic(path, content),
+        WriteFault::Error => bail!("injected write fault for {}", path.display()),
+        WriteFault::Torn => write_via_tmp(
+            path,
+            content[..tear_point(content)].as_bytes(),
+            &path.with_extension("tmp~"),
+        ),
+    }
+}
+
+/// As [`write_atomic_unique`], honoring an optional fault injector. An
+/// `Error` fault fails the call with nothing published; a `Torn` fault
+/// publishes a clean *prefix* of the content through the normal
+/// tmp+rename path — consumers must detect such a record as stale (it
+/// no longer parses), never serve it as data.
+pub fn write_atomic_unique_with(
+    path: &Path,
+    content: &str,
+    faults: Option<&FaultInjector>,
+) -> Result<()> {
+    match write_fault(faults) {
+        WriteFault::None => write_atomic_unique(path, content),
+        WriteFault::Error => bail!("injected write fault for {}", path.display()),
+        WriteFault::Torn => write_via_tmp(
+            path,
+            content[..tear_point(content)].as_bytes(),
+            &unique_tmp(path, "tmp"),
+        ),
+    }
+}
+
+/// As [`write_atomic_bytes`], honoring an optional fault injector.
+pub fn write_atomic_bytes_with(
+    path: &Path,
+    content: &[u8],
+    faults: Option<&FaultInjector>,
+) -> Result<()> {
+    match write_fault(faults) {
+        WriteFault::None => write_atomic_bytes(path, content),
+        WriteFault::Error => bail!("injected write fault for {}", path.display()),
+        WriteFault::Torn => {
+            write_via_tmp(path, &content[..content.len() / 2], &path.with_extension("tmp~"))
+        }
+    }
+}
+
+/// As [`create_exclusive`], honoring an optional fault injector. A torn
+/// publish creates the claim with a prefix of its body — exactly the
+/// garbage-claim shape [`crate::serve::claims`] breaks and re-races.
+pub fn create_exclusive_with(
+    path: &Path,
+    content: &str,
+    faults: Option<&FaultInjector>,
+) -> Result<bool> {
+    match write_fault(faults) {
+        WriteFault::None => create_exclusive(path, content),
+        WriteFault::Error => bail!("injected claim-publish fault for {}", path.display()),
+        WriteFault::Torn => create_exclusive(path, &content[..tear_point(content)]),
+    }
+}
+
+/// As [`std::fs::read_to_string`], honoring an optional fault injector.
+/// Keeps the `io::Error` so callers can distinguish `NotFound` (a cache
+/// miss) from injected failures (stale/unreadable — fall back to
+/// re-simulation).
+pub fn read_to_string_io_with(
+    path: &Path,
+    faults: Option<&FaultInjector>,
+) -> std::io::Result<String> {
+    match read_fault(faults) {
+        ReadFault::None => std::fs::read_to_string(path),
+        ReadFault::Error => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected read fault for {}", path.display()),
+        )),
+        ReadFault::Truncate => {
+            let text = std::fs::read_to_string(path)?;
+            let cut = tear_point(&text);
+            Ok(text[..cut].to_string())
+        }
+    }
+}
+
+/// [`read_to_string`], honoring an optional fault injector.
+pub fn read_to_string_with(path: &Path, faults: Option<&FaultInjector>) -> Result<String> {
+    read_to_string_io_with(path, faults).with_context(|| format!("reading {}", path.display()))
+}
+
 /// Locate the repository's `artifacts/` directory: `$DLROOFLINE_ARTIFACTS`
 /// if set, else `artifacts/` relative to the current dir, else relative to
 /// the crate manifest (useful under `cargo test`).
@@ -141,6 +427,95 @@ mod tests {
             .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
             .collect();
         assert!(leftovers.is_empty(), "leaked temp files: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn scratch(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dlroofline-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn fault_plans_are_deterministic_and_cover_every_shape() {
+        let mut saw_write = [false; 5]; // none + four write plans
+        let mut saw_read = [false; 3]; // none + two read plans
+        for seed in 0..256 {
+            let plan = FaultPlan::generate(seed);
+            assert_eq!(plan, FaultPlan::generate(seed), "seed {seed} must replay");
+            saw_write[match plan.write {
+                None => 0,
+                Some(WritePlan::FailOnce { .. }) => 1,
+                Some(WritePlan::FailAfter { .. }) => 2,
+                Some(WritePlan::Torn { .. }) => 3,
+                Some(WritePlan::DiskFull) => 4,
+            }] = true;
+            saw_read[match plan.read {
+                None => 0,
+                Some(ReadPlan::FailOnce { .. }) => 1,
+                Some(ReadPlan::Truncate { .. }) => 2,
+            }] = true;
+        }
+        assert!(saw_write.iter().all(|s| *s), "write plans not all reachable");
+        assert!(saw_read.iter().all(|s| *s), "read plans not all reachable");
+    }
+
+    #[test]
+    fn injected_write_fault_fails_once_then_heals() {
+        let dir = scratch("fsutil-failonce");
+        let path = dir.join("entry.json");
+        let inj = FaultInjector::new(FaultPlan {
+            write: Some(WritePlan::FailOnce { at: 0 }),
+            read: None,
+        });
+        let err = write_atomic_unique_with(&path, "body", Some(&inj)).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        assert!(!path.exists(), "a failed write must publish nothing");
+        write_atomic_unique_with(&path, "body", Some(&inj)).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "body");
+        assert_eq!(inj.injected(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_write_publishes_a_clean_prefix() {
+        let dir = scratch("fsutil-torn");
+        let path = dir.join("entry.json");
+        let inj = FaultInjector::new(FaultPlan {
+            write: Some(WritePlan::Torn { at: 0 }),
+            read: None,
+        });
+        write_atomic_unique_with(&path, "0123456789", Some(&inj)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "01234");
+        assert!("0123456789".starts_with(&body), "torn write must be a prefix");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_full_fails_every_write_and_no_injector_means_no_faults() {
+        let dir = scratch("fsutil-enospc");
+        let path = dir.join("entry.json");
+        let inj = FaultInjector::new(FaultPlan { write: Some(WritePlan::DiskFull), read: None });
+        for _ in 0..3 {
+            assert!(write_atomic_unique_with(&path, "x", Some(&inj)).is_err());
+        }
+        assert_eq!(inj.injected(), 3);
+        write_atomic_unique_with(&path, "fine", None).unwrap();
+        assert_eq!(read_to_string_with(&path, None).unwrap(), "fine");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_read_returns_a_prefix_then_heals() {
+        let dir = scratch("fsutil-readtrunc");
+        let path = dir.join("entry.json");
+        write_atomic_unique(&path, "abcdef").unwrap();
+        let inj = FaultInjector::new(FaultPlan {
+            write: None,
+            read: Some(ReadPlan::Truncate { at: 0 }),
+        });
+        assert_eq!(read_to_string_io_with(&path, Some(&inj)).unwrap(), "abc");
+        assert_eq!(read_to_string_io_with(&path, Some(&inj)).unwrap(), "abcdef");
+        assert_eq!(inj.injected(), 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,255 @@
+//! Integration tests for deterministic fault injection (ISSUE 10
+//! tentpole): a cache whose every record write fails still yields a
+//! correct, all-simulated sweep with the failures surfaced in
+//! `StoreUsage`; torn records degrade to re-simulation, never to wrong
+//! results; a faulted artifact pack fails cleanly; and a `cache gc`
+//! storm concurrent with a claim-coordinated fill never corrupts the
+//! final served bytes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dlroofline::artifact;
+use dlroofline::coordinator::plan::{self, JobBudget};
+use dlroofline::coordinator::runner::sweep_and_write_budget;
+use dlroofline::coordinator::store::CellStore;
+use dlroofline::harness::experiments::ExperimentParams;
+use dlroofline::serve::{fill_store_sharded, ClaimSet, ShardProgress};
+use dlroofline::testutil::TempDir;
+use dlroofline::util::fsutil::{FaultInjector, FaultPlan, ReadPlan, WritePlan};
+
+fn quick() -> ExperimentParams {
+    ExperimentParams { batch: Some(1), ..Default::default() }
+}
+
+/// Every regular file under `dir` (recursive), relative path → bytes.
+fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().to_string();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+fn disk_full() -> Arc<FaultInjector> {
+    Arc::new(FaultInjector::new(FaultPlan {
+        write: Some(WritePlan::DiskFull),
+        read: None,
+    }))
+}
+
+/// Satellite (d), first half: a store where **every** record write
+/// fails (ENOSPC from the first byte) must not fail the sweep — it
+/// degrades to an all-simulated run, byte-identical to a storeless one,
+/// with every failure counted in `StoreUsage.write_errors`.
+#[test]
+fn disk_full_store_still_yields_a_correct_all_simulated_sweep() {
+    let params = quick();
+    let direct = TempDir::new("faults-direct");
+    sweep_and_write_budget(&["f6"], &params, direct.path(), false, JobBudget::cells(1), None)
+        .unwrap();
+
+    let cache = TempDir::new("faults-cache");
+    let inj = disk_full();
+    let store = CellStore::open_with_faults(cache.path(), Some(Arc::clone(&inj))).unwrap();
+    let out = TempDir::new("faults-out");
+    let (_, sweep) =
+        sweep_and_write_budget(&["f6"], &params, out.path(), false, JobBudget::cells(1), Some(&store))
+            .unwrap();
+
+    let usage = sweep.store.expect("a store was supplied, usage must be reported");
+    assert_eq!(usage.hits, 0, "an empty cache cannot serve hits");
+    assert!(usage.simulated >= 1);
+    // Record writes are faulted; the advisory index is best-effort by
+    // design and stays unfaulted — so exactly one failure per simulated
+    // cell.
+    assert_eq!(usage.write_errors, usage.simulated, "{usage:?}");
+    let first = usage.first_write_error.expect("first failure must be surfaced");
+    assert!(first.contains("injected"), "unexpected error text: {first}");
+    assert!(inj.injected() >= usage.simulated as u64);
+
+    assert_eq!(
+        snapshot(out.path()),
+        snapshot(direct.path()),
+        "a write-dead cache must not change a single output byte"
+    );
+
+    // Nothing landed on disk, so a rerun over the same cache is still
+    // fully cold — degraded, never wrong.
+    let store2 = CellStore::open_with_faults(cache.path(), Some(disk_full())).unwrap();
+    let out2 = TempDir::new("faults-out2");
+    let (_, sweep2) = sweep_and_write_budget(
+        &["f6"],
+        &params,
+        out2.path(),
+        false,
+        JobBudget::cells(1),
+        Some(&store2),
+    )
+    .unwrap();
+    assert_eq!(sweep2.store.unwrap().hits, 0, "no record can have survived DiskFull");
+}
+
+/// A torn record (clean prefix left by a power cut) must be detected on
+/// the warm pass and re-simulated; the remaining records still serve
+/// hits and the outputs stay byte-identical.
+#[test]
+fn torn_store_records_degrade_to_resimulation_not_corruption() {
+    let params = quick();
+    let direct = TempDir::new("torn-direct");
+    sweep_and_write_budget(&["f6"], &params, direct.path(), false, JobBudget::cells(1), None)
+        .unwrap();
+
+    let cache = TempDir::new("torn-cache");
+    let torn = Arc::new(FaultInjector::new(FaultPlan {
+        write: Some(WritePlan::Torn { at: 0 }),
+        read: None,
+    }));
+    let store = CellStore::open_with_faults(cache.path(), Some(torn)).unwrap();
+    let cold_out = TempDir::new("torn-cold");
+    let (_, cold) = sweep_and_write_budget(
+        &["f6"],
+        &params,
+        cold_out.path(),
+        false,
+        JobBudget::cells(1),
+        Some(&store),
+    )
+    .unwrap();
+    let cold_usage = cold.store.unwrap();
+    assert!(cold_usage.simulated >= 1);
+
+    // Warm pass over the same cache, fault-free: the torn record parses
+    // as unusable and is simulated again; everything else hits.
+    let warm_store = CellStore::open(cache.path()).unwrap();
+    let warm_out = TempDir::new("torn-warm");
+    let (_, warm) = sweep_and_write_budget(
+        &["f6"],
+        &params,
+        warm_out.path(),
+        false,
+        JobBudget::cells(1),
+        Some(&warm_store),
+    )
+    .unwrap();
+    let warm_usage = warm.store.unwrap();
+    assert_eq!(warm_usage.hits + warm_usage.simulated, cold_usage.simulated);
+    assert!(warm_usage.simulated >= 1, "the torn record must not be served: {warm_usage:?}");
+
+    for out in [&cold_out, &warm_out] {
+        assert_eq!(
+            snapshot(out.path()),
+            snapshot(direct.path()),
+            "a torn cache record must never leak into the outputs"
+        );
+    }
+}
+
+/// Artifact packing under faults fails cleanly — an injected write
+/// error surfaces as a normal error, never a panic or a half-written
+/// pack manifest.
+#[test]
+fn faulted_artifact_pack_fails_cleanly() {
+    let params = quick();
+    let run = TempDir::new("pack-run");
+    sweep_and_write_budget(&["f6"], &params, run.path(), false, JobBudget::cells(1), None)
+        .unwrap();
+
+    let ok_out = TempDir::new("pack-ok");
+    artifact::pack(run.path(), ok_out.path(), None).unwrap();
+
+    // Write-side: every pack write fails; no manifest may be published.
+    let bad_out = TempDir::new("pack-bad");
+    let inj = disk_full();
+    let err = artifact::pack_with(run.path(), bad_out.path(), None, Some(&inj))
+        .expect_err("a write-dead pack must fail");
+    assert!(format!("{err:#}").contains("injected"), "unexpected error: {err:#}");
+    assert!(
+        !bad_out.path().join("manifest.json").exists(),
+        "a failed pack must not leave a manifest behind"
+    );
+
+    // Read-side: the first file read fails; the pack reports it cleanly.
+    let trunc = FaultInjector::new(FaultPlan {
+        write: None,
+        read: Some(ReadPlan::FailOnce { at: 0 }),
+    });
+    let bad_out2 = TempDir::new("pack-bad2");
+    let err = artifact::pack_with(run.path(), bad_out2.path(), None, Some(&trunc))
+        .expect_err("a read-dead pack must fail");
+    assert!(format!("{err:#}").contains("injected"), "unexpected error: {err:#}");
+}
+
+/// Satellite (d), second half: a `cache gc` storm running concurrently
+/// with a claim-coordinated fill must never snatch a claimed cell's
+/// freshly published record (the fill would wedge or error) and must
+/// never corrupt what a warm sweep over the surviving cache serves.
+#[test]
+fn gc_storm_during_a_claimed_fill_never_corrupts_served_results() {
+    let cache = TempDir::new("gc-storm");
+    let params = quick();
+    let expansion = plan::expand(&["f6"], &params).unwrap();
+    let unique = expansion.unique_cells().len();
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        let cache_path = cache.path();
+        scope.spawn(move || {
+            // The most hostile gc possible: keep zero unclaimed records.
+            let gc_store = CellStore::open(cache_path).unwrap();
+            while !stop.load(Ordering::Acquire) {
+                gc_store.gc(0).unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let store = CellStore::open(cache.path()).unwrap();
+        let claims = ClaimSet::new(store.root(), Duration::from_secs(600));
+        let progress = ShardProgress::new(unique);
+        let stats = fill_store_sharded(
+            &store,
+            &expansion,
+            &params,
+            JobBudget { jobs: 2, sim_jobs: 1 },
+            &claims,
+            &progress,
+        )
+        .unwrap();
+        assert_eq!(stats.total, unique);
+        stop.store(true, Ordering::Release);
+    });
+
+    // Whatever the gc left behind, a warm sweep over it must be
+    // byte-identical to a direct storeless run of the same plan.
+    let direct = TempDir::new("gc-direct");
+    sweep_and_write_budget(&["f6"], &params, direct.path(), false, JobBudget::cells(1), None)
+        .unwrap();
+    let warm_store = CellStore::open(cache.path()).unwrap();
+    let warm = TempDir::new("gc-warm");
+    sweep_and_write_budget(
+        &["f6"],
+        &params,
+        warm.path(),
+        false,
+        JobBudget::cells(1),
+        Some(&warm_store),
+    )
+    .unwrap();
+    assert_eq!(
+        snapshot(warm.path()),
+        snapshot(direct.path()),
+        "a gc storm must never change served bytes"
+    );
+}

@@ -19,6 +19,7 @@ fn config(seed: u64, cases: usize, dir: &TempDir) -> FuzzConfig {
         cases,
         minutes: 0.0,
         corpus_dir: dir.path().to_path_buf(),
+        only: None,
     }
 }
 
@@ -44,7 +45,7 @@ fn shipped_engines_survive_a_real_fuzz_session() {
     let a = run_fuzz(&cfg, &mut quiet()).unwrap();
     assert!(a.failure.is_none(), "shipped engines diverged: {:?}", a.failure);
     assert_eq!(a.executed, 30);
-    assert_eq!(a.trace_cases + a.kernel_cases + a.roundtrip_cases, 30);
+    assert_eq!(a.trace_cases + a.kernel_cases + a.roundtrip_cases + a.faults_cases, 30);
 
     let b = run_fuzz(&cfg, &mut quiet()).unwrap();
     assert_eq!(a.digest, b.digest, "same seed + cases must give the same digest");

@@ -14,8 +14,8 @@ use dlroofline::coordinator::store::CellStore;
 use dlroofline::harness::experiments::ExperimentParams;
 use dlroofline::serve::protocol::roundtrip;
 use dlroofline::serve::{
-    fill_store_sharded, ClaimSet, Request, ServeOptions, Server, ShardProgress, ShardStats,
-    SubmitRequest, PROTOCOL_VERSION,
+    fill_store_sharded, ClaimSet, RecoveryReport, Request, ServeOptions, Server, ShardProgress,
+    ShardStats, SubmitRequest, PROTOCOL_VERSION,
 };
 use dlroofline::testutil::TempDir;
 use dlroofline::util::json::Json;
@@ -308,4 +308,154 @@ fn two_worker_sets_share_one_cache_dir_without_duplicate_simulation() {
     let usage = sweep.store.as_ref().unwrap();
     assert_eq!(usage.simulated, 0, "{usage:?}");
     assert_eq!(snapshot(direct.path()), snapshot(warm.path()));
+}
+
+/// Satellite (c) regression: `stop()` on a daemon that never receives
+/// another connection must still terminate `run()` promptly — the old
+/// implementation needed a self-connect to wake a blocking accept.
+#[test]
+fn shutdown_with_an_idle_listener_terminates_promptly() {
+    let cache = TempDir::new("idle-cache");
+    let spool = TempDir::new("idle-spool");
+    let server =
+        Server::bind("127.0.0.1:0", cache.path(), spool.path(), ServeOptions::default()).unwrap();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    std::thread::sleep(Duration::from_millis(50));
+
+    let begin = std::time::Instant::now();
+    stop.stop();
+    while !handle.is_finished() && begin.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(handle.is_finished(), "idle daemon ignored stop() for 5s");
+    handle.join().unwrap();
+}
+
+/// Over-capacity connections are answered in-band with a clean `busy`
+/// error, never silently dropped.
+#[test]
+fn over_capacity_connections_get_an_in_band_busy_error() {
+    let cache = TempDir::new("busy-cache");
+    let spool = TempDir::new("busy-spool");
+    // max_conns 0: every connection is over the limit.
+    let opts = ServeOptions { max_conns: 0, ..Default::default() };
+    let server = Server::bind("127.0.0.1:0", cache.path(), spool.path(), opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let resp = request(&addr, &Request::Ping);
+    assert!(!field_bool(&resp, "ok"), "{}", resp.to_string_compact());
+    assert_eq!(field_str(&resp, "error"), "busy");
+
+    stop.stop();
+    handle.join().unwrap();
+}
+
+/// Unframed floods past the line cap are answered in-band and the
+/// connection closed — bounded memory per connection.
+#[test]
+fn oversized_request_lines_are_rejected_in_band() {
+    let cache = TempDir::new("cap-cache");
+    let spool = TempDir::new("cap-spool");
+    let opts = ServeOptions { max_line_bytes: 64, ..Default::default() };
+    let server = Server::bind("127.0.0.1:0", cache.path(), spool.path(), opts).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let flood = format!("{{\"op\":\"ping\",\"pad\":\"{}\"}}", "x".repeat(256));
+    let resp = Json::parse(&roundtrip(&addr, &flood, TIMEOUT).unwrap()).unwrap();
+    assert!(!field_bool(&resp, "ok"));
+    assert!(field_str(&resp, "error").contains("exceeds"), "{}", resp.to_string_compact());
+    // A normal request on a fresh connection still works.
+    let pong = request(&addr, &Request::Ping);
+    assert!(field_bool(&pong, "ok"));
+
+    stop.stop();
+    handle.join().unwrap();
+}
+
+/// The crash-safety tentpole end to end: journals re-list finished jobs
+/// across a restart, a doctored `running` journal resumes through the
+/// normal path against the warm store (zero re-simulation), and garbage
+/// spool entries are skipped, not fatal.
+#[test]
+fn daemon_restart_recovers_spooled_jobs() {
+    let cache = TempDir::new("recover-cache");
+    let spool = TempDir::new("recover-spool");
+
+    // Daemon 1: run one job to completion, remember its served bytes.
+    let (addr, handle) = start_server(cache.path(), spool.path());
+    let submit =
+        SubmitRequest { experiments: vec!["f6".into()], batch: Some(1), ..Default::default() };
+    let accepted = request(&addr, &Request::Submit(submit.clone()));
+    assert!(field_bool(&accepted, "ok"), "{}", accepted.to_string_compact());
+    let job = field_str(&accepted, "job");
+    wait_done(&addr, &job);
+    let fetched = request(&addr, &Request::Fetch { job: job.clone(), file: "run.json".into() });
+    let run_json = field_str(&fetched, "content");
+    request(&addr, &Request::Shutdown);
+    handle.join().unwrap();
+
+    // Daemon 2 on the same spool: the done job is re-listed, fetchable
+    // without re-running, and resubmission is idempotent.
+    let server2 = Server::bind(
+        "127.0.0.1:0",
+        cache.path(),
+        spool.path(),
+        ServeOptions { jobs: 2, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(
+        server2.recovery(),
+        RecoveryReport { relisted: 1, resumed: 0, skipped: 0 },
+        "one finished job must be re-listed"
+    );
+    let addr2 = server2.local_addr().to_string();
+    let stop2 = server2.stop_handle();
+    let handle2 = std::thread::spawn(move || server2.run().unwrap());
+    let status = request(&addr2, &Request::Status { job: job.clone(), cells: false });
+    assert_eq!(field_str(&status, "state"), "done");
+    let refetched = request(&addr2, &Request::Fetch { job: job.clone(), file: "run.json".into() });
+    assert_eq!(field_str(&refetched, "content"), run_json, "recovered run.json drifted");
+    let again = request(&addr2, &Request::Submit(submit.clone()));
+    assert!(!field_bool(&again, "created"), "a recovered job must satisfy resubmission");
+    assert_eq!(field_str(&again, "job"), job);
+    stop2.stop();
+    handle2.join().unwrap();
+
+    // Doctor the journal to look interrupted mid-run, and drop a
+    // garbage spool entry alongside it.
+    let journal = spool.path().join(&job).join("job.json");
+    let text = std::fs::read_to_string(&journal).unwrap();
+    std::fs::write(&journal, text.replace("\"done\"", "\"running\"")).unwrap();
+    let bogus = spool.path().join("job-bogus");
+    std::fs::create_dir_all(&bogus).unwrap();
+    std::fs::write(bogus.join("job.json"), "not json").unwrap();
+
+    // Daemon 3: the interrupted job resumes through the normal submit
+    // path; the warm store means zero re-simulation; garbage is skipped.
+    let server3 = Server::bind(
+        "127.0.0.1:0",
+        cache.path(),
+        spool.path(),
+        ServeOptions { jobs: 2, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(
+        server3.recovery(),
+        RecoveryReport { relisted: 0, resumed: 1, skipped: 1 },
+        "running journal must resume; garbage must be skipped"
+    );
+    let addr3 = server3.local_addr().to_string();
+    let stop3 = server3.stop_handle();
+    let handle3 = std::thread::spawn(move || server3.run().unwrap());
+    let done = wait_done(&addr3, &job);
+    assert_eq!(field_usize(&done, "simulated"), 0, "resume against a warm store re-simulates nothing");
+    let resumed = request(&addr3, &Request::Fetch { job: job.clone(), file: "run.json".into() });
+    assert_eq!(field_str(&resumed, "content"), run_json, "resumed run.json drifted");
+    stop3.stop();
+    handle3.join().unwrap();
 }
